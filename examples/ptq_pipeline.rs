@@ -1,0 +1,87 @@
+//! PTQ pipeline (the paper's Table 3 workflow, end to end).
+//!
+//! Pretrains the subject LM, then runs the full method grid at two
+//! precisions (4.25 and 3.25 W-bits), evaluates WikiText2-analog perplexity
+//! plus the Figure-4 win rate, and writes the quantized checkpoints —
+//! including the bit-packed on-disk form — under `results/`.
+//!
+//! ```bash
+//! cargo run --release --example ptq_pipeline            # nano, quick
+//! QERA_MODEL=small cargo run --release --example ptq_pipeline
+//! ```
+
+use qera::bench_util::Table;
+use qera::coordinator::{calibrate, quantize, PipelineConfig};
+use qera::data::Corpus;
+use qera::eval::{perplexity, win_rate};
+use qera::model::QuantCheckpoint;
+use qera::quant::QFormat;
+use qera::runtime::Registry;
+use qera::solver::Method;
+use qera::train::{pretrain, PretrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("QERA_MODEL").unwrap_or_else(|_| "nano".into());
+    let steps: usize =
+        std::env::var("QERA_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(2500);
+    let reg = Registry::open_default()?;
+    let spec = reg.spec(&model)?.clone();
+
+    let corpus = Corpus::generate(spec.vocab, 400_000, 42);
+    let (train, val) = corpus.split(0.05);
+    let pcfg = PretrainConfig { steps, lr: 2e-3, warmup: 20, seed: 42, log_every: 50 };
+    let (ckpt, _) = pretrain(&reg, &spec, &train, &pcfg)?;
+    let bf16_ppl = perplexity(&reg, &spec, &ckpt.params, &val, 8)?;
+    println!("BF16 reference ppl: {bf16_ppl:.3}");
+
+    let calib = calibrate(&reg, &spec, &ckpt.params, &train, 16, true)?;
+    std::fs::create_dir_all("results")?;
+
+    for (fmt, rank) in [
+        (QFormat::Mxint { bits: 3, block: 32 }, 8usize),
+        (QFormat::Mxint { bits: 2, block: 16 }, 16),
+    ] {
+        let mut table = Table::new(
+            &format!("PTQ {} @ {:.2} W-bits, rank {rank}", spec.name, fmt.avg_bits()),
+            &["method", "ppl", "delta", "win-rate-vs-wonly", "payload MB"],
+        );
+        table.row(vec![
+            "bf16".into(),
+            format!("{bf16_ppl:.3}"),
+            "-".into(),
+            "-".into(),
+            format!("{:.2}", (spec.n_params() * 4) as f64 / 1e6),
+        ]);
+        let wonly = quantize(&ckpt, &PipelineConfig::new(Method::WOnly, fmt, 0), Some(&calib))?;
+        for method in Method::ptq_grid() {
+            let r = if method == Method::WOnly { 0 } else { rank };
+            let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, r), Some(&calib))?;
+            let ppl = perplexity(&reg, &spec, &qm.merged, &val, 8)?;
+            let wr = if method == Method::WOnly {
+                0.5
+            } else {
+                win_rate(&reg, &spec, &ckpt.params, &qm.merged, &wonly.merged, &val, 4)?
+            };
+            // persist the quantized checkpoint and reload to prove the
+            // bit-packed MXINT round-trip
+            let path = format!(
+                "results/{}-{}-{}.qqkpt",
+                spec.name,
+                fmt.name().replace(':', "_"),
+                method.name().replace(':', "_")
+            );
+            qm.ckpt.save(&path)?;
+            let back = QuantCheckpoint::load(&path)?;
+            assert_eq!(back.materialize_merged(), qm.merged, "checkpoint round-trip");
+            table.row(vec![
+                method.name(),
+                format!("{ppl:.3}"),
+                format!("{:+.3}", ppl - bf16_ppl),
+                format!("{wr:.3}"),
+                format!("{:.2}", qm.ckpt.payload_bytes() as f64 / 1e6),
+            ]);
+        }
+        table.emit(&format!("ptq_{}_{}", spec.name, fmt.name().replace(':', "_")));
+    }
+    Ok(())
+}

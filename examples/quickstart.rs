@@ -1,0 +1,51 @@
+//! Quickstart: quantize a model with QERA and measure what it buys you.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Steps: pretrain a nano LM on the synthetic corpus (~30 s), calibrate
+//! activation statistics, quantize to 3.25-bit MXINT with and without
+//! QERA's low-rank reconstruction, and compare perplexity.
+
+use qera::coordinator::{calibrate, quantize, PipelineConfig};
+use qera::data::Corpus;
+use qera::eval::perplexity;
+use qera::quant::QFormat;
+use qera::runtime::Registry;
+use qera::solver::Method;
+use qera::train::{pretrain, PretrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::open_default()?;
+    let spec = reg.spec("nano")?.clone();
+    println!("model: {} ({:.2}M params)", spec.name, spec.n_params() as f64 / 1e6);
+
+    // 1. a pretrained subject model (the paper starts from pretrained LLMs)
+    let corpus = Corpus::generate(spec.vocab, 200_000, 42);
+    let (train, val) = corpus.split(0.1);
+    let pcfg = PretrainConfig { steps: 1500, lr: 2e-3, warmup: 30, seed: 42, log_every: 300 };
+    let (ckpt, report) = pretrain(&reg, &spec, &train, &pcfg)?;
+    let bf16_ppl = perplexity(&reg, &spec, &ckpt.params, &val, 8)?;
+    println!("pretrained: loss {:.3}, val ppl {:.3}", report.final_loss, bf16_ppl);
+
+    // 2. calibration (Theorem 2 needs E[x²]; Theorem 1 needs R_XX)
+    let calib = calibrate(&reg, &spec, &ckpt.params, &train, 16, true)?;
+
+    // 3. quantize at 2.50 bits, rank 16 — aggressive enough that the
+    //    methods separate (paper Table 3's 3-bit regime)
+    let fmt = QFormat::Mxint { bits: 2, block: 16 };
+    for method in [Method::WOnly, Method::ZeroQuantV2, Method::QeraApprox, Method::QeraExact] {
+        let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, 16), Some(&calib))?;
+        let ppl = perplexity(&reg, &spec, &qm.merged, &val, 8)?;
+        println!(
+            "{:<14} {:>7.3} ppl  (Δ {:+.3}, {:.2} eff. bits)",
+            method.name(),
+            ppl,
+            ppl - bf16_ppl,
+            qm.effective_bits()
+        );
+    }
+    println!("\nExpected ordering: w-only > zeroquant-v2 > qera-approx >= qera-exact.");
+    Ok(())
+}

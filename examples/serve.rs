@@ -1,0 +1,82 @@
+//! Serving demo: a quantized model behind the dynamic batcher.
+//!
+//! Quantizes the subject model with QERA-approx, starts the server thread,
+//! fires concurrent client bursts, and reports latency / throughput /
+//! batching efficiency — the "no inference overhead" deployment story.
+//!
+//! ```bash
+//! cargo run --release --example serve
+//! ```
+
+use qera::coordinator::{calibrate, quantize, PipelineConfig};
+use qera::data::{Corpus, Tokenizer};
+use qera::quant::QFormat;
+use qera::runtime::Registry;
+use qera::serve::{Server, ServerConfig};
+use qera::solver::Method;
+use qera::train::{pretrain, PretrainConfig};
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::open_default()?;
+    let spec = reg.spec("nano")?.clone();
+    let tok = Tokenizer::new(spec.vocab);
+
+    // pretrain + quantize (QERA-approx, 4.25 bits, rank 8)
+    let corpus = Corpus::generate(spec.vocab, 150_000, 42);
+    let pcfg = PretrainConfig { steps: 800, lr: 2e-3, warmup: 20, seed: 42, log_every: 200 };
+    let (ckpt, _) = pretrain(&reg, &spec, &corpus, &pcfg)?;
+    let calib = calibrate(&reg, &spec, &ckpt.params, &corpus, 8, false)?;
+    let fmt = QFormat::Mxint { bits: 4, block: 32 };
+    let qm = quantize(&ckpt, &PipelineConfig::new(Method::QeraApprox, fmt, 8), Some(&calib))?;
+    println!(
+        "serving {} quantized to {:.2} effective bits ({:.2} MB payload)",
+        spec.name,
+        qm.effective_bits(),
+        qm.ckpt.payload_bytes() as f64 / 1e6
+    );
+
+    let server = Server::start(
+        reg.dir.clone(),
+        spec.clone(),
+        qm.merged.clone(),
+        ServerConfig { max_wait: Duration::from_millis(10), seed: 7 },
+    );
+
+    // three client bursts
+    let t0 = Instant::now();
+    let mut latencies = Vec::new();
+    for burst in 0..3 {
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let prompt = vec![(burst * 6 + i + 1) as i32 % spec.vocab as i32, 5, 9];
+                server.submit(prompt, 16, 0.0)
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(300))?;
+            latencies.push(resp.total_ms);
+            if i == 0 {
+                println!(
+                    "burst {burst}: \"{}\" (batch={}, queue {:.1} ms, total {:.1} ms)",
+                    tok.decode(&resp.tokens[..resp.tokens.len().min(8)]),
+                    resp.batch_size,
+                    resp.queue_ms,
+                    resp.total_ms
+                );
+            }
+        }
+    }
+    let stats = server.stop();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\n{} requests in {:.2}s | {:.1} tok/s | mean batch {:.2} | p50 {:.0} ms, p95 {:.0} ms",
+        stats.requests,
+        t0.elapsed().as_secs_f64(),
+        stats.throughput_tok_s(),
+        stats.mean_batch(),
+        latencies[latencies.len() / 2],
+        latencies[(latencies.len() - 1) * 95 / 100],
+    );
+    Ok(())
+}

@@ -1,0 +1,221 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+artifacts through the PJRT C API and Python never appears on the request
+path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  Entry computations are lowered with
+``return_tuple=True``; the Rust side unwraps the tuple.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--configs nano,small]
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, DEFAULT_AOT_CONFIGS, ModelConfig
+
+# LoRA ranks lowered per config.  "lm" feeds QPEFT LM steps (Table 2 / 7 / 8),
+# "cls" feeds the GLUE-like suite (Tables 1 / 9 / 10), "fwd_lr" is the
+# serving-form forward that keeps A/B separate (no-overhead bench).
+RANK_SETS = {
+    "nano": dict(lm=(4, 8), cls=(4, 8), fwd_lr=(8,)),
+    "small": dict(lm=(8, 16, 32), cls=(4, 8, 12, 16, 20, 32), fwd_lr=(32,)),
+    "base": dict(lm=(8,), cls=(8,), fwd_lr=(32,)),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg: ModelConfig):
+    return [_spec(s) for _, s in cfg.param_layout()]
+
+
+def _lora_specs(cfg: ModelConfig, rank: int):
+    return [_spec(s) for _, s in cfg.lora_layout(rank)]
+
+
+def _io_list(specs, names):
+    out = []
+    for name, s in zip(names, specs):
+        out.append({"name": name, "dtype": str(s.dtype), "shape": list(s.shape)})
+    return out
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.records = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, in_specs, in_names, out_names, cfg_name, meta=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = name + ".hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        rec = {
+            "name": name,
+            "file": fname,
+            "config": cfg_name,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": _io_list(in_specs, in_names),
+            "outputs": _io_list(list(out_shapes), out_names),
+        }
+        if meta:
+            rec.update(meta)
+        self.records.append(rec)
+        print(f"  {name:<36s} {len(text)/1e6:7.2f} MB  {time.time()-t0:6.1f}s", flush=True)
+
+
+def lower_config(em: Emitter, cfg: ModelConfig, ranks):
+    b, s = cfg.batch, cfg.seq
+    tok = _spec((b, s), jnp.int32)
+    tgt = _spec((b, s), jnp.int32)
+    lab = _spec((b,), jnp.int32)
+    pspecs = _param_specs(cfg)
+    pnames = [n for n, _ in cfg.param_layout()]
+    c = cfg.name
+
+    em.emit(f"lm_fwd.{c}", functools.partial(model.lm_fwd, cfg),
+            [tok] + pspecs, ["tokens"] + pnames, ["logits"], c)
+    em.emit(f"lm_nll.{c}", functools.partial(model.lm_nll, cfg),
+            [tok, tgt] + pspecs, ["tokens", "targets"] + pnames, ["nll"], c)
+    em.emit(f"lm_logits_last.{c}", functools.partial(model.lm_logits_last, cfg),
+            [tok] + pspecs, ["tokens"] + pnames, ["logits_last"], c)
+    tap_names = [n for n, _ in cfg.tap_layout()]
+    em.emit(f"lm_fwd_taps.{c}", functools.partial(model.lm_fwd_taps, cfg),
+            [tok] + pspecs, ["tokens"] + pnames, ["logits"] + tap_names, c)
+    em.emit(f"lm_pool.{c}", functools.partial(model.lm_pool, cfg),
+            [tok] + pspecs, ["tokens"] + pnames, ["pooled"], c)
+    em.emit(f"pretrain_step.{c}", functools.partial(model.pretrain_step, cfg),
+            [tok, tgt] + pspecs, ["tokens", "targets"] + pnames,
+            ["loss"] + ["g." + n for n in pnames], c)
+
+    head_specs = [_spec((cfg.d_model, cfg.n_classes)), _spec((cfg.n_classes,))]
+    head_names = ["head_w", "head_b"]
+    em.emit(f"full_cls_step.{c}", functools.partial(model.full_cls_step, cfg),
+            [tok, lab] + pspecs + head_specs,
+            ["tokens", "labels"] + pnames + head_names,
+            ["loss"] + ["g." + n for n in pnames] + ["g.head_w", "g.head_b"], c)
+    em.emit(f"cls_fwd.{c}.r0", functools.partial(model.cls_fwd, cfg, 0),
+            [tok] + pspecs + head_specs, ["tokens"] + pnames + head_names,
+            ["cls_logits"], c, meta={"rank": 0})
+
+    for r in ranks["fwd_lr"]:
+        lspecs = _lora_specs(cfg, r)
+        lnames = [n for n, _ in cfg.lora_layout(r)]
+
+        def fwd_lr(tokens, *flat, _r=r):
+            base = list(flat[: len(pspecs)])
+            lora = list(flat[len(pspecs):])
+            logits, _ = model.lm_logits(cfg, base, tokens, lora=lora, rank=_r)
+            return (logits,)
+
+        em.emit(f"lm_fwd_lr.{c}.r{r}", fwd_lr, [tok] + pspecs + lspecs,
+                ["tokens"] + pnames + lnames, ["logits"], c, meta={"rank": r})
+
+    for r in ranks["lm"]:
+        lspecs = _lora_specs(cfg, r)
+        lnames = [n for n, _ in cfg.lora_layout(r)]
+        em.emit(f"lora_lm_step.{c}.r{r}", functools.partial(model.lora_lm_step, cfg, r),
+                [tok, tgt] + pspecs + lspecs,
+                ["tokens", "targets"] + pnames + lnames,
+                ["loss"] + ["g." + n for n in lnames], c, meta={"rank": r})
+
+    for r in ranks["cls"]:
+        lspecs = _lora_specs(cfg, r)
+        lnames = [n for n, _ in cfg.lora_layout(r)]
+        em.emit(f"lora_cls_step.{c}.r{r}", functools.partial(model.lora_cls_step, cfg, r),
+                [tok, lab] + pspecs + lspecs + head_specs,
+                ["tokens", "labels"] + pnames + lnames + head_names,
+                ["loss"] + ["g." + n for n in lnames] + ["g.head_w", "g.head_b"],
+                c, meta={"rank": r})
+        em.emit(f"cls_fwd.{c}.r{r}", functools.partial(model.cls_fwd, cfg, r),
+                [tok] + pspecs + lspecs + head_specs,
+                ["tokens"] + pnames + lnames + head_names,
+                ["cls_logits"], c, meta={"rank": r})
+
+
+def lower_micro(em: Emitter):
+    """Standalone kernel artifacts for runtime unit tests and microbenches."""
+    from .kernels import mxint, qlinear, stats
+
+    m, k, n, r = 64, 128, 96, 8
+    em.emit("qlinear.m64k128n96r8",
+            lambda x, w, a, b: (qlinear.qlinear_lowrank(x, w, a, b),),
+            [_spec((m, k)), _spec((k, n)), _spec((k, r)), _spec((r, n))],
+            ["x", "w", "a", "b"], ["y"], "micro")
+    em.emit("mxint_qdq.b4s32",
+            lambda x: (mxint.mxint_qdq(x, 4, 32),),
+            [_spec((64, 128))], ["x"], ["y"], "micro")
+    em.emit("calib_stats.m128",
+            lambda x: stats.calib_stats(x),
+            [_spec((256, 128))], ["x"], ["sumsq", "sumabs", "rxx"], "micro")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_AOT_CONFIGS))
+    args = ap.parse_args()
+
+    names = [c for c in args.configs.split(",") if c]
+    em = Emitter(args.out_dir)
+    t0 = time.time()
+    lower_micro(em)
+    cfg_meta = {}
+    for cname in names:
+        cfg = CONFIGS[cname]
+        print(f"config {cname}: {cfg.n_params()/1e6:.2f}M params", flush=True)
+        ranks = RANK_SETS[cname]
+        lower_config(em, cfg, ranks)
+        cfg_meta[cname] = {
+            **cfg.to_dict(),
+            "head_dim": cfg.head_dim,
+            "n_params": cfg.n_params(),
+            "param_layout": [[n, list(s)] for n, s in cfg.param_layout()],
+            "tap_layout": [[n, list(s)] for n, s in cfg.tap_layout()],
+            "rank_sets": {k: list(v) for k, v in ranks.items()},
+        }
+
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "configs": cfg_meta,
+        "artifacts": em.records,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(em.records)} artifacts in {time.time()-t0:.1f}s -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Model configurations shared between the L2 compile path and the L3 runtime.
+
+The Rust coordinator never imports this module; it reads the same facts from
+``artifacts/manifest.json`` which :mod:`compile.aot` emits.  Keep this file
+dependency-free (no jax import) so tests can import it cheaply.
+
+Canonical parameter layout (order matters — it is the positional argument
+order of every lowered HLO entry point):
+
+    0: embed      [V, D]      token embedding (tied LM head)
+    1: pos_embed  [S, D]      learned positional embedding
+    per block i in 0..L:
+        ln1_g [D], ln1_b [D],
+        wq [D, D], wk [D, D], wv [D, D], wo [D, D],
+        ln2_g [D], ln2_b [D],
+        w_up [D, F], w_down [F, D]
+    then: lnf_g [D], lnf_b [D]
+
+LoRA adapter layout (order of the trainable arguments of ``lora_*_step``):
+
+    per block i in 0..L, per site in (wq, wk, wv, wo, w_up, w_down):
+        A [in_dim, r], B [r, out_dim]
+
+Calibration tap sites per block (inputs of the quantized linears):
+
+    attn_in  [B, S, D]   input of wq / wk / wv   (post-ln1)
+    o_in     [B, S, D]   input of wo
+    mlp_in   [B, S, D]   input of w_up           (post-ln2)
+    mlp_mid  [B, S, F]   input of w_down
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+LINEAR_SITES = ("wq", "wk", "wv", "wo", "w_up", "w_down")
+
+# tap site feeding each linear site
+SITE_TAP = {
+    "wq": "attn_in",
+    "wk": "attn_in",
+    "wv": "attn_in",
+    "wo": "o_in",
+    "w_up": "mlp_in",
+    "w_down": "mlp_mid",
+}
+
+TAP_SITES = ("attn_in", "o_in", "mlp_in", "mlp_mid")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int  # static batch size baked into the artifacts
+    n_classes: int = 8  # classifier head width for the GLUE-like suite
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def linear_shape(self, site: str):
+        d, f = self.d_model, self.d_ff
+        return {
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "w_up": (d, f),
+            "w_down": (f, d),
+        }[site]
+
+    def param_layout(self):
+        """Ordered (name, shape) list matching the HLO argument order."""
+        v, d, f, s = self.vocab, self.d_model, self.d_ff, self.seq
+        out = [("embed", (v, d)), ("pos_embed", (s, d))]
+        for i in range(self.n_layers):
+            p = f"blk{i}."
+            out += [
+                (p + "ln1_g", (d,)),
+                (p + "ln1_b", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "ln2_g", (d,)),
+                (p + "ln2_b", (d,)),
+                (p + "w_up", (d, f)),
+                (p + "w_down", (f, d)),
+            ]
+        out += [("lnf_g", (d,)), ("lnf_b", (d,))]
+        return out
+
+    def lora_layout(self, rank: int):
+        """Ordered (name, shape) list of LoRA adapter tensors."""
+        out = []
+        for i in range(self.n_layers):
+            for site in LINEAR_SITES:
+                m, n = self.linear_shape(site)
+                out.append((f"blk{i}.{site}.A", (m, rank)))
+                out.append((f"blk{i}.{site}.B", (rank, n)))
+        return out
+
+    def tap_layout(self):
+        """Ordered (name, shape) list of calibration taps of lm_fwd_taps."""
+        b, s, d, f = self.batch, self.seq, self.d_model, self.d_ff
+        shp = {"attn_in": (b, s, d), "o_in": (b, s, d), "mlp_in": (b, s, d), "mlp_mid": (b, s, f)}
+        out = []
+        for i in range(self.n_layers):
+            for t in TAP_SITES:
+                out.append((f"blk{i}.{t}", shp[t]))
+        return out
+
+    def n_params(self) -> int:
+        return sum(int_prod(s) for _, s in self.param_layout())
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def int_prod(shape):
+    p = 1
+    for s in shape:
+        p *= int(s)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# Registry.  `micro` is for kernel/unit tests only (never lowered), `nano`
+# drives fast integration tests, `small` is the main experiment subject
+# (the "RoBERTa/TinyLlama stand-in"), `base` the scale point.
+# ----------------------------------------------------------------------------
+
+CONFIGS = {
+    "micro": ModelConfig("micro", vocab=64, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq=16, batch=2),
+    "nano": ModelConfig("nano", vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=256, seq=64, batch=4),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=512, seq=128, batch=8),
+    "base": ModelConfig("base", vocab=1024, d_model=256, n_layers=6, n_heads=8, d_ff=1024, seq=128, batch=4),
+}
+
+DEFAULT_AOT_CONFIGS = ("nano", "small")

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels: MXINT quant-dequant, fused low-rank qlinear,
+flash-style causal attention, calibration statistics.  Each has a pure-jnp
+oracle in :mod:`compile.kernels.ref`."""
+
+from . import attention, mxint, qlinear, ref, stats  # noqa: F401

@@ -1,0 +1,51 @@
+"""Pallas causal-attention kernel (L1), flash-style query blocking.
+
+Grid: (batch*heads, S/bq).  Each step holds one (bq, hd) query tile plus the
+full (S, hd) K/V panels in VMEM (S <= 128 for every config in this repo, so
+the panels fit comfortably; for longer contexts the K loop would move into
+the grid with an online-softmax accumulator).  The causal mask is generated
+in-kernel from the block's absolute row offset.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, bq: int):
+    j = pl.program_id(1)
+    q = q_ref[0]  # (bq, hd)
+    k = k_ref[0]  # (S, hd)
+    v = v_ref[0]  # (S, hd)
+    s = k.shape[0]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, S)
+    rows = j * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, s), 1)
+    logits = jnp.where(cols <= rows, logits, jnp.float32(-1e30))
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def causal_attention(q, k, v, scale: float, bq: int = 0, interpret: bool = True):
+    """Causal softmax attention over [T, S, hd] (T = batch * heads)."""
+    t, s, hd = q.shape
+    assert k.shape == (t, s, hd) and v.shape == (t, s, hd)
+    bq = s if bq <= 0 or bq > s else bq
+    assert s % bq == 0, (s, bq)
+
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, bq=bq),
+        grid=(t, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

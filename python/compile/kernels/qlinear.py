@@ -1,0 +1,60 @@
+"""Pallas fused quantized-linear + low-rank-reconstruction kernel (L1).
+
+This is the paper's inference hot-spot: ``y = x @ W~ + (x @ A_k) @ B_k``.
+The whole point of quantization error reconstruction is that the rank-k
+correction rides along the main matmul at ~2k/n extra MXU work; this kernel
+expresses that fusion explicitly.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): grid tiles (M/bm, N/bn);
+each step keeps an (bm, K) activation stripe and a (K, bn) weight tile in
+VMEM, issues the main MXU matmul, then the two skinny rank-k matmuls whose
+(bm, k) intermediate never leaves VMEM.  The GPU papers' threadblock/WMMA
+scheduling becomes the BlockSpec index maps below.
+
+CPU note: lowered with ``interpret=True``; with a (1,1) grid this is exactly
+the fused jnp expression, so the artifact hot path pays no interpret-mode
+grid overhead.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qlinear_kernel(x_ref, w_ref, a_ref, b_ref, o_ref):
+    x = x_ref[...]  # (bm, K)
+    w = w_ref[...]  # (K, bn)
+    a = a_ref[...]  # (K, r)
+    b = b_ref[...]  # (r, bn)
+    t = jnp.dot(x, a, preferred_element_type=jnp.float32)  # (bm, r) — VMEM-resident
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = (y + jnp.dot(t, b, preferred_element_type=jnp.float32)).astype(o_ref.dtype)
+
+
+def qlinear_lowrank(x, w, a, b, bm: int = 0, bn: int = 0, interpret: bool = True):
+    """``x @ w + (x @ a) @ b`` tiled over (M, N).
+
+    x: [M, K], w: [K, N], a: [K, r], b: [r, N] -> [M, N].
+    bm/bn = 0 selects whole-axis blocks (the CPU-artifact layout).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    r = a.shape[1]
+    assert k == k2 and a.shape[0] == k and b.shape == (r, n), (x.shape, w.shape, a.shape, b.shape)
+    bm = m if bm <= 0 or bm > m else bm
+    bn = n if bn <= 0 or bn > n else bn
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+
+    return pl.pallas_call(
+        _qlinear_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, a, b)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must match
+its oracle bit-for-bit (quantizers) or to tight fp tolerance (matmuls,
+attention).  The Rust `quant` module mirrors the same formulas; the pytest
+suite pins both sides to these definitions.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+# ----------------------------------------------------------------------------
+# MXINT block quantization (shared-exponent integer, OCP MX-style).
+#
+# A block of `block_size` consecutive elements (along the last axis) shares an
+# 8-bit exponent e = floor(log2(max|v|)); each element is a `bits`-bit
+# two's-complement integer q with value q * 2^(e - bits + 2), i.e. the scale
+# places the block maximum just below 2^(bits-1).  Average bits/element:
+# bits + 8/block_size  (4.25 for bits=4,bs=32; 3.25 for 3/32; 2.50 for 2/16).
+#
+# Rounding is round-half-to-even to match both jnp.round and Rust's
+# f32::round_ties_even.
+# ----------------------------------------------------------------------------
+
+
+def floor_log2(x):
+    """Exact floor(log2(x)) for positive f32 via exponent-bit extraction.
+
+    Bit-identical across JAX/XLA and the Rust mirror (a libm `log2` call
+    could round differently at values just below powers of two).  Subnormal
+    inputs clamp to -126.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    return jnp.maximum(e, -126)
+
+
+def mxint_qdq(x, bits: int, block_size: int):
+    """Quantize-dequantize `x` (last axis grouped by `block_size`)."""
+    assert bits >= 2
+    shape = x.shape
+    assert shape[-1] % block_size == 0, (shape, block_size)
+    g = x.reshape(-1, block_size)
+    amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = floor_log2(safe)
+    scale = jnp.exp2((e - (bits - 2)).astype(jnp.float32))
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+    out = jnp.where(amax > 0, q * scale, 0.0)
+    return out.reshape(shape).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Quantized linear with low-rank reconstruction: y = x @ w + (x @ a) @ b.
+# `w` is the *dequantized* weight (the artifact takes it as a runtime input so
+# one HLO serves every quantization method); a/b are the rank-k terms.
+# ----------------------------------------------------------------------------
+
+
+def qlinear_lowrank(x, w, a, b):
+    return x @ w + (x @ a) @ b
+
+
+# ----------------------------------------------------------------------------
+# Causal softmax attention, layout [T, S, hd] with T = batch * heads.
+# ----------------------------------------------------------------------------
+
+
+def causal_attention(q, k, v, scale: float):
+    s = q.shape[-2]
+    logits = (q @ jnp.swapaxes(k, -1, -2)) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    p = jax.nn.softmax(logits, axis=-1)
+    return p @ v
+
+
+# ----------------------------------------------------------------------------
+# Calibration statistics over the row axis of x [R, m]:
+# per-dim sum of squares, per-dim sum of |x|, and the raw autocorrelation
+# accumulator X^T X.  The Rust coordinator divides by the row count and
+# accumulates across batches in f64.
+# ----------------------------------------------------------------------------
+
+
+def calib_stats(x):
+    sumsq = jnp.sum(x * x, axis=0)
+    sumabs = jnp.sum(jnp.abs(x), axis=0)
+    rxx = x.T @ x
+    return sumsq, sumabs, rxx

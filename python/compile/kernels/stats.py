@@ -1,0 +1,63 @@
+"""Pallas calibration-statistics kernel (L1).
+
+Computes, over the row axis of x [R, m]:
+    sumsq[m]  = sum_r x[r,:]^2
+    sumabs[m] = sum_r |x[r,:]|
+    rxx[m,m]  = X^T X
+in row blocks, accumulating into the outputs across sequential grid steps
+(the canonical reduction-into-output Pallas pattern: outputs use a constant
+index map, the first step initializes, later steps accumulate).
+
+On TPU the (br, m) stripe and the (m, m) accumulator live in VMEM; the
+rank-1(-batched) update X_b^T X_b is an MXU op.  The Rust coordinator calls
+this artifact per calibration batch and folds the f32 partials into its f64
+running accumulators (the paper's App. A.7 numeric-stability recipe).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(x_ref, sq_ref, ab_ref, rxx_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]  # (br, m)
+    sq = jnp.sum(x * x, axis=0)
+    ab = jnp.sum(jnp.abs(x), axis=0)
+    rxx = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        sq_ref[...] = sq
+        ab_ref[...] = ab
+        rxx_ref[...] = rxx
+
+    @pl.when(i > 0)
+    def _acc():
+        sq_ref[...] += sq
+        ab_ref[...] += ab
+        rxx_ref[...] += rxx
+
+
+def calib_stats(x, br: int = 0, interpret: bool = True):
+    """Return (sumsq[m], sumabs[m], rxx[m,m]) accumulated over rows of x."""
+    r, m = x.shape
+    br = r if br <= 0 or br > r else br
+    assert r % br == 0, (r, br)
+
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, m), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,308 @@
+"""L2: the JAX transformer (forward, calibration taps, training steps).
+
+Every public entry point here is lowered once by :mod:`compile.aot` to HLO
+text and executed from the Rust coordinator; Python never runs at request
+time.  Parameters are a flat *list* of arrays in the canonical order defined
+by :meth:`compile.configs.ModelConfig.param_layout` so the positional HLO
+argument order is deterministic for the Rust side.
+
+The linear layers call the L1 Pallas kernels (``use_pallas=True``, the
+default for lowering) so the kernels lower into the same HLO module; the
+pure-jnp path (``use_pallas=False``) is the oracle used by the pytest suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LINEAR_SITES, ModelConfig
+from .kernels import attention as attn_k
+from .kernels import qlinear as qlin_k
+
+
+# ----------------------------------------------------------------------------
+# Initialization (python-side; the Rust model/init.rs mirrors the same scheme
+# for checkpoints it creates itself).
+# ----------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> list:
+    """GPT-2-style init: N(0, 0.02) embeddings/weights, ones/zeros for LN."""
+    params = []
+    for name, shape in cfg.param_layout():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1_g", "ln2_g", "lnf_g")):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("ln1_b", "ln2_b", "lnf_b")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            std = 0.02
+            if name.endswith(("wo", "w_down")):  # residual-branch scaling
+                std = 0.02 / (2 * cfg.n_layers) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def zero_lora(cfg: ModelConfig, rank: int) -> list:
+    return [jnp.zeros(shape, jnp.float32) for _, shape in cfg.lora_layout(rank)]
+
+
+# ----------------------------------------------------------------------------
+# Forward pass.
+# ----------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _linear(x2d, w, a, b, use_pallas):
+    """x2d: [T, m] @ w [m, n] + rank-k correction (a: [m,r], b: [r,n])."""
+    if use_pallas:
+        return qlin_k.qlinear_lowrank(x2d, w, a, b)
+    return x2d @ w + (x2d @ a) @ b
+
+
+def _unpack(cfg: ModelConfig, params):
+    it = iter(params)
+    embed, pos = next(it), next(it)
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append(
+            dict(
+                ln1_g=next(it), ln1_b=next(it),
+                wq=next(it), wk=next(it), wv=next(it), wo=next(it),
+                ln2_g=next(it), ln2_b=next(it),
+                w_up=next(it), w_down=next(it),
+            )
+        )
+    lnf_g, lnf_b = next(it), next(it)
+    rest = list(it)
+    assert not rest, f"{len(rest)} unconsumed params"
+    return embed, pos, blocks, lnf_g, lnf_b
+
+
+def _unpack_lora(cfg: ModelConfig, lora, rank: int):
+    """-> per-block dict site -> (A, B); `lora=None` yields zero adapters."""
+    if lora is None:
+        return None
+    it = iter(lora)
+    out = []
+    for _ in range(cfg.n_layers):
+        d = {}
+        for site in LINEAR_SITES:
+            a = next(it)
+            b = next(it)
+            d[site] = (a, b)
+        out.append(d)
+    assert not list(it)
+    return out
+
+
+def lm_hidden(cfg: ModelConfig, params, tokens, lora=None, rank: int = 0,
+              use_pallas: bool = True, collect_taps: bool = False):
+    """Run the trunk; returns (final hidden [B,S,D], taps list)."""
+    embed, pos, blocks, lnf_g, lnf_b = _unpack(cfg, params)
+    adapters = _unpack_lora(cfg, lora, rank)
+    bsz, s = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    scale = 1.0 / (hd ** 0.5)
+
+    x = embed[tokens] + pos[None, :s, :]
+    taps = []
+
+    def lin(site, blk_i, x3d, w):
+        t = x3d.reshape(-1, x3d.shape[-1])
+        if adapters is None:
+            y = t @ w
+        else:
+            a, b = adapters[blk_i][site]
+            y = _linear(t, w, a, b, use_pallas)
+        return y.reshape(x3d.shape[0], x3d.shape[1], -1)
+
+    for i, blk in enumerate(blocks):
+        h_in = _layernorm(x, blk["ln1_g"], blk["ln1_b"])
+        if collect_taps:
+            taps.append(h_in)  # attn_in
+        q = lin("wq", i, h_in, blk["wq"])
+        k = lin("wk", i, h_in, blk["wk"])
+        v = lin("wv", i, h_in, blk["wv"])
+        # [B,S,D] -> [B*H, S, hd]
+        def split(t):
+            return t.reshape(bsz, s, h, hd).transpose(0, 2, 1, 3).reshape(bsz * h, s, hd)
+        if use_pallas:
+            o = attn_k.causal_attention(split(q), split(k), split(v), scale)
+        else:
+            from .kernels import ref
+            o = ref.causal_attention(split(q), split(k), split(v), scale)
+        o = o.reshape(bsz, h, s, hd).transpose(0, 2, 1, 3).reshape(bsz, s, d)
+        if collect_taps:
+            taps.append(o)  # o_in
+        x = x + lin("wo", i, o, blk["wo"])
+
+        m_in = _layernorm(x, blk["ln2_g"], blk["ln2_b"])
+        if collect_taps:
+            taps.append(m_in)  # mlp_in
+        u = lin("w_up", i, m_in, blk["w_up"])
+        u = jax.nn.gelu(u, approximate=True)
+        if collect_taps:
+            taps.append(u)  # mlp_mid
+        x = x + lin("w_down", i, u, blk["w_down"])
+
+    x = _layernorm(x, lnf_g, lnf_b)
+    return x, taps
+
+
+def lm_logits(cfg: ModelConfig, params, tokens, **kw):
+    hid, taps = lm_hidden(cfg, params, tokens, **kw)
+    embed = params[0]
+    return hid @ embed.T, taps
+
+
+def _nll(logits, targets):
+    """Per-token negative log-likelihood [B,S] from logits [B,S,V]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+# ----------------------------------------------------------------------------
+# Entry points lowered by aot.py.  All take (and return) flat tuples.
+# ----------------------------------------------------------------------------
+
+
+def lm_fwd(cfg: ModelConfig, tokens, *params):
+    """tokens [B,S] i32 -> logits [B,S,V]."""
+    logits, _ = lm_logits(cfg, list(params), tokens)
+    return (logits,)
+
+
+def lm_nll(cfg: ModelConfig, tokens, targets, *params):
+    """-> per-token NLL [B,S] (small transfer for the ppl evaluator)."""
+    logits, _ = lm_logits(cfg, list(params), tokens)
+    return (_nll(logits, targets),)
+
+
+def lm_logits_last(cfg: ModelConfig, tokens, *params):
+    """-> logits of the final position only [B,V] (decode/serving)."""
+    logits, _ = lm_logits(cfg, list(params), tokens)
+    return (logits[:, -1, :],)
+
+
+def lm_pool(cfg: ModelConfig, tokens, *params):
+    """-> mean-pooled final hidden state [B, D] (feature extractor for the
+    Table-4 linear-probe evaluation)."""
+    hid, _ = lm_hidden(cfg, list(params), tokens)
+    return (jnp.mean(hid, axis=1),)
+
+
+def lm_fwd_taps(cfg: ModelConfig, tokens, *params):
+    """-> (logits, 4*L calibration taps) — the calibration artifact."""
+    logits, taps = lm_logits(cfg, list(params), tokens, collect_taps=True)
+    return (logits, *taps)
+
+
+def _split_base_lora(cfg: ModelConfig, rank: int, flat):
+    n_base = len(cfg.param_layout())
+    base = list(flat[:n_base])
+    lora = list(flat[n_base:])
+    assert len(lora) == len(cfg.lora_layout(rank)), (len(lora), rank)
+    return base, lora
+
+
+def lora_lm_step(cfg: ModelConfig, rank: int, tokens, targets, *flat):
+    """QPEFT language-modeling step.
+
+    flat = base params (frozen, typically dequantized W~) ++ LoRA tensors.
+    -> (loss, *grads_wrt_lora).  The Rust optimizer applies the update.
+    """
+    base, lora = _split_base_lora(cfg, rank, flat)
+
+    def loss_fn(lora_list):
+        # use_pallas=False: pallas_call has no autodiff rule; the jnp oracle
+        # is numerically identical and fully differentiable.
+        logits, _ = lm_logits(cfg, base, tokens, lora=lora_list, rank=rank, use_pallas=False)
+        return jnp.mean(_nll(logits, targets))
+
+    loss, grads = jax.value_and_grad(loss_fn)(lora)
+    return (loss, *grads)
+
+
+def cls_logits(cfg: ModelConfig, params, tokens, lora, rank, head_w, head_b,
+               use_pallas: bool = True):
+    hid, _ = lm_hidden(cfg, params, tokens, lora=lora, rank=rank, use_pallas=use_pallas)
+    pooled = jnp.mean(hid, axis=1)  # [B, D]
+    return pooled @ head_w + head_b
+
+
+def lora_cls_step(cfg: ModelConfig, rank: int, tokens, labels, *flat):
+    """GLUE-style classification step.
+
+    flat = base ++ lora ++ (head_w [D,C], head_b [C]).
+    -> (loss, *grads_lora, grad_head_w, grad_head_b).
+    """
+    n_base = len(cfg.param_layout())
+    base = list(flat[:n_base])
+    lora = list(flat[n_base:-2])
+    head_w, head_b = flat[-2], flat[-1]
+    assert len(lora) == len(cfg.lora_layout(rank))
+
+    def loss_fn(train):
+        lora_l, hw, hb = train
+        logits = cls_logits(cfg, base, tokens, lora_l, rank, hw, hb, use_pallas=False)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    loss, (g_lora, g_hw, g_hb) = jax.value_and_grad(loss_fn)((lora, head_w, head_b))
+    return (loss, *g_lora, g_hw, g_hb)
+
+
+def full_cls_step(cfg: ModelConfig, tokens, labels, *flat):
+    """Full fine-tuning baseline (Table 1 "Full FT"): grads w.r.t. every base
+    parameter plus the classifier head.  flat = base ++ (head_w, head_b)."""
+    n_base = len(cfg.param_layout())
+    base = list(flat[:n_base])
+    head_w, head_b = flat[-2], flat[-1]
+
+    def loss_fn(train):
+        plist, hw, hb = train
+        logits = cls_logits(cfg, plist, tokens, None, 0, hw, hb, use_pallas=False)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    loss, (g_base, g_hw, g_hb) = jax.value_and_grad(loss_fn)((base, head_w, head_b))
+    return (loss, *g_base, g_hw, g_hb)
+
+
+def cls_fwd(cfg: ModelConfig, rank: int, tokens, *flat):
+    """-> class logits [B,C] for evaluation of the fine-tuned classifier."""
+    n_base = len(cfg.param_layout())
+    base = list(flat[:n_base])
+    lora = list(flat[n_base:-2])
+    head_w, head_b = flat[-2], flat[-1]
+    if not lora:
+        lora = None
+    return (cls_logits(cfg, base, tokens, lora, rank, head_w, head_b),)
+
+
+def pretrain_step(cfg: ModelConfig, tokens, targets, *params):
+    """Full-parameter LM step -> (loss, *grads).  Used by the Rust trainer
+    to pretrain the experiment subject models from scratch."""
+
+    def loss_fn(plist):
+        logits, _ = lm_logits(cfg, plist, tokens, use_pallas=False)
+        return jnp.mean(_nll(logits, targets))
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    return (loss, *grads)
+
+
+# convenience: jitted oracle used by python tests
+def ref_lm_fwd(cfg: ModelConfig, params, tokens):
+    logits, _ = lm_logits(cfg, params, tokens, use_pallas=False)
+    return logits

@@ -1,0 +1,89 @@
+"""AOT path tests: manifest integrity and HLO-text round-trip sanity.
+
+These run against the committed lowering logic (not the artifacts dir, which
+is a build output): they lower the micro kernels fresh and verify the text is
+parseable-looking HLO with the right entry signature; full load-and-execute
+verification happens on the Rust side (runtime integration tests).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS
+
+
+def test_to_hlo_text_roundtrip_simple():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+    # return_tuple=True -> root is a tuple
+    assert "(f32[2,2]" in text
+
+
+def test_micro_emitter(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    aot.lower_micro(em)
+    names = [r["name"] for r in em.records]
+    assert "qlinear.m64k128n96r8" in names
+    for r in em.records:
+        p = tmp_path / r["file"]
+        assert p.exists() and p.stat().st_size > 100
+        head = p.read_text()[:200]
+        assert "HloModule" in head
+        assert r["inputs"] and r["outputs"]
+
+
+def test_lm_fwd_lowering_contains_pallas_loop(tmp_path):
+    """The interpret-mode pallas attention lowers into the same module —
+    the three-layer contract (L1 inside L2's HLO)."""
+    cfg = CONFIGS["micro"]
+    em = aot.Emitter(str(tmp_path))
+    pspecs = aot._param_specs(cfg)
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    import functools
+
+    em.emit("lm_fwd.micro", functools.partial(model.lm_fwd, cfg), [tok] + pspecs,
+            ["tokens"] + [n for n, _ in cfg.param_layout()], ["logits"], "micro")
+    text = (tmp_path / "lm_fwd.micro.hlo.txt").read_text()
+    assert "HloModule" in text
+    # grid loop of the interpret-mode kernel shows up as a while/call structure
+    assert ("while" in text) or ("call" in text)
+
+
+def test_manifest_schema(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    aot.lower_micro(em)
+    manifest = {"version": 1, "configs": {}, "artifacts": em.records}
+    s = json.dumps(manifest)
+    back = json.loads(s)
+    for r in back["artifacts"]:
+        assert set(r) >= {"name", "file", "config", "inputs", "outputs", "sha256"}
+        for io in r["inputs"] + r["outputs"]:
+            assert set(io) == {"name", "dtype", "shape"}
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_consistent():
+    """If `make artifacts` has run, the manifest must match the configs."""
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    for cname, meta in man["configs"].items():
+        cfg = CONFIGS[cname]
+        assert meta["n_params"] == cfg.n_params()
+        assert [(n, tuple(s)) for n, s in meta["param_layout"]] == cfg.param_layout()
+    for r in man["artifacts"]:
+        assert os.path.exists(os.path.join(root, r["file"])), r["name"]

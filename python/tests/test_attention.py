@@ -1,0 +1,72 @@
+"""Causal-attention Pallas kernel vs oracle: masking, blocking, stability."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+
+def _qkv(t, s, hd, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray((rng.normal(size=(t, s, hd)) * scale).astype(np.float32))
+    return mk(), mk(), mk()
+
+
+@pytest.mark.parametrize("t,s,hd", [(2, 8, 4), (6, 16, 8), (8, 64, 16)])
+def test_matches_ref(t, s, hd):
+    q, k, v = _qkv(t, s, hd, seed=t * 100 + s)
+    scale = 1.0 / hd ** 0.5
+    got = attention.causal_attention(q, k, v, scale)
+    want = ref.causal_attention(q, k, v, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bq", [2, 4, 8, 16])
+def test_query_blocking_invariant(bq):
+    q, k, v = _qkv(4, 16, 8, seed=3)
+    scale = 0.35
+    full = attention.causal_attention(q, k, v, scale)
+    tiled = attention.causal_attention(q, k, v, scale, bq=bq)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), rtol=1e-5, atol=1e-6)
+
+
+def test_causality():
+    """Changing future keys/values must not change earlier outputs."""
+    q, k, v = _qkv(2, 16, 8, seed=9)
+    scale = 0.3
+    base = np.asarray(attention.causal_attention(q, k, v, scale))
+    k2 = k.at[:, 8:, :].set(123.0)
+    v2 = v.at[:, 8:, :].set(-55.0)
+    pert = np.asarray(attention.causal_attention(q, k2, v2, scale))
+    np.testing.assert_allclose(base[:, :8, :], pert[:, :8, :], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[:, 8:, :], pert[:, 8:, :])
+
+
+def test_first_position_copies_v0():
+    """Row 0 attends only to position 0 -> output == v[:,0,:]."""
+    q, k, v = _qkv(3, 8, 4, seed=5)
+    out = np.asarray(attention.causal_attention(q, k, v, 0.5))
+    np.testing.assert_allclose(out[:, 0, :], np.asarray(v[:, 0, :]), rtol=1e-6, atol=1e-6)
+
+
+def test_large_logit_stability():
+    q, k, v = _qkv(2, 16, 8, seed=7, scale=40.0)
+    out = np.asarray(attention.causal_attention(q, k, v, 1.0))
+    assert np.isfinite(out).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 8, 16, 32]),
+    hd=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_kernel_vs_ref(t, s, hd, seed):
+    q, k, v = _qkv(t, s, hd, seed=seed % 100_000)
+    scale = 1.0 / hd ** 0.5
+    got = attention.causal_attention(q, k, v, scale)
+    want = ref.causal_attention(q, k, v, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,173 @@
+"""L2 model tests: shapes, pallas-vs-jnp path equality, LoRA algebra, grads."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS
+
+CFG = CONFIGS["micro"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(CFG.batch, CFG.seq)), jnp.int32)
+
+
+def test_param_layout_count(params):
+    assert len(params) == len(CFG.param_layout())
+    for p, (name, shape) in zip(params, CFG.param_layout()):
+        assert p.shape == shape, name
+
+
+def test_logits_shape(params, tokens):
+    (logits,) = model.lm_fwd(CFG, tokens, *params)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_pallas_path_matches_jnp_path(params, tokens):
+    """The lowered (pallas) forward must equal the oracle forward."""
+    (logits,) = model.lm_fwd(CFG, tokens, *params)
+    want = model.ref_lm_fwd(CFG, params, tokens)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_causality(params, tokens):
+    """Perturbing token t must not change logits before t."""
+    (base,) = model.lm_fwd(CFG, tokens, *params)
+    t2 = tokens.at[:, CFG.seq // 2].set((tokens[:, CFG.seq // 2] + 1) % CFG.vocab)
+    (pert,) = model.lm_fwd(CFG, t2, *params)
+    cut = CFG.seq // 2
+    np.testing.assert_allclose(
+        np.asarray(base)[:, :cut], np.asarray(pert)[:, :cut], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_nll_consistent_with_logits(params, tokens):
+    targets = jnp.roll(tokens, -1, axis=1)
+    (nll,) = model.lm_nll(CFG, tokens, targets, *params)
+    (logits,) = model.lm_fwd(CFG, tokens, *params)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    np.testing.assert_allclose(np.asarray(nll), np.asarray(lse - gold), rtol=1e-4, atol=1e-4)
+    assert float(jnp.mean(nll)) > 0
+
+
+def test_logits_last_matches_fwd(params, tokens):
+    (last,) = model.lm_logits_last(CFG, tokens, *params)
+    (full,) = model.lm_fwd(CFG, tokens, *params)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full)[:, -1], rtol=1e-5, atol=1e-5)
+
+
+def test_taps_shapes(params, tokens):
+    out = model.lm_fwd_taps(CFG, tokens, *params)
+    taps = out[1:]
+    layout = CFG.tap_layout()
+    assert len(taps) == len(layout)
+    for t, (name, shape) in zip(taps, layout):
+        assert t.shape == shape, name
+
+
+def test_zero_lora_is_identity(params, tokens):
+    rank = 2
+    lora = model.zero_lora(CFG, rank)
+    (base,) = model.lm_fwd(CFG, tokens, *params)
+    logits, _ = model.lm_logits(CFG, params, tokens, lora=lora, rank=rank, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(logits), rtol=2e-4, atol=2e-4)
+
+
+def test_lora_merge_equivalence(params, tokens):
+    """fwd(base, lora) == fwd(base with W += A@B): the merged-weight identity
+    the Rust evaluator uses everywhere."""
+    rank = 2
+    key = jax.random.PRNGKey(1)
+    lora = []
+    for _, shape in CFG.lora_layout(rank):
+        key, sub = jax.random.split(key)
+        lora.append(0.05 * jax.random.normal(sub, shape, jnp.float32))
+    logits_lr, _ = model.lm_logits(CFG, params, tokens, lora=lora, rank=rank, use_pallas=False)
+
+    merged = list(params)
+    names = [n for n, _ in CFG.param_layout()]
+    li = 0
+    for i in range(CFG.n_layers):
+        for site in ("wq", "wk", "wv", "wo", "w_up", "w_down"):
+            a, b = lora[li], lora[li + 1]
+            li += 2
+            idx = names.index(f"blk{i}.{site}")
+            merged[idx] = merged[idx] + a @ b
+    merged_logits, _ = model.lm_logits(CFG, merged, tokens, use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(logits_lr), np.asarray(merged_logits), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_lora_lm_step_grads(params, tokens):
+    rank = 2
+    targets = jnp.roll(tokens, -1, axis=1)
+    # LoRA init: A Gaussian, B zero.  Then dL/dA = (x^T dY) B^T = 0 while
+    # dL/dB = (xA)^T dY is generically nonzero.
+    key = jax.random.PRNGKey(7)
+    lora = []
+    for name, shape in CFG.lora_layout(rank):
+        if name.endswith(".A"):
+            key, sub = jax.random.split(key)
+            lora.append(0.1 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            lora.append(jnp.zeros(shape, jnp.float32))
+    out = model.lora_lm_step(CFG, rank, tokens, targets, *params, *lora)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    assert len(grads) == len(lora)
+    nz = 0
+    for i, g in enumerate(grads):
+        if i % 2 == 0:
+            assert float(jnp.max(jnp.abs(g))) < 1e-6, f"dA[{i}] should vanish when B=0"
+        else:
+            nz += float(jnp.max(jnp.abs(g))) > 0
+    assert nz > 0
+
+
+def test_pretrain_step_decreases_loss(params, tokens):
+    targets = jnp.roll(tokens, -1, axis=1)
+    out = model.pretrain_step(CFG, tokens, targets, *params)
+    loss0, grads = out[0], out[1:]
+    stepped = [p - 0.5 * g for p, g in zip(params, grads)]
+    out2 = model.pretrain_step(CFG, tokens, targets, *stepped)
+    assert float(out2[0]) < float(loss0)
+
+
+def test_cls_step_and_fwd(params, tokens):
+    rank = 2
+    rng = np.random.default_rng(2)
+    labels = jnp.asarray(rng.integers(0, CFG.n_classes, size=(CFG.batch,)), jnp.int32)
+    lora = model.zero_lora(CFG, rank)
+    hw = jnp.asarray(0.02 * rng.normal(size=(CFG.d_model, CFG.n_classes)), jnp.float32)
+    hb = jnp.zeros((CFG.n_classes,), jnp.float32)
+    out = model.lora_cls_step(CFG, rank, tokens, labels, *params, *lora, hw, hb)
+    loss, g_hw, g_hb = out[0], out[-2], out[-1]
+    assert np.isfinite(float(loss))
+    assert g_hw.shape == hw.shape and g_hb.shape == hb.shape
+    assert float(jnp.max(jnp.abs(g_hw))) > 0
+    (cls,) = model.cls_fwd(CFG, rank, tokens, *params, *lora, hw, hb)
+    assert cls.shape == (CFG.batch, CFG.n_classes)
+
+
+def test_full_cls_step(params, tokens):
+    rng = np.random.default_rng(3)
+    labels = jnp.asarray(rng.integers(0, CFG.n_classes, size=(CFG.batch,)), jnp.int32)
+    hw = jnp.asarray(0.02 * rng.normal(size=(CFG.d_model, CFG.n_classes)), jnp.float32)
+    hb = jnp.zeros((CFG.n_classes,), jnp.float32)
+    out = model.full_cls_step(CFG, tokens, labels, *params, hw, hb)
+    loss, grads = out[0], out[1:]
+    assert len(grads) == len(params) + 2
+    assert np.isfinite(float(loss))

@@ -1,0 +1,118 @@
+"""MXINT Pallas kernel vs pure-jnp oracle, plus format invariants.
+
+The quantizer is the paper's q(.)/dq(.); the Rust `quant::mxint` module
+mirrors the same formula, so this file (together with the Rust round-trip
+tests against these vectors) pins all three implementations together.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mxint, ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 6, 8])
+@pytest.mark.parametrize("block_size", [16, 32])
+def test_kernel_matches_ref_exactly(bits, block_size):
+    x = _rand((16, 4 * block_size), seed=bits * 10 + block_size)
+    got = mxint.mxint_qdq(x, bits, block_size)
+    want = ref.mxint_qdq(x, bits, block_size)
+    assert bool(jnp.all(got == want)), f"bits={bits} bs={block_size}"
+
+
+@pytest.mark.parametrize("rows_per_step", [1, 2, 8])
+def test_grid_partition_invariant(rows_per_step):
+    """Tiling the grid must not change results (BlockSpec correctness)."""
+    x = _rand((8, 64), seed=7)
+    full = mxint.mxint_qdq(x, 4, 32)
+    tiled = mxint.mxint_qdq(x, 4, 32, rows_per_step=rows_per_step)
+    assert bool(jnp.all(full == tiled))
+
+
+def test_zero_block_maps_to_zero():
+    x = jnp.zeros((4, 32), jnp.float32)
+    assert bool(jnp.all(mxint.mxint_qdq(x, 4, 32) == 0))
+
+
+def test_idempotent():
+    """q(dq(q(x))) == q(x): quantization is a projection."""
+    x = _rand((8, 64), seed=3)
+    once = ref.mxint_qdq(x, 4, 32)
+    twice = ref.mxint_qdq(once, 4, 32)
+    assert bool(jnp.all(once == twice))
+
+
+def test_scale_equivariance_pow2():
+    """MXINT is exactly equivariant to power-of-two scaling."""
+    x = _rand((8, 64), seed=5)
+    a = ref.mxint_qdq(x * 4.0, 4, 32)
+    b = ref.mxint_qdq(x, 4, 32) * 4.0
+    assert bool(jnp.all(a == b))
+
+
+def test_negation_symmetry():
+    x = _rand((8, 64), seed=11)
+    a = ref.mxint_qdq(-x, 4, 32)
+    b = -ref.mxint_qdq(x, 4, 32)
+    assert bool(jnp.all(a == b))
+
+
+def test_error_bound():
+    """|x - dq(q(x))| <= scale/2 = 2^(e - bits + 1) per block (pre-clamp
+    region), and relative block error is bounded by 2^-(bits-2)."""
+    x = _rand((32, 64), seed=13, scale=3.0)
+    for bits in (3, 4, 6):
+        y = np.asarray(ref.mxint_qdq(x, bits, 32))
+        g = np.asarray(x).reshape(-1, 32)
+        gy = y.reshape(-1, 32)
+        amax = np.abs(g).max(axis=1)
+        err = np.abs(g - gy).max(axis=1)
+        # max element error: half an lsb of the shared scale, except at the
+        # symmetric clamp where it's at most 1 lsb.
+        lsb = 2.0 ** (np.floor(np.log2(amax)) - (bits - 2))
+        assert np.all(err <= lsb * 1.0 + 1e-9), bits
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    bs=st.sampled_from([16, 32]),
+    rows=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-4, 1e4),
+)
+def test_hypothesis_kernel_vs_ref(bits, bs, rows, seed, scale):
+    x = _rand((rows, 2 * bs), seed=seed, scale=scale)
+    got = mxint.mxint_qdq(x, bits, bs)
+    want = ref.mxint_qdq(x, bits, bs)
+    assert bool(jnp.all(got == want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_bounded_and_finite(seed):
+    x = _rand((4, 32), seed=seed, scale=10.0)
+    y = ref.mxint_qdq(x, 4, 32)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # dequantized magnitudes can exceed amax by at most the clamp bound
+    amax = jnp.max(jnp.abs(x))
+    assert float(jnp.max(jnp.abs(y))) <= float(amax) * 2.0 + 1e-6
+
+
+def test_golden_vectors():
+    """Golden values shared with the Rust test-suite (quant::mxint)."""
+    x = jnp.asarray(
+        [1.0, -1.0, 0.5, 0.25, 3.0, -2.5, 0.1, 0.0] * 4, jnp.float32
+    ).reshape(1, 32)
+    y = np.asarray(ref.mxint_qdq(x, 4, 32)).reshape(-1)
+    # amax = 3.0 -> e = 1 -> scale = 2^(1-2) = 0.5
+    # 0.25/0.5 = 0.5 rounds to 0 (ties-to-even); 0.1/0.5 = 0.2 rounds to 0.
+    want = np.array([1.0, -1.0, 0.5, 0.0, 3.0, -2.5, 0.0, 0.0] * 4, np.float32)
+    np.testing.assert_array_equal(y, want)

@@ -1,0 +1,75 @@
+"""Calibration-statistics Pallas kernel vs oracle; accumulation invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stats
+
+
+def _x(r, m, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(r, m)).astype(np.float32))
+
+
+@pytest.mark.parametrize("r,m", [(8, 16), (64, 32), (256, 128)])
+def test_matches_ref(r, m):
+    x = _x(r, m, seed=r + m)
+    got = stats.calib_stats(x)
+    want = ref.calib_stats(x)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("br", [1, 2, 8, 32])
+def test_row_blocking_invariant(br):
+    x = _x(64, 32, seed=1)
+    full = stats.calib_stats(x)
+    tiled = stats.calib_stats(x, br=br)
+    for f, t in zip(full, tiled):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(t), rtol=1e-4, atol=1e-4)
+
+
+def test_rxx_symmetric_psd():
+    x = _x(128, 16, seed=2)
+    _, _, rxx = stats.calib_stats(x)
+    r = np.asarray(rxx, np.float64)
+    np.testing.assert_allclose(r, r.T, rtol=1e-5, atol=1e-5)
+    evals = np.linalg.eigvalsh((r + r.T) / 2)
+    assert evals.min() >= -1e-3 * max(1.0, evals.max())
+
+
+def test_diag_of_rxx_is_sumsq():
+    x = _x(64, 24, seed=3)
+    sumsq, _, rxx = stats.calib_stats(x)
+    np.testing.assert_allclose(np.diag(np.asarray(rxx)), np.asarray(sumsq), rtol=1e-4, atol=1e-4)
+
+
+def test_additivity_across_batches():
+    """stats(concat(a,b)) == stats(a) + stats(b): the property the Rust
+    coordinator's streaming accumulation relies on."""
+    a, b = _x(32, 16, seed=4), _x(48, 16, seed=5)
+    both = jnp.concatenate([a, b], axis=0)
+    sa = [np.asarray(t, np.float64) for t in ref.calib_stats(a)]
+    sb = [np.asarray(t, np.float64) for t in ref.calib_stats(b)]
+    sc = [np.asarray(t, np.float64) for t in ref.calib_stats(both)]
+    for x1, x2, x12 in zip(sa, sb, sc):
+        np.testing.assert_allclose(x1 + x2, x12, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.sampled_from([2, 4, 16, 64]),
+    m=st.sampled_from([4, 8, 32]),
+    br=st.sampled_from([0, 1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_stats(r, m, br, seed):
+    if br and r % br:
+        br = 1
+    x = _x(r, m, seed=seed % 100_000)
+    got = stats.calib_stats(x, br=br)
+    want = ref.calib_stats(x)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,232 @@
+//! Hot-path microbenchmarks (the §Perf layer-by-layer numbers).
+//!
+//! ```bash
+//! cargo bench --bench hotpath                  # everything
+//! cargo bench --bench hotpath -- eigh          # one group
+//! ```
+//!
+//! Groups: `eigh` (L3 solver core), `solver` (per-layer solve), `forward`
+//! (PJRT lm_fwd / qlinear), `serve` (batcher throughput), `quant`
+//! (quantizer kernels), `stats` (calibration accumulation).
+
+use qera::bench_util::{f2, f3, time_stats, Table};
+use qera::linalg::{eigh_jacobi, eigh::eigh_tridiag, svd_thin, Mat64};
+use qera::quant::QFormat;
+use qera::runtime::{exec::lm_inputs, Registry};
+use qera::solver::Method;
+use qera::stats::CalibStats;
+use qera::tensor::Tensor;
+use qera::util::rng::Rng;
+
+fn rand_psd(n: usize, seed: u64) -> Mat64 {
+    let mut rng = Rng::new(seed);
+    let m = Mat64::from_vec(n, 2 * n, (0..2 * n * n).map(|_| rng.normal()).collect());
+    m.matmul_nt(&m).scale(1.0 / (2 * n) as f64)
+}
+
+fn bench_eigh() {
+    let mut t = Table::new(
+        "eigh: tridiagonal-QL fast path vs cyclic Jacobi (ms)",
+        &["dim", "tridiag p50", "jacobi p50", "speedup"],
+    );
+    for n in [64usize, 128, 256] {
+        let a = rand_psd(n, n as u64);
+        let iters = if n >= 256 { 3 } else { 10 };
+        let tr = time_stats(1, iters, || {
+            std::hint::black_box(eigh_tridiag(&a));
+        });
+        let ja = time_stats(1, iters.min(3), || {
+            std::hint::black_box(eigh_jacobi(&a));
+        });
+        t.row(vec![
+            n.to_string(),
+            f2(tr.p50_ms),
+            f2(ja.p50_ms),
+            f2(ja.p50_ms / tr.p50_ms),
+        ]);
+    }
+    t.emit("hot_eigh");
+}
+
+fn bench_svd() {
+    let mut t = Table::new("svd_thin (ms)", &["shape", "p50", "p95"]);
+    let mut rng = Rng::new(0);
+    for (m, n) in [(64usize, 256usize), (128, 512), (256, 256)] {
+        let a = Mat64::from_vec(m, n, (0..m * n).map(|_| rng.normal()).collect());
+        let s = time_stats(1, 5, || {
+            std::hint::black_box(svd_thin(&a));
+        });
+        t.row(vec![format!("{m}x{n}"), f2(s.p50_ms), f2(s.p95_ms)]);
+    }
+    t.emit("hot_svd");
+}
+
+fn bench_solver(reg: &Registry) -> anyhow::Result<()> {
+    let spec = reg.spec("nano")?.clone();
+    let mut rng = Rng::new(1);
+    let params = qera::model::init::init_params(&spec, &mut rng);
+    let ckpt = qera::model::Checkpoint::new(spec.clone(), params);
+    let corpus = qera::data::Corpus::generate(spec.vocab, 60_000, 2);
+    let calib = qera::coordinator::calibrate(reg, &spec, &ckpt.params, &corpus, 8, true)?;
+    let fmt = QFormat::Mxint { bits: 3, block: 32 };
+    let mut t = Table::new(
+        "per-model solve wall time (12 layers, nano)",
+        &["method", "total ms p50"],
+    );
+    for method in [Method::ZeroQuantV2, Method::Lqer, Method::QeraApprox, Method::QeraExact] {
+        let s = time_stats(1, 3, || {
+            let cfg = qera::coordinator::PipelineConfig::new(method, fmt, 8);
+            std::hint::black_box(qera::coordinator::quantize(&ckpt, &cfg, Some(&calib)).unwrap());
+        });
+        t.row(vec![method.name(), f2(s.p50_ms)]);
+    }
+    t.emit("hot_solver");
+    Ok(())
+}
+
+fn bench_forward(reg: &Registry) -> anyhow::Result<()> {
+    let spec = reg.spec("nano")?.clone();
+    let mut rng = Rng::new(3);
+    let params = qera::model::init::init_params(&spec, &mut rng);
+    let tokens: Vec<i32> =
+        (0..spec.batch * spec.seq).map(|_| rng.below(spec.vocab) as i32).collect();
+    let shape = [spec.batch, spec.seq];
+    let mut t = Table::new(
+        "PJRT forward latency (nano)",
+        &["artifact", "p50 ms", "p95 ms", "tok/s"],
+    );
+    for name in ["lm_fwd.nano", "lm_nll.nano", "lm_logits_last.nano", "lm_fwd_taps.nano"] {
+        let exec = reg.load(name)?;
+        let needs_targets = exec.info.inputs.iter().any(|i| i.name == "targets");
+        let s = time_stats(2, 20, || {
+            let inputs = if needs_targets {
+                lm_inputs(&tokens, Some((&tokens, &shape)), &shape, &params)
+            } else {
+                lm_inputs(&tokens, None, &shape, &params)
+            };
+            std::hint::black_box(exec.run(&inputs).unwrap());
+        });
+        let toks = (spec.batch * spec.seq) as f64 / (s.p50_ms / 1e3);
+        t.row(vec![name.to_string(), f2(s.p50_ms), f2(s.p95_ms), format!("{toks:.0}")]);
+    }
+
+    // fused low-rank serving form vs dense (the no-overhead claim)
+    let exec_lr = reg.load(&format!("lm_fwd_lr.nano.r8"))?;
+    let lora: Vec<Tensor> = spec
+        .lora_layout(8)
+        .into_iter()
+        .map(|(_, shape)| Tensor::randn(shape, 0.01, &mut rng))
+        .collect();
+    let s = time_stats(2, 20, || {
+        let mut inputs = lm_inputs(&tokens, None, &shape, &params);
+        inputs.extend(lora.iter().cloned().map(qera::runtime::Value::F32));
+        std::hint::black_box(exec_lr.run(&inputs).unwrap());
+    });
+    let toks = (spec.batch * spec.seq) as f64 / (s.p50_ms / 1e3);
+    t.row(vec!["lm_fwd_lr.nano.r8 (A,B separate)".into(), f2(s.p50_ms), f2(s.p95_ms), format!("{toks:.0}")]);
+    t.emit("hot_forward");
+    Ok(())
+}
+
+fn bench_quant() {
+    let mut rng = Rng::new(4);
+    let w = Tensor::randn(vec![512, 512], 0.02, &mut rng);
+    let mut t = Table::new("quantizer throughput (512x512 weight)", &["format", "p50 ms", "Melem/s"]);
+    for fmt in [
+        QFormat::Mxint { bits: 4, block: 32 },
+        QFormat::Mxint { bits: 2, block: 16 },
+        QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 },
+        QFormat::Fp4 { group: 64 },
+    ] {
+        let s = time_stats(1, 10, || {
+            std::hint::black_box(fmt.qdq(&w));
+        });
+        t.row(vec![fmt.name(), f3(s.p50_ms), format!("{:.1}", 512.0 * 512.0 / 1e6 / (s.p50_ms / 1e3))]);
+    }
+    t.emit("hot_quant");
+}
+
+fn bench_stats() {
+    let mut rng = Rng::new(5);
+    let x = Tensor::randn(vec![256, 256], 1.0, &mut rng);
+    let mut t = Table::new(
+        "calibration accumulation (256 rows x 256 dims)",
+        &["mode", "p50 ms"],
+    );
+    let s1 = time_stats(1, 10, || {
+        let mut st = CalibStats::new(256, true);
+        st.update(&x);
+        std::hint::black_box(st);
+    });
+    let s2 = time_stats(1, 10, || {
+        let mut st = CalibStats::new(256, false);
+        st.update(&x);
+        std::hint::black_box(st);
+    });
+    t.row(vec!["with R_XX".into(), f2(s1.p50_ms)]);
+    t.row(vec!["diag only".into(), f2(s2.p50_ms)]);
+    t.emit("hot_stats");
+}
+
+fn bench_serve(reg: &Registry) -> anyhow::Result<()> {
+    use std::time::Duration;
+    let spec = reg.spec("nano")?.clone();
+    let mut rng = Rng::new(6);
+    let params = qera::model::init::init_params(&spec, &mut rng);
+    let mut t = Table::new(
+        "serving throughput vs batching window",
+        &["max-wait ms", "requests", "tok/s", "mean batch"],
+    );
+    for wait_ms in [0u64, 10, 50] {
+        let server = qera::serve::Server::start(
+            reg.dir.clone(),
+            spec.clone(),
+            params.clone(),
+            qera::serve::ServerConfig { max_wait: Duration::from_millis(wait_ms), seed: 1 },
+        );
+        let rxs: Vec<_> = (0..8).map(|i| server.submit(vec![i as i32 + 1, 2], 8, 0.0)).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(300))?;
+        }
+        let stats = server.stop();
+        t.row(vec![
+            wait_ms.to_string(),
+            stats.requests.to_string(),
+            format!("{:.1}", stats.throughput_tok_s()),
+            f2(stats.mean_batch()),
+        ]);
+    }
+    t.emit("hot_serve");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // cargo bench passes harness flags like `--bench`; keep only filters
+    let args: Vec<String> =
+        std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.contains(name));
+    println!("== hotpath microbenchmarks ==");
+    if want("eigh") {
+        bench_eigh();
+    }
+    if want("svd") {
+        bench_svd();
+    }
+    if want("quant") {
+        bench_quant();
+    }
+    if want("stats") {
+        bench_stats();
+    }
+    let reg = Registry::open_default()?;
+    if want("solver") {
+        bench_solver(&reg)?;
+    }
+    if want("forward") {
+        bench_forward(&reg)?;
+    }
+    if want("serve") {
+        bench_serve(&reg)?;
+    }
+    Ok(())
+}

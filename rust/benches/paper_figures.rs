@@ -1,0 +1,52 @@
+//! Regenerates every paper *figure* as a data series (DESIGN.md §5).
+//!
+//! ```bash
+//! cargo bench --bench paper_figures             # all figures, quick scale
+//! cargo bench --bench paper_figures -- fig3     # one figure
+//! ```
+
+use qera::experiments::{analysis, ptq, qpeft, Scale};
+use qera::runtime::Registry;
+
+fn main() -> anyhow::Result<()> {
+    // cargo bench passes harness flags like `--bench`; keep only filters
+    let args: Vec<String> =
+        std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.contains(name));
+    let scale = Scale::from_env();
+    let reg = Registry::open_default()?;
+    let model = match scale {
+        Scale::Quick => "nano",
+        Scale::Full => "small",
+    };
+    println!("== paper figures ({scale:?}, model {model}) ==");
+
+    if want("fig1") {
+        let (a, b) = qpeft::fig1(&reg, model, scale)?;
+        a.emit("fig1a");
+        b.emit("fig1b");
+    }
+    if want("fig2") {
+        qpeft::fig2(&reg, model, scale)?.emit("fig2");
+    }
+    if want("fig3") {
+        ptq::fig3(&reg, model, scale)?.emit("fig3");
+    }
+    if want("fig4") {
+        ptq::fig4(&reg, model, scale)?.emit("fig4");
+    }
+    if want("fig5") {
+        analysis::fig5(&reg, model, scale)?.emit("fig5");
+    }
+    if want("fig6") {
+        analysis::fig6(&reg, model, scale)?.emit("fig6");
+    }
+    if want("fig7") {
+        qpeft::fig7(&reg, model, scale)?.emit("fig7");
+    }
+    if want("fig8") {
+        analysis::fig8a(scale)?.emit("fig8a");
+        analysis::fig8b(&reg, model, scale)?.emit("fig8b");
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Regenerates every paper *table* (DESIGN.md §5 maps table -> function).
+//!
+//! ```bash
+//! cargo bench --bench paper_tables              # all tables, quick scale
+//! cargo bench --bench paper_tables -- table3    # one table
+//! QERA_BENCH_SCALE=full cargo bench --bench paper_tables
+//! ```
+
+use qera::experiments::{ptq, qpeft, Scale};
+use qera::runtime::Registry;
+
+fn main() -> anyhow::Result<()> {
+    // cargo bench passes harness flags like `--bench`; keep only filters
+    let args: Vec<String> =
+        std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.contains(name));
+    let scale = Scale::from_env();
+    let reg = Registry::open_default()?;
+    // experiment model: small at full scale, nano for the quick loop
+    let model = match scale {
+        Scale::Quick => "nano",
+        Scale::Full => "small",
+    };
+    println!("== paper tables ({scale:?}, model {model}) ==");
+
+    if want("table1") {
+        qpeft::table1(&reg, model, scale)?.emit("table1");
+    }
+    if want("table2") {
+        qpeft::table2(&reg, model, scale)?.emit("table2");
+    }
+    if want("table3") {
+        let models: Vec<&str> =
+            if scale == Scale::Full { vec!["nano", "small"] } else { vec!["nano"] };
+        ptq::table3(&reg, &models, scale)?.emit("table3");
+    }
+    if want("table4") {
+        ptq::table4(&reg, model, scale)?.emit("table4");
+    }
+    if want("table7") || want("table8") {
+        qpeft::table7(&reg, model, scale)?.emit("table7_8");
+    }
+    if want("table9") || want("table10") {
+        // the rank sweep needs the cls-rank artifact set {4..20} (small)
+        let sweep_model = if reg.specs.contains_key("small") { "small" } else { model };
+        qpeft::table9(&reg, sweep_model, scale)?.emit("table9_10");
+    }
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! Benchmark harness (criterion is not available offline).
+//!
+//! * [`time_stats`] — repeated timing with warmup → mean / p50 / p95;
+//! * [`Table`] — collects rows, prints a GitHub-markdown table, writes CSV
+//!   under `results/` so EXPERIMENTS.md can reference the raw numbers.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct TimeStats {
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn time_stats(warmup: usize, iters: usize, mut f: impl FnMut()) -> TimeStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    TimeStats {
+        iters: samples.len(),
+        mean_ms: mean,
+        p50_ms: pct(0.5),
+        p95_ms: pct(0.95),
+        min_ms: samples[0],
+    }
+}
+
+/// Markdown/CSV result table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    /// Print the markdown and persist the CSV under `results/<slug>.csv`.
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.markdown());
+        let path = std::path::Path::new("results").join(format!("{slug}.csv"));
+        if let Err(e) = crate::util::fsio::write_atomic(&path, self.csv().as_bytes()) {
+            crate::warn_!("could not write {}: {e}", path.display());
+        } else {
+            println!("[csv] results/{slug}.csv");
+        }
+    }
+}
+
+/// `f64` formatting helpers used by every bench.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+pub fn sci(x: f64) -> String {
+    format!("{x:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_stats_ordering() {
+        let s = time_stats(1, 20, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(s.min_ms <= s.p50_ms);
+        assert!(s.p50_ms <= s.p95_ms);
+        assert!(s.mean_ms > 0.0);
+        assert_eq!(s.iters, 20);
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["x".into(), "y".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### Test"));
+        assert!(md.contains("| 1 | 2 |"));
+        let csv = t.csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("a,b"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

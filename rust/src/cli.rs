@@ -1,0 +1,295 @@
+//! The `qera` launcher: hand-rolled CLI (clap is not available offline).
+//!
+//! ```text
+//! qera info                               list artifacts + configs
+//! qera pretrain  [--model nano --steps 300 --out ckpt.qkpt ...]
+//! qera quantize  [--ckpt x.qkpt --method qera-exact --format mxint4:32 ...]
+//! qera eval-ppl  [--ckpt x.qkpt | --qckpt q.qkpt ...]
+//! qera assumption [--ckpt x.qkpt]         Figure-5 off-diagonal report
+//! qera e2e       [--model nano ...]       full pipeline, end to end
+//! ```
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{calibrate, quantize, PipelineConfig};
+use crate::data::corpus::Corpus;
+use crate::model::Checkpoint;
+use crate::runtime::Registry;
+use crate::solver::Method;
+use crate::train::{pretrain, PretrainConfig};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed `--key value` arguments.
+pub struct Args {
+    pub cmd: String,
+    pub kv: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("usage: qera <command> [--key value ...]; try `qera help`");
+        }
+        let cmd = argv[0].clone();
+        let mut kv = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --key, got '{}'", argv[i]))?;
+            let v = argv.get(i + 1).with_context(|| format!("missing value for --{k}"))?;
+            kv.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { cmd, kv })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    /// Fold recognized keys into an [`ExperimentConfig`].
+    pub fn to_config(&self) -> Result<ExperimentConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => ExperimentConfig::load(path)?,
+            None => ExperimentConfig::default(),
+        };
+        for (k, v) in &self.kv {
+            if k == "config" || k == "ckpt" || k == "qckpt" || k == "out" || k == "artifacts" {
+                continue;
+            }
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+fn registry(args: &Args) -> Result<Registry> {
+    match args.get("artifacts") {
+        Some(dir) => Registry::open(dir),
+        None => Registry::open_default(),
+    }
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn main_with_args(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval-ppl" => cmd_eval_ppl(&args),
+        "assumption" => cmd_assumption(&args),
+        "e2e" => cmd_e2e(&args),
+        other => bail!("unknown command '{other}'; try `qera help`"),
+    }
+}
+
+const HELP: &str = "qera — Quantization Error Reconstruction Analysis (ICLR 2025 reproduction)
+
+commands:
+  info         list artifacts and model configs in the manifest
+  pretrain     pretrain a subject model on the synthetic corpus
+  quantize     calibrate + quantize a checkpoint with a chosen method
+  eval-ppl     perplexity of a dense or quantized checkpoint
+  assumption   Figure-5 off-diagonal (Assumption 1) report
+  e2e          pretrain -> calibrate -> quantize (all methods) -> eval
+
+common flags: --artifacts DIR --model NAME --method M --format F --rank K
+              --corpus-tokens N --calib-batches N --eval-batches N --seed S
+              --ckpt PATH --out PATH --config FILE.json";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let reg = registry(args)?;
+    println!("artifact dir: {}", reg.dir.display());
+    for (name, spec) in &reg.specs {
+        println!(
+            "config {name}: d={} L={} H={} V={} seq={} batch={} ({:.2}M params)",
+            spec.d_model,
+            spec.n_layers,
+            spec.n_heads,
+            spec.vocab,
+            spec.seq,
+            spec.batch,
+            spec.n_params() as f64 / 1e6
+        );
+    }
+    for n in reg.names() {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let reg = registry(args)?;
+    let spec = reg.spec(&cfg.model)?.clone();
+    let corpus = Corpus::generate(spec.vocab, cfg.corpus_tokens, cfg.seed);
+    let pcfg = PretrainConfig {
+        steps: cfg.pretrain_steps,
+        lr: cfg.pretrain_lr,
+        warmup: (cfg.pretrain_steps / 20).max(5),
+        seed: cfg.seed,
+        log_every: (cfg.pretrain_steps / 10).max(1),
+    };
+    let (ckpt, report) = pretrain(&reg, &spec, &corpus, &pcfg)?;
+    let out = args.get_or("out", &format!("{}/{}.qkpt", cfg.out_dir, cfg.model));
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    ckpt.save(&out)?;
+    println!(
+        "pretrained {}: final loss {:.4} over {} tokens in {:.1}s -> {out}",
+        cfg.model, report.final_loss, report.tokens_seen, report.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let reg = registry(args)?;
+    let ckpt_path = args.get("ckpt").context("--ckpt required")?;
+    let ckpt = Checkpoint::load(ckpt_path)?;
+    let corpus = Corpus::generate(ckpt.spec.vocab, cfg.corpus_tokens, cfg.seed);
+    let calib = if cfg.method.needs_stats() {
+        Some(calibrate(
+            &reg,
+            &ckpt.spec,
+            &ckpt.params,
+            &corpus,
+            cfg.calib_batches,
+            cfg.method.needs_rxx(),
+        )?)
+    } else {
+        None
+    };
+    let qm = quantize(
+        &ckpt,
+        &PipelineConfig::new(cfg.method, cfg.format, cfg.rank),
+        calib.as_ref(),
+    )?;
+    let out = args.get_or(
+        "out",
+        &format!("{}/{}-{}.qqkpt", cfg.out_dir, ckpt.spec.name, cfg.method.name()),
+    );
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    qm.ckpt.save(&out)?;
+    println!(
+        "quantized with {} ({}, rank {}): effective {:.3} bits, payload {:.2} MB, solver {:.1} ms -> {out}",
+        cfg.method.name(),
+        cfg.format.name(),
+        cfg.rank,
+        qm.effective_bits(),
+        qm.ckpt.payload_bytes() as f64 / 1e6,
+        qm.solve_ms_total,
+    );
+    Ok(())
+}
+
+fn cmd_eval_ppl(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let reg = registry(args)?;
+    let (spec, params) = if let Some(p) = args.get("qckpt") {
+        let q = crate::model::QuantCheckpoint::load(p)?;
+        (q.spec.clone(), q.materialize_merged())
+    } else {
+        let p = args.get("ckpt").context("--ckpt or --qckpt required")?;
+        let c = Checkpoint::load(p)?;
+        (c.spec.clone(), c.params)
+    };
+    let corpus = Corpus::generate(spec.vocab, cfg.corpus_tokens, cfg.seed);
+    let (_, val) = corpus.split(0.1);
+    let ppl = crate::eval::perplexity(&reg, &spec, &params, &val, cfg.eval_batches)?;
+    println!("perplexity: {ppl:.4}");
+    Ok(())
+}
+
+fn cmd_assumption(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let reg = registry(args)?;
+    let ckpt = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(p)?,
+        None => {
+            // untrained fallback so the command works standalone
+            let spec = reg.spec(&cfg.model)?.clone();
+            let params =
+                crate::model::init::init_params(&spec, &mut crate::util::rng::Rng::new(cfg.seed));
+            Checkpoint::new(spec, params)
+        }
+    };
+    let corpus = Corpus::generate(ckpt.spec.vocab, cfg.corpus_tokens, cfg.seed);
+    let calib =
+        calibrate(&reg, &ckpt.spec, &ckpt.params, &corpus, cfg.calib_batches, true)?;
+    println!("Assumption 1 diagnostic per site (frobenius mass / per-element):");
+    for (name, frob, elem) in calib.offdiag_report() {
+        let bar = "#".repeat((elem * 60.0).min(60.0) as usize);
+        println!("  {name:<18} frob {frob:.3}  elem {elem:.3} {bar}");
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let reg = registry(args)?;
+    let spec = reg.spec(&cfg.model)?.clone();
+    println!("== e2e: {} ({:.2}M params) ==", spec.name, spec.n_params() as f64 / 1e6);
+
+    let corpus = Corpus::generate(spec.vocab, cfg.corpus_tokens, cfg.seed);
+    let (train, val) = corpus.split(0.1);
+
+    let pcfg = PretrainConfig {
+        steps: cfg.pretrain_steps,
+        lr: cfg.pretrain_lr,
+        warmup: (cfg.pretrain_steps / 20).max(5),
+        seed: cfg.seed,
+        log_every: (cfg.pretrain_steps / 10).max(1),
+    };
+    let (ckpt, report) = pretrain(&reg, &spec, &train, &pcfg)?;
+    let base_ppl = crate::eval::perplexity(&reg, &spec, &ckpt.params, &val, cfg.eval_batches)?;
+    println!(
+        "pretrained: loss {:.4}, val ppl {:.3} ({} steps, {:.1}s)",
+        report.final_loss, base_ppl, cfg.pretrain_steps, report.wall_s
+    );
+
+    let calib = calibrate(&reg, &spec, &ckpt.params, &train, cfg.calib_batches, true)?;
+    let mut table = crate::bench_util::Table::new(
+        &format!("e2e {} {} rank {}", spec.name, cfg.format.name(), cfg.rank),
+        &["method", "ppl", "delta-vs-bf16", "weight-err", "solver-ms"],
+    );
+    table.row(vec!["bf16".into(), format!("{base_ppl:.3}"), "0".into(), "0".into(), "0".into()]);
+    for method in Method::ptq_grid() {
+        let qm = quantize(
+            &ckpt,
+            &PipelineConfig::new(method, cfg.format, cfg.rank),
+            Some(&calib),
+        )?;
+        let ppl = crate::eval::perplexity(&reg, &spec, &qm.merged, &val, cfg.eval_batches)?;
+        let werr: f64 = qm.diags.iter().map(|d| d.weight_error).sum();
+        table.row(vec![
+            method.name(),
+            format!("{ppl:.3}"),
+            format!("{:+.3}", ppl - base_ppl),
+            format!("{werr:.3}"),
+            format!("{:.0}", qm.solve_ms_total),
+        ]);
+    }
+    table.emit(&format!("e2e_{}", spec.name));
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Typed experiment configuration (JSON file + `--key value` overrides).
+//!
+//! One config drives the whole pipeline: which model, corpus size, the
+//! quantization method grid, rank, calibration budget, seeds.  The launcher
+//! (`qera` CLI) reads these; benches construct them programmatically.
+
+use crate::quant::QFormat;
+use crate::solver::Method;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Model config name (must exist in the artifact manifest).
+    pub model: String,
+    /// Corpus size in tokens.
+    pub corpus_tokens: usize,
+    /// Corpus / experiment seed.
+    pub seed: u64,
+    /// Quantization method.
+    pub method: Method,
+    /// Quantization format.
+    pub format: QFormat,
+    /// Low-rank reconstruction rank.
+    pub rank: usize,
+    /// Calibration batches.
+    pub calib_batches: usize,
+    /// Pretraining steps for the subject model.
+    pub pretrain_steps: usize,
+    /// Learning rate for pretraining.
+    pub pretrain_lr: f32,
+    /// Evaluation batches (ppl / output error).
+    pub eval_batches: usize,
+    /// Output directory for checkpoints/results.
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "nano".into(),
+            corpus_tokens: 200_000,
+            seed: 42,
+            method: Method::QeraExact,
+            format: QFormat::Mxint { bits: 4, block: 32 },
+            rank: 8,
+            calib_batches: 16,
+            pretrain_steps: 300,
+            pretrain_lr: 3e-3,
+            eval_batches: 16,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            c.model = v.to_string();
+        }
+        if let Some(v) = j.get("corpus_tokens").and_then(Json::as_usize) {
+            c.corpus_tokens = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_usize) {
+            c.seed = v as u64;
+        }
+        if let Some(v) = j.get("method").and_then(Json::as_str) {
+            c.method = Method::parse(v)?;
+        }
+        if let Some(v) = j.get("format").and_then(Json::as_str) {
+            c.format = QFormat::parse(v)?;
+        }
+        if let Some(v) = j.get("rank").and_then(Json::as_usize) {
+            c.rank = v;
+        }
+        if let Some(v) = j.get("calib_batches").and_then(Json::as_usize) {
+            c.calib_batches = v;
+        }
+        if let Some(v) = j.get("pretrain_steps").and_then(Json::as_usize) {
+            c.pretrain_steps = v;
+        }
+        if let Some(v) = j.get("pretrain_lr").and_then(Json::as_f64) {
+            c.pretrain_lr = v as f32;
+        }
+        if let Some(v) = j.get("eval_batches").and_then(Json::as_usize) {
+            c.eval_batches = v;
+        }
+        if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
+            c.out_dir = v.to_string();
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Apply one `--key value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = value.to_string(),
+            "corpus-tokens" | "corpus_tokens" => self.corpus_tokens = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "method" => self.method = Method::parse(value)?,
+            "format" => self.format = QFormat::parse(value)?,
+            "rank" => self.rank = value.parse()?,
+            "calib-batches" | "calib_batches" => self.calib_batches = value.parse()?,
+            "pretrain-steps" | "pretrain_steps" => self.pretrain_steps = value.parse()?,
+            "pretrain-lr" | "pretrain_lr" => self.pretrain_lr = value.parse()?,
+            "eval-batches" | "eval_batches" => self.eval_batches = value.parse()?,
+            "out-dir" | "out_dir" => self.out_dir = value.to_string(),
+            _ => anyhow::bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("corpus_tokens", Json::Num(self.corpus_tokens as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("method", Json::str(self.method.name())),
+            ("format", Json::str(self.format.name())),
+            ("rank", Json::Num(self.rank as f64)),
+            ("calib_batches", Json::Num(self.calib_batches as f64)),
+            ("pretrain_steps", Json::Num(self.pretrain_steps as f64)),
+            ("pretrain_lr", Json::Num(self.pretrain_lr as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("out_dir", Json::str(self.out_dir.clone())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        c.method = Method::Lqer;
+        c.rank = 32;
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.method, Method::Lqer);
+        assert_eq!(back.rank, 32);
+        assert_eq!(back.model, c.model);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = ExperimentConfig::default();
+        c.set("method", "lqer").unwrap();
+        c.set("rank", "16").unwrap();
+        c.set("format", "mxint3:32").unwrap();
+        assert_eq!(c.method, Method::Lqer);
+        assert_eq!(c.rank, 16);
+        assert!((c.format.avg_bits() - 3.25).abs() < 1e-12);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("rank", "not-a-number").is_err());
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"model":"small"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.rank, ExperimentConfig::default().rank);
+    }
+}

@@ -1,0 +1,169 @@
+//! Calibration orchestrator.
+//!
+//! Streams calibration batches through the `lm_fwd_taps.<cfg>` artifact and
+//! folds every tap (the input of each quantizable linear) into per-site
+//! [`CalibStats`] — f32 on device, f64 accumulation here (App. A.7).
+//!
+//! Sites sharing inputs share statistics: `wq`/`wk`/`wv` all read the
+//! `attn_in` tap (exactly the grouping the paper uses).
+
+use crate::data::corpus::Corpus;
+use crate::data::batch::lm_batches;
+use crate::model::ModelSpec;
+use crate::runtime::{exec::lm_inputs, Registry};
+use crate::stats::CalibStats;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Per-tap-site statistics for one model.
+pub struct CalibResult {
+    pub spec: ModelSpec,
+    /// Indexed by `spec.tap_index(block, tap)`.
+    pub stats: Vec<CalibStats>,
+    /// Number of calibration sequences consumed.
+    pub n_sequences: usize,
+}
+
+impl CalibResult {
+    /// Stats feeding a given linear site.
+    pub fn for_site(&self, site: &crate::model::LinearSite) -> &CalibStats {
+        &self.stats[self.spec.tap_index(site.block, site.tap)]
+    }
+
+    /// Assumption-1 diagnostic per tap (Figure 5):
+    /// (name, Frobenius-mass ratio, per-element ratio).
+    pub fn offdiag_report(&self) -> Vec<(String, f64, f64)> {
+        let mut out = Vec::new();
+        for b in 0..self.spec.n_layers {
+            for &tap in crate::model::TAP_SITES.iter() {
+                let st = &self.stats[self.spec.tap_index(b, tap)];
+                if let (Some(r), Some(e)) = (st.offdiag_ratio(), st.offdiag_element_ratio()) {
+                    out.push((format!("blk{b}.{tap}"), r, e));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Run calibration over (up to) `max_batches` batches of the corpus.
+///
+/// `track_rxx=false` skips the O(m²) accumulators (enough for LQER /
+/// QERA-approx; Table 8's cheap-init mode).
+pub fn calibrate(
+    reg: &Registry,
+    spec: &ModelSpec,
+    params: &[Tensor],
+    corpus: &Corpus,
+    max_batches: usize,
+    track_rxx: bool,
+) -> Result<CalibResult> {
+    ensure!(max_batches > 0, "need at least one calibration batch");
+    let exec = reg.load(&format!("lm_fwd_taps.{}", spec.name))?;
+    let mut stats: Vec<CalibStats> = (0..spec.n_layers)
+        .flat_map(|_| {
+            crate::model::TAP_SITES
+                .iter()
+                .map(|&tap| CalibStats::new(spec.tap_dim(tap), track_rxx))
+        })
+        .collect();
+
+    let mut n_sequences = 0usize;
+    for (bi, (tokens, _targets)) in lm_batches(corpus, spec.batch, spec.seq).enumerate() {
+        if bi >= max_batches {
+            break;
+        }
+        let outputs = exec.run(&lm_inputs(&tokens, None, &[spec.batch, spec.seq], params))?;
+        // outputs[0] = logits; outputs[1..] = taps in (block, tap) order
+        ensure!(outputs.len() == 1 + spec.n_taps(), "tap count mismatch");
+        for (t, tap) in outputs[1..].iter().zip(stats.iter_mut()) {
+            tap.update(t);
+        }
+        n_sequences += spec.batch;
+    }
+    ensure!(n_sequences > 0, "corpus too small for a single calibration batch");
+    crate::info!(
+        "calibrated {} sites over {} sequences (rxx={})",
+        stats.len(),
+        n_sequences,
+        track_rxx
+    );
+    Ok(CalibResult { spec: spec.clone(), stats, n_sequences })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<Registry> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn calibration_produces_positive_stats() {
+        let Some(reg) = registry() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(0));
+        let corpus = Corpus::generate(spec.vocab, 4096, 1);
+        let res = calibrate(&reg, &spec, &params, &corpus, 3, true).unwrap();
+        assert_eq!(res.stats.len(), spec.n_taps());
+        assert_eq!(res.n_sequences, 3 * spec.batch);
+        for (i, st) in res.stats.iter().enumerate() {
+            assert!(st.count > 0, "site {i}");
+            // every E[x²] strictly positive (Remark 2)
+            assert!(st.mean_sq().iter().all(|&v| v > 0.0), "site {i}");
+            let r = st.rxx_mean().unwrap();
+            assert!(r.is_symmetric(1e-6), "site {i}");
+        }
+        // q/k/v share attn_in
+        let sites = spec.linear_sites();
+        let a = res.for_site(&sites[0]) as *const _;
+        let b = res.for_site(&sites[1]) as *const _;
+        assert!(std::ptr::eq(a, b));
+        // offdiag report covers all sites
+        assert_eq!(res.offdiag_report().len(), spec.n_taps());
+    }
+
+    #[test]
+    fn no_rxx_mode_cheaper() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(0));
+        let corpus = Corpus::generate(spec.vocab, 2048, 2);
+        let res = calibrate(&reg, &spec, &params, &corpus, 2, false).unwrap();
+        assert!(res.stats.iter().all(|s| s.rxx_mean().is_none()));
+        assert!(res.offdiag_report().is_empty());
+    }
+
+    #[test]
+    fn stats_scale_with_batches() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(3));
+        let corpus = Corpus::generate(spec.vocab, 8192, 4);
+        let r1 = calibrate(&reg, &spec, &params, &corpus, 1, false).unwrap();
+        let r4 = calibrate(&reg, &spec, &params, &corpus, 4, false).unwrap();
+        assert_eq!(r4.stats[0].count, 4 * r1.stats[0].count);
+        // means should be consistent (same distribution)
+        let m1 = r1.stats[0].mean_sq();
+        let m4 = r4.stats[0].mean_sq();
+        let rel: f64 = m1
+            .iter()
+            .zip(&m4)
+            .map(|(a, b)| (a - b).abs() / (a + b + 1e-9))
+            .sum::<f64>()
+            / m1.len() as f64;
+        assert!(rel < 0.5, "{rel}");
+    }
+}

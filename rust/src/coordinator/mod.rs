@@ -1,0 +1,13 @@
+//! The quantization pipeline coordinator — the L3 system contribution.
+//!
+//! ```text
+//!   corpus ──► calibrate (lm_fwd_taps, streaming f64 stats per site)
+//!          ──► solve     (per-layer closed-form solvers, worker pool)
+//!          ──► emit      (QuantCheckpoint + merged weights + diagnostics)
+//! ```
+
+pub mod calibrate;
+pub mod pipeline;
+
+pub use calibrate::{calibrate, CalibResult};
+pub use pipeline::{quantize, PipelineConfig, QuantizedModel};

@@ -1,0 +1,228 @@
+//! The quantization pipeline: per-layer solve → quantized model.
+//!
+//! Layers are independent (App. A.7), so the solver jobs run on the worker
+//! pool; PJRT is not touched here (calibration already happened), keeping
+//! the pool free of thread-affine handles.
+
+use super::calibrate::CalibResult;
+use crate::model::{Checkpoint, QuantCheckpoint};
+use crate::quant::QFormat;
+use crate::solver::{self, Method};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::pool;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub method: Method,
+    pub fmt: QFormat,
+    pub rank: usize,
+    pub seed: u64,
+    /// Worker threads for the solver jobs (0 = auto).
+    pub workers: usize,
+}
+
+impl PipelineConfig {
+    pub fn new(method: Method, fmt: QFormat, rank: usize) -> Self {
+        PipelineConfig { method, fmt, rank, seed: 42, workers: 0 }
+    }
+}
+
+/// Per-layer diagnostics (drives Tables 7-8 / Figure 8b).
+#[derive(Clone, Debug)]
+pub struct LayerDiag {
+    pub name: String,
+    pub weight_error: f64,
+    pub wall_ms: f64,
+}
+
+/// A quantized model ready for evaluation/serving.
+#[derive(Debug)]
+pub struct QuantizedModel {
+    pub ckpt: QuantCheckpoint,
+    /// Merged `W~ + A B` params in canonical order (the evaluator's input).
+    pub merged: Vec<Tensor>,
+    pub diags: Vec<LayerDiag>,
+    pub config: PipelineConfig,
+    /// Total solver wall time (sequential sum, as the paper reports).
+    pub solve_ms_total: f64,
+}
+
+impl QuantizedModel {
+    /// Average W-bits including the low-rank overhead (paper's accounting:
+    /// low-rank params are high-precision extras on top of `fmt.avg_bits()`).
+    pub fn effective_bits(&self) -> f64 {
+        let mut wbits = 0.0f64;
+        let mut elems = 0.0f64;
+        for site in self.ckpt.spec.linear_sites() {
+            let n = (site.shape[0] * site.shape[1]) as f64;
+            elems += n;
+            wbits += n * self.config.fmt.avg_bits();
+        }
+        let lr_bits: f64 =
+            self.ckpt.lowrank.values().map(|l| (l.n_params() * 32) as f64).sum();
+        (wbits + lr_bits) / elems
+    }
+}
+
+/// Quantize every linear layer of `ckpt`.
+///
+/// `calib` may be `None` for methods that don't need statistics.
+pub fn quantize(
+    ckpt: &Checkpoint,
+    cfg: &PipelineConfig,
+    calib: Option<&CalibResult>,
+) -> Result<QuantizedModel> {
+    let spec = &ckpt.spec;
+    if cfg.method.needs_stats() {
+        ensure!(calib.is_some(), "{} requires calibration", cfg.method.name());
+        ensure!(
+            calib.unwrap().spec == *spec,
+            "calibration spec does not match checkpoint"
+        );
+    }
+    let sites = spec.linear_sites();
+    let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
+
+    let t0 = std::time::Instant::now();
+    let results: Vec<Result<(String, solver::SolveOutput)>> =
+        pool::parallel_map(sites.len(), workers, |i| {
+            let site = &sites[i];
+            let w = &ckpt.params[site.param_idx];
+            let stats = calib.map(|c| c.for_site(site));
+            let out = solver::solve(
+                cfg.method,
+                w,
+                cfg.fmt,
+                cfg.rank,
+                stats,
+                cfg.seed ^ (i as u64) << 8,
+            )?;
+            Ok((site.name.clone(), out))
+        });
+
+    let mut solved: BTreeMap<String, (Tensor, Option<crate::solver::LowRank>)> = BTreeMap::new();
+    let mut diags = Vec::with_capacity(sites.len());
+    let mut solve_ms_total = 0.0;
+    for (site, res) in sites.iter().zip(results) {
+        let (name, out) = res?;
+        let w = &ckpt.params[site.param_idx];
+        diags.push(LayerDiag {
+            name: name.clone(),
+            weight_error: solver::weight_error(w, &out),
+            wall_ms: out.wall_ms,
+        });
+        solve_ms_total += out.wall_ms;
+        solved.insert(name, (out.w_dq, out.lowrank));
+    }
+
+    let meta = Json::obj(vec![
+        ("method", Json::str(cfg.method.name())),
+        ("format", Json::str(cfg.fmt.name())),
+        ("rank", Json::Num(cfg.rank as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+    ]);
+    let qckpt = QuantCheckpoint::from_solved(ckpt, cfg.fmt, &solved, meta);
+    let merged = qckpt.materialize_merged();
+    crate::info!(
+        "quantized {} layers ({}, {}, rank {}) in {:.2}s wall / {:.2}s solver",
+        sites.len(),
+        cfg.method.name(),
+        cfg.fmt.name(),
+        cfg.rank,
+        t0.elapsed().as_secs_f64(),
+        solve_ms_total / 1e3,
+    );
+    Ok(QuantizedModel { ckpt: qckpt, merged, diags, config: cfg.clone(), solve_ms_total })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::model::ModelSpec;
+    use crate::util::rng::Rng;
+
+    fn nano_ckpt(seed: u64) -> Checkpoint {
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let params = init_params(&spec, &mut Rng::new(seed));
+        Checkpoint::new(spec, params)
+    }
+
+    fn fmt() -> QFormat {
+        QFormat::Mxint { bits: 4, block: 32 }
+    }
+
+    #[test]
+    fn wonly_pipeline_runs_without_calibration() {
+        let ckpt = nano_ckpt(0);
+        let qm = quantize(&ckpt, &PipelineConfig::new(Method::WOnly, fmt(), 0), None).unwrap();
+        assert_eq!(qm.diags.len(), 12);
+        assert!(qm.ckpt.lowrank.is_empty());
+        // merged weights differ from the original weights but by a bounded amount
+        let site = &ckpt.spec.linear_sites()[0];
+        let diff = qm.merged[site.param_idx].sub(&ckpt.params[site.param_idx]).frob_norm();
+        assert!(diff > 0.0);
+        let rel = diff / ckpt.params[site.param_idx].frob_norm();
+        assert!(rel < 0.2, "{rel}"); // MXINT4 RMS err ~0.12 on gaussian weights
+        // non-linear params untouched
+        assert_eq!(qm.merged[0], ckpt.params[0]);
+    }
+
+    #[test]
+    fn stats_methods_fail_fast_without_calibration() {
+        let ckpt = nano_ckpt(1);
+        let err =
+            quantize(&ckpt, &PipelineConfig::new(Method::QeraApprox, fmt(), 8), None).unwrap_err();
+        assert!(err.to_string().contains("calibration"));
+    }
+
+    #[test]
+    fn zeroquant_reduces_weight_error() {
+        let ckpt = nano_ckpt(2);
+        let fmt2 = QFormat::Mxint { bits: 2, block: 16 };
+        let w_only = quantize(&ckpt, &PipelineConfig::new(Method::WOnly, fmt2, 0), None).unwrap();
+        let zq =
+            quantize(&ckpt, &PipelineConfig::new(Method::ZeroQuantV2, fmt2, 8), None).unwrap();
+        for (a, b) in w_only.diags.iter().zip(&zq.diags) {
+            assert!(b.weight_error < a.weight_error, "{}", a.name);
+        }
+        assert_eq!(zq.ckpt.lowrank.len(), 12);
+    }
+
+    #[test]
+    fn effective_bits_accounting() {
+        let ckpt = nano_ckpt(3);
+        let w_only = quantize(&ckpt, &PipelineConfig::new(Method::WOnly, fmt(), 0), None).unwrap();
+        assert!((w_only.effective_bits() - 4.25).abs() < 1e-9);
+        let zq = quantize(&ckpt, &PipelineConfig::new(Method::ZeroQuantV2, fmt(), 8), None).unwrap();
+        assert!(zq.effective_bits() > 4.25);
+        assert!(zq.effective_bits() < 16.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ckpt = nano_ckpt(4);
+        let cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4);
+        let a = quantize(&ckpt, &cfg, None).unwrap();
+        let b = quantize(&ckpt, &cfg, None).unwrap();
+        for (x, y) in a.merged.iter().zip(&b.merged) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let ckpt = nano_ckpt(5);
+        let mut cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4);
+        cfg.workers = 1;
+        let serial = quantize(&ckpt, &cfg, None).unwrap();
+        cfg.workers = 4;
+        let parallel = quantize(&ckpt, &cfg, None).unwrap();
+        for (x, y) in serial.merged.iter().zip(&parallel.merged) {
+            assert_eq!(x, y);
+        }
+    }
+}

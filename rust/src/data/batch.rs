@@ -1,0 +1,151 @@
+//! Batching: fixed-shape (B, S) windows over token streams and shuffled
+//! classification minibatches (the artifacts have static shapes; everything
+//! here pads/packs to them).
+
+use super::corpus::Corpus;
+use super::tasks::ClsExample;
+use crate::util::rng::Rng;
+
+/// Contiguous non-overlapping LM batches: tokens [B,S], targets [B,S]
+/// (next-token).  Deterministic order.
+pub struct BatchIter<'a> {
+    corpus: &'a Corpus,
+    batch: usize,
+    seq: usize,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn n_batches(&self) -> usize {
+        let per = self.batch * (self.seq + 1);
+        self.corpus.len() / per
+    }
+}
+
+pub fn lm_batches(corpus: &Corpus, batch: usize, seq: usize) -> BatchIter<'_> {
+    BatchIter { corpus, batch, seq, cursor: 0 }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    /// (tokens [B*S], targets [B*S]) flat row-major.
+    type Item = (Vec<i32>, Vec<i32>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let need = self.batch * (self.seq + 1);
+        if self.cursor + need > self.corpus.len() {
+            return None;
+        }
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut targets = Vec::with_capacity(self.batch * self.seq);
+        for b in 0..self.batch {
+            let start = self.cursor + b * (self.seq + 1);
+            let window = &self.corpus.tokens[start..start + self.seq + 1];
+            tokens.extend_from_slice(&window[..self.seq]);
+            targets.extend_from_slice(&window[1..]);
+        }
+        self.cursor += need;
+        Some((tokens, targets))
+    }
+}
+
+/// Random-order LM batches for training (windows sampled with replacement).
+pub fn lm_batch_random(
+    corpus: &Corpus,
+    batch: usize,
+    seq: usize,
+    rng: &mut Rng,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut tokens = Vec::with_capacity(batch * seq);
+    let mut targets = Vec::with_capacity(batch * seq);
+    let span = corpus.len() - seq - 1;
+    for _ in 0..batch {
+        let start = rng.below(span);
+        let window = &corpus.tokens[start..start + seq + 1];
+        tokens.extend_from_slice(&window[..seq]);
+        targets.extend_from_slice(&window[1..]);
+    }
+    (tokens, targets)
+}
+
+/// Shuffled epoch of classification minibatches, final ragged batch padded
+/// by repeating earlier examples (labels carried so accuracy can mask them).
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    /// How many rows are real (non-padding).
+    pub real: usize,
+}
+
+pub fn cls_epoch(data: &[ClsExample], batch: usize, rng: &mut Rng) -> Vec<ClsBatch> {
+    assert!(!data.is_empty());
+    let mut order: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut order);
+    let seq = data[0].tokens.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < order.len() {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut labels = Vec::with_capacity(batch);
+        let real = (order.len() - i).min(batch);
+        for b in 0..batch {
+            let idx = if b < real { order[i + b] } else { order[(i + b) % order.len()] };
+            tokens.extend_from_slice(&data[idx].tokens);
+            labels.push(data[idx].label);
+        }
+        out.push(ClsBatch { tokens, labels, real });
+        i += real;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::Task;
+
+    #[test]
+    fn lm_batches_cover_stream() {
+        let c = Corpus::generate(64, 1000, 0);
+        let it = lm_batches(&c, 2, 16);
+        let n = it.n_batches();
+        let batches: Vec<_> = lm_batches(&c, 2, 16).collect();
+        assert_eq!(batches.len(), n);
+        assert!(n >= 1000 / (2 * 17) - 1);
+        for (t, y) in &batches {
+            assert_eq!(t.len(), 32);
+            assert_eq!(y.len(), 32);
+        }
+    }
+
+    #[test]
+    fn targets_are_shifted_tokens() {
+        let c = Corpus::generate(64, 200, 1);
+        let (t, y) = lm_batches(&c, 1, 16).next().unwrap();
+        assert_eq!(&t[1..], &y[..15]);
+        assert_eq!(t[..], c.tokens[..16]);
+        assert_eq!(y[15], c.tokens[16]);
+    }
+
+    #[test]
+    fn random_batches_shaped() {
+        let c = Corpus::generate(64, 500, 2);
+        let mut rng = Rng::new(0);
+        let (t, y) = lm_batch_random(&c, 4, 8, &mut rng);
+        assert_eq!(t.len(), 32);
+        assert_eq!(y.len(), 32);
+    }
+
+    #[test]
+    fn cls_epoch_covers_all_once() {
+        let task = Task::by_name("parity").unwrap();
+        let data = task.generate(50, 64, 16, 0);
+        let mut rng = Rng::new(1);
+        let batches = cls_epoch(&data, 8, &mut rng);
+        let total_real: usize = batches.iter().map(|b| b.real).sum();
+        assert_eq!(total_real, 50);
+        for b in &batches {
+            assert_eq!(b.labels.len(), 8);
+            assert_eq!(b.tokens.len(), 8 * 16);
+        }
+    }
+}

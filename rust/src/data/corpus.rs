@@ -1,0 +1,228 @@
+//! Zipf–Markov synthetic corpus — the pretraining/calibration text.
+//!
+//! Token statistics of natural language that matter for this paper:
+//! heavy-tailed unigram frequencies (→ anisotropic embedding statistics,
+//! outlier channels — exactly what separates QERA from plain SVD) and
+//! learnable local structure (→ a pretrained LM beats the unigram entropy,
+//! so perplexity deltas between quantization methods are meaningful).
+//!
+//! Construction: unigram base `p(t) ∝ 1/(t+3)^1.08`; each state `s` (the
+//! previous token) mixes the base with a sparse "grammar" of ~8 preferred
+//! successors chosen pseudo-randomly per state.  Sampling uses per-state
+//! cumulative tables + binary search.  Fully deterministic from the seed.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub vocab: usize,
+    pub tokens: Vec<i32>,
+}
+
+/// Markov chain over the vocabulary with Zipf marginals.
+pub struct CorpusModel {
+    vocab: usize,
+    /// Per-state cumulative transition table [vocab * vocab].
+    cum: Vec<f32>,
+}
+
+impl CorpusModel {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 16);
+        let mut rng = Rng::new(seed ^ 0xC0_7B05);
+        // Zipf base
+        let base: Vec<f64> = (0..vocab).map(|t| 1.0 / ((t + 3) as f64).powf(1.08)).collect();
+        let base_sum: f64 = base.iter().sum();
+        // cumulative of the base for Zipf-distributed grammar choices
+        let mut base_cum = Vec::with_capacity(vocab);
+        let mut acc0 = 0.0f64;
+        for b in &base {
+            acc0 += b / base_sum;
+            base_cum.push(acc0);
+        }
+        let zipf_pick = |u: f64| -> usize {
+            base_cum.partition_point(|&c| c < u).min(vocab - 1)
+        };
+        let mut cum = vec![0.0f32; vocab * vocab];
+        for s in 0..vocab {
+            // sparse grammar: 8 preferred successors (Zipf-distributed so the
+            // marginals stay heavy-tailed) with geometric weights
+            let mut extra = vec![0.0f64; vocab];
+            let mut st = rng.fork(s as u64);
+            let mut wgt = 1.0f64;
+            for _ in 0..8 {
+                let t = zipf_pick(st.f64());
+                extra[t] += wgt;
+                wgt *= 0.7;
+            }
+            let extra_sum: f64 = extra.iter().sum();
+            let mut acc = 0.0f64;
+            for t in 0..vocab {
+                let p = 0.6 * base[t] / base_sum + 0.4 * extra[t] / extra_sum;
+                acc += p;
+                cum[s * vocab + t] = acc as f32;
+            }
+            // normalize the tail exactly to 1
+            let norm = acc as f32;
+            for t in 0..vocab {
+                cum[s * vocab + t] /= norm;
+            }
+            cum[s * vocab + vocab - 1] = 1.0;
+        }
+        CorpusModel { vocab, cum }
+    }
+
+    /// Sample the successor of `state` given uniform `u in [0,1)`.
+    #[inline]
+    pub fn sample(&self, state: usize, u: f32) -> usize {
+        let row = &self.cum[state * self.vocab..(state + 1) * self.vocab];
+        // binary search for the first cum >= u
+        let mut lo = 0usize;
+        let mut hi = self.vocab - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if row[mid] >= u {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+
+    /// True next-token distribution entropy averaged over the stationary-ish
+    /// sample — a lower bound for achievable LM loss (diagnostics).
+    pub fn conditional_entropy_estimate(&self, n_states: usize) -> f64 {
+        let mut h = 0.0f64;
+        let states = n_states.min(self.vocab);
+        for s in 0..states {
+            let row = &self.cum[s * self.vocab..(s + 1) * self.vocab];
+            let mut prev = 0.0f32;
+            let mut hs = 0.0f64;
+            for &c in row {
+                let p = (c - prev) as f64;
+                if p > 0.0 {
+                    hs -= p * p.ln();
+                }
+                prev = c;
+            }
+            h += hs;
+        }
+        h / states as f64
+    }
+}
+
+impl Corpus {
+    /// Generate `n_tokens` tokens.
+    pub fn generate(vocab: usize, n_tokens: usize, seed: u64) -> Corpus {
+        let model = CorpusModel::new(vocab, seed);
+        let mut rng = Rng::new(seed);
+        let mut tokens = Vec::with_capacity(n_tokens);
+        let mut state = rng.below(vocab);
+        for _ in 0..n_tokens {
+            state = model.sample(state, rng.f32());
+            tokens.push(state as i32);
+        }
+        Corpus { vocab, tokens }
+    }
+
+    /// Split into train/validation token streams.
+    pub fn split(&self, val_frac: f64) -> (Corpus, Corpus) {
+        let cut = ((self.tokens.len() as f64) * (1.0 - val_frac)) as usize;
+        (
+            Corpus { vocab: self.vocab, tokens: self.tokens[..cut].to_vec() },
+            Corpus { vocab: self.vocab, tokens: self.tokens[cut..].to_vec() },
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Empirical unigram entropy (nats) — sanity metric.
+    pub fn unigram_entropy(&self) -> f64 {
+        let mut counts = vec![0usize; self.vocab];
+        for &t in &self.tokens {
+            counts[t as usize] += 1;
+        }
+        let n = self.tokens.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(64, 1000, 42);
+        let b = Corpus::generate(64, 1000, 42);
+        assert_eq!(a.tokens, b.tokens);
+        let c = Corpus::generate(64, 1000, 43);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let c = Corpus::generate(128, 5000, 0);
+        assert!(c.tokens.iter().all(|&t| (0..128).contains(&t)));
+    }
+
+    #[test]
+    fn zipf_marginals() {
+        // frequent tokens should be much more common than the tail
+        let c = Corpus::generate(256, 100_000, 1);
+        let mut counts = vec![0usize; 256];
+        for &t in &c.tokens {
+            counts[t as usize] += 1;
+        }
+        let head: usize = counts[..16].iter().sum();
+        let tail: usize = counts[128..].iter().sum();
+        assert!(head > 3 * tail, "head {head} vs tail {tail}");
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // conditional entropy must sit well below unigram entropy: a bigram
+        // model (and hence the transformer) can beat the unigram baseline
+        let c = Corpus::generate(256, 50_000, 2);
+        let model = CorpusModel::new(256, 2);
+        let h_cond = model.conditional_entropy_estimate(256);
+        let h_uni = c.unigram_entropy();
+        assert!(
+            h_cond < h_uni - 0.3,
+            "conditional {h_cond} not much below unigram {h_uni}"
+        );
+    }
+
+    #[test]
+    fn split_preserves_tokens() {
+        let c = Corpus::generate(64, 1000, 3);
+        let (tr, va) = c.split(0.1);
+        assert_eq!(tr.len() + va.len(), 1000);
+        assert_eq!(va.len(), 100);
+        assert_eq!(&c.tokens[..900], &tr.tokens[..]);
+    }
+
+    #[test]
+    fn cumulative_rows_valid() {
+        let m = CorpusModel::new(64, 7);
+        for s in 0..64 {
+            let row = &m.cum[s * 64..(s + 1) * 64];
+            assert!(row.windows(2).all(|w| w[1] >= w[0]));
+            assert!((row[63] - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Synthetic data substrate (the offline stand-ins for WikiText2 /
+//! SlimPajama / GLUE / GSM8K — see DESIGN.md §6).
+
+pub mod corpus;
+pub mod tokenizer;
+pub mod tasks;
+pub mod batch;
+
+pub use batch::{lm_batches, BatchIter};
+pub use corpus::Corpus;
+pub use tasks::{ClsExample, Task, TASK_NAMES};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,374 @@
+//! The downstream-task suite: GLUE-like classification tasks (Table 1 /
+//! Tables 9-10), a regression-style analog of STSB (Figure 2), and an
+//! arithmetic-QA generation task standing in for GSM8K (Table 2).
+//!
+//! Design constraints (so results mean something):
+//! * every label is computable from the token sequence alone — the task is
+//!   noiseless, so fine-tuned accuracy differences reflect optimization
+//!   quality (the paper's QPEFT comparison), not label noise;
+//! * tasks span a difficulty range: some are learnable by pooled linear
+//!   probes (SST-like), some need positional reasoning (RTE/CoLA-like);
+//! * samples are drawn on top of the pretraining corpus statistics so the
+//!   quantized backbone's features are in-distribution.
+
+use super::corpus::CorpusModel;
+use crate::util::rng::Rng;
+
+/// One classification example.
+#[derive(Clone, Debug)]
+pub struct ClsExample {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// The eight GLUE-analog tasks.
+pub const TASK_NAMES: [&str; 8] =
+    ["parity", "majority", "firstclass", "pattern", "maxrun", "ordered", "count", "pairdist"];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub id: usize,
+}
+
+impl Task {
+    pub fn by_name(name: &str) -> Option<Task> {
+        TASK_NAMES.iter().position(|&n| n == name).map(|id| Task { id })
+    }
+
+    pub fn name(&self) -> &'static str {
+        TASK_NAMES[self.id]
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self.name() {
+            "pairdist" => 4,
+            _ => 2,
+        }
+    }
+
+    /// Nominal dataset size (mirrors GLUE's spread: MNLI is ~100x RTE —
+    /// drives the paper's small-task convergence story, Figure 2).
+    pub fn train_size(&self) -> usize {
+        match self.name() {
+            "parity" | "majority" => 2048, // the "big" tasks
+            "pattern" | "count" => 1024,
+            _ => 256, // the "small" tasks (RTE/MRPC/STSB-like)
+        }
+    }
+
+    /// Generate a labelled sample set over corpus-like text.
+    pub fn generate(&self, n: usize, vocab: usize, seq: usize, seed: u64) -> Vec<ClsExample> {
+        let model = CorpusModel::new(vocab, 1234);
+        let mut rng = Rng::new(seed ^ (self.id as u64) << 32);
+        let marked_a = 7 % vocab as i32; // frequent marker tokens
+        let marked_b = 11 % vocab as i32;
+        (0..n)
+            .map(|_| {
+                // corpus-distributed body
+                let mut tokens = Vec::with_capacity(seq);
+                let mut state = rng.below(vocab);
+                for _ in 0..seq {
+                    state = sample_state(&model, state, &mut rng);
+                    tokens.push(state as i32);
+                }
+                // plant task-relevant structure + compute the label
+                let label = self.plant_and_label(&mut tokens, marked_a, marked_b, vocab, &mut rng);
+                ClsExample { tokens, label }
+            })
+            .collect()
+    }
+
+    fn plant_and_label(
+        &self,
+        tokens: &mut [i32],
+        a: i32,
+        b: i32,
+        vocab: usize,
+        rng: &mut Rng,
+    ) -> i32 {
+        let seq = tokens.len();
+        match self.name() {
+            "parity" => {
+                // plant 0..8 copies of `a` at random positions
+                let k = rng.below(9);
+                for _ in 0..k {
+                    tokens[rng.below(seq)] = a;
+                }
+                (tokens.iter().filter(|&&t| t == a).count() % 2) as i32
+            }
+            "majority" => {
+                let ka = rng.below(10);
+                let kb = rng.below(10);
+                for _ in 0..ka {
+                    tokens[rng.below(seq)] = a;
+                }
+                for _ in 0..kb {
+                    tokens[rng.below(seq)] = b;
+                }
+                let ca = tokens.iter().filter(|&&t| t == a).count();
+                let cb = tokens.iter().filter(|&&t| t == b).count();
+                (ca > cb) as i32
+            }
+            "firstclass" => {
+                // class of the first token: low half vs high half of vocab
+                let t = rng.below(vocab) as i32;
+                tokens[0] = t;
+                (t as usize >= vocab / 2) as i32
+            }
+            "pattern" => {
+                // does the bigram (a, b) occur?
+                let has = rng.below(2) == 1;
+                if has {
+                    let p = rng.below(seq - 1);
+                    tokens[p] = a;
+                    tokens[p + 1] = b;
+                } else {
+                    // scrub accidental occurrences
+                    for i in 0..seq - 1 {
+                        if tokens[i] == a && tokens[i + 1] == b {
+                            tokens[i + 1] = (b + 1) % vocab as i32;
+                        }
+                    }
+                }
+                let mut found = 0;
+                for i in 0..seq - 1 {
+                    if tokens[i] == a && tokens[i + 1] == b {
+                        found = 1;
+                        break;
+                    }
+                }
+                found
+            }
+            "maxrun" => {
+                // plant a run of `a` of length 2..6; label: run >= 4
+                let len = 2 + rng.below(5);
+                let p = rng.below(seq - len);
+                for i in 0..len {
+                    tokens[p + i] = a;
+                }
+                let mut best = 0;
+                let mut cur = 0;
+                for &t in tokens.iter() {
+                    if t == a {
+                        cur += 1;
+                        best = best.max(cur);
+                    } else {
+                        cur = 0;
+                    }
+                }
+                (best >= 4) as i32
+            }
+            "ordered" => {
+                // three probe tokens at fixed slots; label: strictly increasing
+                let s0 = seq / 4;
+                let vals: Vec<i32> =
+                    (0..3).map(|_| rng.below(vocab) as i32).collect();
+                tokens[s0] = vals[0];
+                tokens[2 * s0] = vals[1];
+                tokens[3 * s0] = vals[2];
+                (vals[0] < vals[1] && vals[1] < vals[2]) as i32
+            }
+            "count" => {
+                let k = rng.below(11);
+                for _ in 0..k {
+                    tokens[rng.below(seq)] = a;
+                }
+                (tokens.iter().filter(|&&t| t == a).count() > 5) as i32
+            }
+            "pairdist" => {
+                // distance between the planted a and b, bucketed into 4
+                let d = 1 + rng.below(seq - 2);
+                let p = rng.below(seq - d);
+                // scrub other copies so "first occurrence" is well defined
+                for t in tokens.iter_mut() {
+                    if *t == a || *t == b {
+                        *t = (a + b + 1) % vocab as i32;
+                    }
+                }
+                tokens[p] = a;
+                tokens[p + d] = b;
+                let bucket = (d * 4 / seq).min(3);
+                bucket as i32
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+fn sample_state(model: &CorpusModel, state: usize, rng: &mut Rng) -> usize {
+    model.sample(state, rng.f32())
+}
+
+/// STSB-analog regression pairs: similarity = overlap between two halves,
+/// label in [0, 1] (the trainer buckets it for the CE head and reports a
+/// correlation metric like the paper's P/S Corr).
+pub fn stsb_like(n: usize, vocab: usize, seq: usize, seed: u64) -> Vec<(Vec<i32>, f32)> {
+    let mut rng = Rng::new(seed ^ 0x57_5b);
+    (0..n)
+        .map(|_| {
+            let half = seq / 2;
+            let mut tokens = vec![0i32; seq];
+            for t in tokens.iter_mut().take(half) {
+                *t = rng.below(vocab) as i32;
+            }
+            // second half: copy a fraction `sim` of the first half
+            let sim = rng.f32();
+            for i in 0..half {
+                tokens[half + i] = if rng.f32() < sim {
+                    tokens[i]
+                } else {
+                    rng.below(vocab) as i32
+                };
+            }
+            let overlap = (0..half).filter(|&i| tokens[i] == tokens[half + i]).count();
+            (tokens, overlap as f32 / half as f32)
+        })
+        .collect()
+}
+
+/// GSM8K-analog: modular arithmetic rendered in token space:
+/// `[Q] a [+] b [=] c0 c1` where c = (a + b) mod M is spelled in two digit
+/// tokens.  Accuracy = exact match of the answer tokens under teacher
+/// forcing (argmax).
+pub struct ArithmeticQA {
+    pub modulus: usize,
+    pub q_tok: i32,
+    pub plus_tok: i32,
+    pub eq_tok: i32,
+    pub digit_base: i32,
+}
+
+impl ArithmeticQA {
+    pub fn new(vocab: usize) -> Self {
+        // digits live in a reserved sub-range; modulus chosen so answers
+        // need two digit tokens
+        let base = (vocab / 2) as i32;
+        ArithmeticQA {
+            modulus: 100,
+            q_tok: 1,
+            plus_tok: 2,
+            eq_tok: 3,
+            digit_base: base,
+        }
+    }
+
+    /// (tokens, answer positions) — answers occupy the two slots after `=`.
+    pub fn generate(&self, n: usize, seq: usize, seed: u64) -> Vec<(Vec<i32>, Vec<usize>)> {
+        let mut rng = Rng::new(seed ^ 0xA517);
+        (0..n)
+            .map(|_| {
+                let a = rng.below(self.modulus);
+                let b = rng.below(self.modulus);
+                let c = (a + b) % self.modulus;
+                let mut tokens = vec![0i32; seq];
+                // filler prefix keeps the question at a fixed tail position
+                for t in tokens.iter_mut() {
+                    *t = 4 + rng.below(30) as i32;
+                }
+                let p = seq - 9;
+                tokens[p] = self.q_tok;
+                tokens[p + 1] = self.digit_base + (a / 10) as i32;
+                tokens[p + 2] = self.digit_base + (a % 10) as i32;
+                tokens[p + 3] = self.plus_tok;
+                tokens[p + 4] = self.digit_base + (b / 10) as i32;
+                tokens[p + 5] = self.digit_base + (b % 10) as i32;
+                tokens[p + 6] = self.eq_tok;
+                tokens[p + 7] = self.digit_base + (c / 10) as i32;
+                tokens[p + 8] = self.digit_base + (c % 10) as i32; // = seq-1
+                // the two answer tokens are the teacher-forced targets of
+                // positions seq-3 and seq-2
+                let answer_positions = vec![seq - 2, seq - 1];
+                (tokens, answer_positions)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for name in TASK_NAMES {
+            let task = Task::by_name(name).unwrap();
+            let data = task.generate(64, 256, 32, 42);
+            assert_eq!(data.len(), 64);
+            for ex in &data {
+                assert_eq!(ex.tokens.len(), 32);
+                assert!(ex.tokens.iter().all(|&t| (0..256).contains(&t)), "{name}");
+                assert!((0..task.n_classes() as i32).contains(&ex.label), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_balanced_enough() {
+        for name in TASK_NAMES {
+            let task = Task::by_name(name).unwrap();
+            let data = task.generate(512, 256, 32, 1);
+            let mut counts = vec![0usize; task.n_classes()];
+            for ex in &data {
+                counts[ex.label as usize] += 1;
+            }
+            let min = *counts.iter().min().unwrap();
+            assert!(
+                min * task.n_classes() >= 512 / 8,
+                "{name}: degenerate label distribution {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn labels_deterministic() {
+        let task = Task::by_name("parity").unwrap();
+        let a = task.generate(32, 128, 16, 7);
+        let b = task.generate(32, 128, 16, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn labels_consistent_with_tokens() {
+        // recompute parity labels from tokens
+        let task = Task::by_name("parity").unwrap();
+        let data = task.generate(128, 256, 32, 3);
+        for ex in &data {
+            let c = ex.tokens.iter().filter(|&&t| t == 7).count();
+            assert_eq!(ex.label, (c % 2) as i32);
+        }
+    }
+
+    #[test]
+    fn stsb_scores_in_range() {
+        let data = stsb_like(100, 128, 32, 5);
+        for (tokens, y) in &data {
+            assert_eq!(tokens.len(), 32);
+            assert!((0.0..=1.0).contains(y));
+        }
+        // scores should spread over the range
+        let lo = data.iter().filter(|(_, y)| *y < 0.3).count();
+        let hi = data.iter().filter(|(_, y)| *y > 0.7).count();
+        assert!(lo > 5 && hi > 5);
+    }
+
+    #[test]
+    fn arithmetic_layout() {
+        let qa = ArithmeticQA::new(256);
+        let data = qa.generate(16, 64, 9);
+        for (tokens, pos) in &data {
+            assert_eq!(tokens.len(), 64);
+            assert_eq!(pos, &vec![62, 63]);
+            assert_eq!(tokens[64 - 9], qa.q_tok);
+            assert_eq!(tokens[64 - 6], qa.plus_tok);
+            assert_eq!(tokens[64 - 3], qa.eq_tok);
+            // answer digits encode (a + b) % 100
+            let a = (tokens[64 - 8] - qa.digit_base) * 10 + (tokens[64 - 7] - qa.digit_base);
+            let b = (tokens[64 - 5] - qa.digit_base) * 10 + (tokens[64 - 4] - qa.digit_base);
+            let c = (tokens[64 - 2] - qa.digit_base) * 10 + (tokens[64 - 1] - qa.digit_base);
+            assert_eq!(c, (a + b) % 100, "{a} + {b} != {c}");
+        }
+    }
+}

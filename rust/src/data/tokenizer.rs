@@ -1,0 +1,103 @@
+//! Word-level tokenizer over the synthetic vocabulary.
+//!
+//! The corpus is generated directly in token space; the tokenizer gives the
+//! serving path human-readable text: token `t` ↔ a deterministic pseudo-word
+//! whose length follows the Zipf rank (frequent tokens are short, like real
+//! text).  Round-trip exact.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    words: Vec<String>,
+    lookup: HashMap<String, i32>,
+}
+
+const CONSONANTS: &[u8] = b"bcdfghjklmnprstvz";
+const VOWELS: &[u8] = b"aeiou";
+
+fn word_for(t: usize) -> String {
+    // syllabic pseudo-word; length grows with rank
+    let syllables = 1 + (t / 48).min(3);
+    let mut s = String::new();
+    let mut x = (t as u64).wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    for _ in 0..syllables {
+        x ^= x >> 13;
+        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+        let c = CONSONANTS[(x % 17) as usize] as char;
+        let v = VOWELS[((x >> 8) % 5) as usize] as char;
+        s.push(c);
+        s.push(v);
+    }
+    // disambiguate collisions with a rank suffix
+    s.push_str(&format!("{}", t % 97));
+    s
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Tokenizer {
+        let mut words = Vec::with_capacity(vocab);
+        let mut lookup = HashMap::with_capacity(vocab);
+        for t in 0..vocab {
+            let mut w = word_for(t);
+            while lookup.contains_key(&w) {
+                w.push('x');
+            }
+            lookup.insert(w.clone(), t as i32);
+            words.push(w);
+        }
+        Tokenizer { words, lookup }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| self.words.get(t as usize).map(String::as_str).unwrap_or("<unk>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .filter_map(|w| self.lookup.get(w).copied())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tok = Tokenizer::new(256);
+        let ids: Vec<i32> = vec![0, 5, 17, 255, 100, 3];
+        let text = tok.decode(&ids);
+        assert_eq!(tok.encode(&text), ids);
+    }
+
+    #[test]
+    fn unique_words() {
+        let tok = Tokenizer::new(512);
+        let mut set = std::collections::HashSet::new();
+        for w in &tok.words {
+            assert!(set.insert(w.clone()), "duplicate word {w}");
+        }
+    }
+
+    #[test]
+    fn frequent_tokens_short() {
+        let tok = Tokenizer::new(512);
+        assert!(tok.words[0].len() < tok.words[400].len());
+    }
+
+    #[test]
+    fn unknown_words_skipped() {
+        let tok = Tokenizer::new(64);
+        assert!(tok.encode("zzz-not-a-word qqq").is_empty());
+    }
+}

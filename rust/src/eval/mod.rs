@@ -1,0 +1,15 @@
+//! Evaluation harness: perplexity (Table 3), downstream-task accuracy
+//! (Tables 1/4/11-17), model output error (Figure 1), and the
+//! AlpacaEval-analog win rate (Figure 4).
+
+pub mod ppl;
+pub mod probe;
+pub mod output_error;
+pub mod tasks;
+pub mod winrate;
+
+pub use output_error::model_output_error;
+pub use ppl::perplexity;
+pub use probe::probe_accuracy;
+pub use tasks::{cls_accuracy, qa_digit_accuracy, qa_exact_match};
+pub use winrate::win_rate;

@@ -1,0 +1,100 @@
+//! Perplexity evaluator (WikiText2-analog, Table 3).
+//!
+//! Streams (tokens, targets) windows through `lm_nll.<cfg>` — the artifact
+//! returns per-token NLL so only B·S floats cross the device boundary per
+//! batch — and reports `exp(mean NLL)` (word ppl in the paper's terms).
+
+use crate::data::batch::lm_batches;
+use crate::data::corpus::Corpus;
+use crate::model::ModelSpec;
+use crate::runtime::{exec::lm_inputs, Registry};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Perplexity of `params` over (up to) `max_batches` of `corpus`.
+pub fn perplexity(
+    reg: &Registry,
+    spec: &ModelSpec,
+    params: &[Tensor],
+    corpus: &Corpus,
+    max_batches: usize,
+) -> Result<f64> {
+    let exec = reg.load(&format!("lm_nll.{}", spec.name))?;
+    let shape = [spec.batch, spec.seq];
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (bi, (tokens, targets)) in lm_batches(corpus, spec.batch, spec.seq).enumerate() {
+        if bi >= max_batches {
+            break;
+        }
+        let out = exec.run(&lm_inputs(&tokens, Some((&targets, &shape)), &shape, params))?;
+        total += out[0].data().iter().map(|&v| v as f64).sum::<f64>();
+        count += out[0].numel();
+    }
+    ensure!(count > 0, "corpus too small for one evaluation batch");
+    Ok((total / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<Registry> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn random_model_ppl_near_uniform() {
+        let Some(reg) = registry() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(0));
+        let corpus = Corpus::generate(spec.vocab, 4096, 1);
+        let ppl = perplexity(&reg, &spec, &params, &corpus, 4).unwrap();
+        // untrained model ≈ uniform over vocab (LN+small init keep it close)
+        assert!(ppl > spec.vocab as f64 * 0.3, "{ppl}");
+        assert!(ppl < spec.vocab as f64 * 3.0, "{ppl}");
+    }
+
+    #[test]
+    fn ppl_deterministic() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(1));
+        let corpus = Corpus::generate(spec.vocab, 4096, 2);
+        let a = perplexity(&reg, &spec, &params, &corpus, 2).unwrap();
+        let b = perplexity(&reg, &spec, &params, &corpus, 2).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantization_increases_ppl_of_untrained_model_slightly() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(2));
+        let corpus = Corpus::generate(spec.vocab, 4096, 3);
+        let base = perplexity(&reg, &spec, &params, &corpus, 2).unwrap();
+        // crush the weights to 2 bits
+        let ckpt = crate::model::Checkpoint::new(spec.clone(), params.clone());
+        let cfg = crate::coordinator::PipelineConfig::new(
+            crate::solver::Method::WOnly,
+            crate::quant::QFormat::Mxint { bits: 2, block: 16 },
+            0,
+        );
+        let qm = crate::coordinator::quantize(&ckpt, &cfg, None).unwrap();
+        let qppl = perplexity(&reg, &spec, &qm.merged, &corpus, 2).unwrap();
+        // both finite; they must differ (quantization does something)
+        assert!(qppl.is_finite() && base.is_finite());
+        assert_ne!(qppl, base);
+    }
+}

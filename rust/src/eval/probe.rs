@@ -1,0 +1,211 @@
+//! Linear-probe downstream evaluation (Table 4 analog).
+//!
+//! The paper reports zero-shot accuracy of quantized LLMs on six tasks.
+//! Offline substitute: freeze the (quantized) backbone, extract mean-pooled
+//! features via the `lm_pool.<cfg>` artifact, and fit a multinomial logistic
+//! regression probe per task with a fixed budget — identical probe, so
+//! accuracy differences isolate how much task-relevant signal quantization
+//! destroyed in the backbone.
+
+use crate::data::batch::cls_epoch;
+use crate::data::tasks::ClsExample;
+use crate::model::ModelSpec;
+use crate::runtime::{exec::lm_inputs, Registry};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// Extract pooled features [n, D] for a dataset.
+pub fn pooled_features(
+    reg: &Registry,
+    spec: &ModelSpec,
+    params: &[Tensor],
+    data: &[ClsExample],
+) -> Result<(Vec<Vec<f32>>, Vec<i32>)> {
+    ensure!(!data.is_empty());
+    let exec = reg.load(&format!("lm_pool.{}", spec.name))?;
+    let seq = data[0].tokens.len();
+    ensure!(seq == spec.seq);
+    let mut feats = Vec::with_capacity(data.len());
+    let mut labels = Vec::with_capacity(data.len());
+    let mut rng = Rng::new(0);
+    for b in cls_epoch(data, spec.batch, &mut rng) {
+        let out = exec.run(&lm_inputs(&b.tokens, None, &[spec.batch, seq], params))?;
+        for i in 0..b.real {
+            feats.push(out[0].row(i).to_vec());
+            labels.push(b.labels[i]);
+        }
+    }
+    Ok((feats, labels))
+}
+
+/// Multinomial logistic regression trained with full-batch gradient descent.
+pub struct Probe {
+    pub w: Vec<Vec<f64>>, // [classes][dim+1] (last = bias)
+    pub classes: usize,
+}
+
+impl Probe {
+    pub fn fit(feats: &[Vec<f32>], labels: &[i32], classes: usize, iters: usize) -> Probe {
+        let n = feats.len();
+        let d = feats[0].len();
+        let mut w = vec![vec![0.0f64; d + 1]; classes];
+        // feature standardization for stable GD
+        let mut mean = vec![0.0f64; d];
+        let mut var = vec![0.0f64; d];
+        for f in feats {
+            for j in 0..d {
+                mean[j] += f[j] as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        for f in feats {
+            for j in 0..d {
+                var[j] += (f[j] as f64 - mean[j]).powi(2);
+            }
+        }
+        let std: Vec<f64> = var.iter().map(|v| (v / n as f64).sqrt().max(1e-8)).collect();
+
+        let lr = 0.5;
+        let mut probs = vec![0.0f64; classes];
+        let mut grad = vec![vec![0.0f64; d + 1]; classes];
+        for _ in 0..iters {
+            for g in grad.iter_mut() {
+                for v in g.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            for (f, &y) in feats.iter().zip(labels) {
+                let mut maxl = f64::NEG_INFINITY;
+                for (c, pc) in probs.iter_mut().enumerate().take(classes) {
+                    let mut s = w[c][d];
+                    for j in 0..d {
+                        s += w[c][j] * (f[j] as f64 - mean[j]) / std[j];
+                    }
+                    *pc = s;
+                    maxl = maxl.max(s);
+                }
+                let mut z = 0.0;
+                for pc in probs.iter_mut() {
+                    *pc = (*pc - maxl).exp();
+                    z += *pc;
+                }
+                for c in 0..classes {
+                    let p = probs[c] / z;
+                    let err = p - if c as i32 == y { 1.0 } else { 0.0 };
+                    for j in 0..d {
+                        grad[c][j] += err * (f[j] as f64 - mean[j]) / std[j];
+                    }
+                    grad[c][d] += err;
+                }
+            }
+            for c in 0..classes {
+                for j in 0..=d {
+                    w[c][j] -= lr * grad[c][j] / n as f64;
+                }
+            }
+        }
+        // fold standardization into the weights
+        let mut folded = vec![vec![0.0f64; d + 1]; classes];
+        for c in 0..classes {
+            let mut bias = w[c][d];
+            for j in 0..d {
+                folded[c][j] = w[c][j] / std[j];
+                bias -= w[c][j] * mean[j] / std[j];
+            }
+            folded[c][d] = bias;
+        }
+        Probe { w: folded, classes }
+    }
+
+    pub fn predict(&self, f: &[f32]) -> i32 {
+        let d = f.len();
+        let mut best = 0;
+        let mut best_s = f64::NEG_INFINITY;
+        for c in 0..self.classes {
+            let mut s = self.w[c][d];
+            for j in 0..d {
+                s += self.w[c][j] * f[j] as f64;
+            }
+            if s > best_s {
+                best_s = s;
+                best = c;
+            }
+        }
+        best as i32
+    }
+
+    pub fn accuracy(&self, feats: &[Vec<f32>], labels: &[i32]) -> f64 {
+        let correct = feats
+            .iter()
+            .zip(labels)
+            .filter(|(f, &y)| self.predict(f) == y)
+            .count();
+        correct as f64 / feats.len() as f64
+    }
+}
+
+/// End-to-end probe accuracy: fit on `train`, report on `test`.
+pub fn probe_accuracy(
+    reg: &Registry,
+    spec: &ModelSpec,
+    params: &[Tensor],
+    train: &[ClsExample],
+    test: &[ClsExample],
+    classes: usize,
+) -> Result<f64> {
+    let (ftr, ltr) = pooled_features(reg, spec, params, train)?;
+    let (fte, lte) = pooled_features(reg, spec, params, test)?;
+    let probe = Probe::fit(&ftr, &ltr, classes, 300);
+    Ok(probe.accuracy(&fte, &lte))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_learns_separable_data() {
+        let mut rng = Rng::new(0);
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..200 {
+            let y = (i % 2) as i32;
+            let mut f: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            f[3] += if y == 1 { 2.0 } else { -2.0 };
+            feats.push(f);
+            labels.push(y);
+        }
+        let p = Probe::fit(&feats, &labels, 2, 200);
+        assert!(p.accuracy(&feats, &labels) > 0.95);
+    }
+
+    #[test]
+    fn probe_multiclass() {
+        let mut rng = Rng::new(1);
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..300 {
+            let y = (i % 3) as i32;
+            let mut f: Vec<f32> = (0..6).map(|_| rng.normal_f32() * 0.5).collect();
+            f[y as usize] += 2.0;
+            feats.push(f);
+            labels.push(y);
+        }
+        let p = Probe::fit(&feats, &labels, 3, 200);
+        assert!(p.accuracy(&feats, &labels) > 0.9);
+    }
+
+    #[test]
+    fn probe_chance_on_noise() {
+        let mut rng = Rng::new(2);
+        let feats: Vec<Vec<f32>> =
+            (0..200).map(|_| (0..8).map(|_| rng.normal_f32()).collect()).collect();
+        let labels: Vec<i32> = (0..200).map(|_| rng.below(2) as i32).collect();
+        let p = Probe::fit(&feats, &labels, 2, 100);
+        let acc = p.accuracy(&feats, &labels);
+        assert!(acc < 0.8, "{acc}"); // cannot be much better than chance+memorization
+    }
+}

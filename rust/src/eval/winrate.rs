@@ -1,0 +1,135 @@
+//! AlpacaEval-analog win rate (Figure 4).
+//!
+//! The paper judges instruction-following quality of quantized models
+//! against the `w-only` counterpart with GPT-4.  Offline substitute: the
+//! *reference-agreement judge* — for each prompt, a method "wins" if its
+//! per-token NLL of the BF16 reference continuation is lower than the
+//! opponent's (i.e. its distribution stays closer to the full-precision
+//! model where it matters: on the tokens the reference model would emit).
+//! Deterministic, and preserves the comparative structure of the metric.
+
+use crate::data::batch::lm_batches;
+use crate::data::corpus::Corpus;
+use crate::model::ModelSpec;
+use crate::runtime::{exec::lm_inputs, Registry};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Per-prompt NLL of `params` against greedy continuations of `reference`.
+fn prompt_scores(
+    reg: &Registry,
+    spec: &ModelSpec,
+    reference: &[Tensor],
+    params: &[Tensor],
+    corpus: &Corpus,
+    max_batches: usize,
+) -> Result<Vec<f64>> {
+    let fwd = reg.load(&format!("lm_fwd.{}", spec.name))?;
+    let nll = reg.load(&format!("lm_nll.{}", spec.name))?;
+    let shape = [spec.batch, spec.seq];
+    let v = spec.vocab;
+    let mut scores = Vec::new();
+    for (bi, (tokens, _)) in lm_batches(corpus, spec.batch, spec.seq).enumerate() {
+        if bi >= max_batches {
+            break;
+        }
+        // reference greedy "continuation": argmax of the reference logits at
+        // each position = the tokens the BF16 model prefers
+        let r = fwd.run(&lm_inputs(&tokens, None, &shape, reference))?;
+        let mut ref_targets = Vec::with_capacity(spec.batch * spec.seq);
+        for row in 0..spec.batch * spec.seq {
+            let l = &r[0].data()[row * v..(row + 1) * v];
+            let mut best = 0;
+            for j in 1..v {
+                if l[j] > l[best] {
+                    best = j;
+                }
+            }
+            ref_targets.push(best as i32);
+        }
+        // candidate's NLL of those targets, per prompt (= batch row)
+        let out = nll.run(&lm_inputs(&tokens, Some((&ref_targets, &shape)), &shape, params))?;
+        for b in 0..spec.batch {
+            let row = &out[0].data()[b * spec.seq..(b + 1) * spec.seq];
+            scores.push(row.iter().map(|&x| x as f64).sum::<f64>() / spec.seq as f64);
+        }
+    }
+    ensure!(!scores.is_empty(), "no prompts evaluated");
+    Ok(scores)
+}
+
+/// Length-controlled-style win rate of `candidate` vs `opponent`, judged by
+/// closeness to `reference`.  Ties count half.
+pub fn win_rate(
+    reg: &Registry,
+    spec: &ModelSpec,
+    reference: &[Tensor],
+    candidate: &[Tensor],
+    opponent: &[Tensor],
+    corpus: &Corpus,
+    max_batches: usize,
+) -> Result<f64> {
+    let c = prompt_scores(reg, spec, reference, candidate, corpus, max_batches)?;
+    let o = prompt_scores(reg, spec, reference, opponent, corpus, max_batches)?;
+    let mut wins = 0.0f64;
+    for (a, b) in c.iter().zip(&o) {
+        if a < b {
+            wins += 1.0;
+        } else if a == b {
+            wins += 0.5;
+        }
+    }
+    Ok(wins / c.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<Registry> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn lighter_quantization_wins() {
+        // Figure 4's comparative structure: a 4-bit model must stay closer
+        // to the reference than its 2-bit counterpart
+        let Some(reg) = registry() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let reference = init_params(&spec, &mut Rng::new(0));
+        let ckpt = crate::model::Checkpoint::new(spec.clone(), reference.clone());
+        let q4 = crate::coordinator::quantize(
+            &ckpt,
+            &crate::coordinator::PipelineConfig::new(
+                crate::solver::Method::WOnly,
+                crate::quant::QFormat::Mxint { bits: 4, block: 32 },
+                0,
+            ),
+            None,
+        )
+        .unwrap();
+        let q2 = crate::coordinator::quantize(
+            &ckpt,
+            &crate::coordinator::PipelineConfig::new(
+                crate::solver::Method::WOnly,
+                crate::quant::QFormat::Mxint { bits: 2, block: 16 },
+                0,
+            ),
+            None,
+        )
+        .unwrap();
+        let corpus = Corpus::generate(spec.vocab, 8192, 1);
+        let wr = win_rate(&reg, &spec, &reference, &q4.merged, &q2.merged, &corpus, 4).unwrap();
+        assert!(wr > 0.7, "4-bit should beat 2-bit: {wr}");
+        // symmetric: candidate == opponent -> exactly 0.5
+        let wr2 = win_rate(&reg, &spec, &reference, &q2.merged, &q2.merged, &corpus, 2).unwrap();
+        assert!((wr2 - 0.5).abs() < 1e-12, "{wr2}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Analysis experiments: Figure 5 (Assumption-1 test), Figure 6 (LoftQ
+//! weight-error trace), Figure 8 (matrix-sqrt scalability + solver
+//! wall-time).
+
+use super::common::{corpus_for, subject_model, Scale};
+use crate::bench_util::Table;
+use crate::coordinator::{calibrate, quantize, PipelineConfig};
+use crate::linalg::{psd, Mat64};
+use crate::quant::QFormat;
+use crate::runtime::Registry;
+use crate::solver::{loftq::loftq_error_trace, Method};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Figure 5: normalized off-diagonal mass of R_XX per site (Assumption 1).
+pub fn fig5(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
+    let spec = reg.spec(model)?.clone();
+    let ckpt = subject_model(reg, &spec, scale)?;
+    let (train, _) = corpus_for(&spec);
+    let calib = calibrate(reg, &spec, &ckpt.params, &train, 16, true)?;
+    let mut table = Table::new(
+        "Figure 5 analog: Assumption-1 diagnostics of R_XX per tap site",
+        &["site", "frob-mass-ratio", "mean|offdiag|/mean(diag)", "assumption-1"],
+    );
+    for (name, frob, elem) in calib.offdiag_report() {
+        // the paper's visual criterion is per-element darkness; <~0.3 means
+        // typical off-diagonal entries are well below the diagonal
+        let verdict = if elem < 0.3 { "holds" } else { "strained" };
+        table.row(vec![name, format!("{frob:.3}"), format!("{elem:.3}"), verdict.to_string()]);
+    }
+    Ok(table)
+}
+
+/// Figure 6: LoftQ weight error per iteration per layer (always decreasing —
+/// contrasted with Figure 1b's non-monotone *output* error).
+pub fn fig6(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
+    let spec = reg.spec(model)?.clone();
+    let ckpt = subject_model(reg, &spec, scale)?;
+    let fmt = QFormat::Mxint { bits: 2, block: 32 };
+    let mut table = Table::new(
+        "Figure 6 analog: LoftQ weight error ||W - W~ - C_k||_F per iteration",
+        &["layer", "iter1", "iter2", "iter3", "iter4", "iter5"],
+    );
+    for site in spec.linear_sites().iter().take(6) {
+        let w = &ckpt.params[site.param_idx];
+        let trace = loftq_error_trace(w, fmt, 8, 5);
+        let mut row = vec![site.name.clone()];
+        row.extend(trace.iter().map(|e| format!("{e:.4}")));
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// Figure 8a: relative error of the PSD matrix square root vs dimension.
+pub fn fig8a(scale: Scale) -> Result<Table> {
+    let dims: Vec<usize> = match scale {
+        Scale::Quick => vec![32, 64, 128, 256],
+        Scale::Full => vec![32, 64, 128, 256, 512],
+    };
+    let mut table = Table::new(
+        "Figure 8a analog: ||(R^1/2)^2 - R||_F / ||R||_F vs hidden size",
+        &["dim", "sqrt-error-ratio", "wall-ms"],
+    );
+    for &d in &dims {
+        // synthetic anisotropic R_XX like a real layer's
+        let mut rng = Rng::new(d as u64);
+        let mut m = Mat64::zeros(d, 2 * d);
+        let scales: Vec<f64> = (0..d).map(|_| (rng.normal() * 1.5).exp()).collect();
+        for i in 0..d {
+            for j in 0..2 * d {
+                m.a[i * 2 * d + j] = rng.normal() * scales[i];
+            }
+        }
+        let r = m.matmul_nt(&m).scale(1.0 / (2 * d) as f64);
+        let t0 = std::time::Instant::now();
+        let ratio = psd::sqrt_error_ratio(&r);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        table.row(vec![d.to_string(), format!("{ratio:.3e}"), format!("{ms:.1}")]);
+    }
+    Ok(table)
+}
+
+/// Figure 8b: whole-model quantization wall time, QERA-approx vs QERA-exact
+/// (the exact solver pays for eigendecompositions of every R_XX).
+pub fn fig8b(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
+    let spec = reg.spec(model)?.clone();
+    let ckpt = subject_model(reg, &spec, scale)?;
+    let (train, _) = corpus_for(&spec);
+    let calib = calibrate(reg, &spec, &ckpt.params, &train, 16, true)?;
+    let fmt = QFormat::Mxint { bits: 3, block: 32 };
+    let mut table = Table::new(
+        "Figure 8b analog: quantization wall time per method",
+        &["method", "solver-ms (sequential sum)", "max layer ms"],
+    );
+    for method in [Method::ZeroQuantV2, Method::Lqer, Method::QeraApprox, Method::QeraExact] {
+        let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, 8), Some(&calib))?;
+        let max_ms =
+            qm.diags.iter().map(|d| d.wall_ms).fold(0.0f64, f64::max);
+        table.row(vec![
+            method.name(),
+            format!("{:.1}", qm.solve_ms_total),
+            format!("{max_ms:.1}"),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8a_runs_and_errors_are_tiny() {
+        let t = fig8a(Scale::Quick).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            let ratio: f64 = row[1].parse().unwrap();
+            assert!(ratio < 1e-6, "{ratio}");
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Shared experiment plumbing: scale knob + cached subject models.
+
+use crate::data::Corpus;
+use crate::model::{Checkpoint, ModelSpec};
+use crate::runtime::Registry;
+use crate::train::{pretrain, PretrainConfig};
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("QERA_BENCH_SCALE").as_deref() {
+            Ok("full") => Scale::Full,
+            _ => Scale::Quick,
+        }
+    }
+
+    pub fn seeds(&self) -> Vec<u64> {
+        match self {
+            Scale::Quick => vec![42],
+            Scale::Full => vec![42, 1, 2], // the paper's seeds
+        }
+    }
+
+    pub fn pretrain_steps(&self, spec: &ModelSpec) -> usize {
+        let base = match spec.name.as_str() {
+            "nano" => 2500,
+            "small" => 1500,
+            _ => 800,
+        };
+        match self {
+            Scale::Quick => base,
+            Scale::Full => base * 2,
+        }
+    }
+}
+
+/// Corpus used everywhere (seeded; split 95/5 train/val).
+pub fn corpus_for(spec: &ModelSpec) -> (Corpus, Corpus) {
+    let n = match spec.name.as_str() {
+        "nano" => 600_000,
+        "small" => 1_200_000,
+        _ => 2_000_000,
+    };
+    Corpus::generate(spec.vocab, n, 42).split(0.05)
+}
+
+/// Pretrained subject model, cached on disk under `results/`.
+pub fn subject_model(reg: &Registry, spec: &ModelSpec, scale: Scale) -> Result<Checkpoint> {
+    let steps = scale.pretrain_steps(spec);
+    let path = format!("results/{}-s{}.qkpt", spec.name, steps);
+    if let Ok(ckpt) = Checkpoint::load(&path) {
+        if ckpt.spec == *spec {
+            crate::info!("subject model cache hit: {path}");
+            return Ok(ckpt);
+        }
+    }
+    let (train, _) = corpus_for(spec);
+    let pcfg = PretrainConfig {
+        steps,
+        lr: 2e-3,
+        warmup: (steps / 25).max(10),
+        seed: 42,
+        log_every: (steps / 5).max(1),
+    };
+    let (ckpt, report) = pretrain(reg, spec, &train, &pcfg)?;
+    crate::info!("pretrained {} to loss {:.3}", spec.name, report.final_loss);
+    std::fs::create_dir_all("results")?;
+    ckpt.save(&path)?;
+    Ok(ckpt)
+}

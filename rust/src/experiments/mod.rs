@@ -1,0 +1,15 @@
+//! Paper-experiment reproductions: one function per table/figure.
+//!
+//! Benches (`cargo bench`) are thin wrappers over these; results print as
+//! markdown and land as CSV under `results/`.  DESIGN.md §5 maps each
+//! function to the paper's table/figure it regenerates.
+//!
+//! Scale: `QERA_BENCH_SCALE=quick|full` (quick = 1 seed, smaller grids —
+//! the default; full = 3 seeds, full grids, the EXPERIMENTS.md numbers).
+
+pub mod common;
+pub mod ptq;
+pub mod qpeft;
+pub mod analysis;
+
+pub use common::{subject_model, Scale};

@@ -1,0 +1,228 @@
+//! PTQ experiments: Table 3 (perplexity), Table 4 (downstream probes),
+//! Figure 3 (calibration-size sweep), Figure 4 (win rate).
+
+use super::common::{corpus_for, subject_model, Scale};
+use crate::bench_util::Table;
+use crate::coordinator::{calibrate, quantize, PipelineConfig};
+use crate::data::tasks::Task;
+use crate::eval::{perplexity, probe_accuracy, win_rate};
+use crate::quant::QFormat;
+use crate::runtime::Registry;
+use crate::solver::Method;
+use anyhow::Result;
+
+/// The PTQ method rows of Tables 3/4 (+ HQQ).
+fn method_rows() -> Vec<(String, Method, QFormat, usize)> {
+    // (label, method, format override?, rank) — HQQ uses its own format
+    vec![
+        ("hqq".into(), Method::WOnly, QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 }, 0),
+        ("w-only".into(), Method::WOnly, QFormat::None, 0),
+        ("zeroquant-v2".into(), Method::ZeroQuantV2, QFormat::None, usize::MAX),
+        ("lqer".into(), Method::Lqer, QFormat::None, usize::MAX),
+        ("qera-approx".into(), Method::QeraApprox, QFormat::None, usize::MAX),
+        ("qera-exact".into(), Method::QeraExact, QFormat::None, usize::MAX),
+    ]
+}
+
+/// Table 3: WikiText2-analog perplexity across models × precisions.
+pub fn table3(reg: &Registry, models: &[&str], scale: Scale) -> Result<Table> {
+    let precisions = [
+        (QFormat::Mxint { bits: 3, block: 32 }, 8usize, "3.25"),
+        (QFormat::Mxint { bits: 2, block: 16 }, 16, "2.50"),
+    ];
+    let mut headers = vec!["w-bits".to_string(), "method".to_string(), "rank".to_string()];
+    headers.extend(models.iter().map(|m| m.to_string()));
+    let mut table = Table::new(
+        "Table 3 analog: perplexity on the synthetic-WikiText2 corpus",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    // bf16 row
+    let mut bf16 = vec!["16".to_string(), "bf16".to_string(), "-".to_string()];
+    let mut cols: Vec<Vec<String>> = Vec::new();
+    for &m in models {
+        let spec = reg.spec(m)?.clone();
+        let ckpt = subject_model(reg, &spec, scale)?;
+        let (train, val) = corpus_for(&spec);
+        let calib = calibrate(reg, &spec, &ckpt.params, &train, 16, true)?;
+        let ppl = perplexity(reg, &spec, &ckpt.params, &val, 8)?;
+        bf16.push(format!("{ppl:.3}"));
+        let mut col = Vec::new();
+        for (fmt, rank, _) in precisions.iter() {
+            for (label, method, fmt_ovr, r) in method_rows() {
+                let f = if fmt_ovr == QFormat::None { *fmt } else { fmt_ovr };
+                let r = if r == usize::MAX { *rank } else { r };
+                let qm = quantize(&ckpt, &PipelineConfig::new(method, f, r), Some(&calib))?;
+                let ppl = perplexity(reg, &spec, &qm.merged, &val, 8)?;
+                let _ = label;
+                col.push(format!("{ppl:.3}"));
+            }
+        }
+        cols.push(col);
+    }
+    table.rows.push(bf16);
+    let per_prec = method_rows().len();
+    for (pi, (_fmt, rank, wbits)) in precisions.iter().enumerate() {
+        for (mi, (label, _m, fmt_ovr, r)) in method_rows().into_iter().enumerate() {
+            let shown_bits = if fmt_ovr == QFormat::None {
+                wbits.to_string()
+            } else {
+                format!("{:.2}", fmt_ovr.avg_bits())
+            };
+            let shown_rank =
+                if r == usize::MAX { format!("{rank}") } else { "-".to_string() };
+            let mut row = vec![shown_bits, label, shown_rank];
+            for col in &cols {
+                row.push(col[pi * per_prec + mi].clone());
+            }
+            table.rows.push(row);
+        }
+    }
+    Ok(table)
+}
+
+/// Table 4: downstream linear-probe accuracy, averaged over the task suite.
+pub fn table4(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
+    let spec = reg.spec(model)?.clone();
+    let ckpt = subject_model(reg, &spec, scale)?;
+    let (train, _) = corpus_for(&spec);
+    let calib = calibrate(reg, &spec, &ckpt.params, &train, 16, true)?;
+    let fmt = QFormat::Mxint { bits: 2, block: 16 };
+    let rank = 16;
+
+    let tasks: Vec<Task> = match scale {
+        Scale::Quick => ["majority", "firstclass", "count", "pattern", "maxrun", "pairdist"]
+            .iter()
+            .filter_map(|n| Task::by_name(n))
+            .collect(),
+        Scale::Full => (0..crate::data::TASK_NAMES.len()).map(|id| Task { id }).collect(),
+    };
+    let n_train = match scale {
+        Scale::Quick => 256,
+        Scale::Full => 512,
+    };
+
+    let mut headers = vec!["method".to_string()];
+    headers.extend(tasks.iter().map(|t| t.name().to_string()));
+    headers.push("avg".to_string());
+    let mut table = Table::new(
+        "Table 4 analog: linear-probe accuracy on the downstream suite (2.50 W-bits)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    let mut datasets = Vec::new();
+    for t in &tasks {
+        let tr = t.generate(n_train, spec.vocab, spec.seq, 10 + t.id as u64);
+        let te = t.generate(256, spec.vocab, spec.seq, 900 + t.id as u64);
+        datasets.push((tr, te, t.n_classes()));
+    }
+
+    let eval_params = |label: &str, params: &[crate::tensor::Tensor], table: &mut Table| -> Result<()> {
+        let mut row = vec![label.to_string()];
+        let mut sum = 0.0;
+        for (tr, te, classes) in &datasets {
+            let acc = probe_accuracy(reg, &spec, params, tr, te, *classes)?;
+            sum += acc;
+            row.push(format!("{:.1}", acc * 100.0));
+        }
+        row.push(format!("{:.2}", 100.0 * sum / datasets.len() as f64));
+        table.row(row);
+        Ok(())
+    };
+
+    eval_params("bf16", &ckpt.params, &mut table)?;
+    for (label, method, fmt_ovr, r) in method_rows() {
+        let f = if fmt_ovr == QFormat::None { fmt } else { fmt_ovr };
+        let r = if r == usize::MAX { rank } else { r };
+        let qm = quantize(&ckpt, &PipelineConfig::new(method, f, r), Some(&calib))?;
+        eval_params(&label, &qm.merged, &mut table)?;
+    }
+    Ok(table)
+}
+
+/// Figure 3: recovered perplexity vs number of calibration samples —
+/// LQER wobbles, QERA improves monotonically (to noise).
+pub fn fig3(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
+    let spec = reg.spec(model)?.clone();
+    let ckpt = subject_model(reg, &spec, scale)?;
+    let (train, val) = corpus_for(&spec);
+    let fmt = QFormat::Mxint { bits: 2, block: 16 };
+    let rank = 16;
+    let sizes: Vec<usize> = match scale {
+        Scale::Quick => vec![1, 2, 4, 8, 16, 32],
+        Scale::Full => vec![1, 2, 4, 8, 16, 32, 64],
+    };
+    let mut table = Table::new(
+        "Figure 3 analog: ppl vs calibration batches (lower is better)",
+        &["calib-batches", "calib-seqs", "lqer", "qera-approx", "qera-exact"],
+    );
+    for &n in &sizes {
+        let calib = calibrate(reg, &spec, &ckpt.params, &train, n, true)?;
+        let mut row = vec![n.to_string(), format!("{}", calib.n_sequences)];
+        for method in [Method::Lqer, Method::QeraApprox, Method::QeraExact] {
+            let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, rank), Some(&calib))?;
+            let ppl = perplexity(reg, &spec, &qm.merged, &val, 8)?;
+            row.push(format!("{ppl:.4}"));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// Figure 4: win rate of each reconstruction method vs the w-only model.
+pub fn fig4(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
+    let spec = reg.spec(model)?.clone();
+    let ckpt = subject_model(reg, &spec, scale)?;
+    let (train, val) = corpus_for(&spec);
+    let calib = calibrate(reg, &spec, &ckpt.params, &train, 16, true)?;
+    let fmt = QFormat::Mxint { bits: 2, block: 16 };
+    let rank = 16;
+    let wonly = quantize(&ckpt, &PipelineConfig::new(Method::WOnly, fmt, 0), Some(&calib))?;
+    let mut table = Table::new(
+        "Figure 4 analog: win rate vs w-only (reference-agreement judge)",
+        &["method", "win-rate"],
+    );
+    for method in [Method::ZeroQuantV2, Method::Lqer, Method::QeraApprox, Method::QeraExact] {
+        let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, rank), Some(&calib))?;
+        let wr = win_rate(reg, &spec, &ckpt.params, &qm.merged, &wonly.merged, &val, 6)?;
+        table.row(vec![method.name(), format!("{:.3}", wr)]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<Registry> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn method_rows_cover_paper_grid() {
+        let rows = method_rows();
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().any(|(l, ..)| l == "hqq"));
+        assert!(rows.iter().any(|(l, ..)| l == "qera-exact"));
+    }
+
+    #[test]
+    fn fig4_structure() {
+        // smoke-level: the function runs end-to-end on the cached nano model
+        let Some(reg) = registry() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        // keep it cheap: only run if a cached subject model exists
+        let spec = reg.spec("nano").unwrap().clone();
+        let steps = Scale::Quick.pretrain_steps(&spec);
+        if !PathBuf::from(format!("results/{}-s{}.qkpt", spec.name, steps)).exists() {
+            eprintln!("skipped: no cached subject model");
+            return;
+        }
+        let t = fig4(&reg, "nano", Scale::Quick).unwrap();
+        assert_eq!(t.rows.len(), 4);
+    }
+}

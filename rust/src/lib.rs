@@ -1,0 +1,45 @@
+//! # QERA — Quantization Error Reconstruction Analysis
+//!
+//! Rust + JAX + Pallas reproduction of *QERA: an Analytical Framework for
+//! Quantization Error Reconstruction* (ICLR 2025).
+//!
+//! Given a linear layer `y = x W`, quantize `W -> W~` and add a low-rank
+//! high-precision correction `C_k = A_k B_k` minimizing the **expected layer
+//! output error** `E ||x(W~ + C_k) - x W||^2`:
+//!
+//! * [`solver`] `qera_exact` — Theorem 1: `C_k = (R½)⁻¹ SVD_k(R½ (W − W~))`
+//!   with `R = E[xᵀx]`.
+//! * [`solver`] `qera_approx` — Theorem 2: diagonal `S = diag(√E[x_i²])`.
+//! * Baselines: `zeroquant_v2` (weight-error SVD), `lqer` (abs-mean
+//!   heuristic), `loftq` (iterative), QLoRA-zero.
+//!
+//! ## Architecture (three layers, python never at request time)
+//!
+//! * **L3 (this crate)** — coordinator: calibration orchestration,
+//!   closed-form solvers, quantization pipeline, training driver, evaluation
+//!   harness, serving batcher, CLI.
+//! * **L2/L1 (python/compile)** — JAX transformer + Pallas kernels,
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **runtime** — [`runtime`] loads the HLO text through the PJRT C API
+//!   (`xla` crate) and executes it from the hot path.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod quant;
+pub mod stats;
+pub mod solver;
+pub mod config;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod coordinator;
+pub mod train;
+pub mod eval;
+pub mod serve;
+pub mod experiments;
+pub mod bench_util;
+pub mod cli;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

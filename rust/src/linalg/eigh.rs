@@ -1,0 +1,448 @@
+//! Symmetric eigendecomposition.
+//!
+//! Default algorithm: cyclic Jacobi — unconditionally robust, quadratically
+//! convergent, and embarrassingly verifiable (`A V = V diag(w)` is asserted
+//! in tests).  The perf pass adds a Householder-tridiagonalization +
+//! implicit-QL fast path behind the same API (see `tridiag` below); both
+//! agree to 1e-10 on random PSD instances (cross-check test).
+//!
+//! Used for: `R_XX^{1/2}` / `(R_XX^{1/2})^{-1}` (Theorem 1), and the Gram
+//! eigendecompositions inside [`super::svd`].
+
+use super::mat::Mat64;
+
+/// Eigenvalues ascending, eigenvectors as columns of `v` (`a = v w vᵀ`).
+#[derive(Clone, Debug)]
+pub struct EighResult {
+    pub w: Vec<f64>,
+    pub v: Mat64,
+}
+
+const MAX_SWEEPS: usize = 64;
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+pub fn eigh_jacobi(a_in: &Mat64) -> EighResult {
+    assert_eq!(a_in.r, a_in.c, "eigh needs a square matrix");
+    let n = a_in.r;
+    let mut a = a_in.clone();
+    a.symmetrize();
+    let mut v = Mat64::eye(n);
+    if n == 0 {
+        return EighResult { w: vec![], v };
+    }
+    let norm = a.frob_norm().max(f64::MIN_POSITIVE);
+    let tol = 1e-14 * norm;
+
+    for _sweep in 0..MAX_SWEEPS {
+        // off-diagonal magnitude
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a.at(i, j) * a.at(i, j);
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                let apq = a.at(p, q);
+                if apq.abs() <= tol / (n as f64) {
+                    continue;
+                }
+                let app = a.at(p, p);
+                let aqq = a.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // A <- Rᵀ A R  (columns then rows)
+                for k in 0..n {
+                    let akp = a.at(k, p);
+                    let akq = a.at(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = a.at(p, k);
+                    let aqk = a.at(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+                // V <- V R
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+
+    let mut w: Vec<f64> = (0..n).map(|i| a.at(i, i)).collect();
+    sort_pairs(&mut w, &mut v);
+    EighResult { w, v }
+}
+
+/// Sort eigenpairs ascending by eigenvalue (columns of v permuted alongside).
+fn sort_pairs(w: &mut [f64], v: &mut Mat64) {
+    let n = w.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| w[i].partial_cmp(&w[j]).unwrap());
+    let wold = w.to_vec();
+    let vold = v.clone();
+    for (newj, &oldj) in idx.iter().enumerate() {
+        w[newj] = wold[oldj];
+        for k in 0..n {
+            v.set(k, newj, vold.at(k, oldj));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fast path: Householder tridiagonalization + implicit-shift QL (EISPACK
+// tred2/tql2).  O(4/3 n^3) vs Jacobi's ~O(10 n^3); selected by `eigh` for
+// n >= EIGH_TRIDIAG_MIN unless QERA_EIGH=jacobi.
+// ---------------------------------------------------------------------------
+
+const EIGH_TRIDIAG_MIN: usize = 3;
+
+/// Householder reduction: A -> tridiagonal (d, e); `a` becomes the
+/// accumulated orthogonal transform Q with A = Q T Qᵀ.  (EISPACK tred2.)
+fn tred2(a: &mut Mat64, d: &mut [f64], e: &mut [f64]) {
+    let n = a.r;
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0f64;
+        if l > 0 {
+            let mut scale = 0.0f64;
+            for k in 0..=l {
+                scale += a.at(i, k).abs();
+            }
+            if scale == 0.0 {
+                e[i] = a.at(i, l);
+            } else {
+                for k in 0..=l {
+                    let v = a.at(i, k) / scale;
+                    a.set(i, k, v);
+                    h += v * v;
+                }
+                let mut f = a.at(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a.set(i, l, f - g);
+                f = 0.0;
+                for j in 0..=l {
+                    a.set(j, i, a.at(i, j) / h);
+                    let mut g2 = 0.0f64;
+                    for k in 0..=j {
+                        g2 += a.at(j, k) * a.at(i, k);
+                    }
+                    for k in (j + 1)..=l {
+                        g2 += a.at(k, j) * a.at(i, k);
+                    }
+                    e[j] = g2 / h;
+                    f += e[j] * a.at(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let fj = a.at(i, j);
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let v = a.at(j, k) - (fj * e[k] + gj * a.at(i, k));
+                        a.set(j, k, v);
+                    }
+                }
+            }
+        } else {
+            e[i] = a.at(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0f64;
+                for k in 0..i {
+                    g += a.at(i, k) * a.at(k, j);
+                }
+                for k in 0..i {
+                    let v = a.at(k, j) - g * a.at(k, i);
+                    a.set(k, j, v);
+                }
+            }
+        }
+        d[i] = a.at(i, i);
+        a.set(i, i, 1.0);
+        for j in 0..i {
+            a.set(j, i, 0.0);
+            a.set(i, j, 0.0);
+        }
+    }
+}
+
+/// Implicit-shift QL on a tridiagonal (d, e), rotating the columns of `z`
+/// (EISPACK tql2).  Returns false if an eigenvalue fails to converge.
+fn tql2(d: &mut [f64], e: &mut [f64], z: &mut Mat64) -> bool {
+    let n = d.len();
+    if n == 0 {
+        return true;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small off-diagonal to split
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 64 {
+                return false;
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sgn = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sgn);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = z.at(k, i + 1);
+                    z.set(k, i + 1, s * z.at(k, i) + c * f);
+                    z.set(k, i, c * z.at(k, i) - s * f);
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    true
+}
+
+/// Tridiagonal fast path; falls back to Jacobi on (rare) non-convergence.
+pub fn eigh_tridiag(a_in: &Mat64) -> EighResult {
+    assert_eq!(a_in.r, a_in.c);
+    let n = a_in.r;
+    let mut a = a_in.clone();
+    a.symmetrize();
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n];
+    tred2(&mut a, &mut d, &mut e);
+    if !tql2(&mut d, &mut e, &mut a) {
+        return eigh_jacobi(a_in);
+    }
+    let mut w = d;
+    sort_pairs(&mut w, &mut a);
+    EighResult { w, v: a }
+}
+
+/// Symmetric eigendecomposition — dispatches to the fast tridiagonal path
+/// (override with `QERA_EIGH=jacobi`).
+pub fn eigh(a: &Mat64) -> EighResult {
+    let force_jacobi = std::env::var("QERA_EIGH").as_deref() == Ok("jacobi");
+    if force_jacobi || a.r < EIGH_TRIDIAG_MIN {
+        eigh_jacobi(a)
+    } else {
+        eigh_tridiag(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_sym(n: usize, seed: u64) -> Mat64 {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat64::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+        a.symmetrize();
+        a
+    }
+
+    fn rand_psd(n: usize, seed: u64) -> Mat64 {
+        let mut rng = Rng::new(seed);
+        let b = Mat64::from_vec(n, 2 * n, (0..2 * n * n).map(|_| rng.normal()).collect());
+        b.matmul_nt(&b).scale(1.0 / (2 * n) as f64)
+    }
+
+    fn check_decomposition(a: &Mat64, r: &EighResult, tol: f64) {
+        let n = a.r;
+        // A v_i = w_i v_i
+        let av = a.matmul(&r.v);
+        for j in 0..n {
+            for i in 0..n {
+                let want = r.w[j] * r.v.at(i, j);
+                assert!(
+                    (av.at(i, j) - want).abs() < tol,
+                    "Av != wv at ({i},{j}): {} vs {want}",
+                    av.at(i, j)
+                );
+            }
+        }
+        // orthonormal columns
+        let vtv = r.v.matmul_tn(&r.v);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < tol, "VᵀV not I at ({i},{j})");
+            }
+        }
+        // ascending
+        for i in 1..n {
+            assert!(r.w[i] >= r.w[i - 1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn jacobi_diagonal_matrix() {
+        let a = Mat64::diag(&[3.0, 1.0, 2.0]);
+        let r = eigh_jacobi(&a);
+        assert!((r.w[0] - 1.0).abs() < 1e-12);
+        assert!((r.w[1] - 2.0).abs() < 1e-12);
+        assert!((r.w[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let a = Mat64::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let r = eigh_jacobi(&a);
+        assert!((r.w[0] - 1.0).abs() < 1e-12);
+        assert!((r.w[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_random_sym() {
+        for n in [1, 2, 3, 5, 8, 16, 33] {
+            let a = rand_sym(n, n as u64);
+            let r = eigh_jacobi(&a);
+            check_decomposition(&a, &r, 1e-9);
+        }
+    }
+
+    #[test]
+    fn tridiag_random_sym() {
+        for n in [2, 3, 5, 8, 16, 33, 64] {
+            let a = rand_sym(n, 100 + n as u64);
+            let r = eigh_tridiag(&a);
+            check_decomposition(&a, &r, 1e-8);
+        }
+    }
+
+    #[test]
+    fn tridiag_matches_jacobi() {
+        for n in [4, 9, 25] {
+            let a = rand_psd(n, 7 + n as u64);
+            let rj = eigh_jacobi(&a);
+            let rt = eigh_tridiag(&a);
+            for i in 0..n {
+                assert!(
+                    (rj.w[i] - rt.w[i]).abs() < 1e-9 * (1.0 + rj.w[i].abs()),
+                    "n={n} i={i}: {} vs {}",
+                    rj.w[i],
+                    rt.w[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn psd_eigenvalues_nonnegative() {
+        let a = rand_psd(12, 3);
+        let r = eigh(&a);
+        for &w in &r.w {
+            assert!(w > -1e-10, "{w}");
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let a = rand_sym(10, 4);
+        let tr: f64 = (0..10).map(|i| a.at(i, i)).sum();
+        let r = eigh(&a);
+        let sum: f64 = r.w.iter().sum();
+        assert!((tr - sum).abs() < 1e-9, "{tr} vs {sum}");
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // rank-1 PSD: outer product
+        let x = vec![1.0, -2.0, 3.0, 0.5];
+        let n = x.len();
+        let mut a = Mat64::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a.set(i, j, x[i] * x[j]);
+            }
+        }
+        let r = eigh(&a);
+        let norm2: f64 = x.iter().map(|v| v * v).sum();
+        assert!((r.w[n - 1] - norm2).abs() < 1e-9);
+        for i in 0..n - 1 {
+            assert!(r.w[i].abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tridiag_handles_tridiagonal_input() {
+        // already-tridiagonal (scale==0 branches in tred2)
+        let mut a = Mat64::zeros(5, 5);
+        for i in 0..5 {
+            a.set(i, i, i as f64 + 1.0);
+        }
+        for i in 0..4 {
+            a.set(i, i + 1, 0.5);
+            a.set(i + 1, i, 0.5);
+        }
+        let r = eigh_tridiag(&a);
+        check_decomposition(&a, &r, 1e-9);
+    }
+
+    #[test]
+    fn identity_eigh() {
+        let a = Mat64::eye(6);
+        let r = eigh(&a);
+        for &w in &r.w {
+            assert!((w - 1.0).abs() < 1e-12);
+        }
+    }
+}

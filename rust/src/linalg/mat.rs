@@ -1,0 +1,303 @@
+//! Dense f64 matrix with cache-blocked multiply — the solver workhorse.
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat64 {
+    pub r: usize,
+    pub c: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat64 {
+    pub fn zeros(r: usize, c: usize) -> Self {
+        Mat64 { r, c, a: vec![0.0; r * c] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(r: usize, c: usize, a: Vec<f64>) -> Self {
+        assert_eq!(r * c, a.len());
+        Mat64 { r, c, a }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Self {
+        let t2 = t.as_2d();
+        Mat64 {
+            r: t2.rows(),
+            c: t2.cols(),
+            a: t2.data().iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(vec![self.r, self.c], self.a.iter().map(|&x| x as f32).collect())
+    }
+
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.a[i * n + i] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.c + j]
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.c + j] = v;
+    }
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.a[i * self.c..(i + 1) * self.c]
+    }
+
+    pub fn transpose(&self) -> Mat64 {
+        let mut out = Mat64::zeros(self.c, self.r);
+        for i in 0..self.r {
+            for j in 0..self.c {
+                out.a[j * self.r + i] = self.a[i * self.c + j];
+            }
+        }
+        out
+    }
+
+    /// self [m,k] x other [k,n].  i-k-j order with row streaming.
+    pub fn matmul(&self, other: &Mat64) -> Mat64 {
+        assert_eq!(self.c, other.r, "matmul dims");
+        let (m, k, n) = (self.r, self.c, other.c);
+        let mut out = vec![0.0f64; m * n];
+        for i in 0..m {
+            let arow = &self.a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &other.a[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        Mat64 { r: m, c: n, a: out }
+    }
+
+    /// selfᵀ x other:  [k,m]ᵀ... i.e. self is [k,m], other [k,n] -> [m,n].
+    pub fn matmul_tn(&self, other: &Mat64) -> Mat64 {
+        assert_eq!(self.r, other.r, "matmul_tn dims");
+        let (k, m, n) = (self.r, self.c, other.c);
+        let mut out = vec![0.0f64; m * n];
+        for kk in 0..k {
+            let arow = &self.a[kk * m..(kk + 1) * m];
+            let brow = &other.a[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        Mat64 { r: m, c: n, a: out }
+    }
+
+    /// self x otherᵀ: self [m,k], other [n,k] -> [m,n] (dot products of rows).
+    pub fn matmul_nt(&self, other: &Mat64) -> Mat64 {
+        assert_eq!(self.c, other.c, "matmul_nt dims");
+        let (m, k, n) = (self.r, self.c, other.r);
+        let mut out = vec![0.0f64; m * n];
+        for i in 0..m {
+            let arow = &self.a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.a[j * k..(j + 1) * k];
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += arow[kk] * brow[kk];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        Mat64 { r: m, c: n, a: out }
+    }
+
+    pub fn add(&self, other: &Mat64) -> Mat64 {
+        assert_eq!((self.r, self.c), (other.r, other.c));
+        let a = self.a.iter().zip(&other.a).map(|(x, y)| x + y).collect();
+        Mat64 { r: self.r, c: self.c, a }
+    }
+
+    pub fn sub(&self, other: &Mat64) -> Mat64 {
+        assert_eq!((self.r, self.c), (other.r, other.c));
+        let a = self.a.iter().zip(&other.a).map(|(x, y)| x - y).collect();
+        Mat64 { r: self.r, c: self.c, a }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat64 {
+        Mat64 { r: self.r, c: self.c, a: self.a.iter().map(|x| x * s).collect() }
+    }
+
+    /// Row-scale: diag(d) * self.
+    pub fn scale_rows(&self, d: &[f64]) -> Mat64 {
+        assert_eq!(d.len(), self.r);
+        let mut out = self.clone();
+        for i in 0..self.r {
+            for j in 0..self.c {
+                out.a[i * self.c + j] *= d[i];
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.a.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.a.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.r != self.c {
+            return false;
+        }
+        for i in 0..self.r {
+            for j in (i + 1)..self.c {
+                if (self.at(i, j) - self.at(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Symmetrize in place: (A + Aᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.r, self.c);
+        for i in 0..self.r {
+            for j in (i + 1)..self.c {
+                let v = 0.5 * (self.at(i, j) + self.at(j, i));
+                self.set(i, j, v);
+                self.set(j, i, v);
+            }
+        }
+    }
+
+    /// First k columns.
+    pub fn cols_head(&self, k: usize) -> Mat64 {
+        assert!(k <= self.c);
+        let mut out = Mat64::zeros(self.r, k);
+        for i in 0..self.r {
+            out.a[i * k..(i + 1) * k].copy_from_slice(&self.a[i * self.c..i * self.c + k]);
+        }
+        out
+    }
+
+    /// First k rows.
+    pub fn rows_head(&self, k: usize) -> Mat64 {
+        assert!(k <= self.r);
+        Mat64 { r: k, c: self.c, a: self.a[..k * self.c].to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(r: usize, c: usize, seed: u64) -> Mat64 {
+        let mut rng = Rng::new(seed);
+        Mat64::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = randm(4, 4, 0);
+        let i = Mat64::eye(4);
+        let b = a.matmul(&i);
+        for (x, y) in a.a.iter().zip(&b.a) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let a = randm(5, 7, 1);
+        let b = randm(7, 3, 2);
+        let c0 = a.matmul(&b);
+        let c1 = a.transpose().matmul_tn(&b);
+        let c2 = a.matmul_nt(&b.transpose());
+        for i in 0..c0.a.len() {
+            assert!((c0.a[i] - c1.a[i]).abs() < 1e-12);
+            assert!((c0.a[i] - c2.a[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn associativity() {
+        let a = randm(3, 4, 3);
+        let b = randm(4, 5, 4);
+        let c = randm(5, 2, 5);
+        let l = a.matmul(&b).matmul(&c);
+        let r = a.matmul(&b.matmul(&c));
+        for i in 0..l.a.len() {
+            assert!((l.a[i] - r.a[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn scale_rows_is_diag_mul() {
+        let a = randm(3, 4, 6);
+        let d = vec![2.0, -1.0, 0.5];
+        let want = Mat64::diag(&d).matmul(&a);
+        let got = a.scale_rows(&d);
+        for i in 0..want.a.len() {
+            assert!((want.a[i] - got.a[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn symmetrize_and_check() {
+        let mut a = randm(4, 4, 7);
+        assert!(!a.is_symmetric(1e-9));
+        a.symmetrize();
+        assert!(a.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn heads() {
+        let a = randm(4, 6, 8);
+        let ch = a.cols_head(2);
+        assert_eq!((ch.r, ch.c), (4, 2));
+        assert_eq!(ch.at(3, 1), a.at(3, 1));
+        let rh = a.rows_head(3);
+        assert_eq!((rh.r, rh.c), (3, 6));
+        assert_eq!(rh.at(2, 5), a.at(2, 5));
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let m = Mat64::from_tensor(&t);
+        assert_eq!(m.to_tensor(), t);
+    }
+
+    #[test]
+    fn frob_and_maxabs() {
+        let m = Mat64::from_vec(1, 2, vec![3.0, -4.0]);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+}

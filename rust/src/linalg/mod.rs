@@ -1,0 +1,23 @@
+//! f64 linear algebra for the QERA solvers.
+//!
+//! The paper (App. A.7) computes `R_XX` in f64 and takes its matrix square
+//! root with a blocked Schur algorithm on CPU.  `R_XX` is symmetric PSD, so
+//! the Schur form *is* the spectral decomposition; this module provides:
+//!
+//! * [`mat::Mat64`] — dense f64 matrices with blocked matmul;
+//! * [`eigh`] — symmetric eigendecomposition (Householder tridiagonalization
+//!   + implicit-shift QL; a cyclic-Jacobi implementation cross-checks it in
+//!   tests and serves as the robustness fallback);
+//! * [`svd`] — thin SVD via the Gram-matrix trick (work on the smaller side);
+//! * [`psd`] — PSD matrix square root / inverse square root with eigenvalue
+//!   clamping (Remark 1's diagonal perturbation).
+
+pub mod mat;
+pub mod eigh;
+pub mod svd;
+pub mod psd;
+
+pub use eigh::{eigh, eigh_jacobi, EighResult};
+pub use mat::Mat64;
+pub use psd::{psd_inv_sqrt, psd_sqrt, psd_sqrt_pair};
+pub use svd::{svd_thin, SvdResult};

@@ -1,0 +1,161 @@
+//! PSD matrix square root and inverse square root (Theorem 1's `R_XX^{1/2}`
+//! and `(R_XX^{1/2})^{-1}`), with eigenvalue clamping implementing Remark 1's
+//! diagonal perturbation for near-singular autocorrelation matrices.
+//!
+//! The paper uses SciPy's blocked Schur on CPU; for a symmetric PSD matrix
+//! the Schur decomposition coincides with the spectral one, so an `eigh`
+//! based sqrt is the numerically-equivalent (and TPU-friendlier) route.
+//! Following App. A.7, all accumulation upstream of this is f64.
+
+use super::eigh::eigh;
+use super::mat::Mat64;
+
+/// Relative eigenvalue floor for the inverse (Remark 1's perturbation).
+pub const EIG_CLAMP_REL: f64 = 1e-10;
+
+/// `R^{1/2}`: eigenvalues clamped at 0 from below.
+pub fn psd_sqrt(r: &Mat64) -> Mat64 {
+    psd_pow(r, 0.5, 0.0)
+}
+
+/// `R^{-1/2}` with relative clamping `λ >= eps_rel * λ_max`.
+pub fn psd_inv_sqrt(r: &Mat64, eps_rel: f64) -> Mat64 {
+    psd_pow(r, -0.5, eps_rel)
+}
+
+/// Both `R^{1/2}` and its inverse from a single eigendecomposition — the
+/// form QERA-exact consumes.
+pub fn psd_sqrt_pair(r: &Mat64, eps_rel: f64) -> (Mat64, Mat64) {
+    let e = eigh(r);
+    let wmax = e.w.iter().cloned().fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
+    let floor = wmax * eps_rel.max(0.0);
+    let sq: Vec<f64> = e.w.iter().map(|&w| w.max(0.0).sqrt()).collect();
+    let isq: Vec<f64> = e.w.iter().map(|&w| 1.0 / w.max(floor).max(f64::MIN_POSITIVE).sqrt()).collect();
+    (recompose(&e.v, &sq), recompose(&e.v, &isq))
+}
+
+fn psd_pow(r: &Mat64, p: f64, eps_rel: f64) -> Mat64 {
+    let e = eigh(r);
+    let wmax = e.w.iter().cloned().fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
+    let floor = wmax * eps_rel.max(0.0);
+    let d: Vec<f64> = e
+        .w
+        .iter()
+        .map(|&w| {
+            let wc = if p < 0.0 { w.max(floor).max(f64::MIN_POSITIVE) } else { w.max(0.0) };
+            wc.powf(p)
+        })
+        .collect();
+    recompose(&e.v, &d)
+}
+
+/// V diag(d) Vᵀ.
+fn recompose(v: &Mat64, d: &[f64]) -> Mat64 {
+    let n = v.r;
+    let mut vd = v.clone();
+    for j in 0..n {
+        for i in 0..n {
+            vd.a[i * n + j] *= d[j];
+        }
+    }
+    vd.matmul_nt(v)
+}
+
+/// Relative error of the square root: ||(R½)² − R||_F / ||R||_F — the metric
+/// of the paper's Figure 8a.
+pub fn sqrt_error_ratio(r: &Mat64) -> f64 {
+    let rh = psd_sqrt(r);
+    rh.matmul(&rh).sub(r).frob_norm() / r.frob_norm().max(f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_psd(n: usize, seed: u64, cond: f64) -> Mat64 {
+        let mut rng = Rng::new(seed);
+        let q = Mat64::from_vec(n, 2 * n, (0..2 * n * n).map(|_| rng.normal()).collect());
+        let mut g = q.matmul_nt(&q).scale(1.0 / (2 * n) as f64);
+        // stretch the spectrum to a target-ish condition number
+        if cond > 1.0 {
+            let e = eigh(&g);
+            let d: Vec<f64> = (0..n)
+                .map(|i| 1.0 + (cond - 1.0) * (i as f64 / (n - 1).max(1) as f64))
+                .collect();
+            g = super::recompose(&e.v, &d);
+        }
+        g
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        for n in [2, 5, 12, 24] {
+            let r = rand_psd(n, n as u64, 100.0);
+            let rh = psd_sqrt(&r);
+            let err = rh.matmul(&rh).sub(&r).frob_norm() / r.frob_norm();
+            assert!(err < 1e-9, "n={n}: {err}");
+            assert!(rh.is_symmetric(1e-9));
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_inverts() {
+        let r = rand_psd(10, 3, 50.0);
+        let (rh, rhi) = psd_sqrt_pair(&r, EIG_CLAMP_REL);
+        let prod = rh.matmul(&rhi);
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-7, "({i},{j}) {}", prod.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn pair_consistent_with_singles() {
+        let r = rand_psd(8, 5, 10.0);
+        let (rh, rhi) = psd_sqrt_pair(&r, EIG_CLAMP_REL);
+        let rh2 = psd_sqrt(&r);
+        let rhi2 = psd_inv_sqrt(&r, EIG_CLAMP_REL);
+        assert!(rh.sub(&rh2).frob_norm() < 1e-10);
+        assert!(rhi.sub(&rhi2).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn diagonal_case_exact() {
+        let r = Mat64::diag(&[4.0, 9.0, 16.0]);
+        let rh = psd_sqrt(&r);
+        assert!((rh.at(0, 0) - 2.0).abs() < 1e-12);
+        assert!((rh.at(1, 1) - 3.0).abs() < 1e-12);
+        assert!((rh.at(2, 2) - 4.0).abs() < 1e-12);
+        assert!(rh.at(0, 1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_matrix_clamped_inverse_finite() {
+        // rank-deficient PSD
+        let x = Mat64::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let r = x.matmul_nt(&x); // rank 1
+        let (_, rhi) = psd_sqrt_pair(&r, 1e-8);
+        for v in &rhi.a {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn sqrt_error_ratio_small_for_wellconditioned() {
+        let r = rand_psd(16, 9, 10.0);
+        assert!(sqrt_error_ratio(&r) < 1e-10);
+    }
+
+    #[test]
+    fn psd_sqrt_positive_semidefinite() {
+        let r = rand_psd(9, 11, 30.0);
+        let rh = psd_sqrt(&r);
+        let e = eigh(&rh);
+        for &w in &e.w {
+            assert!(w > -1e-9, "{w}");
+        }
+    }
+}

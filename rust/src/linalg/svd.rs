@@ -1,0 +1,250 @@
+//! Thin SVD via the Gram-matrix trick.
+//!
+//! Every solver in this repo needs the *truncated* SVD of an error matrix
+//! `E` (m×n).  We eigendecompose the smaller Gram matrix (`E Eᵀ` if m ≤ n,
+//! else `Eᵀ E`) and recover the other factor by projection — O(min(m,n)³)
+//! instead of a full bidiagonal SVD, in f64 (the Gram squaring costs
+//! ~half the significand, plenty for rank-k reconstruction of quantization
+//! errors; cross-checked against reconstruction in tests).
+
+use super::eigh::eigh;
+use super::mat::Mat64;
+
+/// `a = u * diag(s) * vt`, singular values descending.
+/// u: [m, r], s: [r], vt: [r, n] with r = min(m, n).
+#[derive(Clone, Debug)]
+pub struct SvdResult {
+    pub u: Mat64,
+    pub s: Vec<f64>,
+    pub vt: Mat64,
+}
+
+impl SvdResult {
+    /// Rank-k reconstruction `U_k Σ_k Vt_k`.
+    pub fn reconstruct_k(&self, k: usize) -> Mat64 {
+        let k = k.min(self.s.len());
+        let uk = self.u.cols_head(k); // m x k
+        let mut usk = uk.clone();
+        for i in 0..usk.r {
+            for j in 0..k {
+                usk.a[i * k + j] *= self.s[j];
+            }
+        }
+        usk.matmul(&self.vt.rows_head(k))
+    }
+
+    /// (A_k, B_k) factors: A = U_k Σ_k scaled? — here A = U_k, B = Σ_k Vt_k.
+    pub fn factors_k(&self, k: usize) -> (Mat64, Mat64) {
+        let k = k.min(self.s.len());
+        let a = self.u.cols_head(k);
+        let mut b = self.vt.rows_head(k);
+        for i in 0..k {
+            for j in 0..b.c {
+                b.a[i * b.c + j] *= self.s[i];
+            }
+        }
+        (a, b)
+    }
+}
+
+/// Thin SVD of an arbitrary dense matrix.
+pub fn svd_thin(a: &Mat64) -> SvdResult {
+    let (m, n) = (a.r, a.c);
+    let r = m.min(n);
+    if m <= n {
+        // G = A Aᵀ = U Λ Uᵀ ; V = Aᵀ U Σ⁻¹
+        let g = a.matmul_nt(a);
+        let e = eigh(&g);
+        // eigh returns ascending; we want descending
+        let (s, u) = desc_sqrt(&e.w, &e.v, r);
+        // vt rows: vtᵢ = (uᵢᵀ A)/σᵢ
+        let ut_a = u.matmul_tn(a); // [r, n]
+        let mut vt = ut_a;
+        normalize_rows(&mut vt, &s);
+        SvdResult { u, s, vt }
+    } else {
+        // G = Aᵀ A = V Λ Vᵀ ; U = A V Σ⁻¹
+        let g = a.matmul_tn(a);
+        let e = eigh(&g);
+        let (s, v) = desc_sqrt(&e.w, &e.v, r);
+        let av = a.matmul(&v); // [m, r]
+        let mut u = av;
+        normalize_cols(&mut u, &s);
+        SvdResult { u, s, vt: v.transpose() }
+    }
+}
+
+/// Take the top-r eigenpairs (ascending input), σ = sqrt(clamped λ).
+fn desc_sqrt(w: &[f64], v: &Mat64, r: usize) -> (Vec<f64>, Mat64) {
+    let n = w.len();
+    let mut s = Vec::with_capacity(r);
+    let mut vv = Mat64::zeros(v.r, r);
+    for j in 0..r {
+        let src = n - 1 - j; // descending
+        s.push(w[src].max(0.0).sqrt());
+        for i in 0..v.r {
+            vv.set(i, j, v.at(i, src));
+        }
+    }
+    (s, vv)
+}
+
+fn normalize_rows(m: &mut Mat64, s: &[f64]) {
+    let smax = s.first().copied().unwrap_or(0.0);
+    let tol = smax * 1e-13;
+    for i in 0..m.r {
+        if s[i] > tol {
+            let inv = 1.0 / s[i];
+            for j in 0..m.c {
+                m.a[i * m.c + j] *= inv;
+            }
+        } else {
+            for j in 0..m.c {
+                m.a[i * m.c + j] = 0.0;
+            }
+        }
+    }
+}
+
+fn normalize_cols(m: &mut Mat64, s: &[f64]) {
+    let smax = s.first().copied().unwrap_or(0.0);
+    let tol = smax * 1e-13;
+    for j in 0..m.c {
+        if s[j] > tol {
+            let inv = 1.0 / s[j];
+            for i in 0..m.r {
+                m.a[i * m.c + j] *= inv;
+            }
+        } else {
+            for i in 0..m.r {
+                m.a[i * m.c + j] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(r: usize, c: usize, seed: u64) -> Mat64 {
+        let mut rng = Rng::new(seed);
+        Mat64::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    fn check_svd(a: &Mat64, tol: f64) {
+        let r = svd_thin(a);
+        let k = r.s.len();
+        assert_eq!(k, a.r.min(a.c));
+        // descending, non-negative
+        for i in 0..k {
+            assert!(r.s[i] >= -1e-12);
+            if i > 0 {
+                assert!(r.s[i] <= r.s[i - 1] + 1e-10);
+            }
+        }
+        // reconstruction at full rank
+        let rec = r.reconstruct_k(k);
+        let diff = rec.sub(a).frob_norm();
+        assert!(diff < tol * (1.0 + a.frob_norm()), "recon err {diff}");
+        // orthonormality of the computed factor (up to null-space zeros)
+        let utu = r.u.matmul_tn(&r.u);
+        for i in 0..k {
+            for j in 0..k {
+                let got = utu.at(i, j);
+                if r.s[i] > 1e-10 && r.s[j] > 1e-10 {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((got - want).abs() < 1e-7, "UᵀU ({i},{j}) = {got}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_and_tall() {
+        check_svd(&randm(6, 10, 0), 1e-8);
+        check_svd(&randm(10, 6, 1), 1e-8);
+        check_svd(&randm(8, 8, 2), 1e-8);
+        check_svd(&randm(1, 5, 3), 1e-8);
+        check_svd(&randm(5, 1, 4), 1e-8);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let mut a = Mat64::zeros(3, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, -5.0); // singular value 5
+        a.set(2, 2, 1.0);
+        let r = svd_thin(&a);
+        assert!((r.s[0] - 5.0).abs() < 1e-10);
+        assert!((r.s[1] - 3.0).abs() < 1e-10);
+        assert!((r.s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eckart_young_truncation_optimal() {
+        // SVD_k must beat any other candidate low-rank approx we try
+        let a = randm(8, 12, 5);
+        let r = svd_thin(&a);
+        let k = 3;
+        let best = r.reconstruct_k(k);
+        let best_err = best.sub(&a).frob_norm();
+        // candidate: random rank-k
+        let mut rng = Rng::new(99);
+        for _ in 0..5 {
+            let u = Mat64::from_vec(8, k, (0..8 * k).map(|_| rng.normal()).collect());
+            let v = Mat64::from_vec(k, 12, (0..k * 12).map(|_| rng.normal()).collect());
+            // least-squares won't help these random ones beat SVD
+            let cand_err = u.matmul(&v).sub(&a).frob_norm();
+            assert!(best_err <= cand_err + 1e-9);
+        }
+        // and the tail-energy identity: err² = Σ_{i>k} σ_i²
+        let tail: f64 = r.s[k..].iter().map(|s| s * s).sum();
+        assert!((best_err * best_err - tail).abs() < 1e-7 * (1.0 + tail));
+    }
+
+    #[test]
+    fn rank_deficient_input() {
+        // rank-2 matrix
+        let u = randm(7, 2, 6);
+        let v = randm(2, 9, 7);
+        let a = u.matmul(&v);
+        let r = svd_thin(&a);
+        for i in 2..r.s.len() {
+            assert!(r.s[i] < 1e-8 * r.s[0], "σ[{i}]={} not ~0", r.s[i]);
+        }
+        let rec = r.reconstruct_k(2);
+        assert!(rec.sub(&a).frob_norm() < 1e-8 * (1.0 + a.frob_norm()));
+    }
+
+    #[test]
+    fn factors_match_reconstruction() {
+        let a = randm(6, 9, 8);
+        let r = svd_thin(&a);
+        let (fa, fb) = r.factors_k(4);
+        let rec1 = fa.matmul(&fb);
+        let rec2 = r.reconstruct_k(4);
+        assert!(rec1.sub(&rec2).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat64::zeros(4, 6);
+        let r = svd_thin(&a);
+        for &s in &r.s {
+            assert!(s.abs() < 1e-12);
+        }
+        assert!(r.reconstruct_k(2).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // ||A||_F² = Σ σ_i²
+        let a = randm(9, 5, 10);
+        let r = svd_thin(&a);
+        let sum: f64 = r.s.iter().map(|s| s * s).sum();
+        let frob2 = a.frob_norm().powi(2);
+        assert!((sum - frob2).abs() < 1e-8 * frob2);
+    }
+}

@@ -1,0 +1,492 @@
+//! Checkpoint formats.
+//!
+//! * [`Checkpoint`] — dense f32 (`QKPT1`): the pretrained subject models and
+//!   fine-tuned outputs.
+//! * [`QuantCheckpoint`] — quantized (`QQKP1`): MXINT tensors stored as
+//!   bit-packed codes + per-block exponents (true W-bits on disk), other
+//!   formats stored dense; low-rank `(A, B)` pairs stored f32.  Loading
+//!   materializes the merged dense weights for the runtime.
+
+use super::spec::ModelSpec;
+use crate::quant::{mxint, packing, QFormat};
+use crate::solver::LowRank;
+use crate::tensor::Tensor;
+use crate::util::fsio::*;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const DENSE_MAGIC: &[u8; 5] = b"QKPT1";
+const QUANT_MAGIC: &[u8; 5] = b"QQKP1";
+
+/// Dense checkpoint: spec + parameters in canonical order + free-form meta.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub spec: ModelSpec,
+    pub params: Vec<Tensor>,
+    pub meta: Json,
+}
+
+fn spec_json(spec: &ModelSpec) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(spec.name.clone())),
+        ("vocab", Json::Num(spec.vocab as f64)),
+        ("d_model", Json::Num(spec.d_model as f64)),
+        ("n_layers", Json::Num(spec.n_layers as f64)),
+        ("n_heads", Json::Num(spec.n_heads as f64)),
+        ("d_ff", Json::Num(spec.d_ff as f64)),
+        ("seq", Json::Num(spec.seq as f64)),
+        ("batch", Json::Num(spec.batch as f64)),
+        ("n_classes", Json::Num(spec.n_classes as f64)),
+    ])
+}
+
+fn spec_from_json(j: &Json) -> Result<ModelSpec> {
+    Ok(ModelSpec {
+        name: j.req_str("name")?.to_string(),
+        vocab: j.req_usize("vocab")?,
+        d_model: j.req_usize("d_model")?,
+        n_layers: j.req_usize("n_layers")?,
+        n_heads: j.req_usize("n_heads")?,
+        d_ff: j.req_usize("d_ff")?,
+        seq: j.req_usize("seq")?,
+        batch: j.req_usize("batch")?,
+        n_classes: j.req_usize("n_classes")?,
+    })
+}
+
+impl Checkpoint {
+    pub fn new(spec: ModelSpec, params: Vec<Tensor>) -> Self {
+        assert_eq!(params.len(), spec.param_layout().len());
+        Checkpoint { spec, params, meta: Json::obj(vec![]) }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(DENSE_MAGIC)?;
+        write_str(&mut w, &spec_json(&self.spec).dump())?;
+        write_str(&mut w, &self.meta.dump())?;
+        write_u32(&mut w, self.params.len() as u32)?;
+        for (p, (name, _)) in self.params.iter().zip(self.spec.param_layout()) {
+            write_str(&mut w, &name)?;
+            write_u32(&mut w, p.shape().len() as u32)?;
+            for &d in p.shape() {
+                write_u64(&mut w, d as u64)?;
+            }
+            write_f32s(&mut w, p.data())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 5];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == DENSE_MAGIC, "not a dense qera checkpoint");
+        let spec = spec_from_json(&Json::parse(&read_str(&mut r)?)?)?;
+        let meta = Json::parse(&read_str(&mut r)?)?;
+        let n = read_u32(&mut r)? as usize;
+        let layout = spec.param_layout();
+        ensure!(n == layout.len(), "param count mismatch");
+        let mut params = Vec::with_capacity(n);
+        for (name, shape) in &layout {
+            let got = read_str(&mut r)?;
+            ensure!(&got == name, "param order mismatch: {got} != {name}");
+            let ndim = read_u32(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u64(&mut r)? as usize);
+            }
+            ensure!(&dims == shape, "shape mismatch for {name}");
+            params.push(Tensor::new(dims, read_f32s(&mut r)?));
+        }
+        Ok(Checkpoint { spec, params, meta })
+    }
+
+    /// Parameter by name.
+    pub fn param(&self, name: &str) -> Option<&Tensor> {
+        let idx = self.spec.param_layout().iter().position(|(n, _)| n == name)?;
+        Some(&self.params[idx])
+    }
+}
+
+/// Storage of one quantized weight.
+#[derive(Clone, Debug)]
+pub enum QWeight {
+    /// Bit-packed MXINT codes + per-block exponents.
+    Mxint { bits: u8, block: usize, shape: Vec<usize>, packed: Vec<u8>, exps: Vec<i8> },
+    /// Dense dequantized fallback (intq / fp4 — their payload layout is an
+    /// implementation detail of the baseline, not the paper's format).
+    Dense(Tensor),
+}
+
+impl QWeight {
+    pub fn dequantize(&self) -> Tensor {
+        match self {
+            QWeight::Dense(t) => t.clone(),
+            QWeight::Mxint { bits, block, shape, packed, exps } => {
+                let n: usize = shape.iter().product();
+                let codes = packing::unpack_bits(packed, *bits, n).expect("unpack");
+                Tensor::new(shape.clone(), mxint::dequantize_packed(&codes, exps, *bits, *block))
+            }
+        }
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            QWeight::Dense(t) => t.numel() * 4,
+            QWeight::Mxint { packed, exps, .. } => packed.len() + exps.len(),
+        }
+    }
+}
+
+/// Quantized checkpoint: quantized linears (+ low-rank terms) over a dense
+/// base for everything else (embeddings, LayerNorms).
+#[derive(Clone, Debug)]
+pub struct QuantCheckpoint {
+    pub spec: ModelSpec,
+    /// Dense params for non-quantized entries, in canonical order; entries
+    /// covered by `qweights` hold an empty placeholder tensor.
+    pub dense: Vec<Option<Tensor>>,
+    /// Quantized weights by param name.
+    pub qweights: BTreeMap<String, QWeight>,
+    /// Low-rank corrections by param name.
+    pub lowrank: BTreeMap<String, LowRank>,
+    pub meta: Json,
+}
+
+impl QuantCheckpoint {
+    /// Build from a dense checkpoint + solved layers.
+    pub fn from_solved(
+        ckpt: &Checkpoint,
+        fmt: QFormat,
+        solved: &BTreeMap<String, (Tensor, Option<LowRank>)>,
+        meta: Json,
+    ) -> Self {
+        let layout = ckpt.spec.param_layout();
+        let mut dense: Vec<Option<Tensor>> = Vec::with_capacity(layout.len());
+        let mut qweights = BTreeMap::new();
+        let mut lowrank = BTreeMap::new();
+        for (p, (name, _)) in ckpt.params.iter().zip(&layout) {
+            if let Some((w_dq, lr)) = solved.get(name) {
+                let qw = match fmt {
+                    QFormat::Mxint { bits, block } => {
+                        let (codes, exps) = mxint::quantize_packed(p, bits, block);
+                        QWeight::Mxint {
+                            bits,
+                            block,
+                            shape: p.shape().to_vec(),
+                            packed: packing::pack_bits(&codes, bits),
+                            exps,
+                        }
+                    }
+                    _ => QWeight::Dense(w_dq.clone()),
+                };
+                qweights.insert(name.clone(), qw);
+                if let Some(lr) = lr {
+                    lowrank.insert(name.clone(), lr.clone());
+                }
+                dense.push(None);
+            } else {
+                dense.push(Some(p.clone()));
+            }
+        }
+        QuantCheckpoint { spec: ckpt.spec.clone(), dense, qweights, lowrank, meta }
+    }
+
+    /// Materialize merged dense params (`W~ + A B`) in canonical order —
+    /// what the evaluator feeds to `lm_fwd`.
+    pub fn materialize_merged(&self) -> Vec<Tensor> {
+        let layout = self.spec.param_layout();
+        layout
+            .iter()
+            .zip(&self.dense)
+            .map(|((name, _), d)| match d {
+                Some(t) => t.clone(),
+                None => {
+                    let w_dq = self.qweights[name].dequantize();
+                    match self.lowrank.get(name) {
+                        Some(lr) => lr.merged_with(&w_dq),
+                        None => w_dq,
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Dequantized base (without low-rank merge) — what the LoRA fine-tune
+    /// driver uses as frozen weights.
+    pub fn materialize_base(&self) -> Vec<Tensor> {
+        let layout = self.spec.param_layout();
+        layout
+            .iter()
+            .zip(&self.dense)
+            .map(|((name, _), d)| match d {
+                Some(t) => t.clone(),
+                None => self.qweights[name].dequantize(),
+            })
+            .collect()
+    }
+
+    /// Total serialized weight payload (the paper's memory accounting).
+    pub fn payload_bytes(&self) -> usize {
+        let dense: usize =
+            self.dense.iter().flatten().map(|t| t.numel() * 4).sum();
+        let q: usize = self.qweights.values().map(QWeight::payload_bytes).sum();
+        let lr: usize = self.lowrank.values().map(|l| l.n_params() * 4).sum();
+        dense + q + lr
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())?;
+        let mut w = BufWriter::new(f);
+        w.write_all(QUANT_MAGIC)?;
+        write_str(&mut w, &spec_json(&self.spec).dump())?;
+        write_str(&mut w, &self.meta.dump())?;
+        let layout = self.spec.param_layout();
+        for ((name, _), d) in layout.iter().zip(&self.dense) {
+            match d {
+                Some(t) => {
+                    write_u32(&mut w, 0)?; // dense tag
+                    write_str(&mut w, name)?;
+                    write_u32(&mut w, t.shape().len() as u32)?;
+                    for &dim in t.shape() {
+                        write_u64(&mut w, dim as u64)?;
+                    }
+                    write_f32s(&mut w, t.data())?;
+                }
+                None => match &self.qweights[name] {
+                    QWeight::Mxint { bits, block, shape, packed, exps } => {
+                        write_u32(&mut w, 1)?; // mxint tag
+                        write_str(&mut w, name)?;
+                        write_u32(&mut w, *bits as u32)?;
+                        write_u32(&mut w, *block as u32)?;
+                        write_u32(&mut w, shape.len() as u32)?;
+                        for &dim in shape {
+                            write_u64(&mut w, dim as u64)?;
+                        }
+                        write_bytes(&mut w, packed)?;
+                        let eb: Vec<u8> = exps.iter().map(|&e| e as u8).collect();
+                        write_bytes(&mut w, &eb)?;
+                    }
+                    QWeight::Dense(t) => {
+                        write_u32(&mut w, 2)?; // quantized-dense tag
+                        write_str(&mut w, name)?;
+                        write_u32(&mut w, t.shape().len() as u32)?;
+                        for &dim in t.shape() {
+                            write_u64(&mut w, dim as u64)?;
+                        }
+                        write_f32s(&mut w, t.data())?;
+                    }
+                },
+            }
+        }
+        // low-rank section
+        write_u32(&mut w, self.lowrank.len() as u32)?;
+        for (name, lr) in &self.lowrank {
+            write_str(&mut w, name)?;
+            write_u64(&mut w, lr.a.rows() as u64)?;
+            write_u64(&mut w, lr.a.cols() as u64)?;
+            write_u64(&mut w, lr.b.cols() as u64)?;
+            write_f32s(&mut w, lr.a.data())?;
+            write_f32s(&mut w, lr.b.data())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<QuantCheckpoint> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 5];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == QUANT_MAGIC, "not a quantized qera checkpoint");
+        let spec = spec_from_json(&Json::parse(&read_str(&mut r)?)?)?;
+        let meta = Json::parse(&read_str(&mut r)?)?;
+        let layout = spec.param_layout();
+        let mut dense = Vec::with_capacity(layout.len());
+        let mut qweights = BTreeMap::new();
+        for (name, shape) in &layout {
+            let tag = read_u32(&mut r)?;
+            let got = read_str(&mut r)?;
+            ensure!(&got == name, "param order mismatch: {got} vs {name}");
+            match tag {
+                0 | 2 => {
+                    let ndim = read_u32(&mut r)? as usize;
+                    let mut dims = Vec::with_capacity(ndim);
+                    for _ in 0..ndim {
+                        dims.push(read_u64(&mut r)? as usize);
+                    }
+                    ensure!(&dims == shape, "shape mismatch for {name}");
+                    let t = Tensor::new(dims, read_f32s(&mut r)?);
+                    if tag == 0 {
+                        dense.push(Some(t));
+                    } else {
+                        dense.push(None);
+                        qweights.insert(name.clone(), QWeight::Dense(t));
+                    }
+                }
+                1 => {
+                    let bits = read_u32(&mut r)? as u8;
+                    let block = read_u32(&mut r)? as usize;
+                    let ndim = read_u32(&mut r)? as usize;
+                    let mut dims = Vec::with_capacity(ndim);
+                    for _ in 0..ndim {
+                        dims.push(read_u64(&mut r)? as usize);
+                    }
+                    let packed = read_bytes(&mut r)?;
+                    let exps: Vec<i8> = read_bytes(&mut r)?.iter().map(|&b| b as i8).collect();
+                    dense.push(None);
+                    qweights.insert(
+                        name.clone(),
+                        QWeight::Mxint { bits, block, shape: dims, packed, exps },
+                    );
+                }
+                t => bail!("unknown param tag {t}"),
+            }
+        }
+        let n_lr = read_u32(&mut r)? as usize;
+        let mut lowrank = BTreeMap::new();
+        for _ in 0..n_lr {
+            let name = read_str(&mut r)?;
+            let m = read_u64(&mut r)? as usize;
+            let k = read_u64(&mut r)? as usize;
+            let n = read_u64(&mut r)? as usize;
+            let a = Tensor::new(vec![m, k], read_f32s(&mut r)?);
+            let b = Tensor::new(vec![k, n], read_f32s(&mut r)?);
+            lowrank.insert(name, LowRank { a, b });
+        }
+        Ok(QuantCheckpoint { spec, dense, qweights, lowrank, meta })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qera_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn nano_ckpt(seed: u64) -> Checkpoint {
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let params = init_params(&spec, &mut Rng::new(seed));
+        Checkpoint::new(spec, params)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let ckpt = nano_ckpt(42);
+        let path = tmpfile("dense.qkpt");
+        ckpt.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.spec, ckpt.spec);
+        assert_eq!(back.params, ckpt.params);
+    }
+
+    #[test]
+    fn param_by_name() {
+        let ckpt = nano_ckpt(1);
+        assert!(ckpt.param("blk0.wq").is_some());
+        assert!(ckpt.param("blk9.wq").is_none());
+        assert_eq!(ckpt.param("embed").unwrap().shape(), &[256, 64]);
+    }
+
+    #[test]
+    fn quant_roundtrip_mxint() {
+        let ckpt = nano_ckpt(2);
+        let fmt = QFormat::Mxint { bits: 4, block: 32 };
+        let mut solved = BTreeMap::new();
+        let mut rng = Rng::new(3);
+        for site in ckpt.spec.linear_sites() {
+            let w = &ckpt.params[site.param_idx];
+            let w_dq = fmt.qdq(w);
+            let lr = LowRank {
+                a: Tensor::randn(vec![site.shape[0], 4], 0.01, &mut rng),
+                b: Tensor::randn(vec![4, site.shape[1]], 0.01, &mut rng),
+            };
+            solved.insert(site.name.clone(), (w_dq, Some(lr)));
+        }
+        let q = QuantCheckpoint::from_solved(&ckpt, fmt, &solved, Json::obj(vec![]));
+        let path = tmpfile("quant.qkpt");
+        q.save(&path).unwrap();
+        let back = QuantCheckpoint::load(&path).unwrap();
+
+        // merged weights identical through the packed round-trip
+        let m1 = q.materialize_merged();
+        let m2 = back.materialize_merged();
+        assert_eq!(m1, m2);
+
+        // packed dequantization == direct qdq
+        for site in ckpt.spec.linear_sites() {
+            let w = &ckpt.params[site.param_idx];
+            let direct = fmt.qdq(w);
+            let viapack = back.qweights[&site.name].dequantize();
+            assert_eq!(direct, viapack, "{}", site.name);
+        }
+    }
+
+    #[test]
+    fn quant_payload_smaller_than_dense() {
+        let ckpt = nano_ckpt(4);
+        let fmt = QFormat::Mxint { bits: 4, block: 32 };
+        let mut solved = BTreeMap::new();
+        for site in ckpt.spec.linear_sites() {
+            let w = &ckpt.params[site.param_idx];
+            solved.insert(site.name.clone(), (fmt.qdq(w), None));
+        }
+        let q = QuantCheckpoint::from_solved(&ckpt, fmt, &solved, Json::obj(vec![]));
+        // linear payload should be ~4.25/32 of f32
+        let linear_f32: usize = ckpt
+            .spec
+            .linear_sites()
+            .iter()
+            .map(|s| s.shape[0] * s.shape[1] * 4)
+            .sum();
+        let q_linear: usize = q.qweights.values().map(QWeight::payload_bytes).sum();
+        let ratio = q_linear as f64 / linear_f32 as f64;
+        assert!((ratio - 4.25 / 32.0).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn merged_equals_base_plus_lowrank() {
+        let ckpt = nano_ckpt(5);
+        let fmt = QFormat::Mxint { bits: 3, block: 32 };
+        let mut solved = BTreeMap::new();
+        let mut rng = Rng::new(6);
+        let site = &ckpt.spec.linear_sites()[0];
+        let w = &ckpt.params[site.param_idx];
+        let lr = LowRank {
+            a: Tensor::randn(vec![site.shape[0], 2], 0.1, &mut rng),
+            b: Tensor::randn(vec![2, site.shape[1]], 0.1, &mut rng),
+        };
+        solved.insert(site.name.clone(), (fmt.qdq(w), Some(lr.clone())));
+        let q = QuantCheckpoint::from_solved(&ckpt, fmt, &solved, Json::obj(vec![]));
+        let merged = q.materialize_merged();
+        let base = q.materialize_base();
+        let want = lr.merged_with(&base[site.param_idx]);
+        assert_eq!(merged[site.param_idx], want);
+        // other params untouched
+        assert_eq!(merged[0], ckpt.params[0]);
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmpfile("bogus.qkpt");
+        std::fs::write(&path, b"NOPE!xxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        assert!(QuantCheckpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Weight initialization for in-repo pretrained subject models.
+//!
+//! GPT-2-style: N(0, 0.02) for embeddings and linears, residual-branch
+//! outputs scaled by 1/√(2L), ones/zeros for LayerNorm — the same scheme as
+//! `python/compile/model.py::init_params` (distributionally; the subject
+//! checkpoints are *pretrained* in-repo so bit-level init parity is not
+//! required).
+
+use super::spec::ModelSpec;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub fn init_params(spec: &ModelSpec, rng: &mut Rng) -> Vec<Tensor> {
+    let resid_std = 0.02 / ((2 * spec.n_layers) as f32).sqrt();
+    spec.param_layout()
+        .into_iter()
+        .map(|(name, shape)| {
+            if name.ends_with("ln1_g") || name.ends_with("ln2_g") || name.ends_with("lnf_g") {
+                Tensor::ones(shape)
+            } else if name.ends_with("_b") && !name.ends_with("pos_embed") {
+                Tensor::zeros(shape)
+            } else {
+                let std = if name.ends_with("wo") || name.ends_with("w_down") {
+                    resid_std
+                } else {
+                    0.02
+                };
+                Tensor::randn(shape, std, rng)
+            }
+        })
+        .collect()
+}
+
+/// Classifier head (Table 1 experiments): N(0, 0.02) weight, zero bias.
+pub fn init_head(spec: &ModelSpec, rng: &mut Rng) -> (Tensor, Tensor) {
+    (
+        Tensor::randn(vec![spec.d_model, spec.n_classes], 0.02, rng),
+        Tensor::zeros(vec![spec.n_classes]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_layout() {
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let mut rng = Rng::new(42);
+        let params = init_params(&spec, &mut rng);
+        let layout = spec.param_layout();
+        assert_eq!(params.len(), layout.len());
+        for (p, (name, shape)) in params.iter().zip(&layout) {
+            assert_eq!(p.shape(), &shape[..], "{name}");
+        }
+    }
+
+    #[test]
+    fn layernorm_init() {
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let mut rng = Rng::new(0);
+        let params = init_params(&spec, &mut rng);
+        let layout = spec.param_layout();
+        for (p, (name, _)) in params.iter().zip(&layout) {
+            if name.ends_with("ln1_g") {
+                assert!(p.data().iter().all(|&v| v == 1.0), "{name}");
+            }
+            if name.ends_with("ln1_b") {
+                assert!(p.data().iter().all(|&v| v == 0.0), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_scaling() {
+        let spec = ModelSpec::builtin("small").unwrap();
+        let mut rng = Rng::new(1);
+        let params = init_params(&spec, &mut rng);
+        let layout = spec.param_layout();
+        let std_of = |name: &str| {
+            let i = layout.iter().position(|(n, _)| n == name).unwrap();
+            let p = &params[i];
+            (p.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / p.numel() as f64).sqrt()
+        };
+        let wq = std_of("blk0.wq");
+        let wo = std_of("blk0.wo");
+        assert!((wq - 0.02).abs() < 0.002, "{wq}");
+        assert!((wo - 0.02 / (8f64).sqrt()).abs() < 0.002, "{wo}");
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let a = init_params(&spec, &mut Rng::new(7));
+        let b = init_params(&spec, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,14 @@
+//! Transformer model metadata, checkpoints, and initialization.
+//!
+//! The architecture itself lives in L2 (`python/compile/model.py`); this
+//! module owns the *Rust-side contract*: the canonical parameter layout
+//! (positional HLO argument order), checkpoint I/O (`.qkpt` dense /
+//! quantized with bit-packed payloads), and weight init for the
+//! in-repo pretrained subject models.
+
+pub mod spec;
+pub mod ckpt;
+pub mod init;
+
+pub use ckpt::{Checkpoint, QuantCheckpoint};
+pub use spec::{LinearSite, ModelSpec, TAP_SITES};

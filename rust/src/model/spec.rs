@@ -1,0 +1,293 @@
+//! Model specification — the Rust mirror of `python/compile/configs.py`.
+//!
+//! The parameter layout below defines the positional argument order of every
+//! lowered HLO entry point; `from_manifest` cross-checks it against the
+//! layout the AOT step actually baked in (defense against drift between the
+//! two languages).
+
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+
+/// Calibration tap sites per block, in artifact output order.
+pub const TAP_SITES: [&str; 4] = ["attn_in", "o_in", "mlp_in", "mlp_mid"];
+
+/// Quantizable linear sites per block, in canonical order.
+pub const LINEAR_SITES: [&str; 6] = ["wq", "wk", "wv", "wo", "w_up", "w_down"];
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub n_classes: usize,
+}
+
+/// One quantizable linear layer of the model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinearSite {
+    /// Parameter name, e.g. `blk2.w_up`.
+    pub name: String,
+    /// Index in the canonical parameter layout.
+    pub param_idx: usize,
+    /// Block index.
+    pub block: usize,
+    /// Site kind (one of [`LINEAR_SITES`]).
+    pub site: &'static str,
+    /// Tap feeding this linear's input (one of [`TAP_SITES`]).
+    pub tap: &'static str,
+    /// [in_dim, out_dim].
+    pub shape: [usize; 2],
+}
+
+impl ModelSpec {
+    /// Built-in specs (mirror python `CONFIGS`) for tests without artifacts.
+    pub fn builtin(name: &str) -> Option<ModelSpec> {
+        let (vocab, d_model, n_layers, n_heads, d_ff, seq, batch) = match name {
+            "micro" => (64, 32, 1, 2, 64, 16, 2),
+            "nano" => (256, 64, 2, 4, 256, 64, 4),
+            "small" => (512, 128, 4, 4, 512, 128, 8),
+            "base" => (1024, 256, 6, 8, 1024, 128, 4),
+            _ => return None,
+        };
+        Some(ModelSpec {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            seq,
+            batch,
+            n_classes: 8,
+        })
+    }
+
+    /// Parse from a manifest `configs.<name>` object and verify the baked
+    /// param layout matches ours.
+    pub fn from_manifest_cfg(j: &Json) -> Result<ModelSpec> {
+        let spec = ModelSpec {
+            name: j.req_str("name")?.to_string(),
+            vocab: j.req_usize("vocab")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_ff: j.req_usize("d_ff")?,
+            seq: j.req_usize("seq")?,
+            batch: j.req_usize("batch")?,
+            n_classes: j.req_usize("n_classes")?,
+        };
+        let baked = j.req_arr("param_layout")?;
+        let ours = spec.param_layout();
+        ensure!(
+            baked.len() == ours.len(),
+            "param layout length mismatch: manifest {} vs rust {}",
+            baked.len(),
+            ours.len()
+        );
+        for (b, (name, shape)) in baked.iter().zip(&ours) {
+            let pair = b.as_arr().context("param_layout entry")?;
+            let bname = pair[0].as_str().context("param name")?;
+            let bshape: Vec<usize> =
+                pair[1].as_arr().context("shape")?.iter().filter_map(Json::as_usize).collect();
+            ensure!(
+                bname == name && &bshape == shape,
+                "param layout drift at '{name}': manifest ({bname}, {bshape:?}) vs rust {shape:?}"
+            );
+        }
+        Ok(spec)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Canonical (name, shape) parameter list — HLO argument order.
+    pub fn param_layout(&self) -> Vec<(String, Vec<usize>)> {
+        let (v, d, f, s) = (self.vocab, self.d_model, self.d_ff, self.seq);
+        let mut out: Vec<(String, Vec<usize>)> =
+            vec![("embed".into(), vec![v, d]), ("pos_embed".into(), vec![s, d])];
+        for i in 0..self.n_layers {
+            let p = format!("blk{i}.");
+            out.push((p.clone() + "ln1_g", vec![d]));
+            out.push((p.clone() + "ln1_b", vec![d]));
+            out.push((p.clone() + "wq", vec![d, d]));
+            out.push((p.clone() + "wk", vec![d, d]));
+            out.push((p.clone() + "wv", vec![d, d]));
+            out.push((p.clone() + "wo", vec![d, d]));
+            out.push((p.clone() + "ln2_g", vec![d]));
+            out.push((p.clone() + "ln2_b", vec![d]));
+            out.push((p.clone() + "w_up", vec![d, f]));
+            out.push((p + "w_down", vec![f, d]));
+        }
+        out.push(("lnf_g".into(), vec![d]));
+        out.push(("lnf_b".into(), vec![d]));
+        out
+    }
+
+    /// LoRA adapter (name, shape) list for a given rank — HLO trailing args.
+    pub fn lora_layout(&self, rank: usize) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::new();
+        for site in self.linear_sites() {
+            let [m, n] = site.shape;
+            out.push((format!("{}.A", site.name), vec![m, rank]));
+            out.push((format!("{}.B", site.name), vec![rank, n]));
+        }
+        out
+    }
+
+    /// All quantizable linears with their parameter indices and tap sites.
+    pub fn linear_sites(&self) -> Vec<LinearSite> {
+        let layout = self.param_layout();
+        let idx_of = |name: &str| layout.iter().position(|(n, _)| n == name).unwrap();
+        let (d, f) = (self.d_model, self.d_ff);
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            for &site in LINEAR_SITES.iter() {
+                let name = format!("blk{i}.{site}");
+                let (tap, shape) = match site {
+                    "wq" | "wk" | "wv" => ("attn_in", [d, d]),
+                    "wo" => ("o_in", [d, d]),
+                    "w_up" => ("mlp_in", [d, f]),
+                    "w_down" => ("mlp_mid", [f, d]),
+                    _ => unreachable!(),
+                };
+                out.push(LinearSite {
+                    param_idx: idx_of(&name),
+                    name,
+                    block: i,
+                    site,
+                    tap,
+                    shape,
+                });
+            }
+        }
+        out
+    }
+
+    /// Dimension of a tap site's vectors.
+    pub fn tap_dim(&self, tap: &str) -> usize {
+        match tap {
+            "mlp_mid" => self.d_ff,
+            _ => self.d_model,
+        }
+    }
+
+    /// Stats-accumulator index for (block, tap): block-major, tap-minor —
+    /// matches the `lm_fwd_taps` output order.
+    pub fn tap_index(&self, block: usize, tap: &str) -> usize {
+        let t = TAP_SITES.iter().position(|&x| x == tap).unwrap();
+        block * TAP_SITES.len() + t
+    }
+
+    pub fn n_taps(&self) -> usize {
+        self.n_layers * TAP_SITES.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_layout().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Tokens per full training batch.
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_shapes() {
+        let s = ModelSpec::builtin("nano").unwrap();
+        assert_eq!(s.head_dim(), 16);
+        let layout = s.param_layout();
+        assert_eq!(layout.len(), 2 + 10 * 2 + 2);
+        assert_eq!(layout[0], ("embed".to_string(), vec![256, 64]));
+        assert_eq!(layout[2].0, "blk0.ln1_g");
+        assert!(ModelSpec::builtin("huge").is_none());
+    }
+
+    #[test]
+    fn linear_sites_consistent() {
+        let s = ModelSpec::builtin("small").unwrap();
+        let sites = s.linear_sites();
+        assert_eq!(sites.len(), 6 * 4);
+        let layout = s.param_layout();
+        for site in &sites {
+            assert_eq!(layout[site.param_idx].0, site.name);
+            assert_eq!(layout[site.param_idx].1, site.shape.to_vec());
+            assert_eq!(s.tap_dim(site.tap), site.shape[0], "{}", site.name);
+        }
+        // q/k/v share the tap
+        assert_eq!(sites[0].tap, "attn_in");
+        assert_eq!(sites[1].tap, "attn_in");
+        assert_eq!(sites[2].tap, "attn_in");
+        assert_eq!(sites[3].tap, "o_in");
+    }
+
+    #[test]
+    fn tap_indexing() {
+        let s = ModelSpec::builtin("nano").unwrap();
+        assert_eq!(s.tap_index(0, "attn_in"), 0);
+        assert_eq!(s.tap_index(0, "mlp_mid"), 3);
+        assert_eq!(s.tap_index(1, "attn_in"), 4);
+        assert_eq!(s.n_taps(), 8);
+    }
+
+    #[test]
+    fn lora_layout_shapes() {
+        let s = ModelSpec::builtin("nano").unwrap();
+        let lora = s.lora_layout(4);
+        assert_eq!(lora.len(), 2 * 6 * 2);
+        assert_eq!(lora[0], ("blk0.wq.A".to_string(), vec![64, 4]));
+        assert_eq!(lora[1], ("blk0.wq.B".to_string(), vec![4, 64]));
+        // w_down adapter has the f-dim on A
+        let wd = lora.iter().find(|(n, _)| n == "blk0.w_down.A").unwrap();
+        assert_eq!(wd.1, vec![256, 4]);
+    }
+
+    #[test]
+    fn param_count_matches_python() {
+        // python: configs.py reports these through the manifest; pin a value
+        let s = ModelSpec::builtin("nano").unwrap();
+        // embed 256*64 + pos 64*64 + 2 blocks * (4*64*64*... ) computed:
+        let expect: usize = 256 * 64
+            + 64 * 64
+            + 2 * (64 + 64 + 4 * 64 * 64 + 64 + 64 + 64 * 256 + 256 * 64)
+            + 64
+            + 64;
+        assert_eq!(s.n_params(), expect);
+    }
+
+    #[test]
+    fn from_manifest_roundtrip() {
+        let s = ModelSpec::builtin("nano").unwrap();
+        // build the json the way aot.py does
+        let layout = Json::Arr(
+            s.param_layout()
+                .into_iter()
+                .map(|(n, shape)| Json::Arr(vec![Json::Str(n), Json::arr_usize(&shape)]))
+                .collect(),
+        );
+        let j = Json::obj(vec![
+            ("name", Json::str("nano")),
+            ("vocab", Json::Num(256.0)),
+            ("d_model", Json::Num(64.0)),
+            ("n_layers", Json::Num(2.0)),
+            ("n_heads", Json::Num(4.0)),
+            ("d_ff", Json::Num(256.0)),
+            ("seq", Json::Num(64.0)),
+            ("batch", Json::Num(4.0)),
+            ("n_classes", Json::Num(8.0)),
+            ("param_layout", layout),
+        ]);
+        let back = ModelSpec::from_manifest_cfg(&j).unwrap();
+        assert_eq!(back, s);
+    }
+}

@@ -1,0 +1,119 @@
+//! E2M1 FP4 quantization with per-group absmax scaling — the 4-bit
+//! floating-point family (QLoRA's NF4/FP4 role in the paper's QPEFT
+//! experiments; the image has no bitsandbytes, so we implement the format).
+//!
+//! Representable magnitudes (before scaling): {0, 0.5, 1, 1.5, 2, 3, 4, 6}.
+//! A group of `group` elements shares `s = amax / 6`; each element maps to
+//! the nearest representable (ties toward the even mantissa, matching
+//! IEEE-style rounding).
+
+use crate::tensor::Tensor;
+
+/// The non-negative E2M1 value grid.
+pub const FP4_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Nearest grid value (ties to the even-indexed neighbour).
+#[inline]
+pub fn snap(v: f32) -> f32 {
+    let a = v.abs();
+    // midpoints between consecutive grid values
+    let idx = if a < 0.25 {
+        0
+    } else if a < 0.75 {
+        1
+    } else if a < 1.25 {
+        2
+    } else if a < 1.75 {
+        3
+    } else if a < 2.5 {
+        4
+    } else if a < 3.5 {
+        5
+    } else if a < 5.0 {
+        6
+    } else {
+        7
+    };
+    FP4_GRID[idx].copysign(v)
+}
+
+pub fn qdq(w: &Tensor, group: usize) -> Tensor {
+    let last = *w.shape().last().expect("fp4 on scalar");
+    assert_eq!(last % group, 0);
+    let mut out = w.clone();
+    for g in out.data_mut().chunks_exact_mut(group) {
+        let amax = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            continue;
+        }
+        let s = amax / 6.0;
+        for v in g.iter_mut() {
+            *v = snap(*v / s) * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grid_values_fixed_points() {
+        for &g in &FP4_GRID {
+            assert_eq!(snap(g), g);
+            assert_eq!(snap(-g), -g);
+        }
+    }
+
+    #[test]
+    fn snap_midpoints() {
+        assert_eq!(snap(0.24), 0.0);
+        assert_eq!(snap(0.26), 0.5);
+        assert_eq!(snap(2.4), 2.0);
+        assert_eq!(snap(2.6), 3.0);
+        assert_eq!(snap(5.5), 6.0);
+        assert_eq!(snap(100.0), 6.0);
+        assert_eq!(snap(-1.3), -1.5);
+    }
+
+    #[test]
+    fn amax_preserved() {
+        // the group max maps exactly to ±6 * s = ±amax
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(vec![4, 64], 1.0, &mut rng);
+        let y = qdq(&w, 64);
+        for (gw, gy) in w.data().chunks(64).zip(y.data().chunks(64)) {
+            let amax = gw.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let ymax = gy.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!((amax - ymax).abs() < 1e-6 * amax);
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(vec![8, 64], 0.1, &mut rng);
+        let once = qdq(&w, 64);
+        let twice = qdq(&once, 64);
+        for (a, b) in once.data().iter().zip(twice.data()) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_group() {
+        let w = Tensor::zeros(vec![1, 64]);
+        assert_eq!(qdq(&w, 64), w);
+    }
+
+    #[test]
+    fn relative_error_reasonable() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(vec![32, 64], 0.05, &mut rng);
+        let y = qdq(&w, 64);
+        let rel = y.sub(&w).frob_norm() / w.frob_norm();
+        assert!(rel < 0.15, "{rel}");
+    }
+}

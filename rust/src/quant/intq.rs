@@ -1,0 +1,165 @@
+//! Group-wise affine integer quantization with HQQ-style refinement.
+//!
+//! The paper's HQQ baseline (Badri & Shaji 2023): 4-bit INT, group 64, no
+//! error reconstruction, but a half-quadratic optimization of the group
+//! (scale, zero) parameters.  We implement the ℓ2 proximal variant:
+//! alternating exact coordinate updates of `z` and `s` against the current
+//! integer codes — each step can only lower ||W − s·(Q − z)||², giving the
+//! same "optimized affine grid" role as HQQ's Lp solver.
+
+use crate::tensor::Tensor;
+
+/// Quantize-dequantize with `iters` rounds of (s, z) refinement.
+pub fn qdq(w: &Tensor, bits: u8, group: usize, iters: usize) -> Tensor {
+    let last = *w.shape().last().expect("intq on scalar");
+    assert_eq!(last % group, 0, "last axis {last} % group {group} != 0");
+    let mut out = w.clone();
+    for g in out.data_mut().chunks_exact_mut(group) {
+        qdq_group(g, bits, iters);
+    }
+    out
+}
+
+fn qdq_group(g: &mut [f32], bits: u8, iters: usize) {
+    let levels = ((1u32 << bits) - 1) as f32; // codes in [0, levels]
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in g.iter() {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !(hi > lo) {
+        // constant group: represent exactly with s=0 -> dq = lo
+        for v in g.iter_mut() {
+            *v = lo;
+        }
+        return;
+    }
+    let mut s = (hi - lo) / levels;
+    let mut z = -lo / s; // float zero-point: dq = s * (q - z)... using q - z form
+
+    let quant = |v: f32, s: f32, z: f32| -> f32 {
+        (v / s + z).round_ties_even().clamp(0.0, levels)
+    };
+
+    let mut best_err = f64::INFINITY;
+    let mut best: Option<(f32, f32)> = None;
+    for _ in 0..iters.max(1) {
+        // E-step: codes for current grid
+        let codes: Vec<f32> = g.iter().map(|&v| quant(v, s, z)).collect();
+        // M-step: least-squares optimal (s, z') for fixed codes:
+        //   dq_i = s * (q_i - z)  =>  linear regression of w on q.
+        let n = g.len() as f64;
+        let mean_q = codes.iter().map(|&q| q as f64).sum::<f64>() / n;
+        let mean_w = g.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let mut cov = 0.0f64;
+        let mut var = 0.0f64;
+        for (&q, &v) in codes.iter().zip(g.iter()) {
+            cov += (q as f64 - mean_q) * (v as f64 - mean_w);
+            var += (q as f64 - mean_q).powi(2);
+        }
+        if var <= 0.0 {
+            break;
+        }
+        let s_new = (cov / var) as f32;
+        if s_new.abs() < 1e-20 {
+            break;
+        }
+        let z_new = (mean_q - mean_w / s_new as f64) as f32;
+        // measure error of (s_new, z_new) with re-quantized codes
+        let err: f64 = g
+            .iter()
+            .map(|&v| {
+                let q = quant(v, s_new, z_new);
+                let d = v as f64 - s_new as f64 * (q as f64 - z_new as f64);
+                d * d
+            })
+            .sum();
+        if err < best_err {
+            best_err = err;
+            best = Some((s_new, z_new));
+        }
+        if (s_new - s).abs() < 1e-9 * s.abs() && (z_new - z).abs() < 1e-6 {
+            break;
+        }
+        s = s_new;
+        z = z_new;
+    }
+    let (s, z) = best.unwrap_or((s, z));
+    for v in g.iter_mut() {
+        let q = quant(*v, s, z);
+        *v = s * (q - z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn err(w: &Tensor, y: &Tensor) -> f64 {
+        y.sub(w).frob_norm()
+    }
+
+    #[test]
+    fn refinement_does_not_hurt() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(vec![8, 64], 0.05, &mut rng);
+        let e0 = err(&w, &qdq(&w, 4, 64, 1));
+        let e20 = err(&w, &qdq(&w, 4, 64, 20));
+        assert!(e20 <= e0 * 1.0 + 1e-12, "refined {e20} vs initial {e0}");
+    }
+
+    #[test]
+    fn exact_on_grid_values() {
+        // values already on an affine grid quantize losslessly
+        let vals: Vec<f32> = (0..64).map(|i| 0.1 * (i % 16) as f32 - 0.3).collect();
+        let w = Tensor::new(vec![1, 64], vals);
+        let y = qdq(&w, 4, 64, 10);
+        for (a, b) in w.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        let w = Tensor::full(vec![2, 64], 0.7);
+        let y = qdq(&w, 4, 64, 5);
+        for &v in y.data() {
+            assert!((v - 0.7).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(vec![16, 64], 0.02, &mut rng);
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 3, 4, 6, 8] {
+            let e = err(&w, &qdq(&w, bits, 64, 10));
+            assert!(e < prev, "bits={bits}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn asymmetric_data_handled() {
+        // all-positive weights exercise the zero-point
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(vec![4, 64], 0.1, &mut rng).map(|v| v.abs() + 1.0);
+        let y = qdq(&w, 4, 64, 10);
+        let rel = err(&w, &y) / w.frob_norm();
+        assert!(rel < 0.02, "{rel}");
+    }
+
+    #[test]
+    fn int4_beats_mxint4_on_uniform_data_sometimes() {
+        // sanity: affine grid adapts to offset distributions better than
+        // symmetric mxint — the reason HQQ is a strong baseline.
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(vec![8, 64], 0.05, &mut rng).map(|v| v + 0.5);
+        let e_int = err(&w, &qdq(&w, 4, 64, 20));
+        let e_mx = err(&w, &super::super::mxint::qdq(&w, 4, 64));
+        assert!(e_int < e_mx, "int {e_int} vs mxint {e_mx}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Weight quantizers — the paper's `q(·)` / `dq(·)`.
+//!
+//! QERA places no constraint on the quantization function, so the pipeline
+//! is generic over [`QFormat`]:
+//!
+//! * [`mxint`] — MXINT shared-exponent integer (OCP MX style), the paper's
+//!   main format (bits+8/block avg: 4.25 = MXINT4 bs=32, 3.25 = MXINT3
+//!   bs=32, 2.50 = MXINT2 bs=16, 2.25 = MXINT2 bs=32).  Bit-exact mirror of
+//!   the L1 Pallas kernel (`python/compile/kernels/mxint.py`).
+//! * [`intq`] — group-wise affine INT with HQQ-style alternating (s, z)
+//!   refinement: the "no error reconstruction" SoTA baseline.
+//! * [`fp4`] — E2M1 4-bit float with per-group absmax scale (the QLoRA FP4
+//!   family stand-in).
+//! * [`packing`] — bit packing, so checkpoint sizes reflect true W-bits.
+
+pub mod mxint;
+pub mod intq;
+pub mod fp4;
+pub mod packing;
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// A quantization format specification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QFormat {
+    /// Shared-exponent integer: `bits` per element + 8-bit exponent / block.
+    Mxint { bits: u8, block: usize },
+    /// Group-wise affine integer with HQQ-style refinement.
+    IntAffine { bits: u8, group: usize, refine_iters: usize },
+    /// E2M1 float4 with per-group absmax scaling.
+    Fp4 { group: usize },
+    /// Identity (BF16/FP16 reference runs).
+    None,
+}
+
+impl QFormat {
+    /// Parse `"mxint4:32"`, `"int4:64"`, `"fp4:64"`, `"none"`.
+    pub fn parse(s: &str) -> Result<QFormat> {
+        let s = s.trim().to_lowercase();
+        if s == "none" || s == "bf16" || s == "fp16" {
+            return Ok(QFormat::None);
+        }
+        let (head, tail) = match s.split_once(':') {
+            Some((h, t)) => (h, t),
+            None => (s.as_str(), ""),
+        };
+        let grp = |d: usize| -> Result<usize> {
+            if tail.is_empty() {
+                Ok(d)
+            } else {
+                Ok(tail.parse()?)
+            }
+        };
+        if let Some(b) = head.strip_prefix("mxint") {
+            let bits: u8 = b.parse()?;
+            anyhow::ensure!((2..=8).contains(&bits), "mxint bits out of range: {bits}");
+            return Ok(QFormat::Mxint { bits, block: grp(32)? });
+        }
+        if let Some(b) = head.strip_prefix("int") {
+            let bits: u8 = b.parse()?;
+            anyhow::ensure!((2..=8).contains(&bits), "int bits out of range: {bits}");
+            return Ok(QFormat::IntAffine { bits, group: grp(64)?, refine_iters: 20 });
+        }
+        if head == "fp4" {
+            return Ok(QFormat::Fp4 { group: grp(64)? });
+        }
+        bail!("unknown quant format '{s}'")
+    }
+
+    /// Average bits per weight element (paper's "W-bits" column).
+    pub fn avg_bits(&self) -> f64 {
+        match self {
+            QFormat::Mxint { bits, block } => *bits as f64 + 8.0 / *block as f64,
+            // f16 scale + q-grid zero-point per group
+            QFormat::IntAffine { bits, group, .. } => *bits as f64 + 16.0 / *group as f64,
+            QFormat::Fp4 { group } => 4.0 + 8.0 / *group as f64,
+            QFormat::None => 16.0,
+        }
+    }
+
+    /// Quantize-dequantize a tensor; groups run along the last axis.
+    pub fn qdq(&self, w: &Tensor) -> Tensor {
+        match self {
+            QFormat::None => w.clone(),
+            QFormat::Mxint { bits, block } => mxint::qdq(w, *bits, *block),
+            QFormat::IntAffine { bits, group, refine_iters } => {
+                intq::qdq(w, *bits, *group, *refine_iters)
+            }
+            QFormat::Fp4 { group } => fp4::qdq(w, *group),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            QFormat::Mxint { bits, block } => format!("mxint{bits}:{block}"),
+            QFormat::IntAffine { bits, group, .. } => format!("int{bits}:{group}"),
+            QFormat::Fp4 { group } => format!("fp4:{group}"),
+            QFormat::None => "none".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["mxint4:32", "mxint3:32", "mxint2:16", "int4:64", "fp4:64", "none"] {
+            let f = QFormat::parse(s).unwrap();
+            if s != "none" {
+                assert_eq!(f.name(), s);
+            }
+        }
+        assert!(QFormat::parse("mxint9:32").is_err());
+        assert!(QFormat::parse("banana").is_err());
+    }
+
+    #[test]
+    fn paper_wbits() {
+        assert!((QFormat::parse("mxint4:32").unwrap().avg_bits() - 4.25).abs() < 1e-12);
+        assert!((QFormat::parse("mxint3:32").unwrap().avg_bits() - 3.25).abs() < 1e-12);
+        assert!((QFormat::parse("mxint2:16").unwrap().avg_bits() - 2.5).abs() < 1e-12);
+        assert!((QFormat::parse("mxint2:32").unwrap().avg_bits() - 2.25).abs() < 1e-12);
+        assert!((QFormat::parse("int4:64").unwrap().avg_bits() - 4.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qdq_error_decreases_with_bits() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(vec![16, 64], 0.05, &mut rng);
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 3, 4, 6, 8] {
+            let f = QFormat::Mxint { bits, block: 32 };
+            let err = f.qdq(&w).sub(&w).frob_norm();
+            assert!(err < prev, "bits={bits}: {err} !< {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(vec![4, 32], 1.0, &mut rng);
+        assert_eq!(QFormat::None.qdq(&w), w);
+    }
+}

@@ -1,0 +1,198 @@
+//! MXINT quantize-dequantize — bit-exact mirror of the L1 Pallas kernel.
+//!
+//! Per block of `block` consecutive elements (last axis): shared exponent
+//! `e = floor(log2(max|v|))` extracted from the f32 exponent bits (exact;
+//! a libm log2 could round differently near powers of two), elements are
+//! `bits`-bit integers with scale `2^(e - bits + 2)` and ties-to-even
+//! rounding, clamped symmetrically to ±(2^(bits-1) − 1).
+
+use crate::tensor::Tensor;
+
+/// Exact floor(log2(x)) for positive f32; subnormals clamp to -126.
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    debug_assert!(x > 0.0);
+    let e = ((x.to_bits() >> 23) & 0xFF) as i32 - 127;
+    e.max(-126)
+}
+
+/// Quantize-dequantize one contiguous group sharing an exponent.
+#[inline]
+pub fn qdq_group(group: &mut [f32], bits: u8) {
+    let amax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 || !amax.is_finite() {
+        for v in group.iter_mut() {
+            *v = 0.0;
+        }
+        return;
+    }
+    let e = floor_log2(amax);
+    let scale = f32::powi(2.0, e - (bits as i32 - 2));
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    for v in group.iter_mut() {
+        let q = (*v / scale).round_ties_even().clamp(-qmax, qmax);
+        *v = q * scale;
+    }
+}
+
+/// Quantize-dequantize a tensor (groups along the last axis).
+pub fn qdq(w: &Tensor, bits: u8, block: usize) -> Tensor {
+    assert!(bits >= 2, "mxint bits >= 2");
+    let last = *w.shape().last().expect("mxint on scalar");
+    assert_eq!(last % block, 0, "last axis {last} not divisible by block {block}");
+    let mut out = w.clone();
+    for group in out.data_mut().chunks_exact_mut(block) {
+        qdq_group(group, bits);
+    }
+    out
+}
+
+/// Quantize to integer codes + per-block exponents (storage form).
+pub fn quantize_packed(w: &Tensor, bits: u8, block: usize) -> (Vec<i32>, Vec<i8>) {
+    let last = *w.shape().last().unwrap();
+    assert_eq!(last % block, 0);
+    let mut codes = Vec::with_capacity(w.numel());
+    let mut exps = Vec::with_capacity(w.numel() / block);
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    for group in w.data().chunks_exact(block) {
+        let amax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            exps.push(i8::MIN);
+            codes.extend(std::iter::repeat(0).take(block));
+            continue;
+        }
+        let e = floor_log2(amax);
+        exps.push(e as i8);
+        let scale = f32::powi(2.0, e - (bits as i32 - 2));
+        for &v in group {
+            codes.push((v / scale).round_ties_even().clamp(-qmax, qmax) as i32);
+        }
+    }
+    (codes, exps)
+}
+
+/// Dequantize storage form back to f32.
+pub fn dequantize_packed(codes: &[i32], exps: &[i8], bits: u8, block: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(codes.len());
+    for (bi, chunk) in codes.chunks_exact(block).enumerate() {
+        let e = exps[bi];
+        if e == i8::MIN {
+            out.extend(std::iter::repeat(0.0).take(block));
+            continue;
+        }
+        let scale = f32::powi(2.0, e as i32 - (bits as i32 - 2));
+        out.extend(chunk.iter().map(|&q| q as f32 * scale));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn golden_vectors_match_python() {
+        // Mirrors python/tests/test_mxint.py::test_golden_vectors
+        let base = [1.0f32, -1.0, 0.5, 0.25, 3.0, -2.5, 0.1, 0.0];
+        let x: Vec<f32> = base.iter().cycle().take(32).copied().collect();
+        let t = Tensor::new(vec![1, 32], x);
+        let y = qdq(&t, 4, 32);
+        let want = [1.0f32, -1.0, 0.5, 0.0, 3.0, -2.5, 0.0, 0.0];
+        for (i, &v) in y.data().iter().enumerate() {
+            assert_eq!(v, want[i % 8], "index {i}");
+        }
+    }
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(3.0), 1);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(0.9999999), -1); // just below 2^0
+        assert_eq!(floor_log2(f32::from_bits(0x3f7fffff)), -1); // largest < 1.0
+        assert_eq!(floor_log2(6.0e-39), -126); // subnormal clamps
+    }
+
+    #[test]
+    fn zero_block() {
+        let t = Tensor::zeros(vec![2, 32]);
+        assert!(qdq(&t, 4, 32).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(vec![8, 64], 1.0, &mut rng);
+        let once = qdq(&t, 4, 32);
+        let twice = qdq(&once, 4, 32);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn pow2_scale_equivariance() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(vec![4, 32], 1.0, &mut rng);
+        let mut t4 = t.clone();
+        t4.scale(4.0);
+        let a = qdq(&t4, 4, 32);
+        let mut b = qdq(&t, 4, 32);
+        b.scale(4.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn negation_symmetry() {
+        let mut rng = Rng::new(2);
+        let t = Tensor::randn(vec![4, 32], 1.0, &mut rng);
+        let neg = t.map(|v| -v);
+        let a = qdq(&neg, 3, 16);
+        let b = qdq(&t, 3, 16).map(|v| -v);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn error_bounded_by_lsb() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(vec![16, 32], 2.0, &mut rng);
+        for bits in [3u8, 4, 6] {
+            let y = qdq(&t, bits, 32);
+            for (g, gy) in t.data().chunks(32).zip(y.data().chunks(32)) {
+                let amax = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let lsb = f32::powi(2.0, floor_log2(amax) - (bits as i32 - 2));
+                for (a, b) in g.iter().zip(gy) {
+                    assert!((a - b).abs() <= lsb + 1e-9, "bits={bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip_matches_qdq() {
+        let mut rng = Rng::new(4);
+        let t = Tensor::randn(vec![8, 64], 0.3, &mut rng);
+        for (bits, block) in [(4u8, 32usize), (3, 32), (2, 16), (8, 32)] {
+            let want = qdq(&t, bits, block);
+            let (codes, exps) = quantize_packed(&t, bits, block);
+            let got = dequantize_packed(&codes, &exps, bits, block);
+            assert_eq!(got, want.data(), "bits={bits} block={block}");
+            // codes fit in `bits`
+            let qmax = (1i32 << (bits - 1)) - 1;
+            assert!(codes.iter().all(|&c| c >= -qmax && c <= qmax));
+        }
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // scale = 2^(0-2) = 0.25 when amax = 1.0 (bits=4); 0.125/0.25 = 0.5 -> 0
+        let mut x = vec![0.0f32; 32];
+        x[0] = 1.0;
+        x[1] = 0.125;
+        x[2] = 0.375; // 1.5 -> 2 (even)
+        let t = Tensor::new(vec![1, 32], x);
+        let y = qdq(&t, 4, 32);
+        assert_eq!(y.data()[1], 0.0);
+        assert_eq!(y.data()[2], 0.5);
+    }
+}

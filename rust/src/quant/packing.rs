@@ -1,0 +1,111 @@
+//! Bit packing for quantized integer codes — checkpoint bytes reflect true
+//! W-bits (a 4-bit MXINT tensor occupies 4 bits/element + 8 bits/block on
+//! disk, matching the paper's memory-footprint accounting).
+
+use anyhow::{ensure, Result};
+
+/// Pack signed codes (each in [-2^(bits-1), 2^(bits-1)-1]) LSB-first.
+pub fn pack_bits(codes: &[i32], bits: u8) -> Vec<u8> {
+    assert!((1..=16).contains(&bits));
+    let mask = (1u32 << bits) - 1;
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        let u = (c as u32) & mask; // two's complement truncation
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= (u << off) as u8;
+        let spill = (bits as usize + off).saturating_sub(8);
+        if spill > 0 {
+            out[byte + 1] |= (u >> (bits as usize - spill)) as u8;
+            if spill > 8 {
+                out[byte + 2] |= (u >> (bits as usize - spill + 8)) as u8;
+            }
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `n` signed codes.
+pub fn unpack_bits(bytes: &[u8], bits: u8, n: usize) -> Result<Vec<i32>> {
+    ensure!((1..=16).contains(&bits));
+    let need = (n * bits as usize).div_ceil(8);
+    ensure!(bytes.len() >= need, "packed buffer too short: {} < {}", bytes.len(), need);
+    let mask = (1u32 << bits) - 1;
+    let sign_bit = 1u32 << (bits - 1);
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut u = (bytes[byte] as u32) >> off;
+        let mut have = 8 - off;
+        let mut next = byte + 1;
+        while have < bits as usize {
+            u |= (bytes[next] as u32) << have;
+            have += 8;
+            next += 1;
+        }
+        u &= mask;
+        // sign-extend
+        let v = if u & sign_bit != 0 { (u | !mask) as i32 } else { u as i32 };
+        out.push(v);
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(0);
+        for bits in 2u8..=8 {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            let codes: Vec<i32> =
+                (0..1000).map(|_| lo + rng.below((hi - lo + 1) as usize) as i32).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(packed.len(), (1000 * bits as usize).div_ceil(8));
+            let back = unpack_bits(&packed, bits, 1000).unwrap();
+            assert_eq!(codes, back, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn extremes() {
+        for bits in [2u8, 4, 7] {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            let codes = vec![lo, hi, 0, -1, 1, lo, hi];
+            let back = unpack_bits(&pack_bits(&codes, bits), bits, codes.len()).unwrap();
+            assert_eq!(codes, back);
+        }
+    }
+
+    #[test]
+    fn density() {
+        let codes = vec![0i32; 64];
+        assert_eq!(pack_bits(&codes, 4).len(), 32);
+        assert_eq!(pack_bits(&codes, 3).len(), 24);
+        assert_eq!(pack_bits(&codes, 2).len(), 16);
+    }
+
+    #[test]
+    fn short_buffer_errors() {
+        let packed = pack_bits(&[1, 2, 3], 4);
+        assert!(unpack_bits(&packed, 4, 10).is_err());
+    }
+
+    #[test]
+    fn empty() {
+        let packed = pack_bits(&[], 4);
+        assert!(packed.is_empty());
+        assert!(unpack_bits(&packed, 4, 0).unwrap().is_empty());
+    }
+}

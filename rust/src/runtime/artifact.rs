@@ -1,0 +1,189 @@
+//! Artifact manifest + registry.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) is the
+//! single source of truth binding the two languages: artifact names, files,
+//! input/output signatures, and per-config parameter layouts.  The registry
+//! lazily loads + compiles executables and caches them process-wide.
+
+use super::exec::Exec;
+use crate::model::ModelSpec;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Input/output tensor signature entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.req_str("name")?.to_string(),
+            dtype: j.req_str("dtype")?.to_string(),
+            shape: j.req_arr("shape")?.iter().filter_map(Json::as_usize).collect(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub config: String,
+    pub rank: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Loaded manifest + executable cache.
+pub struct Registry {
+    pub dir: PathBuf,
+    artifacts: HashMap<String, ArtifactInfo>,
+    pub specs: HashMap<String, ModelSpec>,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+}
+
+impl Registry {
+    /// Open `dir/manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = HashMap::new();
+        for a in j.req_arr("artifacts")? {
+            let info = ArtifactInfo {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                config: a.req_str("config")?.to_string(),
+                rank: a.get("rank").and_then(Json::as_usize),
+                inputs: a
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(info.name.clone(), info);
+        }
+
+        let mut specs = HashMap::new();
+        if let Some(cfgs) = j.get("configs").and_then(Json::as_obj) {
+            for (name, cfg) in cfgs {
+                let spec = ModelSpec::from_manifest_cfg(cfg)
+                    .with_context(|| format!("config '{name}'"))?;
+                specs.insert(name.clone(), spec);
+            }
+        }
+
+        Ok(Registry { dir, artifacts, specs, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default location (`$QERA_ARTIFACTS` or `./artifacts`).
+    pub fn open_default() -> Result<Registry> {
+        let dir = std::env::var("QERA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Registry::open(dir)
+    }
+
+    pub fn info(&self, name: &str) -> Result<&ArtifactInfo> {
+        match self.artifacts.get(name) {
+            Some(i) => Ok(i),
+            None => bail!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, config: &str) -> Result<&ModelSpec> {
+        self.specs
+            .get(config)
+            .with_context(|| format!("config '{config}' not in manifest"))
+    }
+
+    /// Load + compile (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.info(name)?.clone();
+        let path = self.dir.join(&info.file);
+        let t0 = std::time::Instant::now();
+        let exec = Rc::new(Exec::load(&path, info)?);
+        crate::info!("compiled artifact '{name}' in {:.2}s", t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn open_built_manifest() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let reg = Registry::open(dir).unwrap();
+        assert!(reg.names().iter().any(|n| n == "lm_fwd.nano"));
+        let spec = reg.spec("nano").unwrap();
+        assert_eq!(spec.d_model, 64);
+        let info = reg.info("lm_fwd.nano").unwrap();
+        assert_eq!(info.inputs[0].name, "tokens");
+        assert_eq!(info.inputs[0].shape, vec![spec.batch, spec.seq]);
+        assert_eq!(info.inputs.len(), 1 + spec.param_layout().len());
+        assert_eq!(info.outputs[0].shape, vec![spec.batch, spec.seq, spec.vocab]);
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let Some(dir) = manifest_dir() else {
+            return;
+        };
+        let reg = Registry::open(dir).unwrap();
+        let err = reg.info("nope").unwrap_err().to_string();
+        assert!(err.contains("lm_fwd.nano"));
+    }
+
+    #[test]
+    fn io_spec_from_json() {
+        let j = Json::parse(r#"{"name":"x","dtype":"float32","shape":[2,3]}"#).unwrap();
+        let io = IoSpec::from_json(&j).unwrap();
+        assert_eq!(io.numel(), 6);
+        assert_eq!(io.dtype, "float32");
+    }
+}

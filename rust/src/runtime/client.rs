@@ -1,0 +1,39 @@
+//! Per-thread PJRT client (CPU).
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`/`Sync`), so all
+//! device execution stays on the calling thread — the coordinator keeps PJRT
+//! work on the main thread and uses the worker pool only for pure-Rust
+//! solver math (which is where the parallelism is anyway, App. A.7).
+
+use anyhow::Result;
+use std::cell::OnceCell;
+use xla::PjRtClient;
+
+thread_local! {
+    static CLIENT: OnceCell<PjRtClient> = const { OnceCell::new() };
+}
+
+/// Run `f` with this thread's client (created on first use).
+pub fn with_client<T>(f: impl FnOnce(&PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = PjRtClient::cpu()?;
+            crate::info!(
+                "pjrt client up: platform={} devices={}",
+                c.platform_name(),
+                c.device_count()
+            );
+            let _ = cell.set(c);
+        }
+        f(cell.get().unwrap())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_initializes() {
+        let n = super::with_client(|c| Ok(c.device_count())).unwrap();
+        assert!(n >= 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the coordinator's hot path (the only place device compute happens;
+//! python is never invoked).
+//!
+//! * [`artifact`] — `manifest.json` schema + artifact registry with a
+//!   compile-once executable cache;
+//! * [`exec`] — typed execution: `Value` marshalling, shape validation
+//!   against the manifest, tuple-output decomposition;
+//! * [`client`] — lazily-initialized process-wide `PjRtClient` (CPU).
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+
+pub use artifact::{ArtifactInfo, IoSpec, Registry};
+pub use exec::{Exec, Value};

@@ -1,0 +1,272 @@
+//! Request router + dynamic batcher (the vLLM-router-shaped piece).
+//!
+//! Clients submit prompts from any thread; a dedicated serving thread owns
+//! the PJRT handles (they are not `Send`), drains the queue into batches of
+//! up to `spec.batch` requests within a `max_wait` window, decodes
+//! step-locked batches, and completes each request on its response channel.
+//! Latency statistics (queue / first-token / total) feed the serving bench.
+
+use crate::model::ModelSpec;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub batch_size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_wait: Duration::from_millis(5), seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub tokens_generated: usize,
+    pub wall_s: f64,
+}
+
+impl ServerStats {
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens_generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches > 0 {
+            self.requests as f64 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+enum Msg {
+    Req(Request),
+    Stop(mpsc::Sender<ServerStats>),
+}
+
+/// Handle for submitting requests; the engine runs on its own thread.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the serving thread.  `artifact_dir` and the model params are
+    /// moved into the thread (PJRT handles are created there).
+    pub fn start(
+        artifact_dir: std::path::PathBuf,
+        spec: ModelSpec,
+        params: Vec<crate::tensor::Tensor>,
+        cfg: ServerConfig,
+    ) -> Server {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn(move || {
+            if let Err(e) = serve_loop(artifact_dir, spec, params, cfg, rx) {
+                crate::warn_!("serve loop died: {e:#}");
+            }
+        });
+        Server { tx, handle: Some(handle) }
+    }
+
+    /// Submit a prompt; returns the receiver for the response.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        temperature: f32,
+    ) -> mpsc::Receiver<Response> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Req(Request {
+            prompt,
+            max_new_tokens,
+            temperature,
+            enqueued: Instant::now(),
+            reply,
+        }));
+        rx
+    }
+
+    /// Stop the server and collect statistics.
+    pub fn stop(mut self) -> ServerStats {
+        let (stx, srx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Stop(stx));
+        let stats = srx.recv().unwrap_or_default();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        stats
+    }
+}
+
+fn serve_loop(
+    artifact_dir: std::path::PathBuf,
+    spec: ModelSpec,
+    params: Vec<crate::tensor::Tensor>,
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+) -> Result<()> {
+    let reg = crate::runtime::Registry::open(artifact_dir)?;
+    let engine = super::engine::Engine::new(&reg, spec.clone(), params)?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut stats = ServerStats::default();
+    let t0 = Instant::now();
+
+    'outer: loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Stop(reply)) => {
+                stats.wall_s = t0.elapsed().as_secs_f64();
+                let _ = reply.send(stats.clone());
+                break 'outer;
+            }
+            Err(_) => break 'outer,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        // fill the batch within the wait window
+        while batch.len() < spec.batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Stop(reply)) => {
+                    // finish this batch first, then stop
+                    run_batch(&engine, &mut batch, &mut rng, &mut stats)?;
+                    stats.wall_s = t0.elapsed().as_secs_f64();
+                    let _ = reply.send(stats.clone());
+                    break 'outer;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        run_batch(&engine, &mut batch, &mut rng, &mut stats)?;
+    }
+    Ok(())
+}
+
+fn run_batch(
+    engine: &super::engine::Engine,
+    batch: &mut Vec<Request>,
+    rng: &mut Rng,
+    stats: &mut ServerStats,
+) -> Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    let bsize = batch.len();
+    let started = Instant::now();
+    let max_new = batch.iter().map(|r| r.max_new_tokens).max().unwrap();
+    let temperature = batch[0].temperature;
+    let mut contexts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+    let lens: Vec<usize> = contexts.iter().map(Vec::len).collect();
+    for step in 0..max_new {
+        let next = engine.step(&contexts, temperature, rng)?;
+        for (i, t) in next.into_iter().enumerate() {
+            if step < batch[i].max_new_tokens {
+                contexts[i].push(t);
+                stats.tokens_generated += 1;
+            }
+        }
+    }
+    for (i, req) in batch.drain(..).enumerate() {
+        let resp = Response {
+            tokens: contexts[i][lens[i]..].to_vec(),
+            queue_ms: (started - req.enqueued).as_secs_f64() * 1e3,
+            total_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+            batch_size: bsize,
+        };
+        let _ = req.reply.send(resp);
+        stats.requests += 1;
+    }
+    stats.batches += 1;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::model::ModelSpec;
+    use std::path::PathBuf;
+
+    fn artifact_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn serves_batched_requests() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let params = init_params(&spec, &mut Rng::new(0));
+        let server = Server::start(
+            dir,
+            spec,
+            params,
+            ServerConfig { max_wait: Duration::from_millis(30), seed: 1 },
+        );
+        // submit a burst: should coalesce into batches
+        let rxs: Vec<_> =
+            (0..6).map(|i| server.submit(vec![1 + i as i32, 2, 3], 4, 0.0)).collect();
+        let mut batched = 0;
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert_eq!(resp.tokens.len(), 4);
+            if resp.batch_size > 1 {
+                batched += 1;
+            }
+        }
+        let stats = server.stop();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.tokens_generated >= 24);
+        assert!(batched > 0, "burst never batched");
+        assert!(stats.batches < 6, "no batching happened: {}", stats.batches);
+    }
+
+    #[test]
+    fn stop_without_requests() {
+        let Some(dir) = artifact_dir() else {
+            return;
+        };
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let params = init_params(&spec, &mut Rng::new(2));
+        let server = Server::start(dir, spec, params, ServerConfig::default());
+        let stats = server.stop();
+        assert_eq!(stats.requests, 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Generation engine: greedy / temperature sampling with the
+//! `lm_logits_last.<cfg>` artifact (full-context recompute per step — the
+//! decode-cache variant is a roadmap item recorded in DESIGN.md §9).
+
+use crate::model::ModelSpec;
+use crate::runtime::{exec::lm_inputs, Registry};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::rc::Rc;
+
+pub struct Engine {
+    pub spec: ModelSpec,
+    params: Vec<Tensor>,
+    exec: Rc<crate::runtime::Exec>,
+}
+
+impl Engine {
+    pub fn new(reg: &Registry, spec: ModelSpec, params: Vec<Tensor>) -> Result<Engine> {
+        ensure!(params.len() == spec.param_layout().len());
+        let exec = reg.load(&format!("lm_logits_last.{}", spec.name))?;
+        Ok(Engine { spec, params, exec })
+    }
+
+    /// Right-align `ctx` into a fixed window of length `seq` (left-pad with
+    /// token 0; the synthetic vocabulary treats 0 as an ordinary token).
+    fn window(&self, ctx: &[i32]) -> Vec<i32> {
+        let s = self.spec.seq;
+        let mut w = vec![0i32; s];
+        let take = ctx.len().min(s);
+        w[s - take..].copy_from_slice(&ctx[ctx.len() - take..]);
+        w
+    }
+
+    /// One decode step for up to `batch` contexts; returns the next token
+    /// per slot.  `temperature <= 0` = greedy.
+    pub fn step(&self, contexts: &[Vec<i32>], temperature: f32, rng: &mut Rng) -> Result<Vec<i32>> {
+        let b = self.spec.batch;
+        ensure!(!contexts.is_empty() && contexts.len() <= b, "bad batch size");
+        let mut tokens = Vec::with_capacity(b * self.spec.seq);
+        for i in 0..b {
+            let ctx = &contexts[i.min(contexts.len() - 1)];
+            tokens.extend(self.window(ctx));
+        }
+        let out =
+            self.exec.run(&lm_inputs(&tokens, None, &[b, self.spec.seq], &self.params))?;
+        let logits = &out[0]; // [B, V]
+        let v = self.spec.vocab;
+        let mut next = Vec::with_capacity(contexts.len());
+        for i in 0..contexts.len() {
+            let row = &logits.data()[i * v..(i + 1) * v];
+            let tok = if temperature <= 0.0 {
+                let mut best = 0;
+                for j in 1..v {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            } else {
+                // softmax sampling with temperature
+                let maxl = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let weights: Vec<f64> =
+                    row.iter().map(|&x| (((x - maxl) / temperature) as f64).exp()).collect();
+                rng.categorical(&weights)
+            };
+            next.push(tok as i32);
+        }
+        Ok(next)
+    }
+
+    /// Generate `n_new` tokens for each prompt (batched internally).
+    pub fn generate(
+        &self,
+        prompts: &[Vec<i32>],
+        n_new: usize,
+        temperature: f32,
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<i32>>> {
+        let mut outputs: Vec<Vec<i32>> = prompts.to_vec();
+        for chunk_start in (0..prompts.len()).step_by(self.spec.batch) {
+            let chunk_end = (chunk_start + self.spec.batch).min(prompts.len());
+            for _ in 0..n_new {
+                let ctxs: Vec<Vec<i32>> = outputs[chunk_start..chunk_end].to_vec();
+                let next = self.step(&ctxs, temperature, rng)?;
+                for (i, t) in next.into_iter().enumerate() {
+                    outputs[chunk_start + i].push(t);
+                }
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<Registry> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn greedy_generation_deterministic() {
+        let Some(reg) = registry() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(0));
+        let engine = Engine::new(&reg, spec.clone(), params).unwrap();
+        let prompts = vec![vec![1i32, 2, 3], vec![7i32, 8]];
+        let a = engine.generate(&prompts, 5, 0.0, &mut Rng::new(1)).unwrap();
+        let b = engine.generate(&prompts, 5, 0.0, &mut Rng::new(2)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), 8);
+        assert_eq!(a[1].len(), 7);
+        assert!(a.iter().flatten().all(|&t| (0..spec.vocab as i32).contains(&t)));
+    }
+
+    #[test]
+    fn window_right_aligned() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(3));
+        let engine = Engine::new(&reg, spec.clone(), params).unwrap();
+        let w = engine.window(&[5, 6, 7]);
+        assert_eq!(w.len(), spec.seq);
+        assert_eq!(&w[spec.seq - 3..], &[5, 6, 7]);
+        assert!(w[..spec.seq - 3].iter().all(|&t| t == 0));
+        // overlong context keeps the tail
+        let long: Vec<i32> = (0..(spec.seq as i32 + 10)).collect();
+        let w2 = engine.window(&long);
+        assert_eq!(w2[0], 10);
+        assert_eq!(w2[spec.seq - 1], spec.seq as i32 + 9);
+    }
+
+    #[test]
+    fn sampled_generation_in_vocab() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let params = init_params(&spec, &mut Rng::new(4));
+        let engine = Engine::new(&reg, spec.clone(), params).unwrap();
+        let out = engine
+            .generate(&[vec![1, 2]], 10, 0.8, &mut Rng::new(5))
+            .unwrap();
+        assert_eq!(out[0].len(), 12);
+        assert!(out[0].iter().all(|&t| (0..spec.vocab as i32).contains(&t)));
+    }
+}

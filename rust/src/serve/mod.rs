@@ -1,0 +1,13 @@
+//! Serving runtime: batched generation over the quantized model.
+//!
+//! The paper's claim "QERA introduces no inference overhead — LQER,
+//! QERA-approx and QERA-exact all serve as `y = x(W~ + A_k B_k)`" is made
+//! concrete here: the engine serves any [`crate::coordinator::QuantizedModel`]
+//! through the same `lm_logits_last` artifact, and the latency bench
+//! (`benches/hotpath.rs`) measures dense vs low-rank forward forms.
+
+pub mod engine;
+pub mod batcher;
+
+pub use batcher::{Server, ServerConfig, ServerStats};
+pub use engine::Engine;

@@ -1,0 +1,179 @@
+//! Closed-form solvers: ZeroQuant-V2, LQER, QERA-approx, QERA-exact.
+//!
+//! All share the scaled-SVD skeleton (Algorithm 2 generalized):
+//!
+//! ```text
+//!   W~ = dq(q(W));  E = W − W~
+//!   U Σ Vᵀ = SVD(S_left · E)
+//!   A = S_left⁻¹ U_k,   B = Σ_k Vᵀ_k
+//! ```
+//!
+//! with `S_left = I` (ZeroQuant-V2), `diag(E[|x|])` (LQER),
+//! `diag(√E[x²])` (QERA-approx, Theorem 2), `R_XX^{1/2}` (QERA-exact,
+//! Theorem 1 — the un-scale is `(R_XX^{1/2})⁻¹` with Remark 1's clamping).
+
+use super::types::{LowRank, SolveOutput};
+use crate::linalg::{psd_sqrt_pair, svd_thin, Mat64};
+use crate::quant::QFormat;
+use crate::tensor::Tensor;
+
+/// Numerical floor for diagonal scales (Remark 2: E[x_i²] > 0 in practice;
+/// the floor guards dead channels in synthetic corpora).
+const DIAG_FLOOR: f64 = 1e-12;
+
+/// Plain SVD of the weight quantization error (Problem 1 / Eckart–Young).
+pub fn zeroquant_v2(w: &Tensor, fmt: QFormat, rank: usize) -> SolveOutput {
+    let w_dq = fmt.qdq(w);
+    let err = Mat64::from_tensor(w).sub(&Mat64::from_tensor(&w_dq));
+    let svd = svd_thin(&err);
+    let (a, b) = svd.factors_k(rank);
+    SolveOutput {
+        w_dq,
+        lowrank: Some(LowRank { a: a.to_tensor(), b: b.to_tensor() }),
+        wall_ms: 0.0,
+    }
+}
+
+/// Shared scaled-SVD core for the diagonal-scale methods.
+fn diag_scaled(w: &Tensor, fmt: QFormat, rank: usize, scale: &[f64]) -> SolveOutput {
+    let w_dq = fmt.qdq(w);
+    let err = Mat64::from_tensor(w).sub(&Mat64::from_tensor(&w_dq));
+    assert_eq!(scale.len(), err.r, "scale dim != weight rows");
+    let s: Vec<f64> = scale.iter().map(|&v| v.max(DIAG_FLOOR)).collect();
+    let scaled = err.scale_rows(&s);
+    let svd = svd_thin(&scaled);
+    let (mut a, b) = svd.factors_k(rank);
+    // un-scale: A = S⁻¹ U_k
+    let inv: Vec<f64> = s.iter().map(|&v| 1.0 / v).collect();
+    a = a.scale_rows(&inv);
+    SolveOutput {
+        w_dq,
+        lowrank: Some(LowRank { a: a.to_tensor(), b: b.to_tensor() }),
+        wall_ms: 0.0,
+    }
+}
+
+/// LQER (Zhang et al. 2024a): heuristic `S = diag(E[|x_i|])`.
+pub fn lqer(w: &Tensor, fmt: QFormat, rank: usize, mean_abs: &[f64]) -> SolveOutput {
+    diag_scaled(w, fmt, rank, mean_abs)
+}
+
+/// QERA-approx (Theorem 2): `S = diag(√E[x_i²])`.
+pub fn qera_approx(w: &Tensor, fmt: QFormat, rank: usize, mean_sq: &[f64]) -> SolveOutput {
+    let s: Vec<f64> = mean_sq.iter().map(|&v| v.max(0.0).sqrt()).collect();
+    diag_scaled(w, fmt, rank, &s)
+}
+
+/// QERA-exact (Theorem 1): `C_k = (R½)⁻¹ SVD_k(R½ (W − W~))`.
+pub fn qera_exact(w: &Tensor, fmt: QFormat, rank: usize, rxx: &Mat64) -> SolveOutput {
+    let w_dq = fmt.qdq(w);
+    let err = Mat64::from_tensor(w).sub(&Mat64::from_tensor(&w_dq));
+    assert_eq!(rxx.r, err.r, "R_XX dim != weight rows");
+    let (rh, rh_inv) = psd_sqrt_pair(rxx, crate::linalg::psd::EIG_CLAMP_REL);
+    let scaled = rh.matmul(&err);
+    let svd = svd_thin(&scaled);
+    let (u_k, b) = svd.factors_k(rank);
+    let a = rh_inv.matmul(&u_k);
+    SolveOutput {
+        w_dq,
+        lowrank: Some(LowRank { a: a.to_tensor(), b: b.to_tensor() }),
+        wall_ms: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::metrics::expected_output_error;
+    use crate::util::rng::Rng;
+
+    fn fmt() -> QFormat {
+        QFormat::Mxint { bits: 3, block: 8 }
+    }
+
+    #[test]
+    fn identity_rxx_equals_zeroquant() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(vec![12, 8], 1.0, &mut rng);
+        let eye = Mat64::eye(12);
+        let zq = zeroquant_v2(&w, fmt(), 3);
+        let ex = qera_exact(&w, fmt(), 3, &eye);
+        let c1 = zq.lowrank.unwrap().to_mat();
+        let c2 = ex.lowrank.unwrap().to_mat();
+        assert!(c1.sub(&c2).frob_norm() < 1e-7 * (1.0 + c1.frob_norm()));
+    }
+
+    #[test]
+    fn diagonal_rxx_approx_equals_exact() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(vec![16, 8], 1.0, &mut rng);
+        let d: Vec<f64> = (0..16).map(|_| (rng.normal()).exp()).collect();
+        let rxx = Mat64::diag(&d);
+        let ex = qera_exact(&w, fmt(), 3, &rxx).lowrank.unwrap().to_mat();
+        let ap = qera_approx(&w, fmt(), 3, &d).lowrank.unwrap().to_mat();
+        assert!(ex.sub(&ap).frob_norm() < 1e-7 * (1.0 + ex.frob_norm()));
+    }
+
+    #[test]
+    fn uniform_scale_lqer_equals_zeroquant() {
+        // with constant activation magnitudes the LQER heuristic degenerates
+        // to plain SVD
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(vec![8, 8], 1.0, &mut rng);
+        let s = vec![0.7f64; 8];
+        let lq = lqer(&w, fmt(), 2, &s).lowrank.unwrap().to_mat();
+        let zq = zeroquant_v2(&w, fmt(), 2).lowrank.unwrap().to_mat();
+        assert!(lq.sub(&zq).frob_norm() < 1e-7 * (1.0 + zq.frob_norm()));
+    }
+
+    #[test]
+    fn exact_optimality_via_trace_objective() {
+        // E||xP||² = Tr(R P Pᵀ): the exact solver's C must minimize it
+        // against small perturbations of (A, B).
+        let (w, _stats, rxx) = crate::solver::tests::instance(12, 8, 256, 3);
+        let out = qera_exact(&w, fmt(), 3, &rxx);
+        let wm = Mat64::from_tensor(&w);
+        let base_p = Mat64::from_tensor(&out.merged()).sub(&wm);
+        let base = expected_output_error(&base_p, &rxx);
+        let lr = out.lowrank.unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..6 {
+            let da = Tensor::randn(vec![12, 3], 0.02, &mut rng);
+            let db = Tensor::randn(vec![3, 8], 0.02, &mut rng);
+            let mut a2 = lr.a.clone();
+            a2.add_assign(&da);
+            let mut b2 = lr.b.clone();
+            b2.add_assign(&db);
+            let pert = LowRank { a: a2, b: b2 };
+            let p = Mat64::from_tensor(&pert.merged_with(&out.w_dq)).sub(&wm);
+            let e = expected_output_error(&p, &rxx);
+            assert!(e >= base - 1e-9, "perturbation improved the optimum: {e} < {base}");
+        }
+    }
+
+    #[test]
+    fn scales_cancel_in_reconstruction_at_full_rank() {
+        // any invertible scale gives C_k == E at k = min(m,n)
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(vec![6, 8], 1.0, &mut rng);
+        let werr = {
+            let wdq = fmt().qdq(&w);
+            Mat64::from_tensor(&w).sub(&Mat64::from_tensor(&wdq))
+        };
+        let s: Vec<f64> = (0..6).map(|i| 0.5 + i as f64).collect();
+        let c = lqer(&w, fmt(), 6, &s).lowrank.unwrap().to_mat();
+        assert!(c.sub(&werr).frob_norm() < 1e-6 * (1.0 + werr.frob_norm()));
+    }
+
+    #[test]
+    fn dead_channel_floor_keeps_finite() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(vec![8, 8], 1.0, &mut rng);
+        let mut s = vec![1.0f64; 8];
+        s[3] = 0.0; // dead input channel
+        let out = qera_approx(&w, fmt(), 2, &s);
+        let lr = out.lowrank.unwrap();
+        assert!(lr.a.data().iter().all(|v| v.is_finite()));
+        assert!(lr.b.data().iter().all(|v| v.is_finite()));
+    }
+}

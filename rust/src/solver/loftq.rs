@@ -1,0 +1,113 @@
+//! LoftQ (Li et al. 2023), Algorithm 1: alternate quantizing the residual
+//! `W − A B` and refitting `(A, B)` by SVD of the new weight error.
+//!
+//! The paper's §4.2 pitfall lives here: each iteration monotonically lowers
+//! the *weight* error (Figure 6) yet the *model output* error can rise
+//! (Figure 1) — reproduced by `benches/paper_figures.rs`.
+
+use super::types::{LowRank, SolveOutput};
+use crate::linalg::{svd_thin, Mat64};
+use crate::quant::QFormat;
+use crate::tensor::Tensor;
+
+/// Run `iters` LoftQ iterations (paper recommends 5).
+pub fn loftq(w: &Tensor, fmt: QFormat, rank: usize, iters: usize) -> SolveOutput {
+    let (m, n) = (w.rows(), w.cols());
+    let wm = Mat64::from_tensor(w);
+    let mut lr = LowRank::zeros(m, n, rank);
+    let mut w_dq = fmt.qdq(w);
+    for _ in 0..iters.max(1) {
+        // W_q = q(W − A B)
+        let resid = w.sub(&lr.to_tensor());
+        w_dq = fmt.qdq(&resid);
+        // SVD of the weight error; split Σ symmetrically (LoftQ's A√Σ, √ΣB)
+        let err = wm.sub(&Mat64::from_tensor(&w_dq));
+        let svd = svd_thin(&err);
+        let k = rank.min(svd.s.len());
+        let mut a = svd.u.cols_head(k);
+        let mut b = svd.vt.rows_head(k);
+        for j in 0..k {
+            let sq = svd.s[j].max(0.0).sqrt();
+            for i in 0..a.r {
+                a.a[i * k + j] *= sq;
+            }
+            for c in 0..b.c {
+                b.a[j * b.c + c] *= sq;
+            }
+        }
+        lr = LowRank { a: a.to_tensor(), b: b.to_tensor() };
+    }
+    SolveOutput { w_dq, lowrank: Some(lr), wall_ms: 0.0 }
+}
+
+/// Per-iteration weight errors ‖W − W~ − C_k‖_F (Figure 6 series).
+pub fn loftq_error_trace(w: &Tensor, fmt: QFormat, rank: usize, iters: usize) -> Vec<f64> {
+    (1..=iters)
+        .map(|t| {
+            let out = loftq(w, fmt, rank, t);
+            super::metrics::weight_error(w, &out)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::metrics::weight_error;
+    use crate::util::rng::Rng;
+
+    fn fmt() -> QFormat {
+        QFormat::Mxint { bits: 2, block: 8 }
+    }
+
+    #[test]
+    fn one_iteration_equals_zeroquant() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(vec![12, 8], 1.0, &mut rng);
+        let lq = loftq(&w, fmt(), 3, 1);
+        let zq = super::super::closed_form::zeroquant_v2(&w, fmt(), 3);
+        // same C_k (A/B split differs by the √Σ balancing)
+        let c1 = lq.lowrank.unwrap().to_mat();
+        let c2 = zq.lowrank.unwrap().to_mat();
+        assert!(c1.sub(&c2).frob_norm() < 1e-6 * (1.0 + c1.frob_norm()));
+        assert_eq!(lq.w_dq, zq.w_dq);
+    }
+
+    #[test]
+    fn weight_error_nonincreasing_over_iters() {
+        // Figure 6's claim, on aggressive 2-bit quantization
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(vec![24, 16], 1.0, &mut rng);
+        let trace = loftq_error_trace(&w, fmt(), 4, 6);
+        for t in 1..trace.len() {
+            assert!(
+                trace[t] <= trace[t - 1] * 1.02 + 1e-9,
+                "iteration {t}: {} > {}",
+                trace[t],
+                trace[t - 1]
+            );
+        }
+        // and overall it should actually help vs iteration 1
+        assert!(trace[trace.len() - 1] < trace[0]);
+    }
+
+    #[test]
+    fn beats_zeroquant_on_weight_error() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(vec![24, 16], 1.0, &mut rng);
+        let zq = super::super::closed_form::zeroquant_v2(&w, fmt(), 4);
+        let lq = loftq(&w, fmt(), 4, 5);
+        assert!(weight_error(&w, &lq) <= weight_error(&w, &zq) + 1e-9);
+    }
+
+    #[test]
+    fn balanced_factors() {
+        // LoftQ splits √Σ between A and B: their norms should be comparable
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(vec![16, 16], 1.0, &mut rng);
+        let lr = loftq(&w, fmt(), 4, 3).lowrank.unwrap();
+        let na = lr.a.frob_norm();
+        let nb = lr.b.frob_norm();
+        assert!(na / nb < 5.0 && nb / na < 5.0, "{na} vs {nb}");
+    }
+}

@@ -1,0 +1,71 @@
+//! Error metrics for solver evaluation and the paper's figures.
+
+use super::types::SolveOutput;
+use crate::linalg::Mat64;
+use crate::tensor::Tensor;
+
+/// Problem 1 objective: ‖W − W~ − C_k‖_F.
+pub fn weight_error(w: &Tensor, out: &SolveOutput) -> f64 {
+    Mat64::from_tensor(&out.merged()).sub(&Mat64::from_tensor(w)).frob_norm()
+}
+
+/// Problem 2 objective via Equation (15): `E‖xP‖² = Tr(R_XX P Pᵀ)` with
+/// `P = W~ + C_k − W`.
+pub fn expected_output_error(p: &Mat64, rxx: &Mat64) -> f64 {
+    assert_eq!(p.r, rxx.r);
+    // Tr(R P Pᵀ) = Σ_ij (R P)_ij P_ij
+    let rp = rxx.matmul(p);
+    rp.a.iter().zip(&p.a).map(|(x, y)| x * y).sum()
+}
+
+/// Same objective evaluated for a solved layer.
+pub fn output_error_of(w: &Tensor, out: &SolveOutput, rxx: &Mat64) -> f64 {
+    let p = Mat64::from_tensor(&out.merged()).sub(&Mat64::from_tensor(w));
+    expected_output_error(&p, rxx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn trace_identity_vs_sampling() {
+        // Equation (15): Tr(R P Pᵀ) == mean ‖xP‖² when R is the sample
+        // autocorrelation of the same x.
+        let mut rng = Rng::new(0);
+        let (m, n, ns) = (8, 5, 2000);
+        let x = Tensor::randn(vec![ns, m], 1.0, &mut rng);
+        let p = Mat64::from_tensor(&Tensor::randn(vec![m, n], 1.0, &mut rng));
+        let xm = Mat64::from_tensor(&x);
+        let rxx = xm.matmul_tn(&xm).scale(1.0 / ns as f64);
+        let lhs = expected_output_error(&p, &rxx);
+        // direct: mean over rows of ||x_r P||²
+        let xp = xm.matmul(&p);
+        let rhs: f64 = xp.a.iter().map(|v| v * v).sum::<f64>() / ns as f64;
+        assert!((lhs - rhs).abs() < 1e-8 * (1.0 + rhs), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn zero_perturbation_zero_error() {
+        let p = Mat64::zeros(6, 4);
+        let rxx = Mat64::eye(6);
+        assert_eq!(expected_output_error(&p, &rxx), 0.0);
+    }
+
+    #[test]
+    fn identity_r_is_frobenius() {
+        let mut rng = Rng::new(1);
+        let p = Mat64::from_tensor(&Tensor::randn(vec![7, 3], 1.0, &mut rng));
+        let e = expected_output_error(&p, &Mat64::eye(7));
+        assert!((e - p.frob_norm().powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_error_of_identity_quant_is_zero() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(vec![4, 8], 1.0, &mut rng);
+        let out = SolveOutput::dense_only(w.clone());
+        assert!(weight_error(&w, &out) < 1e-12);
+    }
+}

@@ -1,0 +1,221 @@
+//! Quantization-error-reconstruction solvers.
+//!
+//! Every method takes a pretrained weight `W [m,n]`, a quantizer
+//! [`crate::quant::QFormat`], a target rank `k` and (for the
+//! activation-aware methods) per-site [`crate::stats::CalibStats`], and
+//! produces the dequantized weight `W~` plus low-rank terms `(A_k, B_k)`
+//! with `C_k = A_k B_k`:
+//!
+//! | method        | objective                  | scale matrix            |
+//! |---------------|----------------------------|-------------------------|
+//! | `w-only`      | —                          | —                       |
+//! | `zeroquant-v2`| min ‖W−W~−C‖_F (Problem 1) | I                       |
+//! | `loftq`       | Problem 1, iterated        | I (re-quantizing)       |
+//! | `lqer`        | heuristic                  | diag(E[\|x\|])          |
+//! | `qera-approx` | Problem 2 + Assumption 1   | diag(√E[x²]) (Thm 2)    |
+//! | `qera-exact`  | Problem 2                  | R_XX^{1/2}   (Thm 1)    |
+
+pub mod types;
+pub mod closed_form;
+pub mod loftq;
+pub mod metrics;
+
+pub use closed_form::{lqer, qera_approx, qera_exact, zeroquant_v2};
+pub use loftq::loftq;
+pub use metrics::{expected_output_error, weight_error};
+pub use types::{LowRank, Method, SolveOutput};
+
+use crate::quant::QFormat;
+use crate::stats::CalibStats;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Solve one layer with the given method.
+///
+/// `stats` is required for `lqer` / `qera-*`; `rng_seed` only affects
+/// `qlora` (Gaussian A, zero B).
+pub fn solve(
+    method: Method,
+    w: &Tensor,
+    fmt: QFormat,
+    rank: usize,
+    stats: Option<&CalibStats>,
+    rng_seed: u64,
+) -> Result<SolveOutput> {
+    let t0 = std::time::Instant::now();
+    let mut out = match method {
+        Method::WOnly => SolveOutput::dense_only(fmt.qdq(w)),
+        Method::QloraZero => {
+            let wdq = fmt.qdq(w);
+            let (m, n) = (w.rows(), w.cols());
+            let mut rng = crate::util::rng::Rng::new(rng_seed);
+            // LoRA init: A ~ N(0, 1/rank), B = 0 (adapter starts as a no-op)
+            let a = Tensor::randn(vec![m, rank], (1.0 / rank as f32).sqrt(), &mut rng);
+            let b = Tensor::zeros(vec![rank, n]);
+            SolveOutput { w_dq: wdq, lowrank: Some(LowRank { a, b }), wall_ms: 0.0 }
+        }
+        Method::ZeroQuantV2 => zeroquant_v2(w, fmt, rank),
+        Method::Loftq { iters } => loftq(w, fmt, rank, iters),
+        Method::Lqer => {
+            let st = need_stats(stats, "lqer")?;
+            lqer(w, fmt, rank, &st.mean_abs())
+        }
+        Method::QeraApprox => {
+            let st = need_stats(stats, "qera-approx")?;
+            qera_approx(w, fmt, rank, &st.mean_sq())
+        }
+        Method::QeraExact => {
+            let st = need_stats(stats, "qera-exact")?;
+            let rxx = match st.rxx_mean() {
+                Some(r) => r,
+                None => bail!("qera-exact needs R_XX tracking enabled in calibration"),
+            };
+            qera_exact(w, fmt, rank, &rxx)
+        }
+    };
+    out.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(out)
+}
+
+fn need_stats<'a>(stats: Option<&'a CalibStats>, who: &str) -> Result<&'a CalibStats> {
+    match stats {
+        Some(s) if s.count > 0 => Ok(s),
+        _ => bail!("{who} requires calibration statistics"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat64;
+    use crate::util::rng::Rng;
+
+    /// Anisotropic correlated activations + a weight matrix — the shape of
+    /// a real LLM layer (mirrors python/tests/test_qera_theory.py).
+    pub(crate) fn instance(
+        m: usize,
+        n: usize,
+        nsamp: usize,
+        seed: u64,
+    ) -> (Tensor, CalibStats, Mat64) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(vec![m, n], 1.0, &mut rng);
+        let mut mix = Mat64::zeros(m, m);
+        let scales: Vec<f64> = (0..m).map(|_| (rng.normal() * 1.2).exp()).collect();
+        for i in 0..m {
+            for j in 0..m {
+                mix.set(i, j, rng.normal() / (m as f64).sqrt() * scales[j]);
+            }
+        }
+        let mut stats = CalibStats::new(m, true);
+        let mut xs = Vec::with_capacity(nsamp * m);
+        for _ in 0..nsamp {
+            let z: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            for j in 0..m {
+                let mut v = 0.0;
+                for i in 0..m {
+                    v += z[i] * mix.at(i, j);
+                }
+                xs.push(v as f32);
+            }
+        }
+        let x = Tensor::new(vec![nsamp, m], xs);
+        stats.update(&x);
+        let xm = Mat64::from_tensor(&x);
+        let rxx = xm.matmul_tn(&xm).scale(1.0 / nsamp as f64);
+        (w, stats, rxx)
+    }
+
+    fn fmt() -> QFormat {
+        QFormat::Mxint { bits: 3, block: 8 }
+    }
+
+    fn out_err(w: &Tensor, out: &SolveOutput, rxx: &Mat64) -> f64 {
+        let mut approx = Mat64::from_tensor(&out.w_dq);
+        if let Some(lr) = &out.lowrank {
+            approx = approx.add(&lr.to_mat());
+        }
+        let p = approx.sub(&Mat64::from_tensor(w));
+        expected_output_error(&p, rxx)
+    }
+
+    #[test]
+    fn qera_exact_optimal_among_methods() {
+        for seed in 0..3 {
+            let (w, stats, rxx) = instance(16, 16, 256, seed);
+            let k = 4;
+            let e_zq = out_err(&w, &solve(Method::ZeroQuantV2, &w, fmt(), k, None, 0).unwrap(), &rxx);
+            let e_lq = out_err(&w, &solve(Method::Lqer, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+            let e_ap = out_err(&w, &solve(Method::QeraApprox, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+            let e_ex = out_err(&w, &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+            assert!(e_ex <= e_zq * (1.0 + 1e-9), "seed {seed}: exact {e_ex} vs zq {e_zq}");
+            assert!(e_ex <= e_lq * (1.0 + 1e-9), "seed {seed}: exact {e_ex} vs lqer {e_lq}");
+            assert!(e_ex <= e_ap * (1.0 + 1e-9), "seed {seed}: exact {e_ex} vs approx {e_ap}");
+        }
+    }
+
+    #[test]
+    fn zeroquant_minimizes_weight_error() {
+        let (w, stats, _) = instance(16, 16, 128, 7);
+        let k = 3;
+        let zq = solve(Method::ZeroQuantV2, &w, fmt(), k, None, 0).unwrap();
+        let ex = solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap();
+        let we_zq = weight_error(&w, &zq);
+        let we_ex = weight_error(&w, &ex);
+        assert!(we_zq <= we_ex + 1e-9, "zq {we_zq} vs exact {we_ex}");
+    }
+
+    #[test]
+    fn wonly_has_no_lowrank() {
+        let (w, _, _) = instance(8, 8, 32, 1);
+        let out = solve(Method::WOnly, &w, fmt(), 4, None, 0).unwrap();
+        assert!(out.lowrank.is_none());
+    }
+
+    #[test]
+    fn qlora_adapter_is_noop_at_init() {
+        let (w, _, _) = instance(8, 8, 32, 2);
+        let out = solve(Method::QloraZero, &w, fmt(), 4, None, 42).unwrap();
+        let lr = out.lowrank.unwrap();
+        assert!(lr.b.frob_norm() == 0.0);
+        assert!(lr.a.frob_norm() > 0.0);
+    }
+
+    #[test]
+    fn missing_stats_errors() {
+        let (w, _, _) = instance(8, 8, 32, 3);
+        assert!(solve(Method::QeraExact, &w, fmt(), 2, None, 0).is_err());
+        assert!(solve(Method::QeraApprox, &w, fmt(), 2, None, 0).is_err());
+        let empty = CalibStats::new(8, true);
+        assert!(solve(Method::Lqer, &w, fmt(), 2, Some(&empty), 0).is_err());
+    }
+
+    #[test]
+    fn rank_monotone_for_qera() {
+        let (w, stats, rxx) = instance(16, 16, 256, 4);
+        let mut prev = f64::INFINITY;
+        for k in [1usize, 2, 4, 8, 16] {
+            let e = out_err(&w, &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+            assert!(e <= prev + 1e-9, "k={k}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn full_rank_recovers_everything() {
+        let (w, stats, rxx) = instance(8, 8, 128, 5);
+        let k = 8; // = min(m,n)
+        let e = out_err(&w, &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+        assert!(e < 1e-8, "{e}");
+        let e2 = out_err(&w, &solve(Method::ZeroQuantV2, &w, fmt(), k, None, 0).unwrap(), &rxx);
+        assert!(e2 < 1e-8, "{e2}");
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("qera-exact").unwrap(), Method::QeraExact);
+        assert_eq!(Method::parse("loftq:5").unwrap(), Method::Loftq { iters: 5 });
+        assert_eq!(Method::parse("loftq").unwrap(), Method::Loftq { iters: 5 });
+        assert!(Method::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Solver data types.
+
+use crate::linalg::Mat64;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Low-rank correction `C_k = A B` (`a: [m,k]`, `b: [k,n]`).
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    pub a: Tensor,
+    pub b: Tensor,
+}
+
+impl LowRank {
+    pub fn zeros(m: usize, n: usize, k: usize) -> Self {
+        LowRank { a: Tensor::zeros(vec![m, k]), b: Tensor::zeros(vec![k, n]) }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Dense `C_k = A B` in f64.
+    pub fn to_mat(&self) -> Mat64 {
+        Mat64::from_tensor(&self.a).matmul(&Mat64::from_tensor(&self.b))
+    }
+
+    /// Dense `C_k` in f32.
+    pub fn to_tensor(&self) -> Tensor {
+        self.a.matmul(&self.b)
+    }
+
+    /// `W~ + A B` — the merged weight the evaluator feeds to `lm_fwd`.
+    pub fn merged_with(&self, w_dq: &Tensor) -> Tensor {
+        w_dq.add(&self.to_tensor())
+    }
+
+    /// Extra parameters the correction costs (paper's overhead accounting).
+    pub fn n_params(&self) -> usize {
+        self.a.numel() + self.b.numel()
+    }
+}
+
+/// One solved layer.
+#[derive(Clone, Debug)]
+pub struct SolveOutput {
+    /// Dequantized weight `W~ = dq(q(W))`.
+    pub w_dq: Tensor,
+    /// Rank-k correction, `None` for `w-only`.
+    pub lowrank: Option<LowRank>,
+    /// Solver wall time (Figure 8b / Tables 7-8).
+    pub wall_ms: f64,
+}
+
+impl SolveOutput {
+    pub fn dense_only(w_dq: Tensor) -> Self {
+        SolveOutput { w_dq, lowrank: None, wall_ms: 0.0 }
+    }
+
+    /// Effective weight `W~ + C_k`.
+    pub fn merged(&self) -> Tensor {
+        match &self.lowrank {
+            Some(lr) => lr.merged_with(&self.w_dq),
+            None => self.w_dq.clone(),
+        }
+    }
+}
+
+/// Reconstruction method (paper Table 3's row set + QPEFT baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Quantize only (paper's `w-only`).
+    WOnly,
+    /// LoRA/QLoRA init: Gaussian A, zero B (no reconstruction).
+    QloraZero,
+    /// SVD of the weight error (Yao et al. 2023).
+    ZeroQuantV2,
+    /// Iterative re-quantized SVD (Li et al. 2023), default 5 iterations.
+    Loftq { iters: usize },
+    /// Activation abs-mean heuristic scale (Zhang et al. 2024a).
+    Lqer,
+    /// Theorem 2.
+    QeraApprox,
+    /// Theorem 1.
+    QeraExact,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        let s = s.trim().to_lowercase();
+        Ok(match s.as_str() {
+            "w-only" | "wonly" | "none" => Method::WOnly,
+            "qlora" | "qlora-zero" | "lora" => Method::QloraZero,
+            "zeroquant-v2" | "zeroquant" | "zq" | "svd" => Method::ZeroQuantV2,
+            "lqer" => Method::Lqer,
+            "qera-approx" | "qera_approx" | "approx" => Method::QeraApprox,
+            "qera-exact" | "qera_exact" | "exact" => Method::QeraExact,
+            _ => {
+                if let Some(rest) = s.strip_prefix("loftq") {
+                    let iters = match rest.strip_prefix(':') {
+                        Some(n) => n.parse()?,
+                        None if rest.is_empty() => 5,
+                        _ => bail!("bad loftq spec '{s}'"),
+                    };
+                    Method::Loftq { iters }
+                } else {
+                    bail!("unknown method '{s}'")
+                }
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::WOnly => "w-only".into(),
+            Method::QloraZero => "qlora".into(),
+            Method::ZeroQuantV2 => "zeroquant-v2".into(),
+            Method::Loftq { iters } => format!("loftq:{iters}"),
+            Method::Lqer => "lqer".into(),
+            Method::QeraApprox => "qera-approx".into(),
+            Method::QeraExact => "qera-exact".into(),
+        }
+    }
+
+    /// Does this method consume calibration statistics?
+    pub fn needs_stats(&self) -> bool {
+        matches!(self, Method::Lqer | Method::QeraApprox | Method::QeraExact)
+    }
+
+    /// Does this method need the full `R_XX` (vs diagonal stats only)?
+    pub fn needs_rxx(&self) -> bool {
+        matches!(self, Method::QeraExact)
+    }
+
+    /// The paper's PTQ method grid (Tables 3/4 rows).
+    pub fn ptq_grid() -> Vec<Method> {
+        vec![
+            Method::WOnly,
+            Method::ZeroQuantV2,
+            Method::Lqer,
+            Method::QeraApprox,
+            Method::QeraExact,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lowrank_merge() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(vec![6, 4], 1.0, &mut rng);
+        let lr = LowRank {
+            a: Tensor::randn(vec![6, 2], 1.0, &mut rng),
+            b: Tensor::randn(vec![2, 4], 1.0, &mut rng),
+        };
+        let merged = lr.merged_with(&w);
+        let want = w.add(&lr.a.matmul(&lr.b));
+        assert_eq!(merged, want);
+        assert_eq!(lr.rank(), 2);
+        assert_eq!(lr.n_params(), 12 + 8);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for m in [
+            Method::WOnly,
+            Method::QloraZero,
+            Method::ZeroQuantV2,
+            Method::Loftq { iters: 3 },
+            Method::Lqer,
+            Method::QeraApprox,
+            Method::QeraExact,
+        ] {
+            assert_eq!(Method::parse(&m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn stats_flags() {
+        assert!(Method::QeraExact.needs_rxx());
+        assert!(!Method::QeraApprox.needs_rxx());
+        assert!(Method::QeraApprox.needs_stats());
+        assert!(!Method::ZeroQuantV2.needs_stats());
+        assert_eq!(Method::ptq_grid().len(), 5);
+    }
+}

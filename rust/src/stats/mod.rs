@@ -1,0 +1,325 @@
+//! Streaming calibration statistics (f64 accumulation per App. A.7).
+//!
+//! For each linear-layer input site the coordinator accumulates, over
+//! calibration batches of row vectors `x ∈ R^m`:
+//!
+//! * `sum |x_i|`      -> LQER's heuristic scale;
+//! * `sum x_i²`       -> QERA-approx's `S = diag(√E[x_i²])` (Theorem 2);
+//! * `sum xᵀx`        -> QERA-exact's `R_XX = E[xᵀx]` (Theorem 1).
+//!
+//! The outer products arrive as f32 partials from the L1 `calib_stats`
+//! Pallas kernel or as raw activation taps; folding happens here in f64.
+
+use crate::linalg::Mat64;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Per-site accumulator.
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    pub dim: usize,
+    pub count: u64,
+    pub sum_abs: Vec<f64>,
+    pub sum_sq: Vec<f64>,
+    /// `Σ xᵀx`; optional because QERA-approx / LQER don't need the O(m²)
+    /// memory (Table 8's init-time trade-off).
+    pub rxx: Option<Mat64>,
+}
+
+impl CalibStats {
+    pub fn new(dim: usize, track_rxx: bool) -> Self {
+        CalibStats {
+            dim,
+            count: 0,
+            sum_abs: vec![0.0; dim],
+            sum_sq: vec![0.0; dim],
+            rxx: if track_rxx { Some(Mat64::zeros(dim, dim)) } else { None },
+        }
+    }
+
+    /// Fold a batch of rows `x` ([rows, dim], any leading shape collapsed).
+    pub fn update(&mut self, x: &Tensor) {
+        let x2 = x.as_2d();
+        assert_eq!(x2.cols(), self.dim, "calib dim mismatch");
+        let rows = x2.rows();
+        let m = self.dim;
+        let data = x2.data();
+        for r in 0..rows {
+            let row = &data[r * m..(r + 1) * m];
+            for (i, &v) in row.iter().enumerate() {
+                let v = v as f64;
+                self.sum_abs[i] += v.abs();
+                self.sum_sq[i] += v * v;
+            }
+        }
+        if let Some(rxx) = &mut self.rxx {
+            // blocked upper-triangular accumulation, mirrored afterwards
+            for r in 0..rows {
+                let row = &data[r * m..(r + 1) * m];
+                for i in 0..m {
+                    let vi = row[i] as f64;
+                    if vi == 0.0 {
+                        continue;
+                    }
+                    let dst = &mut rxx.a[i * m..(i + 1) * m];
+                    for j in i..m {
+                        dst[j] += vi * row[j] as f64;
+                    }
+                }
+            }
+        }
+        self.count += rows as u64;
+    }
+
+    /// Fold pre-reduced f32 partials (from the L1 `calib_stats` kernel):
+    /// `sumsq[m]`, `sumabs[m]`, `rxx[m,m]`, over `rows` source rows.
+    pub fn update_partial(
+        &mut self,
+        sumsq: &[f32],
+        sumabs: &[f32],
+        rxx: Option<&[f32]>,
+        rows: u64,
+    ) -> Result<()> {
+        ensure!(sumsq.len() == self.dim && sumabs.len() == self.dim, "partial dim mismatch");
+        for i in 0..self.dim {
+            self.sum_sq[i] += sumsq[i] as f64;
+            self.sum_abs[i] += sumabs[i] as f64;
+        }
+        if let (Some(acc), Some(part)) = (&mut self.rxx, rxx) {
+            ensure!(part.len() == self.dim * self.dim, "rxx partial size");
+            for (a, &p) in acc.a.iter_mut().zip(part) {
+                *a += p as f64;
+            }
+        }
+        self.count += rows;
+        Ok(())
+    }
+
+    /// Merge another accumulator (parallel calibration shards).
+    pub fn merge(&mut self, other: &CalibStats) {
+        assert_eq!(self.dim, other.dim);
+        self.count += other.count;
+        for i in 0..self.dim {
+            self.sum_abs[i] += other.sum_abs[i];
+            self.sum_sq[i] += other.sum_sq[i];
+        }
+        match (&mut self.rxx, &other.rxx) {
+            (Some(a), Some(b)) => {
+                for (x, y) in a.a.iter_mut().zip(&b.a) {
+                    *x += y;
+                }
+            }
+            (None, None) => {}
+            _ => panic!("merging stats with mismatched rxx tracking"),
+        }
+    }
+
+    /// `E[|x_i|]` (LQER's diagonal).
+    pub fn mean_abs(&self) -> Vec<f64> {
+        let n = self.count.max(1) as f64;
+        self.sum_abs.iter().map(|&s| s / n).collect()
+    }
+
+    /// `E[x_i²]` (QERA-approx's diagonal, pre-sqrt).
+    pub fn mean_sq(&self) -> Vec<f64> {
+        let n = self.count.max(1) as f64;
+        self.sum_sq.iter().map(|&s| s / n).collect()
+    }
+
+    /// `R_XX = E[xᵀx]`, symmetrized (only the upper triangle is accumulated
+    /// on the row-tap path).
+    pub fn rxx_mean(&self) -> Option<Mat64> {
+        let rxx = self.rxx.as_ref()?;
+        let n = self.count.max(1) as f64;
+        let m = self.dim;
+        let mut out = Mat64::zeros(m, m);
+        for i in 0..m {
+            for j in i..m {
+                let v = rxx.at(i, j) / n;
+                out.set(i, j, v);
+                out.set(j, i, v);
+            }
+        }
+        // partial-fold path may have filled the lower triangle instead;
+        // prefer whichever half carries data.
+        if out.frob_norm() == 0.0 {
+            let mut alt = rxx.clone();
+            alt.symmetrize();
+            return Some(alt.scale(1.0 / n));
+        }
+        Some(out)
+    }
+
+    /// Mean |off-diagonal| element over mean diagonal element of `R_XX` —
+    /// the per-element Assumption-1 diagnostic (Figure 5's "dark pixels"):
+    /// iid dims give ≈0, perfectly correlated dims give ≈1.
+    pub fn offdiag_element_ratio(&self) -> Option<f64> {
+        let r = self.rxx_mean()?;
+        let m = r.r;
+        if m < 2 {
+            return Some(0.0);
+        }
+        let mut diag = 0.0f64;
+        let mut off = 0.0f64;
+        for i in 0..m {
+            diag += r.at(i, i).abs();
+            for j in 0..m {
+                if i != j {
+                    off += r.at(i, j).abs();
+                }
+            }
+        }
+        let mean_diag = diag / m as f64;
+        let mean_off = off / (m * (m - 1)) as f64;
+        Some(mean_off / mean_diag.max(f64::MIN_POSITIVE))
+    }
+
+    /// Off-diagonal mass ratio `‖offdiag(R)‖_F / ‖R‖_F` — the Assumption 1
+    /// diagnostic behind Figure 5.
+    pub fn offdiag_ratio(&self) -> Option<f64> {
+        let r = self.rxx_mean()?;
+        let total = r.frob_norm();
+        if total == 0.0 {
+            return Some(0.0);
+        }
+        let mut diag = 0.0f64;
+        for i in 0..r.r {
+            diag += r.at(i, i) * r.at(i, i);
+        }
+        Some(((total * total - diag).max(0.0)).sqrt() / total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn batch(rows: usize, m: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(vec![rows, m], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn single_row_known() {
+        let x = Tensor::new(vec![1, 3], vec![1.0, -2.0, 0.5]);
+        let mut st = CalibStats::new(3, true);
+        st.update(&x);
+        assert_eq!(st.count, 1);
+        assert_eq!(st.mean_abs(), vec![1.0, 2.0, 0.5]);
+        assert_eq!(st.mean_sq(), vec![1.0, 4.0, 0.25]);
+        let r = st.rxx_mean().unwrap();
+        assert!((r.at(0, 1) + 2.0).abs() < 1e-12);
+        assert!((r.at(1, 2) + 1.0).abs() < 1e-12);
+        assert!((r.at(2, 0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rxx_matches_direct_outer_product() {
+        let x = batch(50, 8, 0);
+        let mut st = CalibStats::new(8, true);
+        st.update(&x);
+        let r = st.rxx_mean().unwrap();
+        // direct: X^T X / n
+        let xm = Mat64::from_tensor(&x);
+        let want = xm.matmul_tn(&xm).scale(1.0 / 50.0);
+        assert!(r.sub(&want).frob_norm() < 1e-6 * want.frob_norm());
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let a = batch(30, 6, 1);
+        let b = batch(20, 6, 2);
+        let mut st1 = CalibStats::new(6, true);
+        st1.update(&a);
+        st1.update(&b);
+        let mut all = a.data().to_vec();
+        all.extend_from_slice(b.data());
+        let both = Tensor::new(vec![50, 6], all);
+        let mut st2 = CalibStats::new(6, true);
+        st2.update(&both);
+        assert_eq!(st1.count, st2.count);
+        for i in 0..6 {
+            assert!((st1.sum_sq[i] - st2.sum_sq[i]).abs() < 1e-9);
+        }
+        let d = st1.rxx_mean().unwrap().sub(&st2.rxx_mean().unwrap()).frob_norm();
+        assert!(d < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let a = batch(16, 4, 3);
+        let b = batch(24, 4, 4);
+        let mut st1 = CalibStats::new(4, true);
+        st1.update(&a);
+        let mut st2 = CalibStats::new(4, true);
+        st2.update(&b);
+        st1.merge(&st2);
+        let mut seq = CalibStats::new(4, true);
+        seq.update(&a);
+        seq.update(&b);
+        assert_eq!(st1.count, seq.count);
+        let d = st1.rxx_mean().unwrap().sub(&seq.rxx_mean().unwrap()).frob_norm();
+        assert!(d < 1e-12);
+    }
+
+    #[test]
+    fn partial_fold_matches_raw() {
+        let x = batch(32, 5, 5);
+        let mut raw = CalibStats::new(5, true);
+        raw.update(&x);
+        // compute the partials the L1 kernel would emit (f32)
+        let x2 = x.as_2d();
+        let mut sumsq = vec![0.0f32; 5];
+        let mut sumabs = vec![0.0f32; 5];
+        let mut rxx = vec![0.0f32; 25];
+        for r in 0..32 {
+            for i in 0..5 {
+                let v = x2.at2(r, i);
+                sumsq[i] += v * v;
+                sumabs[i] += v.abs();
+                for j in 0..5 {
+                    rxx[i * 5 + j] += v * x2.at2(r, j);
+                }
+            }
+        }
+        let mut part = CalibStats::new(5, true);
+        part.update_partial(&sumsq, &sumabs, Some(&rxx), 32).unwrap();
+        for i in 0..5 {
+            assert!((raw.mean_sq()[i] - part.mean_sq()[i]).abs() < 1e-4);
+        }
+        let d = raw.rxx_mean().unwrap().sub(&part.rxx_mean().unwrap()).frob_norm();
+        assert!(d < 1e-3);
+    }
+
+    #[test]
+    fn offdiag_ratio_iid_small_correlated_large() {
+        // iid gaussian -> R ≈ I -> small ratio
+        let mut st = CalibStats::new(16, true);
+        st.update(&batch(4000, 16, 6));
+        let iid = st.offdiag_ratio().unwrap();
+        assert!(iid < 0.25, "{iid}");
+        // perfectly correlated dims -> large ratio
+        let mut rng = Rng::new(7);
+        let mut data = Vec::new();
+        for _ in 0..500 {
+            let v = rng.normal_f32();
+            for _ in 0..16 {
+                data.push(v);
+            }
+        }
+        let mut st2 = CalibStats::new(16, true);
+        st2.update(&Tensor::new(vec![500, 16], data));
+        let corr = st2.offdiag_ratio().unwrap();
+        assert!(corr > 0.9, "{corr}");
+    }
+
+    #[test]
+    fn no_rxx_mode() {
+        let mut st = CalibStats::new(4, false);
+        st.update(&batch(10, 4, 8));
+        assert!(st.rxx_mean().is_none());
+        assert!(st.offdiag_ratio().is_none());
+        assert_eq!(st.mean_sq().len(), 4);
+    }
+}

@@ -1,0 +1,338 @@
+//! Dense row-major f32 tensors — the coordinator's working representation
+//! for weights and activations (device transfers are f32; the numerically
+//! sensitive solver math happens in `linalg` on f64).
+
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ------------------------------------------------------------ creation
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn ones(shape: Vec<usize>) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    /// iid N(0, std²).
+    pub fn randn(shape: Vec<usize>, std: f32, rng: &mut Rng) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: rng.normal_vec(n, std) }
+    }
+
+    // ----------------------------------------------------------- accessors
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessors.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    // -------------------------------------------------------------- reshape
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == self.data.len(),
+            "reshape {:?} -> {:?}: element count mismatch",
+            self.shape,
+            shape
+        );
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// View an n-d tensor as 2-D by merging all leading axes.
+    pub fn as_2d(&self) -> Tensor {
+        let last = *self.shape.last().expect("scalar tensor");
+        let rows = self.data.len() / last;
+        Tensor { shape: vec![rows, last], data: self.data.clone() }
+    }
+
+    // ---------------------------------------------------------- arithmetic
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    // ----------------------------------------------------------- reductions
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Mean squared difference (used for model-output-error experiments).
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    /// Row-wise argmax of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        let (r, c) = (self.rows(), self.cols());
+        (0..r)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                let mut best = 0;
+                for j in 1..c {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    // -------------------------------------------------------------- linalg
+    /// 2-D matmul: self [m,k] x other [k,n] -> [m,n].  Blocked over k for
+    /// locality; f32 accumulation (solver-grade math lives in linalg::Mat64).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        // i-k-j loop order: streams `other` rows, writes `out` rows hot.
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// self [m,k] x otherᵀ where other is [n,k] -> [m,n].
+    pub fn matmul_t(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, k2) = (other.rows(), other.cols());
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += arow[kk] * brow[kk];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    pub fn transpose2d(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, v: Vec<f32>) -> Tensor {
+        Tensor::new(vec![rows, cols], v)
+    }
+
+    #[test]
+    fn create_and_access() {
+        let t = t2(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = t2(2, 2, vec![1., 2., 3., 4.]);
+        let b = t2(2, 2, vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(vec![5, 7], 1.0, &mut rng);
+        let b = Tensor::randn(vec![7, 4], 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_t(&b.transpose2d());
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(vec![3, 8], 1.0, &mut rng);
+        assert_eq!(a.transpose2d().transpose2d(), a);
+    }
+
+    #[test]
+    fn reshape_and_as_2d() {
+        let t = Tensor::new(vec![2, 3, 4], (0..24).map(|x| x as f32).collect());
+        let flat = t.as_2d();
+        assert_eq!(flat.shape(), &[6, 4]);
+        let back = flat.reshape(vec![2, 3, 4]).unwrap();
+        assert_eq!(back.shape(), &[2, 3, 4]);
+        assert!(Tensor::zeros(vec![4]).reshape(vec![3]).is_err());
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = t2(1, 3, vec![1., 2., 3.]);
+        let b = t2(1, 3, vec![0.5, 0.5, 0.5]);
+        assert_eq!(a.sub(&b).data(), &[0.5, 1.5, 2.5]);
+        assert_eq!(a.add(&b).data(), &[1.5, 2.5, 3.5]);
+        let mut c = a.clone();
+        c.scale(2.0);
+        assert_eq!(c.data(), &[2., 4., 6.]);
+        let mut d = a.clone();
+        d.add_assign(&b);
+        assert_eq!(d.data(), &[1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn norms_and_stats() {
+        let a = t2(1, 4, vec![3., 4., 0., 0.]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(a.max_abs(), 4.0);
+        assert!((a.mean() - 1.75).abs() < 1e-12);
+        let b = t2(1, 4, vec![3., 4., 0., 2.]);
+        assert!((a.mse(&b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let a = t2(2, 3, vec![0., 5., 1., 9., 2., 3.]);
+        assert_eq!(a.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(vec![100, 100], 2.0, &mut rng);
+        let mean = t.mean();
+        let var = t.data().iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+            / t.numel() as f64;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 4.0).abs() < 0.2, "{var}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Training drivers: full pretraining of the subject models and QPEFT
+//! (LoRA) fine-tuning — grads come from the AOT `*_step` artifacts, the
+//! optimizer state and update rule live here in Rust.
+
+pub mod optimizer;
+pub mod trainer;
+pub mod lora;
+
+pub use lora::{LoraClsTrainer, LoraLmTrainer};
+pub use optimizer::{Adam, Sgd};
+pub use trainer::{pretrain, PretrainConfig, PretrainReport};

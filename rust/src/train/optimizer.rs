@@ -1,0 +1,156 @@
+//! Optimizers over flat `Vec<Tensor>` parameter lists.
+
+use crate::tensor::Tensor;
+
+/// Adam (Kingma & Ba) with optional decoupled weight decay.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32, params: &[Tensor]) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: params.iter().map(|p| Tensor::zeros(p.shape().to_vec())).collect(),
+            v: params.iter().map(|p| Tensor::zeros(p.shape().to_vec())).collect(),
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, g), (m, v)) in
+            params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.shape(), g.shape());
+            let pd = p.data_mut();
+            let gd = g.data();
+            let md = m.data_mut();
+            let vd = v.data_mut();
+            for i in 0..pd.len() {
+                let gi = gd[i];
+                md[i] = self.beta1 * md[i] + (1.0 - self.beta1) * gi;
+                vd[i] = self.beta2 * vd[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = md[i] / bc1;
+                let vhat = vd[i] / bc2;
+                let mut upd = mhat / (vhat.sqrt() + self.eps);
+                if self.weight_decay > 0.0 {
+                    upd += self.weight_decay * pd[i];
+                }
+                pd[i] -= self.lr * upd;
+            }
+        }
+    }
+}
+
+/// SGD with momentum.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    vel: Vec<Tensor>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, params: &[Tensor]) -> Sgd {
+        Sgd {
+            lr,
+            momentum,
+            vel: params.iter().map(|p| Tensor::zeros(p.shape().to_vec())).collect(),
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(self.vel.iter_mut()) {
+            let pd = p.data_mut();
+            let gd = g.data();
+            let vd = v.data_mut();
+            for i in 0..pd.len() {
+                vd[i] = self.momentum * vd[i] + gd[i];
+                pd[i] -= self.lr * vd[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic bowl: f(x) = 0.5 * ||x - target||².
+    fn quad_grads(params: &[Tensor], target: &[f32]) -> Vec<Tensor> {
+        params
+            .iter()
+            .map(|p| {
+                let g: Vec<f32> =
+                    p.data().iter().zip(target).map(|(&x, &t)| x - t).collect();
+                Tensor::new(p.shape().to_vec(), g)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let target = vec![1.0f32, -2.0, 3.0, 0.5];
+        let mut params = vec![Tensor::zeros(vec![4])];
+        let mut opt = Adam::new(0.1, &params);
+        for _ in 0..500 {
+            let grads = quad_grads(&params, &target);
+            opt.step(&mut params, &grads);
+        }
+        for (x, t) in params[0].data().iter().zip(&target) {
+            assert!((x - t).abs() < 1e-2, "{x} vs {t}");
+        }
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let target = vec![0.7f32, -0.3];
+        let mut params = vec![Tensor::zeros(vec![2])];
+        let mut opt = Sgd::new(0.05, 0.9, &params);
+        for _ in 0..400 {
+            let grads = quad_grads(&params, &target);
+            opt.step(&mut params, &grads);
+        }
+        for (x, t) in params[0].data().iter().zip(&target) {
+            assert!((x - t).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        // first step with unit gradient must move by ~lr regardless of betas
+        let mut params = vec![Tensor::zeros(vec![1])];
+        let mut opt = Adam::new(0.01, &params);
+        let grads = vec![Tensor::full(vec![1], 1.0)];
+        opt.step(&mut params, &grads);
+        let moved = -params[0].data()[0];
+        assert!((moved - 0.01).abs() < 1e-4, "{moved}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut params = vec![Tensor::full(vec![1], 10.0)];
+        let mut opt = Adam::new(0.1, &params);
+        opt.weight_decay = 0.1;
+        let grads = vec![Tensor::zeros(vec![1])];
+        for _ in 0..10 {
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].data()[0] < 10.0);
+    }
+}

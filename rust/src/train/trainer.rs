@@ -1,0 +1,152 @@
+//! Full-parameter pretraining of the subject models.
+//!
+//! The repo's experiment subjects are *pretrained in-repo* (DESIGN.md §6):
+//! grads come from `pretrain_step.<cfg>`, Adam runs here, and the loss
+//! curve + checkpoints are the artifacts every experiment consumes.
+
+use super::optimizer::Adam;
+use crate::data::batch::{lm_batch_random, lm_batches};
+use crate::data::corpus::Corpus;
+use crate::model::{init::init_params, Checkpoint, ModelSpec};
+use crate::runtime::{exec::lm_inputs, Registry};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Debug)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig { steps: 300, lr: 3e-3, warmup: 20, seed: 42, log_every: 50 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PretrainReport {
+    pub losses: Vec<(usize, f64)>,
+    pub final_loss: f64,
+    pub tokens_seen: usize,
+    pub wall_s: f64,
+}
+
+/// Pretrain from scratch on `corpus`; returns the checkpoint + loss curve.
+pub fn pretrain(
+    reg: &Registry,
+    spec: &ModelSpec,
+    corpus: &Corpus,
+    cfg: &PretrainConfig,
+) -> Result<(Checkpoint, PretrainReport)> {
+    let exec = reg.load(&format!("pretrain_step.{}", spec.name))?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut params = init_params(spec, &mut rng);
+    let mut opt = Adam::new(cfg.lr, &params);
+    let shape = [spec.batch, spec.seq];
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::new();
+    let mut final_loss = f64::NAN;
+
+    for step in 0..cfg.steps {
+        // linear warmup then constant (cosine would also be fine at this
+        // scale; constant keeps curves easy to compare across methods)
+        opt.lr = if step < cfg.warmup {
+            cfg.lr * (step + 1) as f32 / cfg.warmup as f32
+        } else {
+            cfg.lr
+        };
+        let (tokens, targets) = lm_batch_random(corpus, spec.batch, spec.seq, &mut rng);
+        let out = exec.run(&lm_inputs(&tokens, Some((&targets, &shape)), &shape, &params))?;
+        let loss = out[0].data()[0] as f64;
+        ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+        let grads = &out[1..];
+        ensure!(grads.len() == params.len(), "grad count mismatch");
+        opt.step(&mut params, grads);
+        final_loss = loss;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            crate::info!("pretrain[{}] step {step}: loss {loss:.4}", spec.name);
+            losses.push((step, loss));
+        }
+    }
+
+    let report = PretrainReport {
+        losses,
+        final_loss,
+        tokens_seen: cfg.steps * spec.tokens_per_batch(),
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    Ok((Checkpoint::new(spec.clone(), params), report))
+}
+
+/// Validation loss (mean NLL) over up to `max_batches`.
+pub fn validation_loss(
+    reg: &Registry,
+    spec: &ModelSpec,
+    params: &[crate::tensor::Tensor],
+    corpus: &Corpus,
+    max_batches: usize,
+) -> Result<f64> {
+    let exec = reg.load(&format!("lm_nll.{}", spec.name))?;
+    let shape = [spec.batch, spec.seq];
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for (bi, (tokens, targets)) in lm_batches(corpus, spec.batch, spec.seq).enumerate() {
+        if bi >= max_batches {
+            break;
+        }
+        let out = exec.run(&lm_inputs(&tokens, Some((&targets, &shape)), &shape, params))?;
+        total += out[0].data().iter().map(|&v| v as f64).sum::<f64>();
+        count += out[0].numel();
+    }
+    ensure!(count > 0);
+    Ok(total / count as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<Registry> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn short_pretrain_reduces_loss() {
+        let Some(reg) = registry() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let corpus = Corpus::generate(spec.vocab, 50_000, 0);
+        let cfg = PretrainConfig { steps: 30, lr: 2e-3, warmup: 5, seed: 42, log_every: 10 };
+        let (ckpt, report) = pretrain(&reg, &spec, &corpus, &cfg).unwrap();
+        let first = report.losses.first().unwrap().1;
+        assert!(
+            report.final_loss < first - 0.2,
+            "no learning: {first} -> {}",
+            report.final_loss
+        );
+        assert_eq!(ckpt.params.len(), spec.param_layout().len());
+        // loss should start near ln(vocab) for a uniform-ish init
+        assert!((first - (spec.vocab as f64).ln()).abs() < 1.0, "{first}");
+    }
+
+    #[test]
+    fn validation_loss_consistent_with_ppl() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let spec = reg.spec("nano").unwrap().clone();
+        let corpus = Corpus::generate(spec.vocab, 8192, 1);
+        let params = crate::model::init::init_params(&spec, &mut Rng::new(0));
+        let vl = validation_loss(&reg, &spec, &params, &corpus, 2).unwrap();
+        let ppl = crate::eval::perplexity(&reg, &spec, &params, &corpus, 2).unwrap();
+        assert!((vl.exp() - ppl).abs() < 1e-6 * ppl);
+    }
+}

@@ -1,0 +1,147 @@
+//! Binary file I/O helpers (little-endian) for checkpoints and caches.
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+pub fn read_str(r: &mut impl Read) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    anyhow::ensure!(n < 1 << 24, "string too long: {n}");
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).context("invalid utf-8 string")
+}
+
+pub fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    // bulk byte copy (safe: f32 -> le bytes)
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+pub fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    anyhow::ensure!(n < 1 << 31, "tensor too large: {n}");
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn write_bytes(w: &mut impl Write, xs: &[u8]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    w.write_all(xs)?;
+    Ok(())
+}
+
+pub fn read_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
+    let n = read_u64(r)? as usize;
+    anyhow::ensure!(n < 1 << 32, "blob too large: {n}");
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    Ok(b)
+}
+
+pub fn read_to_string(path: impl AsRef<Path>) -> Result<String> {
+    std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))
+}
+
+/// Atomic-ish write: write to `.tmp` then rename.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_and_strings() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, 7).unwrap();
+        write_u64(&mut buf, 1 << 40).unwrap();
+        write_str(&mut buf, "blk0.wq").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_u32(&mut r).unwrap(), 7);
+        assert_eq!(read_u64(&mut r).unwrap(), 1 << 40);
+        assert_eq!(read_str(&mut r).unwrap(), "blk0.wq");
+    }
+
+    #[test]
+    fn roundtrip_f32s() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &xs).unwrap();
+        let back = read_f32s(&mut &buf[..]).unwrap();
+        assert_eq!(xs, back);
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let xs: Vec<u8> = (0..=255).collect();
+        let mut buf = Vec::new();
+        write_bytes(&mut buf, &xs).unwrap();
+        assert_eq!(read_bytes(&mut &buf[..]).unwrap(), xs);
+    }
+
+    #[test]
+    fn atomic_write() {
+        let dir = std::env::temp_dir().join("qera_fsio_test");
+        let path = dir.join("x.bin");
+        write_atomic(&path, b"hello").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello");
+        write_atomic(&path, b"world").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"world");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &[1.0, 2.0]).unwrap();
+        buf.truncate(buf.len() - 1);
+        assert!(read_f32s(&mut &buf[..]).is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny leveled logger (log crate not vendored): `QERA_LOG=debug|info|warn`.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: once_cell_lite::Lazy<Instant> = once_cell_lite::Lazy::new(Instant::now);
+
+/// Minimal Lazy (once_cell the crate is cached, but keep zero deps here).
+mod once_cell_lite {
+    use std::sync::Once;
+
+    pub struct Lazy<T> {
+        once: Once,
+        init: fn() -> T,
+        value: std::cell::UnsafeCell<Option<T>>,
+    }
+    unsafe impl<T: Sync> Sync for Lazy<T> {}
+    impl<T> Lazy<T> {
+        pub const fn new(init: fn() -> T) -> Self {
+            Lazy { once: Once::new(), init, value: std::cell::UnsafeCell::new(None) }
+        }
+        pub fn get(&self) -> &T {
+            self.once.call_once(|| unsafe {
+                *self.value.get() = Some((self.init)());
+            });
+            unsafe { (*self.value.get()).as_ref().unwrap() }
+        }
+    }
+    impl<T> std::ops::Deref for Lazy<T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.get()
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+}
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let lv = match std::env::var("QERA_LOG").as_deref() {
+        Ok("debug") => 0,
+        Ok("warn") => 2,
+        Ok("quiet") => 3,
+        _ => 1,
+    };
+    LEVEL.store(lv, Ordering::Relaxed);
+    lv
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 >= level()
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_ordered() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+    }
+
+    #[test]
+    fn log_does_not_panic() {
+        log(Level::Info, format_args!("hello {}", 42));
+        crate::info!("macro path {}", 1);
+        crate::debug!("debug path");
+        crate::warn_!("warn path");
+    }
+}

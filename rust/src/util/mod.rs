@@ -1,0 +1,8 @@
+//! Foundation utilities built in-repo (the image is offline: no serde, no
+//! rand, no rayon — each hand-rolled here and unit-tested).
+
+pub mod rng;
+pub mod json;
+pub mod pool;
+pub mod logging;
+pub mod fsio;

@@ -1,0 +1,113 @@
+//! Scoped worker pool: `parallel_for` over independent jobs.
+//!
+//! The paper notes (App. A.7) that per-layer quantization is independent and
+//! parallelizable; the coordinator uses this pool for the per-layer solver
+//! jobs.  Built on `std::thread::scope` (no rayon offline).  Worker count
+//! defaults to the available parallelism and can be forced via
+//! `QERA_THREADS`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers: `QERA_THREADS` env or available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("QERA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f(i)` for all `i in 0..n` on a scoped pool and collect results in
+/// index order.  `f` may be called from worker threads concurrently.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not run"))
+        .collect()
+}
+
+/// Convenience: parallel map with default worker count.
+pub fn parallel_map_auto<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map(n, default_workers(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn all_jobs_run_once() {
+        use std::sync::atomic::AtomicU32;
+        let counter = AtomicU32::new(0);
+        let out = parallel_map(57, 3, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 57);
+        assert_eq!(out.len(), 57);
+    }
+
+    #[test]
+    fn heavier_work() {
+        let out = parallel_map(16, 8, |i| {
+            let mut s = 0u64;
+            for j in 0..10_000u64 {
+                s = s.wrapping_add(j.wrapping_mul(i as u64 + 1));
+            }
+            s
+        });
+        for (i, v) in out.iter().enumerate() {
+            let mut s = 0u64;
+            for j in 0..10_000u64 {
+                s = s.wrapping_add(j.wrapping_mul(i as u64 + 1));
+            }
+            assert_eq!(*v, s);
+        }
+    }
+}
