@@ -8,7 +8,12 @@
 //! ```bash
 //! cargo run --release --example ptq_pipeline            # nano, quick
 //! QERA_MODEL=small cargo run --release --example ptq_pipeline
+//! QERA_SVD=exact cargo run --release --example ptq_pipeline   # force exact SVD
 //! ```
+//!
+//! `QERA_SVD` selects the solver SVD backend (`auto` | `exact` |
+//! `randomized[:oversample[:power_iters]]`); the default `auto` takes the
+//! randomized fast path whenever `rank * 4 <= min(m, n)`.
 
 use qera::bench_util::Table;
 use qera::coordinator::{calibrate, quantize, PipelineConfig};
@@ -17,13 +22,18 @@ use qera::eval::{perplexity, win_rate};
 use qera::model::QuantCheckpoint;
 use qera::quant::QFormat;
 use qera::runtime::Registry;
-use qera::solver::Method;
+use qera::solver::{Method, SvdBackend};
 use qera::train::{pretrain, PretrainConfig};
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::var("QERA_MODEL").unwrap_or_else(|_| "nano".into());
     let steps: usize =
         std::env::var("QERA_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(2500);
+    let svd = match std::env::var("QERA_SVD") {
+        Ok(s) => SvdBackend::parse(&s)?,
+        Err(_) => SvdBackend::Auto,
+    };
+    println!("svd backend: {}", svd.name());
     let reg = Registry::open_default()?;
     let spec = reg.spec(&model)?.clone();
 
@@ -52,10 +62,14 @@ fn main() -> anyhow::Result<()> {
             "-".into(),
             format!("{:.2}", (spec.n_params() * 4) as f64 / 1e6),
         ]);
-        let wonly = quantize(&ckpt, &PipelineConfig::new(Method::WOnly, fmt, 0), Some(&calib))?;
+        let wonly = quantize(
+            &ckpt,
+            &PipelineConfig::new(Method::WOnly, fmt, 0).with_svd(svd),
+            Some(&calib),
+        )?;
         for method in Method::ptq_grid() {
             let r = if method == Method::WOnly { 0 } else { rank };
-            let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, r), Some(&calib))?;
+            let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, r).with_svd(svd), Some(&calib))?;
             let ppl = perplexity(&reg, &spec, &qm.merged, &val, 8)?;
             let wr = if method == Method::WOnly {
                 0.5

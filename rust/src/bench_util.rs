@@ -94,6 +94,36 @@ impl Table {
             println!("[csv] results/{slug}.csv");
         }
     }
+
+    /// JSON form `{title, headers, rows}` for machine-readable reports.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("headers", Json::Arr(self.headers.iter().cloned().map(Json::Str).collect())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().cloned().map(Json::Str).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Write a named collection of tables as one JSON report (e.g. the hotpath
+/// bench's `BENCH_solver.json` feeding the perf trajectory).
+pub fn emit_json_report(path: &str, tables: &[(&str, &Table)]) {
+    use crate::util::json::Json;
+    let obj = Json::obj(tables.iter().map(|(k, t)| (*k, t.to_json())).collect());
+    if let Err(e) = crate::util::fsio::write_atomic(path, obj.dump_pretty().as_bytes()) {
+        crate::warn_!("could not write {path}: {e}");
+    } else {
+        println!("[json] {path}");
+    }
 }
 
 /// `f64` formatting helpers used by every bench.
@@ -143,5 +173,18 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        use crate::util::json::Json;
+        let mut t = Table::new("Perf", &["name", "p50"]);
+        t.row(vec!["svd".into(), "1.25".into()]);
+        let j = t.to_json();
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.get("title").and_then(Json::as_str), Some("Perf"));
+        let rows = back.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_str(), Some("1.25"));
     }
 }

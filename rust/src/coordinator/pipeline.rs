@@ -7,7 +7,7 @@
 use super::calibrate::CalibResult;
 use crate::model::{Checkpoint, QuantCheckpoint};
 use crate::quant::QFormat;
-use crate::solver::{self, Method};
+use crate::solver::{self, Method, SvdBackend};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::pool;
@@ -22,11 +22,20 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// Worker threads for the solver jobs (0 = auto).
     pub workers: usize,
+    /// SVD backend for the per-layer solves.  `Auto` (the default) takes
+    /// the randomized fast path whenever `rank * 4 <= min(m, n)`.
+    pub svd: SvdBackend,
 }
 
 impl PipelineConfig {
     pub fn new(method: Method, fmt: QFormat, rank: usize) -> Self {
-        PipelineConfig { method, fmt, rank, seed: 42, workers: 0 }
+        PipelineConfig { method, fmt, rank, seed: 42, workers: 0, svd: SvdBackend::Auto }
+    }
+
+    /// Builder-style override of the SVD backend.
+    pub fn with_svd(mut self, svd: SvdBackend) -> Self {
+        self.svd = svd;
+        self
     }
 }
 
@@ -92,13 +101,14 @@ pub fn quantize(
             let site = &sites[i];
             let w = &ckpt.params[site.param_idx];
             let stats = calib.map(|c| c.for_site(site));
-            let out = solver::solve(
+            let out = solver::solve_with(
                 cfg.method,
                 w,
                 cfg.fmt,
                 cfg.rank,
                 stats,
                 cfg.seed ^ (i as u64) << 8,
+                cfg.svd,
             )?;
             Ok((site.name.clone(), out))
         });
@@ -123,6 +133,7 @@ pub fn quantize(
         ("format", Json::str(cfg.fmt.name())),
         ("rank", Json::Num(cfg.rank as f64)),
         ("seed", Json::Num(cfg.seed as f64)),
+        ("svd", Json::str(cfg.svd.name())),
     ]);
     let qckpt = QuantCheckpoint::from_solved(ckpt, cfg.fmt, &solved, meta);
     let merged = qckpt.materialize_merged();
@@ -224,5 +235,38 @@ mod tests {
         for (x, y) in serial.merged.iter().zip(&parallel.merged) {
             assert_eq!(x, y);
         }
+        // and under the explicit randomized SVD backend (the blocked
+        // threaded matmuls + seeded sketch must stay bit-deterministic)
+        let mut rcfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4)
+            .with_svd(SvdBackend::Randomized { oversample: 8, power_iters: 2 });
+        rcfg.workers = 1;
+        let rserial = quantize(&ckpt, &rcfg, None).unwrap();
+        rcfg.workers = 4;
+        let rparallel = quantize(&ckpt, &rcfg, None).unwrap();
+        for (x, y) in rserial.merged.iter().zip(&rparallel.merged) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn solver_wall_times_are_reported() {
+        let ckpt = nano_ckpt(6);
+        let qm = quantize(&ckpt, &PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4), None).unwrap();
+        assert!(qm.solve_ms_total > 0.0);
+        for d in &qm.diags {
+            assert!(d.wall_ms > 0.0, "{} reported zero wall time", d.name);
+        }
+    }
+
+    #[test]
+    fn svd_backend_recorded_in_meta() {
+        let ckpt = nano_ckpt(7);
+        let cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4)
+            .with_svd(SvdBackend::Randomized { oversample: 4, power_iters: 1 });
+        let qm = quantize(&ckpt, &cfg, None).unwrap();
+        assert_eq!(
+            qm.ckpt.meta.get("svd").and_then(crate::util::json::Json::as_str),
+            Some("randomized:4:1")
+        );
     }
 }

@@ -286,6 +286,122 @@ pub fn eigh(a: &Mat64) -> EighResult {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Truncated top-k path: blocked subspace iteration + Rayleigh–Ritz.  The
+// rank-aware solver fast path ([`super::svd::svd_randomized`]) only ever
+// needs the top-k eigenpairs of a (PSD) Gram matrix, which costs O(n²·k·it)
+// instead of the full O(n³) decomposition.
+// ---------------------------------------------------------------------------
+
+/// When `k` is this fraction of `n` (or `n` is small), a truncated solve
+/// stops paying — take the dense decomposition and slice it.
+const TOPK_DENSE_MIN_N: usize = 32;
+const SUBSPACE_MAX_ITERS: usize = 48;
+const SUBSPACE_OVERSAMPLE: usize = 8;
+
+/// Top-`k` eigenpairs of a symmetric matrix, eigenvalues **descending**
+/// (unlike [`eigh`], which returns the full ascending spectrum): `w[0]` is
+/// the largest eigenvalue and `v` is `n×k` with matching columns.
+///
+/// Intended for PSD matrices (Gram/autocorrelation): the subspace iteration
+/// converges to the largest eigenvalues by magnitude.  Deterministic (the
+/// start block is seeded from the shape).  Falls back to the dense
+/// decomposition when `k` is a large fraction of `n` or when the iteration
+/// fails its residual check, so results are always trustworthy.
+pub fn eigh_topk(a: &Mat64, k: usize) -> EighResult {
+    assert_eq!(a.r, a.c, "eigh_topk needs a square matrix");
+    let n = a.r;
+    let k = k.min(n);
+    if k == 0 {
+        return EighResult { w: vec![], v: Mat64::zeros(n, 0) };
+    }
+    if n <= TOPK_DENSE_MIN_N || k * 4 >= n {
+        return dense_topk(a, k);
+    }
+    subspace_topk(a, k).unwrap_or_else(|| dense_topk(a, k))
+}
+
+/// Dense decomposition sliced to the top-k pairs (descending).
+fn dense_topk(a: &Mat64, k: usize) -> EighResult {
+    let e = eigh(a);
+    let n = a.r;
+    let mut w = Vec::with_capacity(k);
+    let mut v = Mat64::zeros(n, k);
+    for j in 0..k {
+        let src = n - 1 - j;
+        w.push(e.w[src]);
+        for i in 0..n {
+            v.set(i, j, e.v.at(i, src));
+        }
+    }
+    EighResult { w, v }
+}
+
+/// Blocked subspace iteration; `None` when the residual check fails.
+fn subspace_topk(a: &Mat64, k: usize) -> Option<EighResult> {
+    let n = a.r;
+    let l = (k + SUBSPACE_OVERSAMPLE).min(n);
+    let mut rng = crate::util::rng::Rng::new(
+        0xE16E_702C ^ ((n as u64) << 20) ^ ((k as u64) << 4),
+    );
+    let mut q = Mat64::from_vec(n, l, (0..n * l).map(|_| rng.normal()).collect());
+    q.orthonormalize_cols();
+    let mut prev = vec![f64::INFINITY; k];
+    for iter in 0..SUBSPACE_MAX_ITERS {
+        let z = a.matmul(&q);
+        // Rayleigh quotients diag(Qᵀ A Q) before re-orthonormalizing
+        let mut ritz = vec![0.0f64; l];
+        for j in 0..l {
+            let mut d = 0.0;
+            for i in 0..n {
+                d += q.a[i * l + j] * z.a[i * l + j];
+            }
+            ritz[j] = d;
+        }
+        q = z;
+        q.orthonormalize_cols();
+        ritz.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let scale = ritz[0].abs().max(f64::MIN_POSITIVE);
+        let done = ritz[..k]
+            .iter()
+            .zip(&prev)
+            .all(|(r, p)| (r - p).abs() <= 1e-12 * scale);
+        prev.copy_from_slice(&ritz[..k]);
+        if done && iter > 0 {
+            break;
+        }
+    }
+    // Rayleigh–Ritz on the converged basis
+    let az = a.matmul(&q); // [n, l]
+    let mut t = q.matmul_tn(&az); // [l, l]
+    t.symmetrize();
+    let et = eigh(&t); // ascending
+    let mut w = Vec::with_capacity(k);
+    let mut y = Mat64::zeros(l, k);
+    for j in 0..k {
+        let src = l - 1 - j;
+        w.push(et.w[src]);
+        for i in 0..l {
+            y.set(i, j, et.v.at(i, src));
+        }
+    }
+    let v = q.matmul(&y); // [n, k]
+    // accept only if every eigenpair satisfies A v ≈ w v
+    let av = a.matmul(&v);
+    let wmax = w[0].abs().max(f64::MIN_POSITIVE);
+    for j in 0..k {
+        let mut r2 = 0.0f64;
+        for i in 0..n {
+            let d = av.a[i * k + j] - w[j] * v.a[i * k + j];
+            r2 += d * d;
+        }
+        if r2.sqrt() > 1e-7 * wmax {
+            return None;
+        }
+    }
+    Some(EighResult { w, v })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -443,6 +559,101 @@ mod tests {
         let r = eigh(&a);
         for &w in &r.w {
             assert!((w - 1.0).abs() < 1e-12);
+        }
+    }
+
+    /// PSD matrix with a controlled decaying spectrum: Q diag(d) Qᵀ.
+    fn decaying_psd(n: usize, decay: f64, seed: u64) -> Mat64 {
+        let mut rng = Rng::new(seed);
+        let mut q = Mat64::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+        q.orthonormalize_cols();
+        let mut qd = q.clone();
+        for j in 0..n {
+            let d = decay.powi(j as i32);
+            for i in 0..n {
+                qd.a[i * n + j] *= d;
+            }
+        }
+        qd.matmul_nt(&q)
+    }
+
+    #[test]
+    fn topk_dense_path_matches_full() {
+        // n small -> dense slice path
+        let a = rand_psd(16, 21);
+        let full = eigh(&a);
+        let top = eigh_topk(&a, 5);
+        assert_eq!(top.w.len(), 5);
+        assert_eq!((top.v.r, top.v.c), (16, 5));
+        for j in 0..5 {
+            let want = full.w[15 - j];
+            assert!((top.w[j] - want).abs() < 1e-10, "j={j}: {} vs {want}", top.w[j]);
+        }
+        // descending
+        for j in 1..5 {
+            assert!(top.w[j] <= top.w[j - 1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn topk_subspace_matches_full_on_decaying_spectrum() {
+        let a = decaying_psd(64, 0.8, 22);
+        let k = 6; // 6*4 < 64 and n > 32 -> subspace branch eligible
+        let top = eigh_topk(&a, k);
+        let full = eigh(&a);
+        for j in 0..k {
+            let want = full.w[63 - j];
+            assert!(
+                (top.w[j] - want).abs() < 1e-8 * (1.0 + want.abs()),
+                "j={j}: {} vs {want}",
+                top.w[j]
+            );
+        }
+        // eigenpair residual + orthonormal columns
+        let av = a.matmul(&top.v);
+        for j in 0..k {
+            let mut r2 = 0.0;
+            for i in 0..64 {
+                let d = av.at(i, j) - top.w[j] * top.v.at(i, j);
+                r2 += d * d;
+            }
+            assert!(r2.sqrt() < 1e-7 * top.w[0].abs(), "residual j={j}: {}", r2.sqrt());
+        }
+        let vtv = top.v.matmul_tn(&top.v);
+        for i in 0..k {
+            for j in 0..k {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < 1e-8, "VᵀV ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_deterministic() {
+        let a = decaying_psd(48, 0.7, 23);
+        let t1 = eigh_topk(&a, 4);
+        let t2 = eigh_topk(&a, 4);
+        assert_eq!(t1.w, t2.w);
+        assert_eq!(t1.v, t2.v);
+    }
+
+    #[test]
+    fn topk_edge_cases() {
+        let a = rand_psd(10, 24);
+        let empty = eigh_topk(&a, 0);
+        assert!(empty.w.is_empty());
+        assert_eq!((empty.v.r, empty.v.c), (10, 0));
+        // k >= n clamps to the full (reversed) spectrum
+        let all = eigh_topk(&a, 32);
+        let full = eigh(&a);
+        assert_eq!(all.w.len(), 10);
+        for j in 0..10 {
+            assert!((all.w[j] - full.w[9 - j]).abs() < 1e-10);
+        }
+        // zero matrix
+        let z = eigh_topk(&Mat64::zeros(40, 40), 3);
+        for &w in &z.w {
+            assert!(w.abs() < 1e-12);
         }
     }
 }

@@ -1,12 +1,77 @@
-//! Dense f64 matrix with cache-blocked multiply — the solver workhorse.
+//! Dense f64 matrix — the solver workhorse.
+//!
+//! The multiply kernels are cache-blocked (k×j tiles of `B` sized to stay
+//! L2-resident, with 2 KB row slices streamed through L1) and optionally
+//! multi-threaded over contiguous output-row panels via
+//! [`crate::util::pool::parallel_chunks_mut`].  Threading only partitions
+//! *output rows*; the per-element accumulation order (ascending k) is
+//! identical for every worker count and identical to the naive triple loop,
+//! so results are bit-exact regardless of `QERA_THREADS` — the pipeline's
+//! `parallel_matches_serial` test and the quantized-checkpoint round-trips
+//! rely on this.  Nested parallelism is suppressed: a multiply running
+//! inside a pool worker (the per-layer solver jobs) stays single-threaded
+//! ([`pool::in_pool_worker`]).
 
 use crate::tensor::Tensor;
+use crate::util::pool;
+
+/// k×j tile of `B`: 64 × 256 f64 ≈ 128 KB per tile.
+const BLOCK_K: usize = 64;
+const BLOCK_J: usize = 256;
+/// Minimum m·k·n multiply volume before fanning out to threads.
+const PAR_MIN_WORK: usize = 1 << 21;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat64 {
     pub r: usize,
     pub c: usize,
     pub a: Vec<f64>,
+}
+
+/// Worker count for a multiply of volume `work` with `m` output rows:
+/// serial when small or when already inside a pool worker.
+fn auto_workers(m: usize, work: usize) -> usize {
+    if work < PAR_MIN_WORK || pool::in_pool_worker() {
+        1
+    } else {
+        pool::default_workers().max(1).min(m.max(1))
+    }
+}
+
+/// Blocked kernel for one output-row panel: `out[i0..i1, :] += A[i0..i1, :] B`
+/// with `A` row-major of row stride `lda` and `out` holding only the panel
+/// rows.  Per output element the k-accumulation runs strictly ascending, so
+/// the result is independent of the panel split and of the tile sizes.
+fn mm_nn_panel(
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    out: &mut [f64],
+) {
+    for k0 in (0..k).step_by(BLOCK_K) {
+        let k1 = (k0 + BLOCK_K).min(k);
+        for j0 in (0..n).step_by(BLOCK_J) {
+            let j1 = (j0 + BLOCK_J).min(n);
+            for i in i0..i1 {
+                let arow = &a[i * lda..i * lda + k];
+                let orow = &mut out[(i - i0) * n + j0..(i - i0) * n + j1];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl Mat64 {
@@ -61,75 +126,114 @@ impl Mat64 {
         &self.a[i * self.c..(i + 1) * self.c]
     }
 
+    /// Tiled transpose (32×32 tiles keep both access patterns cache-local).
     pub fn transpose(&self) -> Mat64 {
+        const TILE: usize = 32;
         let mut out = Mat64::zeros(self.c, self.r);
-        for i in 0..self.r {
-            for j in 0..self.c {
-                out.a[j * self.r + i] = self.a[i * self.c + j];
+        for i0 in (0..self.r).step_by(TILE) {
+            let i1 = (i0 + TILE).min(self.r);
+            for j0 in (0..self.c).step_by(TILE) {
+                let j1 = (j0 + TILE).min(self.c);
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        out.a[j * self.r + i] = self.a[i * self.c + j];
+                    }
+                }
             }
         }
         out
     }
 
-    /// self [m,k] x other [k,n].  i-k-j order with row streaming.
+    /// self [m,k] x other [k,n], cache-blocked, auto-threaded when large.
     pub fn matmul(&self, other: &Mat64) -> Mat64 {
+        self.matmul_workers(other, 0)
+    }
+
+    /// [`Mat64::matmul`] with an explicit worker count (`0` = auto).
+    /// Bit-identical for every worker count.
+    pub fn matmul_workers(&self, other: &Mat64, workers: usize) -> Mat64 {
         assert_eq!(self.c, other.r, "matmul dims");
         let (m, k, n) = (self.r, self.c, other.c);
         let mut out = vec![0.0f64; m * n];
-        for i in 0..m {
-            let arow = &self.a[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &other.a[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
+        let w = if workers == 0 {
+            auto_workers(m, m.saturating_mul(k).saturating_mul(n))
+        } else {
+            workers.max(1).min(m.max(1))
+        };
+        let rows_per = (m + w - 1) / w.max(1);
+        pool::parallel_chunks_mut(&mut out, rows_per * n, w, |ci, chunk| {
+            let i0 = ci * rows_per;
+            let i1 = i0 + chunk.len() / n.max(1);
+            mm_nn_panel(&self.a, k, &other.a, k, n, i0, i1, chunk);
+        });
         Mat64 { r: m, c: n, a: out }
     }
 
     /// selfᵀ x other:  [k,m]ᵀ... i.e. self is [k,m], other [k,n] -> [m,n].
     pub fn matmul_tn(&self, other: &Mat64) -> Mat64 {
+        self.matmul_tn_workers(other, 0)
+    }
+
+    /// [`Mat64::matmul_tn`] with an explicit worker count (`0` = auto).
+    /// Each panel packs its slice of `selfᵀ` contiguously once, then reuses
+    /// the blocked NN kernel.
+    pub fn matmul_tn_workers(&self, other: &Mat64, workers: usize) -> Mat64 {
         assert_eq!(self.r, other.r, "matmul_tn dims");
         let (k, m, n) = (self.r, self.c, other.c);
         let mut out = vec![0.0f64; m * n];
-        for kk in 0..k {
-            let arow = &self.a[kk * m..(kk + 1) * m];
-            let brow = &other.a[kk * n..(kk + 1) * n];
-            for i in 0..m {
-                let av = arow[i];
-                if av == 0.0 {
-                    continue;
-                }
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
+        let w = if workers == 0 {
+            auto_workers(m, m.saturating_mul(k).saturating_mul(n))
+        } else {
+            workers.max(1).min(m.max(1))
+        };
+        let rows_per = (m + w - 1) / w.max(1);
+        pool::parallel_chunks_mut(&mut out, rows_per * n, w, |ci, chunk| {
+            let i0 = ci * rows_per;
+            let rows = chunk.len() / n.max(1);
+            let mut apack = vec![0.0f64; rows * k];
+            for kk in 0..k {
+                let arow = &self.a[kk * m + i0..kk * m + i0 + rows];
+                for (r, &v) in arow.iter().enumerate() {
+                    apack[r * k + kk] = v;
                 }
             }
-        }
+            mm_nn_panel(&apack, k, &other.a, k, n, 0, rows, chunk);
+        });
         Mat64 { r: m, c: n, a: out }
     }
 
     /// self x otherᵀ: self [m,k], other [n,k] -> [m,n] (dot products of rows).
     pub fn matmul_nt(&self, other: &Mat64) -> Mat64 {
+        self.matmul_nt_workers(other, 0)
+    }
+
+    /// [`Mat64::matmul_nt`] with an explicit worker count (`0` = auto).
+    pub fn matmul_nt_workers(&self, other: &Mat64, workers: usize) -> Mat64 {
         assert_eq!(self.c, other.c, "matmul_nt dims");
         let (m, k, n) = (self.r, self.c, other.r);
         let mut out = vec![0.0f64; m * n];
-        for i in 0..m {
-            let arow = &self.a[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &other.a[j * k..(j + 1) * k];
-                let mut s = 0.0;
-                for kk in 0..k {
-                    s += arow[kk] * brow[kk];
+        let w = if workers == 0 {
+            auto_workers(m, m.saturating_mul(k).saturating_mul(n))
+        } else {
+            workers.max(1).min(m.max(1))
+        };
+        let rows_per = (m + w - 1) / w.max(1);
+        pool::parallel_chunks_mut(&mut out, rows_per * n, w, |ci, chunk| {
+            let i0 = ci * rows_per;
+            let rows = chunk.len() / n.max(1);
+            for r in 0..rows {
+                let arow = &self.a[(i0 + r) * k..(i0 + r + 1) * k];
+                let orow = &mut chunk[r * n..(r + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = &other.a[j * k..(j + 1) * k];
+                    let mut s = 0.0;
+                    for (x, y) in arow.iter().zip(brow) {
+                        s += x * y;
+                    }
+                    *o = s;
                 }
-                out[i * n + j] = s;
             }
-        }
+        });
         Mat64 { r: m, c: n, a: out }
     }
 
@@ -161,8 +265,27 @@ impl Mat64 {
         out
     }
 
+    /// Overflow/underflow-safe Frobenius norm (LAPACK `dlassq`-style scaled
+    /// sum of squares): finite for entries near `f64::MAX` and non-zero for
+    /// entries far below `sqrt(f64::MIN_POSITIVE)`.
     pub fn frob_norm(&self) -> f64 {
-        self.a.iter().map(|x| x * x).sum::<f64>().sqrt()
+        let mut scale = 0.0f64;
+        let mut ssq = 1.0f64;
+        for &x in &self.a {
+            if x == 0.0 {
+                continue;
+            }
+            let ax = x.abs();
+            if scale < ax {
+                let r = scale / ax;
+                ssq = 1.0 + ssq * r * r;
+                scale = ax;
+            } else {
+                let r = ax / scale;
+                ssq += r * r;
+            }
+        }
+        scale * ssq.sqrt()
     }
 
     pub fn max_abs(&self) -> f64 {
@@ -195,6 +318,53 @@ impl Mat64 {
         }
     }
 
+    /// Orthonormalize the columns in place (modified Gram–Schmidt with one
+    /// re-orthogonalization pass — the randomized-SVD range finder's QR
+    /// step).  Numerically-dead columns are zeroed, so `selfᵀ self` equals
+    /// the identity up to dropped null directions.
+    pub fn orthonormalize_cols(&mut self) {
+        let (m, l) = (self.r, self.c);
+        for j in 0..l {
+            // pre-projection norm: the dead-column test must be *relative*
+            // (a dependent column leaves ~1e-16·‖col‖ of rounding noise
+            // after projection, never an absolute-tiny residual)
+            let mut orig2 = 0.0f64;
+            for i in 0..m {
+                orig2 += self.a[i * l + j] * self.a[i * l + j];
+            }
+            for _pass in 0..2 {
+                for p in 0..j {
+                    let mut dot = 0.0f64;
+                    for i in 0..m {
+                        dot += self.a[i * l + p] * self.a[i * l + j];
+                    }
+                    if dot != 0.0 {
+                        for i in 0..m {
+                            let sub = dot * self.a[i * l + p];
+                            self.a[i * l + j] -= sub;
+                        }
+                    }
+                }
+            }
+            let mut nrm2 = 0.0f64;
+            for i in 0..m {
+                nrm2 += self.a[i * l + j] * self.a[i * l + j];
+            }
+            let nrm = nrm2.sqrt();
+            let floor = 1e-12 * orig2.sqrt().max(f64::MIN_POSITIVE);
+            if nrm > floor {
+                let inv = 1.0 / nrm;
+                for i in 0..m {
+                    self.a[i * l + j] *= inv;
+                }
+            } else {
+                for i in 0..m {
+                    self.a[i * l + j] = 0.0;
+                }
+            }
+        }
+    }
+
     /// First k columns.
     pub fn cols_head(&self, k: usize) -> Mat64 {
         assert!(k <= self.c);
@@ -222,6 +392,25 @@ mod tests {
         Mat64::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
     }
 
+    /// Naive i-k-j reference with the same ascending-k accumulation order
+    /// as the blocked kernel — results must match bit-for-bit.
+    fn naive_matmul(a: &Mat64, b: &Mat64) -> Mat64 {
+        let (m, k, n) = (a.r, a.c, b.c);
+        let mut out = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += av * b.a[kk * n + j];
+                }
+            }
+        }
+        Mat64 { r: m, c: n, a: out }
+    }
+
     #[test]
     fn matmul_identity() {
         let a = randm(4, 4, 0);
@@ -242,6 +431,52 @@ mod tests {
         for i in 0..c0.a.len() {
             assert!((c0.a[i] - c1.a[i]).abs() < 1e-12);
             assert!((c0.a[i] - c2.a[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitexact_across_block_boundaries() {
+        // sizes straddle BLOCK_K/BLOCK_J and panel splits
+        for (m, k, n, seed) in [(70, 131, 93, 3), (1, 300, 5, 4), (65, 64, 257, 5)] {
+            let a = randm(m, k, seed);
+            let b = randm(k, n, seed + 100);
+            let want = naive_matmul(&a, &b);
+            assert_eq!(a.matmul(&b), want, "{m}x{k}x{n}");
+            assert_eq!(a.matmul_workers(&b, 3), want, "{m}x{k}x{n} w=3");
+        }
+    }
+
+    #[test]
+    fn workers_are_bit_identical() {
+        let a = randm(70, 90, 6);
+        let b = randm(90, 83, 7);
+        let serial = a.matmul_workers(&b, 1);
+        for w in [2, 3, 4, 8] {
+            assert_eq!(serial, a.matmul_workers(&b, w), "matmul w={w}");
+        }
+        let at = a.transpose();
+        let tn1 = at.matmul_tn_workers(&b, 1);
+        for w in [2, 4] {
+            assert_eq!(tn1, at.matmul_tn_workers(&b, w), "tn w={w}");
+        }
+        let bt = b.transpose();
+        let nt1 = a.matmul_nt_workers(&bt, 1);
+        for w in [2, 4] {
+            assert_eq!(nt1, a.matmul_nt_workers(&bt, w), "nt w={w}");
+        }
+    }
+
+    #[test]
+    fn large_variants_agree_with_nn() {
+        // cross the k-tile boundary in tn/nt too
+        let a = randm(40, 150, 8);
+        let b = randm(150, 37, 9);
+        let c0 = a.matmul(&b);
+        let c1 = a.transpose().matmul_tn(&b);
+        let c2 = a.matmul_nt(&b.transpose());
+        for i in 0..c0.a.len() {
+            assert!((c0.a[i] - c1.a[i]).abs() < 1e-10);
+            assert!((c0.a[i] - c2.a[i]).abs() < 1e-10);
         }
     }
 
@@ -277,6 +512,15 @@ mod tests {
     }
 
     #[test]
+    fn transpose_involution_odd_sizes() {
+        let a = randm(33, 65, 10);
+        let t = a.transpose();
+        assert_eq!((t.r, t.c), (65, 33));
+        assert_eq!(t.at(64, 32), a.at(32, 64));
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
     fn heads() {
         let a = randm(4, 6, 8);
         let ch = a.cols_head(2);
@@ -299,5 +543,56 @@ mod tests {
         let m = Mat64::from_vec(1, 2, vec![3.0, -4.0]);
         assert!((m.frob_norm() - 5.0).abs() < 1e-12);
         assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn frob_norm_survives_extreme_magnitudes() {
+        // entries whose squares overflow f64 (naive sum-of-squares -> inf)
+        let big = f64::MAX.sqrt() * 8.0;
+        let m = Mat64::from_vec(1, 2, vec![big, -big]);
+        let got = m.frob_norm();
+        assert!(got.is_finite());
+        assert!((got / big - std::f64::consts::SQRT_2).abs() < 1e-12, "{got}");
+        // entries whose squares underflow to zero (naive -> 0)
+        let tiny = 1e-200f64;
+        let m2 = Mat64::from_vec(2, 1, vec![tiny, tiny]);
+        let got2 = m2.frob_norm();
+        assert!(got2 > 0.0);
+        assert!((got2 / tiny - std::f64::consts::SQRT_2).abs() < 1e-12, "{got2}");
+        // zero matrix still reports exactly zero
+        assert_eq!(Mat64::zeros(3, 3).frob_norm(), 0.0);
+    }
+
+    #[test]
+    fn orthonormalize_cols_gives_orthonormal_basis() {
+        let mut q = randm(20, 6, 11);
+        q.orthonormalize_cols();
+        let qtq = q.matmul_tn(&q);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at(i, j) - want).abs() < 1e-10, "({i},{j}) {}", qtq.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormalize_cols_zeroes_dependent_columns() {
+        // column 2 duplicates column 0 -> must be dropped to zero
+        let mut q = Mat64::zeros(5, 3);
+        for i in 0..5 {
+            let v = (i + 1) as f64;
+            q.set(i, 0, v);
+            q.set(i, 1, (i as f64).sin() + 2.0);
+            q.set(i, 2, v);
+        }
+        q.orthonormalize_cols();
+        for i in 0..5 {
+            assert_eq!(q.at(i, 2), 0.0, "row {i}");
+        }
+        let qtq = q.matmul_tn(&q);
+        assert!((qtq.at(0, 0) - 1.0).abs() < 1e-12);
+        assert!((qtq.at(1, 1) - 1.0).abs() < 1e-12);
+        assert!(qtq.at(0, 1).abs() < 1e-12);
     }
 }

@@ -4,11 +4,15 @@
 //! root with a blocked Schur algorithm on CPU.  `R_XX` is symmetric PSD, so
 //! the Schur form *is* the spectral decomposition; this module provides:
 //!
-//! * [`mat::Mat64`] — dense f64 matrices with blocked matmul;
+//! * [`mat::Mat64`] — dense f64 matrices with cache-blocked, optionally
+//!   multi-threaded multiply kernels (bit-exact for any worker count);
 //! * [`eigh`] — symmetric eigendecomposition (Householder tridiagonalization
 //!   + implicit-shift QL; a cyclic-Jacobi implementation cross-checks it in
-//!   tests and serves as the robustness fallback);
-//! * [`svd`] — thin SVD via the Gram-matrix trick (work on the smaller side);
+//!   tests and serves as the robustness fallback), plus [`eigh_topk`] — a
+//!   truncated top-k path via blocked subspace iteration;
+//! * [`svd`] — thin SVD via the Gram-matrix trick (work on the smaller
+//!   side), plus [`svd_randomized`] — the Halko rank-k sketch behind the
+//!   solvers' `SvdBackend::Randomized` fast path;
 //! * [`psd`] — PSD matrix square root / inverse square root with eigenvalue
 //!   clamping (Remark 1's diagonal perturbation).
 
@@ -17,7 +21,7 @@ pub mod eigh;
 pub mod svd;
 pub mod psd;
 
-pub use eigh::{eigh, eigh_jacobi, EighResult};
+pub use eigh::{eigh, eigh_jacobi, eigh_topk, EighResult};
 pub use mat::Mat64;
 pub use psd::{psd_inv_sqrt, psd_sqrt, psd_sqrt_pair};
-pub use svd::{svd_thin, SvdResult};
+pub use svd::{svd_randomized, svd_thin, SvdResult};

@@ -1,14 +1,22 @@
-//! Thin SVD via the Gram-matrix trick.
+//! Thin + randomized SVD.
 //!
 //! Every solver in this repo needs the *truncated* SVD of an error matrix
-//! `E` (m×n).  We eigendecompose the smaller Gram matrix (`E Eᵀ` if m ≤ n,
-//! else `Eᵀ E`) and recover the other factor by projection — O(min(m,n)³)
-//! instead of a full bidiagonal SVD, in f64 (the Gram squaring costs
-//! ~half the significand, plenty for rank-k reconstruction of quantization
-//! errors; cross-checked against reconstruction in tests).
+//! `E` (m×n).  Two paths:
+//!
+//! * [`svd_thin`] — exact, via the Gram-matrix trick: eigendecompose the
+//!   smaller Gram matrix (`E Eᵀ` if m ≤ n, else `Eᵀ E`) and recover the
+//!   other factor by projection — O(min(m,n)³) instead of a full
+//!   bidiagonal SVD, in f64 (the Gram squaring costs ~half the
+//!   significand, plenty for rank-k reconstruction of quantization errors;
+//!   cross-checked against reconstruction in tests).
+//! * [`svd_randomized`] — Halko-style rank-k sketch (Gaussian range finder
+//!   → MGS orthonormalization → small-Gram eigensolve), O(mnk) for the
+//!   O(mnk)-sized answer the solvers actually consume.  Deterministic and
+//!   cross-checked against [`svd_thin`] in tests.
 
-use super::eigh::eigh;
+use super::eigh::{eigh, eigh_topk};
 use super::mat::Mat64;
+use crate::util::rng::Rng;
 
 /// `a = u * diag(s) * vt`, singular values descending.
 /// u: [m, r], s: [r], vt: [r, n] with r = min(m, n).
@@ -45,6 +53,16 @@ impl SvdResult {
         }
         (a, b)
     }
+
+    /// First-k truncation (no-op when `k >= self.s.len()`).
+    pub fn truncated(&self, k: usize) -> SvdResult {
+        let k = k.min(self.s.len());
+        SvdResult {
+            u: self.u.cols_head(k),
+            s: self.s[..k].to_vec(),
+            vt: self.vt.rows_head(k),
+        }
+    }
 }
 
 /// Thin SVD of an arbitrary dense matrix.
@@ -72,6 +90,51 @@ pub fn svd_thin(a: &Mat64) -> SvdResult {
         normalize_cols(&mut u, &s);
         SvdResult { u, s, vt: v.transpose() }
     }
+}
+
+/// Halko-style randomized truncated SVD: top-`k` singular triples of `a`.
+///
+/// Range finder: `Y = A Ω` with a Gaussian sketch `Ω [n, k+oversample]`,
+/// orthonormalized by modified Gram–Schmidt; `power_iters` rounds of
+/// `Y ← A (Aᵀ Y)` (re-orthonormalized each application) sharpen the
+/// captured spectrum for slowly-decaying inputs.  The small problem
+/// `B = Qᵀ A` is then solved through its `l×l` Gram matrix with the
+/// truncated eigensolver ([`eigh_topk`]).
+///
+/// Deterministic: the sketch is seeded from the shape, so repeated calls
+/// agree bit-for-bit (the pipeline's reproducibility tests rely on this).
+/// Falls back to the exact [`svd_thin`] (truncated) when
+/// `k + oversample >= min(m, n)`, where a sketch cannot win.
+pub fn svd_randomized(a: &Mat64, k: usize, oversample: usize, power_iters: usize) -> SvdResult {
+    let (m, n) = (a.r, a.c);
+    let minmn = m.min(n);
+    let k = k.min(minmn);
+    if k == 0 {
+        return SvdResult { u: Mat64::zeros(m, 0), s: vec![], vt: Mat64::zeros(0, n) };
+    }
+    let l = k + oversample.max(1);
+    if l >= minmn {
+        return svd_thin(a).truncated(k);
+    }
+    let mut rng = Rng::new(0x51D0_5EED ^ ((m as u64) << 32) ^ ((n as u64) << 8) ^ l as u64);
+    let omega = Mat64::from_vec(n, l, (0..n * l).map(|_| rng.normal()).collect());
+    let mut q = a.matmul(&omega); // [m, l]
+    q.orthonormalize_cols();
+    for _ in 0..power_iters {
+        let mut z = a.matmul_tn(&q); // Aᵀ Q  [n, l]
+        z.orthonormalize_cols();
+        q = a.matmul(&z); // [m, l]
+        q.orthonormalize_cols();
+    }
+    let b = q.matmul_tn(a); // Qᵀ A  [l, n]
+    let mut g = b.matmul_nt(&b); // B Bᵀ  [l, l]
+    g.symmetrize();
+    let e = eigh_topk(&g, k); // descending
+    let s: Vec<f64> = e.w.iter().map(|&w| w.max(0.0).sqrt()).collect();
+    let mut vt = e.v.matmul_tn(&b); // Ubᵀ B  [k, n]
+    normalize_rows(&mut vt, &s);
+    let u = q.matmul(&e.v); // [m, k]
+    SvdResult { u, s, vt }
 }
 
 /// Take the top-r eigenpairs (ascending input), σ = sqrt(clamped λ).
@@ -246,5 +309,125 @@ mod tests {
         let sum: f64 = r.s.iter().map(|s| s * s).sum();
         let frob2 = a.frob_norm().powi(2);
         assert!((sum - frob2).abs() < 1e-8 * frob2);
+    }
+
+    /// m×n matrix with singular values `decay^i` (full rank, random bases).
+    fn decaying(m: usize, n: usize, decay: f64, seed: u64) -> Mat64 {
+        let base = randm(m, n, seed);
+        let r = svd_thin(&base);
+        let shaped: Vec<f64> = (0..r.s.len()).map(|i| decay.powi(i as i32)).collect();
+        let rr = SvdResult { u: r.u.clone(), s: shaped, vt: r.vt.clone() };
+        rr.reconstruct_k(rr.s.len())
+    }
+
+    #[test]
+    fn randomized_matches_thin_on_fast_decay() {
+        // steep spectrum: the sketch captures the top-k essentially exactly
+        let a = decaying(60, 80, 0.5, 20);
+        let k = 6;
+        let exact = svd_thin(&a);
+        let rand = svd_randomized(&a, k, 8, 2);
+        assert_eq!(rand.s.len(), k);
+        for i in 0..k {
+            assert!(
+                (rand.s[i] - exact.s[i]).abs() < 1e-8 * (1.0 + exact.s[i]),
+                "σ[{i}]: {} vs {}",
+                rand.s[i],
+                exact.s[i]
+            );
+        }
+        let err_rand = rand.reconstruct_k(k).sub(&a).frob_norm();
+        let err_exact = exact.reconstruct_k(k).sub(&a).frob_norm();
+        assert!(err_rand <= err_exact * (1.0 + 1e-8) + 1e-9, "{err_rand} vs {err_exact}");
+    }
+
+    #[test]
+    fn randomized_near_optimal_on_slow_decay() {
+        // shallow spectrum: reconstruction must stay within 2% of optimal
+        let a = decaying(64, 96, 0.93, 21);
+        let k = 8;
+        let err_rand = svd_randomized(&a, k, 8, 2).reconstruct_k(k).sub(&a).frob_norm();
+        let err_exact = svd_thin(&a).reconstruct_k(k).sub(&a).frob_norm();
+        assert!(err_rand <= err_exact * 1.02, "{err_rand} vs {err_exact}");
+    }
+
+    #[test]
+    fn randomized_falls_back_to_exact_when_sketch_cannot_win() {
+        let a = randm(10, 8, 22);
+        // k + oversample >= min(m, n) -> identical to the truncated thin SVD
+        let rand = svd_randomized(&a, 6, 8, 2);
+        let want = svd_thin(&a).truncated(6);
+        assert_eq!(rand.s, want.s);
+        assert_eq!(rand.u, want.u);
+        assert_eq!(rand.vt, want.vt);
+    }
+
+    #[test]
+    fn randomized_deterministic() {
+        let a = randm(48, 64, 23);
+        let r1 = svd_randomized(&a, 5, 8, 2);
+        let r2 = svd_randomized(&a, 5, 8, 2);
+        assert_eq!(r1.s, r2.s);
+        assert_eq!(r1.u, r2.u);
+        assert_eq!(r1.vt, r2.vt);
+    }
+
+    #[test]
+    fn randomized_orthonormal_u() {
+        let a = decaying(50, 70, 0.7, 24);
+        let r = svd_randomized(&a, 6, 8, 2);
+        let utu = r.u.matmul_tn(&r.u);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(i, j) - want).abs() < 1e-8, "UᵀU ({i},{j})");
+            }
+        }
+        // descending non-negative singular values
+        for i in 0..6 {
+            assert!(r.s[i] >= 0.0);
+            if i > 0 {
+                assert!(r.s[i] <= r.s[i - 1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_recovers_low_rank_exactly() {
+        // rank-3 input, k=5: trailing σ ≈ 0 and the reconstruction is exact
+        let u = randm(40, 3, 25);
+        let v = randm(3, 50, 26);
+        let a = u.matmul(&v);
+        let r = svd_randomized(&a, 5, 8, 2);
+        assert!(r.s[3] < 1e-8 * r.s[0], "σ3 = {}", r.s[3]);
+        assert!(r.s[4] < 1e-8 * r.s[0], "σ4 = {}", r.s[4]);
+        let rec = r.reconstruct_k(5);
+        assert!(rec.sub(&a).frob_norm() < 1e-8 * (1.0 + a.frob_norm()));
+    }
+
+    #[test]
+    fn randomized_zero_matrix_and_k0() {
+        let z = Mat64::zeros(40, 50);
+        let r = svd_randomized(&z, 4, 8, 2);
+        for &s in &r.s {
+            assert!(s.abs() < 1e-12);
+        }
+        assert!(r.reconstruct_k(4).frob_norm() < 1e-12);
+        let r0 = svd_randomized(&randm(20, 30, 27), 0, 8, 2);
+        assert!(r0.s.is_empty());
+        assert_eq!((r0.u.r, r0.u.c), (20, 0));
+        assert_eq!((r0.vt.r, r0.vt.c), (0, 30));
+    }
+
+    #[test]
+    fn truncated_slices_factors() {
+        let a = randm(12, 9, 28);
+        let r = svd_thin(&a);
+        let t = r.truncated(4);
+        assert_eq!(t.s.len(), 4);
+        assert_eq!((t.u.r, t.u.c), (12, 4));
+        assert_eq!((t.vt.r, t.vt.c), (4, 9));
+        let d = t.reconstruct_k(4).sub(&r.reconstruct_k(4)).frob_norm();
+        assert!(d < 1e-12);
     }
 }

@@ -11,73 +11,141 @@
 //! with `S_left = I` (ZeroQuant-V2), `diag(E[|x|])` (LQER),
 //! `diag(√E[x²])` (QERA-approx, Theorem 2), `R_XX^{1/2}` (QERA-exact,
 //! Theorem 1 — the un-scale is `(R_XX^{1/2})⁻¹` with Remark 1's clamping).
+//!
+//! The truncated SVD itself goes through [`SvdBackend`]: the `*_with`
+//! variants take the backend explicitly (the pipeline threads its
+//! `PipelineConfig::svd` knob down here); the short names keep the exact
+//! path for the theorem-level guarantees the unit tests assert.  Every
+//! solve is wall-clock timed into [`SolveOutput::wall_ms`].
 
-use super::types::{LowRank, SolveOutput};
-use crate::linalg::{psd_sqrt_pair, svd_thin, Mat64};
+use super::types::{LowRank, SolveOutput, SvdBackend};
+use crate::linalg::{psd_sqrt_pair, svd_randomized, svd_thin, Mat64, SvdResult};
 use crate::quant::QFormat;
 use crate::tensor::Tensor;
+use std::time::Instant;
 
 /// Numerical floor for diagonal scales (Remark 2: E[x_i²] > 0 in practice;
 /// the floor guards dead channels in synthetic corpora).
 const DIAG_FLOOR: f64 = 1e-12;
 
+/// Rank-k SVD with backend dispatch (`Auto` resolved per problem size).
+pub(crate) fn svd_rank_k(e: &Mat64, rank: usize, svd: SvdBackend) -> SvdResult {
+    match svd.resolve(e.r, e.c, rank) {
+        SvdBackend::Randomized { oversample, power_iters } => {
+            svd_randomized(e, rank, oversample, power_iters)
+        }
+        _ => svd_thin(e),
+    }
+}
+
+pub(crate) fn elapsed_ms(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
 /// Plain SVD of the weight quantization error (Problem 1 / Eckart–Young).
 pub fn zeroquant_v2(w: &Tensor, fmt: QFormat, rank: usize) -> SolveOutput {
+    zeroquant_v2_with(w, fmt, rank, SvdBackend::Exact)
+}
+
+/// [`zeroquant_v2`] with an explicit SVD backend.
+pub fn zeroquant_v2_with(w: &Tensor, fmt: QFormat, rank: usize, svd: SvdBackend) -> SolveOutput {
+    let t0 = Instant::now();
     let w_dq = fmt.qdq(w);
     let err = Mat64::from_tensor(w).sub(&Mat64::from_tensor(&w_dq));
-    let svd = svd_thin(&err);
-    let (a, b) = svd.factors_k(rank);
+    let fac = svd_rank_k(&err, rank, svd);
+    let (a, b) = fac.factors_k(rank);
     SolveOutput {
         w_dq,
         lowrank: Some(LowRank { a: a.to_tensor(), b: b.to_tensor() }),
-        wall_ms: 0.0,
+        wall_ms: elapsed_ms(t0),
     }
 }
 
 /// Shared scaled-SVD core for the diagonal-scale methods.
-fn diag_scaled(w: &Tensor, fmt: QFormat, rank: usize, scale: &[f64]) -> SolveOutput {
+fn diag_scaled(
+    w: &Tensor,
+    fmt: QFormat,
+    rank: usize,
+    scale: &[f64],
+    svd: SvdBackend,
+) -> SolveOutput {
+    let t0 = Instant::now();
     let w_dq = fmt.qdq(w);
     let err = Mat64::from_tensor(w).sub(&Mat64::from_tensor(&w_dq));
     assert_eq!(scale.len(), err.r, "scale dim != weight rows");
     let s: Vec<f64> = scale.iter().map(|&v| v.max(DIAG_FLOOR)).collect();
     let scaled = err.scale_rows(&s);
-    let svd = svd_thin(&scaled);
-    let (mut a, b) = svd.factors_k(rank);
+    let fac = svd_rank_k(&scaled, rank, svd);
+    let (mut a, b) = fac.factors_k(rank);
     // un-scale: A = S⁻¹ U_k
     let inv: Vec<f64> = s.iter().map(|&v| 1.0 / v).collect();
     a = a.scale_rows(&inv);
     SolveOutput {
         w_dq,
         lowrank: Some(LowRank { a: a.to_tensor(), b: b.to_tensor() }),
-        wall_ms: 0.0,
+        wall_ms: elapsed_ms(t0),
     }
 }
 
 /// LQER (Zhang et al. 2024a): heuristic `S = diag(E[|x_i|])`.
 pub fn lqer(w: &Tensor, fmt: QFormat, rank: usize, mean_abs: &[f64]) -> SolveOutput {
-    diag_scaled(w, fmt, rank, mean_abs)
+    lqer_with(w, fmt, rank, mean_abs, SvdBackend::Exact)
+}
+
+/// [`lqer`] with an explicit SVD backend.
+pub fn lqer_with(
+    w: &Tensor,
+    fmt: QFormat,
+    rank: usize,
+    mean_abs: &[f64],
+    svd: SvdBackend,
+) -> SolveOutput {
+    diag_scaled(w, fmt, rank, mean_abs, svd)
 }
 
 /// QERA-approx (Theorem 2): `S = diag(√E[x_i²])`.
 pub fn qera_approx(w: &Tensor, fmt: QFormat, rank: usize, mean_sq: &[f64]) -> SolveOutput {
+    qera_approx_with(w, fmt, rank, mean_sq, SvdBackend::Exact)
+}
+
+/// [`qera_approx`] with an explicit SVD backend.
+pub fn qera_approx_with(
+    w: &Tensor,
+    fmt: QFormat,
+    rank: usize,
+    mean_sq: &[f64],
+    svd: SvdBackend,
+) -> SolveOutput {
     let s: Vec<f64> = mean_sq.iter().map(|&v| v.max(0.0).sqrt()).collect();
-    diag_scaled(w, fmt, rank, &s)
+    diag_scaled(w, fmt, rank, &s, svd)
 }
 
 /// QERA-exact (Theorem 1): `C_k = (R½)⁻¹ SVD_k(R½ (W − W~))`.
 pub fn qera_exact(w: &Tensor, fmt: QFormat, rank: usize, rxx: &Mat64) -> SolveOutput {
+    qera_exact_with(w, fmt, rank, rxx, SvdBackend::Exact)
+}
+
+/// [`qera_exact`] with an explicit SVD backend.
+pub fn qera_exact_with(
+    w: &Tensor,
+    fmt: QFormat,
+    rank: usize,
+    rxx: &Mat64,
+    svd: SvdBackend,
+) -> SolveOutput {
+    let t0 = Instant::now();
     let w_dq = fmt.qdq(w);
     let err = Mat64::from_tensor(w).sub(&Mat64::from_tensor(&w_dq));
     assert_eq!(rxx.r, err.r, "R_XX dim != weight rows");
     let (rh, rh_inv) = psd_sqrt_pair(rxx, crate::linalg::psd::EIG_CLAMP_REL);
     let scaled = rh.matmul(&err);
-    let svd = svd_thin(&scaled);
-    let (u_k, b) = svd.factors_k(rank);
+    let fac = svd_rank_k(&scaled, rank, svd);
+    let (u_k, b) = fac.factors_k(rank);
     let a = rh_inv.matmul(&u_k);
     SolveOutput {
         w_dq,
         lowrank: Some(LowRank { a: a.to_tensor(), b: b.to_tensor() }),
-        wall_ms: 0.0,
+        wall_ms: elapsed_ms(t0),
     }
 }
 
@@ -175,5 +243,50 @@ mod tests {
         let lr = out.lowrank.unwrap();
         assert!(lr.a.data().iter().all(|v| v.is_finite()));
         assert!(lr.b.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn solves_report_nonzero_wall_time() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(vec![48, 48], 1.0, &mut rng);
+        let out = zeroquant_v2(&w, fmt(), 4);
+        assert!(out.wall_ms > 0.0, "{}", out.wall_ms);
+        let ex = qera_exact(&w, fmt(), 4, &Mat64::eye(48));
+        assert!(ex.wall_ms > 0.0);
+    }
+
+    #[test]
+    fn randomized_backend_close_to_exact() {
+        // explicit randomized backend on a matrix large enough to engage
+        // the sketch; a flat quantization-noise spectrum is the worst case,
+        // so allow a few percent over the Eckart–Young optimum
+        let mut rng = Rng::new(7);
+        let w = Tensor::randn(vec![64, 96], 1.0, &mut rng);
+        let rank = 8;
+        let exact = zeroquant_v2_with(&w, fmt(), rank, SvdBackend::Exact);
+        let rand = zeroquant_v2_with(
+            &w,
+            fmt(),
+            rank,
+            SvdBackend::Randomized { oversample: 8, power_iters: 2 },
+        );
+        let wm = Mat64::from_tensor(&w);
+        let e_exact = Mat64::from_tensor(&exact.merged()).sub(&wm).frob_norm();
+        let e_rand = Mat64::from_tensor(&rand.merged()).sub(&wm).frob_norm();
+        assert!(e_rand >= e_exact * (1.0 - 1e-9), "rand beat the optimum?");
+        assert!(e_rand <= e_exact * 1.05, "{e_rand} vs {e_exact}");
+    }
+
+    #[test]
+    fn auto_backend_resolves_by_shape() {
+        // Auto on a tiny matrix must give bit-identical output to Exact
+        let mut rng = Rng::new(8);
+        let w = Tensor::randn(vec![12, 10], 1.0, &mut rng);
+        let auto = zeroquant_v2_with(&w, fmt(), 4, SvdBackend::Auto);
+        let exact = zeroquant_v2_with(&w, fmt(), 4, SvdBackend::Exact);
+        let la = auto.lowrank.unwrap();
+        let le = exact.lowrank.unwrap();
+        assert_eq!(la.a, le.a);
+        assert_eq!(la.b, le.b);
     }
 }

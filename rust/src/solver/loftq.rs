@@ -5,13 +5,27 @@
 //! the *weight* error (Figure 6) yet the *model output* error can rise
 //! (Figure 1) — reproduced by `benches/paper_figures.rs`.
 
-use super::types::{LowRank, SolveOutput};
-use crate::linalg::{svd_thin, Mat64};
+use super::closed_form::{elapsed_ms, svd_rank_k};
+use super::types::{LowRank, SolveOutput, SvdBackend};
+use crate::linalg::Mat64;
 use crate::quant::QFormat;
 use crate::tensor::Tensor;
 
-/// Run `iters` LoftQ iterations (paper recommends 5).
+/// Run `iters` LoftQ iterations (paper recommends 5) with the exact SVD.
 pub fn loftq(w: &Tensor, fmt: QFormat, rank: usize, iters: usize) -> SolveOutput {
+    loftq_with(w, fmt, rank, iters, SvdBackend::Exact)
+}
+
+/// [`loftq`] with an explicit SVD backend (each iteration refits `(A, B)`
+/// by a rank-k SVD, so the randomized fast path pays `iters` times over).
+pub fn loftq_with(
+    w: &Tensor,
+    fmt: QFormat,
+    rank: usize,
+    iters: usize,
+    svd: SvdBackend,
+) -> SolveOutput {
+    let t0 = std::time::Instant::now();
     let (m, n) = (w.rows(), w.cols());
     let wm = Mat64::from_tensor(w);
     let mut lr = LowRank::zeros(m, n, rank);
@@ -22,12 +36,12 @@ pub fn loftq(w: &Tensor, fmt: QFormat, rank: usize, iters: usize) -> SolveOutput
         w_dq = fmt.qdq(&resid);
         // SVD of the weight error; split Σ symmetrically (LoftQ's A√Σ, √ΣB)
         let err = wm.sub(&Mat64::from_tensor(&w_dq));
-        let svd = svd_thin(&err);
-        let k = rank.min(svd.s.len());
-        let mut a = svd.u.cols_head(k);
-        let mut b = svd.vt.rows_head(k);
+        let fac = svd_rank_k(&err, rank, svd);
+        let k = rank.min(fac.s.len());
+        let mut a = fac.u.cols_head(k);
+        let mut b = fac.vt.rows_head(k);
         for j in 0..k {
-            let sq = svd.s[j].max(0.0).sqrt();
+            let sq = fac.s[j].max(0.0).sqrt();
             for i in 0..a.r {
                 a.a[i * k + j] *= sq;
             }
@@ -37,7 +51,7 @@ pub fn loftq(w: &Tensor, fmt: QFormat, rank: usize, iters: usize) -> SolveOutput
         }
         lr = LowRank { a: a.to_tensor(), b: b.to_tensor() };
     }
-    SolveOutput { w_dq, lowrank: Some(lr), wall_ms: 0.0 }
+    SolveOutput { w_dq, lowrank: Some(lr), wall_ms: elapsed_ms(t0) }
 }
 
 /// Per-iteration weight errors ‖W − W~ − C_k‖_F (Figure 6 series).

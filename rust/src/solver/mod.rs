@@ -20,20 +20,24 @@ pub mod closed_form;
 pub mod loftq;
 pub mod metrics;
 
-pub use closed_form::{lqer, qera_approx, qera_exact, zeroquant_v2};
-pub use loftq::loftq;
+pub use closed_form::{
+    lqer, lqer_with, qera_approx, qera_approx_with, qera_exact, qera_exact_with, zeroquant_v2,
+    zeroquant_v2_with,
+};
+pub use loftq::{loftq, loftq_with};
 pub use metrics::{expected_output_error, weight_error};
-pub use types::{LowRank, Method, SolveOutput};
+pub use types::{LowRank, Method, SolveOutput, SvdBackend};
 
 use crate::quant::QFormat;
 use crate::stats::CalibStats;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
-/// Solve one layer with the given method.
+/// Solve one layer with the given method and the exact SVD backend.
 ///
 /// `stats` is required for `lqer` / `qera-*`; `rng_seed` only affects
-/// `qlora` (Gaussian A, zero B).
+/// `qlora` (Gaussian A, zero B).  The pipeline goes through [`solve_with`]
+/// to select the rank-aware randomized fast path.
 pub fn solve(
     method: Method,
     w: &Tensor,
@@ -41,6 +45,20 @@ pub fn solve(
     rank: usize,
     stats: Option<&CalibStats>,
     rng_seed: u64,
+) -> Result<SolveOutput> {
+    solve_with(method, w, fmt, rank, stats, rng_seed, SvdBackend::Exact)
+}
+
+/// [`solve`] with an explicit [`SvdBackend`] (the `PipelineConfig::svd`
+/// knob ends up here).  Every solve reports a real wall time.
+pub fn solve_with(
+    method: Method,
+    w: &Tensor,
+    fmt: QFormat,
+    rank: usize,
+    stats: Option<&CalibStats>,
+    rng_seed: u64,
+    svd: SvdBackend,
 ) -> Result<SolveOutput> {
     let t0 = std::time::Instant::now();
     let mut out = match method {
@@ -54,15 +72,15 @@ pub fn solve(
             let b = Tensor::zeros(vec![rank, n]);
             SolveOutput { w_dq: wdq, lowrank: Some(LowRank { a, b }), wall_ms: 0.0 }
         }
-        Method::ZeroQuantV2 => zeroquant_v2(w, fmt, rank),
-        Method::Loftq { iters } => loftq(w, fmt, rank, iters),
+        Method::ZeroQuantV2 => zeroquant_v2_with(w, fmt, rank, svd),
+        Method::Loftq { iters } => loftq_with(w, fmt, rank, iters, svd),
         Method::Lqer => {
             let st = need_stats(stats, "lqer")?;
-            lqer(w, fmt, rank, &st.mean_abs())
+            lqer_with(w, fmt, rank, &st.mean_abs(), svd)
         }
         Method::QeraApprox => {
             let st = need_stats(stats, "qera-approx")?;
-            qera_approx(w, fmt, rank, &st.mean_sq())
+            qera_approx_with(w, fmt, rank, &st.mean_sq(), svd)
         }
         Method::QeraExact => {
             let st = need_stats(stats, "qera-exact")?;
@@ -70,10 +88,14 @@ pub fn solve(
                 Some(r) => r,
                 None => bail!("qera-exact needs R_XX tracking enabled in calibration"),
             };
-            qera_exact(w, fmt, rank, &rxx)
+            qera_exact_with(w, fmt, rank, &rxx, svd)
         }
     };
-    out.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // the closed-form solvers time themselves; cover the dense-only and
+    // qlora branches here so nothing reports a zero wall time
+    if out.wall_ms == 0.0 {
+        out.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    }
     Ok(out)
 }
 
@@ -217,5 +239,37 @@ mod tests {
         assert_eq!(Method::parse("loftq:5").unwrap(), Method::Loftq { iters: 5 });
         assert_eq!(Method::parse("loftq").unwrap(), Method::Loftq { iters: 5 });
         assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn randomized_backend_tracks_exact_output_error() {
+        // large-ish layer so Randomized actually engages (l = rank + 8 < m)
+        let (w, stats, rxx) = instance(48, 48, 384, 6);
+        let rank = 6;
+        let rand = SvdBackend::Randomized { oversample: 8, power_iters: 2 };
+        for method in [Method::QeraExact, Method::QeraApprox] {
+            let st = if method.needs_stats() { Some(&stats) } else { None };
+            let e_exact = out_err(
+                &w,
+                &solve_with(method, &w, fmt(), rank, st, 0, SvdBackend::Exact).unwrap(),
+                &rxx,
+            );
+            let e_rand = out_err(&w, &solve_with(method, &w, fmt(), rank, st, 0, rand).unwrap(), &rxx);
+            assert!(
+                (e_rand - e_exact).abs() <= 5e-2 * e_exact.max(1e-12),
+                "{}: rand {e_rand} vs exact {e_exact}",
+                method.name()
+            );
+        }
+    }
+
+    #[test]
+    fn solve_reports_wall_time_for_every_method() {
+        let (w, stats, _) = instance(16, 16, 64, 8);
+        for method in [Method::WOnly, Method::QloraZero, Method::ZeroQuantV2, Method::QeraExact] {
+            let st = if method.needs_stats() { Some(&stats) } else { None };
+            let out = solve(method, &w, fmt(), 4, st, 1).unwrap();
+            assert!(out.wall_ms > 0.0, "{} reported zero wall time", method.name());
+        }
     }
 }

@@ -66,6 +66,97 @@ impl SolveOutput {
     }
 }
 
+/// SVD backend for the truncated factorizations inside the solvers.
+///
+/// Every closed-form method reduces to a rank-k SVD of a (scaled) error
+/// matrix; `Exact` computes the full thin SVD and truncates, `Randomized`
+/// uses the Halko sketch ([`crate::linalg::svd_randomized`]) which costs
+/// O(mnk) instead of O(min(m,n)³).  `Auto` — the pipeline default — picks
+/// the randomized path whenever `rank * 4 <= min(m, n)` (the regime where
+/// the sketch wins and its accuracy loss is negligible) and falls back to
+/// exact otherwise; `svd_randomized` itself additionally falls back to the
+/// exact path when `rank + oversample >= min(m, n)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SvdBackend {
+    /// Randomized when `rank * 4 <= min(m, n)`, exact otherwise.
+    Auto,
+    /// Full thin SVD via the Gram trick ([`crate::linalg::svd_thin`]).
+    Exact,
+    /// Halko randomized range finder with explicit knobs.
+    Randomized { oversample: usize, power_iters: usize },
+}
+
+impl Default for SvdBackend {
+    fn default() -> SvdBackend {
+        SvdBackend::Auto
+    }
+}
+
+impl SvdBackend {
+    pub const DEFAULT_OVERSAMPLE: usize = 8;
+    pub const DEFAULT_POWER_ITERS: usize = 2;
+
+    /// `auto`, `exact`, or `randomized[:oversample[:power_iters]]`.
+    pub fn parse(s: &str) -> Result<SvdBackend> {
+        let s = s.trim().to_lowercase();
+        match s.as_str() {
+            "auto" => return Ok(SvdBackend::Auto),
+            "exact" | "thin" | "full" => return Ok(SvdBackend::Exact),
+            _ => {}
+        }
+        let rest = s
+            .strip_prefix("randomized")
+            .or_else(|| s.strip_prefix("rand"));
+        let Some(rest) = rest else {
+            bail!("unknown svd backend '{s}' (auto | exact | randomized[:oversample[:power_iters]])")
+        };
+        let mut oversample = Self::DEFAULT_OVERSAMPLE;
+        let mut power_iters = Self::DEFAULT_POWER_ITERS;
+        if !rest.is_empty() {
+            let Some(spec) = rest.strip_prefix(':') else {
+                bail!("bad svd backend spec '{s}'")
+            };
+            let parts: Vec<&str> = spec.split(':').collect();
+            if parts.len() > 2 {
+                bail!("bad svd backend spec '{s}' (at most randomized:oversample:power_iters)");
+            }
+            oversample = parts[0].parse()?;
+            if parts.len() == 2 {
+                power_iters = parts[1].parse()?;
+            }
+        }
+        Ok(SvdBackend::Randomized { oversample, power_iters })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SvdBackend::Auto => "auto".into(),
+            SvdBackend::Exact => "exact".into(),
+            SvdBackend::Randomized { oversample, power_iters } => {
+                format!("randomized:{oversample}:{power_iters}")
+            }
+        }
+    }
+
+    /// Resolve `Auto` for an `m×n` problem at rank `rank`; `Exact` and
+    /// `Randomized` pass through unchanged.
+    pub fn resolve(self, m: usize, n: usize, rank: usize) -> SvdBackend {
+        match self {
+            SvdBackend::Auto => {
+                if rank > 0 && rank * 4 <= m.min(n) {
+                    SvdBackend::Randomized {
+                        oversample: Self::DEFAULT_OVERSAMPLE,
+                        power_iters: Self::DEFAULT_POWER_ITERS,
+                    }
+                } else {
+                    SvdBackend::Exact
+                }
+            }
+            b => b,
+        }
+    }
+}
+
 /// Reconstruction method (paper Table 3's row set + QPEFT baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -186,5 +277,54 @@ mod tests {
         assert!(Method::QeraApprox.needs_stats());
         assert!(!Method::ZeroQuantV2.needs_stats());
         assert_eq!(Method::ptq_grid().len(), 5);
+    }
+
+    #[test]
+    fn svd_backend_parse_and_name() {
+        assert_eq!(SvdBackend::parse("auto").unwrap(), SvdBackend::Auto);
+        assert_eq!(SvdBackend::parse("exact").unwrap(), SvdBackend::Exact);
+        assert_eq!(
+            SvdBackend::parse("randomized").unwrap(),
+            SvdBackend::Randomized {
+                oversample: SvdBackend::DEFAULT_OVERSAMPLE,
+                power_iters: SvdBackend::DEFAULT_POWER_ITERS
+            }
+        );
+        assert_eq!(
+            SvdBackend::parse("randomized:4:1").unwrap(),
+            SvdBackend::Randomized { oversample: 4, power_iters: 1 }
+        );
+        assert_eq!(
+            SvdBackend::parse("rand:12").unwrap(),
+            SvdBackend::Randomized {
+                oversample: 12,
+                power_iters: SvdBackend::DEFAULT_POWER_ITERS
+            }
+        );
+        assert!(SvdBackend::parse("nope").is_err());
+        assert!(SvdBackend::parse("randomized:a").is_err());
+        assert!(SvdBackend::parse("randomized:1:2:3").is_err());
+        for b in [
+            SvdBackend::Auto,
+            SvdBackend::Exact,
+            SvdBackend::Randomized { oversample: 6, power_iters: 3 },
+        ] {
+            assert_eq!(SvdBackend::parse(&b.name()).unwrap(), b);
+        }
+        assert_eq!(SvdBackend::default(), SvdBackend::Auto);
+    }
+
+    #[test]
+    fn svd_backend_auto_resolution() {
+        // small rank relative to the matrix -> randomized
+        let r = SvdBackend::Auto.resolve(64, 256, 8);
+        assert!(matches!(r, SvdBackend::Randomized { .. }));
+        // large rank or tiny matrix -> exact
+        assert_eq!(SvdBackend::Auto.resolve(16, 16, 8), SvdBackend::Exact);
+        assert_eq!(SvdBackend::Auto.resolve(64, 64, 0), SvdBackend::Exact);
+        // explicit choices pass through
+        assert_eq!(SvdBackend::Exact.resolve(1024, 1024, 1), SvdBackend::Exact);
+        let fixed = SvdBackend::Randomized { oversample: 2, power_iters: 0 };
+        assert_eq!(fixed.resolve(8, 8, 8), fixed);
     }
 }

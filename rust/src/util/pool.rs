@@ -6,8 +6,22 @@
 //! defaults to the available parallelism and can be forced via
 //! `QERA_THREADS`.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    /// True on threads spawned by this pool.  Kernels that can fan out on
+    /// their own (the blocked matmuls in [`crate::linalg::mat`]) check this
+    /// to stay single-threaded inside per-layer solver jobs instead of
+    /// oversubscribing the machine with nested parallelism.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is a pool worker (see `IN_POOL`).
+pub fn in_pool_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
 
 /// Number of workers: `QERA_THREADS` env or available parallelism.
 pub fn default_workers() -> usize {
@@ -34,13 +48,16 @@ where
     let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i);
+                    *results[i].lock().unwrap() = Some(out);
                 }
-                let out = f(i);
-                *results[i].lock().unwrap() = Some(out);
             });
         }
     });
@@ -57,6 +74,35 @@ where
     F: Fn(usize) -> T + Sync,
 {
     parallel_map(n, default_workers(), f)
+}
+
+/// Split `data` into contiguous `chunk_len`-sized pieces and run
+/// `f(chunk_index, chunk)` on scoped threads, one per chunk (callers size
+/// `chunk_len` so there are about `workers` chunks).  The partition is
+/// deterministic, so a kernel that writes only its own chunk produces
+/// identical output for every worker count — the blocked matmuls rely on
+/// this for the pipeline's bit-exactness guarantee.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk_len = chunk_len.max(1);
+    if workers <= 1 || data.len() <= chunk_len {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci, chunk);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            scope.spawn(move || {
+                IN_POOL.with(|c| c.set(true));
+                f(ci, chunk);
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -91,6 +137,47 @@ mod tests {
         });
         assert_eq!(counter.load(Ordering::Relaxed), 57);
         assert_eq!(out.len(), 57);
+    }
+
+    #[test]
+    fn chunks_cover_everything_any_worker_count() {
+        let n = 103usize;
+        let mut serial: Vec<usize> = vec![0; n];
+        parallel_chunks_mut(&mut serial, 10, 1, |ci, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 10 + k + 1;
+            }
+        });
+        let mut threaded: Vec<usize> = vec![0; n];
+        parallel_chunks_mut(&mut threaded, 10, 4, |ci, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 10 + k + 1;
+            }
+        });
+        assert_eq!(serial, threaded);
+        assert_eq!(serial, (1..=n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunks_empty_and_degenerate() {
+        let mut empty: Vec<u8> = vec![];
+        parallel_chunks_mut(&mut empty, 0, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![7u8];
+        parallel_chunks_mut(&mut one, 16, 4, |ci, chunk| {
+            assert_eq!(ci, 0);
+            chunk[0] += 1;
+        });
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn workers_are_marked_in_pool() {
+        assert!(!in_pool_worker());
+        let flags = parallel_map(8, 4, |_| in_pool_worker());
+        assert!(flags.iter().all(|&b| b));
+        // serial path runs inline on the caller thread
+        let inline = parallel_map(1, 1, |_| in_pool_worker());
+        assert!(!inline[0]);
     }
 
     #[test]

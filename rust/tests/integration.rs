@@ -4,12 +4,13 @@
 //! These need built artifacts (`make artifacts`); they skip gracefully when
 //! the directory is absent so `cargo test` stays green on a fresh clone.
 
-use qera::coordinator::{calibrate, quantize, PipelineConfig};
+use qera::coordinator::{calibrate, quantize, CalibResult, PipelineConfig};
 use qera::data::Corpus;
-use qera::model::{init::init_params, Checkpoint, QuantCheckpoint};
+use qera::linalg::Mat64;
+use qera::model::{init::init_params, Checkpoint, ModelSpec, QuantCheckpoint};
 use qera::quant::QFormat;
 use qera::runtime::Registry;
-use qera::solver::Method;
+use qera::solver::{expected_output_error, Method, SvdBackend};
 use qera::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -22,6 +23,82 @@ fn tmpdir() -> PathBuf {
     let d = std::env::temp_dir().join("qera_integration");
     std::fs::create_dir_all(&d).unwrap();
     d
+}
+
+#[test]
+fn randomized_svd_backend_tracks_exact_on_nano() {
+    // Acceptance check for the rank-aware solver fast path: on the nano
+    // checkpoint the randomized backend must keep the expected layer output
+    // error (Tr(R P Pᵀ), the paper's Problem-2 objective) within 1e-2
+    // relative of the exact backend, per method, aggregated over layers.
+    // Runs without PJRT artifacts: calibration statistics are synthetic.
+    let spec = ModelSpec::builtin("nano").unwrap();
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(7)));
+    let calib = CalibResult::synthetic(&spec, 256, 11);
+    let fmt = QFormat::Mxint { bits: 3, block: 32 };
+    let rank = 8; // rank * 4 <= 64 = min layer dim -> randomized engages
+    let sites = spec.linear_sites();
+
+    for method in [Method::QeraExact, Method::QeraApprox] {
+        let exact = quantize(
+            &ckpt,
+            &PipelineConfig::new(method, fmt, rank).with_svd(SvdBackend::Exact),
+            Some(&calib),
+        )
+        .unwrap();
+        let rand = quantize(
+            &ckpt,
+            &PipelineConfig::new(method, fmt, rank).with_svd(SvdBackend::Randomized {
+                oversample: SvdBackend::DEFAULT_OVERSAMPLE,
+                power_iters: SvdBackend::DEFAULT_POWER_ITERS,
+            }),
+            Some(&calib),
+        )
+        .unwrap();
+
+        let mut total_exact = 0.0f64;
+        let mut total_rand = 0.0f64;
+        for site in &sites {
+            let rxx = calib.for_site(site).rxx_mean().unwrap();
+            let w = Mat64::from_tensor(&ckpt.params[site.param_idx]);
+            let p_exact = Mat64::from_tensor(&exact.merged[site.param_idx]).sub(&w);
+            let p_rand = Mat64::from_tensor(&rand.merged[site.param_idx]).sub(&w);
+            let e_exact = expected_output_error(&p_exact, &rxx);
+            let e_rand = expected_output_error(&p_rand, &rxx);
+            // per-site sanity: no catastrophic divergence
+            assert!(
+                (e_rand - e_exact).abs() <= 5e-2 * e_exact.max(1e-12),
+                "{} {}: rand {e_rand} vs exact {e_exact}",
+                method.name(),
+                site.name
+            );
+            total_exact += e_exact;
+            total_rand += e_rand;
+        }
+        // the acceptance bound: within 1e-2 relative, model-wide
+        assert!(
+            (total_rand - total_exact).abs() <= 1e-2 * total_exact,
+            "{}: rand {total_rand} vs exact {total_exact}",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn randomized_backend_pipeline_is_deterministic() {
+    let spec = ModelSpec::builtin("nano").unwrap();
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(9)));
+    let cfg = PipelineConfig::new(Method::ZeroQuantV2, QFormat::Mxint { bits: 3, block: 32 }, 8)
+        .with_svd(SvdBackend::Randomized {
+            oversample: SvdBackend::DEFAULT_OVERSAMPLE,
+            power_iters: SvdBackend::DEFAULT_POWER_ITERS,
+        });
+    let a = quantize(&ckpt, &cfg, None).unwrap();
+    let b = quantize(&ckpt, &cfg, None).unwrap();
+    for (x, y) in a.merged.iter().zip(&b.merged) {
+        assert_eq!(x, y);
+    }
+    assert!(a.solve_ms_total > 0.0);
 }
 
 #[test]

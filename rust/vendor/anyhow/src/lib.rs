@@ -1,0 +1,256 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the API subset qera uses — [`Error`], [`Result`],
+//! the [`Context`] extension trait (on `Result` *and* `Option`, including
+//! results that already carry an [`Error`]), and the `anyhow!` / `bail!` /
+//! `ensure!` macros — with the same semantics: `Display` shows the
+//! outermost context, `{:#}` joins the whole chain, `Debug` renders a
+//! "Caused by" list.  No external dependencies, so the workspace builds
+//! without a crates.io registry.
+
+use std::fmt::{self, Debug, Display};
+
+/// Context-chain error value.  Deliberately does **not** implement
+/// `std::error::Error` (mirroring the real anyhow) so the blanket
+/// `From<E: std::error::Error>` impl below stays coherent.
+pub struct Error {
+    /// Messages, outermost context first; the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(e: &E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    fn push_context<C: Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// Innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate messages from the outermost context to the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::Error;
+
+    /// Conversion into [`Error`] for both std errors and `Error` itself —
+    /// the same coherence arrangement the real anyhow uses (`Error` does
+    /// not implement `std::error::Error`, so the impls are disjoint).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Attach context to failures, exactly like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: ext::IntoError> Context<T> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_error().push_context(ctx))
+    }
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into_error().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {args}")` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt {args}")` — early-return an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "fmt {args}")` — bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Source-free std error (io::Error::new exposes its payload through
+    /// `source()`, which would double-count chain entries in these tests).
+    #[derive(Debug)]
+    struct Gone;
+    impl fmt::Display for Gone {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("gone")
+        }
+    }
+    impl std::error::Error for Gone {}
+
+    fn io_err() -> Gone {
+        Gone
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "gone");
+        let with = Result::<(), _>::Err(io_err()).context("outer").unwrap_err();
+        assert_eq!(with.to_string(), "outer");
+        assert_eq!(format!("{with:#}"), "outer: gone");
+        assert!(format!("{with:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("wrapped").unwrap_err();
+        assert_eq!(e.to_string(), "wrapped");
+        assert_eq!(e.root_cause(), "inner 7");
+
+        let none: Option<u32> = None;
+        let e2 = none.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e2.to_string(), "missing x");
+        assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "flag was {ok}");
+            Ok(1)
+        }
+        fn g() -> Result<u32> {
+            bail!("nope {}", 2);
+        }
+        fn h(ok: bool) -> Result<u32> {
+            ensure!(ok);
+            Ok(4)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(g().unwrap_err().to_string(), "nope 2");
+        assert!(h(false).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn chain_walks_sources() {
+        let e: Error = io_err().into();
+        assert_eq!(e.chain().count(), 1);
+        let wrapped = Result::<(), _>::Err(io_err()).context("a").unwrap_err();
+        let msgs: Vec<&str> = wrapped.chain().collect();
+        assert_eq!(msgs, vec!["a", "gone"]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Offline stub of the `xla` (PJRT) crate.
+//!
+//! Provides the exact API surface `qera::runtime` compiles against, so the
+//! workspace builds (and the pure-Rust solver/linalg/serving stack runs)
+//! without the XLA C library.  Every device operation fails at runtime with
+//! a clear message; artifact-gated tests and benches detect the missing
+//! `artifacts/` directory and skip before ever reaching these calls.
+//!
+//! To enable real PJRT execution, point the `xla` path dependency in the
+//! workspace `Cargo.toml` at the real xla crate (LaurentMazare/xla-rs) with
+//! its PJRT plugin available.
+
+use std::fmt;
+use std::path::Path;
+
+const STUB_MSG: &str = "PJRT unavailable: built against the vendored `xla` stub \
+(rust/vendor/xla); swap the path dependency for the real xla crate to execute \
+HLO artifacts";
+
+/// Stub error type (string-backed).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the runtime marshals (subset of XLA's).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Parsed HLO module (stub: validates the file exists, retains nothing).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        std::fs::metadata(path.as_ref())
+            .map_err(|e| Error::new(format!("{}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { _priv: () })
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Stub CPU client: constructible (so process setup and thread-local client
+/// caching work) but refuses to compile.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Host literal (stub: shape/data are discarded at construction).
+#[derive(Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _priv: () })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_compile_fails() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.device_count(), 1);
+        assert_eq!(c.platform_name(), "stub-cpu");
+        let proto = HloModuleProto { _priv: () };
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(c.compile(&comp).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_surface() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        let l2 = l.reshape(&[2, 1]).unwrap();
+        assert!(l2.ty().is_err());
+        assert!(l2.to_vec::<f32>().is_err());
+        assert!(l2.to_tuple().is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_is_an_error() {
+        assert!(HloModuleProto::from_text_file("/no/such/file.hlo.txt").is_err());
+    }
+}
