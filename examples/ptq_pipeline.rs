@@ -9,11 +9,16 @@
 //! cargo run --release --example ptq_pipeline            # nano, quick
 //! QERA_MODEL=small cargo run --release --example ptq_pipeline
 //! QERA_SVD=exact cargo run --release --example ptq_pipeline   # force exact SVD
+//! QERA_PSD=exact cargo run --release --example ptq_pipeline   # force exact R½
 //! ```
 //!
 //! `QERA_SVD` selects the solver SVD backend (`auto` | `exact` |
 //! `randomized[:oversample[:power_iters]]`); the default `auto` takes the
-//! randomized fast path whenever `rank * 4 <= min(m, n)`.
+//! randomized fast path whenever `rank * 4 <= min(m, n)`.  `QERA_PSD`
+//! selects QERA-exact's `(R^{1/2}, R^{-1/2})` backend (`auto` | `exact` |
+//! `lowrank[:rank_mult[:power_iters]]`); the default `auto` takes the
+//! low-rank + diagonal split whenever the rank is small relative to the
+//! layer width.
 
 use qera::bench_util::Table;
 use qera::coordinator::{calibrate, quantize, PipelineConfig};
@@ -22,7 +27,7 @@ use qera::eval::{perplexity, win_rate};
 use qera::model::QuantCheckpoint;
 use qera::quant::QFormat;
 use qera::runtime::Registry;
-use qera::solver::{Method, SvdBackend};
+use qera::solver::{Method, PsdBackend, SvdBackend};
 use qera::train::{pretrain, PretrainConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -33,7 +38,11 @@ fn main() -> anyhow::Result<()> {
         Ok(s) => SvdBackend::parse(&s)?,
         Err(_) => SvdBackend::Auto,
     };
-    println!("svd backend: {}", svd.name());
+    let psd = match std::env::var("QERA_PSD") {
+        Ok(s) => PsdBackend::parse(&s)?,
+        Err(_) => PsdBackend::Auto,
+    };
+    println!("svd backend: {}, psd backend: {}", svd.name(), psd.name());
     let reg = Registry::open_default()?;
     let spec = reg.spec(&model)?.clone();
 
@@ -64,12 +73,16 @@ fn main() -> anyhow::Result<()> {
         ]);
         let wonly = quantize(
             &ckpt,
-            &PipelineConfig::new(Method::WOnly, fmt, 0).with_svd(svd),
+            &PipelineConfig::new(Method::WOnly, fmt, 0).with_svd(svd).with_psd(psd),
             Some(&calib),
         )?;
         for method in Method::ptq_grid() {
             let r = if method == Method::WOnly { 0 } else { rank };
-            let qm = quantize(&ckpt, &PipelineConfig::new(method, fmt, r).with_svd(svd), Some(&calib))?;
+            let qm = quantize(
+                &ckpt,
+                &PipelineConfig::new(method, fmt, r).with_svd(svd).with_psd(psd),
+                Some(&calib),
+            )?;
             let ppl = perplexity(&reg, &spec, &qm.merged, &val, 8)?;
             let wr = if method == Method::WOnly {
                 0.5

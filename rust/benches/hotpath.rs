@@ -6,16 +6,26 @@
 //! ```
 //!
 //! Groups: `eigh` (L3 solver core), `svd` (exact vs randomized truncation),
-//! `matmul` (blocked/threaded kernels), `solver` (per-layer solve, exact vs
-//! randomized backend), `quant` (quantizer kernels), `stats` (calibration
-//! accumulation), and — when PJRT artifacts are built — `forward` / `serve`.
+//! `matmul` (blocked/threaded `Mat64` kernels), `tensor_matmul` (naive vs
+//! blocked/threaded f32 `Tensor` kernels — low-rank merges / checkpoint
+//! materialization), `psd` (exact vs low-rank `(R½, R^{-½})` pair),
+//! `solver` (per-layer
+//! solve, exact vs randomized backend), `quant` (quantizer kernels),
+//! `stats` (calibration accumulation), and — when PJRT artifacts are built
+//! — `forward` / `serve`.
 //!
-//! The `svd` / `matmul` / `solver` p50s additionally land in
-//! `BENCH_solver.json` (machine-readable, for the perf trajectory).
+//! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` p50s
+//! additionally land in `BENCH_solver.json` (machine-readable, for the
+//! perf trajectory and the CI bench-regression gate).  Set
+//! `QERA_BENCH_SMOKE=1` to shrink shapes/iterations — the mode CI uses
+//! when diffing against `BENCH_baseline.json`.
 
-use qera::bench_util::{emit_json_report, f2, f3, time_stats, Table};
+use qera::bench_util::{emit_json_report, f2, f3, f4, time_stats, Table};
 use qera::coordinator::{quantize, CalibResult, PipelineConfig};
-use qera::linalg::{eigh_jacobi, eigh::eigh_tridiag, svd_randomized, svd_thin, Mat64};
+use qera::linalg::{
+    eigh_jacobi, eigh::eigh_tridiag, psd_sqrt_pair, psd_sqrt_pair_lowrank, svd_randomized,
+    svd_thin, Mat64,
+};
 use qera::model::ModelSpec;
 use qera::quant::QFormat;
 use qera::runtime::{exec::lm_inputs, Registry};
@@ -24,10 +34,31 @@ use qera::stats::CalibStats;
 use qera::tensor::Tensor;
 use qera::util::rng::Rng;
 
+/// Smoke mode: smaller shapes / fewer iterations (CI's bench-gate profile).
+fn smoke() -> bool {
+    std::env::var("QERA_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 fn rand_psd(n: usize, seed: u64) -> Mat64 {
     let mut rng = Rng::new(seed);
     let m = Mat64::from_vec(n, 2 * n, (0..2 * n * n).map(|_| rng.normal()).collect());
     m.matmul_nt(&m).scale(1.0 / (2 * n) as f64)
+}
+
+/// Spiked-spectrum PSD (the shape of a calibration `R_XX`): a decaying head
+/// on top of a flat tail.
+fn spiked_psd(n: usize, seed: u64) -> Mat64 {
+    let mut rng = Rng::new(seed);
+    let mut q = Mat64::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+    q.orthonormalize_cols();
+    let mut qd = q.clone();
+    for j in 0..n {
+        let d = if j < 16 { 40.0 * 0.7f64.powi(j as i32) } else { 0.3 };
+        for i in 0..n {
+            qd.a[i * n + j] *= d;
+        }
+    }
+    qd.matmul_nt(&q)
 }
 
 fn bench_eigh() {
@@ -63,7 +94,12 @@ fn bench_svd() -> Table {
         &["shape", "rank", "thin p50", "rand p50", "speedup"],
     );
     let mut rng = Rng::new(0);
-    for (m, n, k) in [(64usize, 256usize, 8usize), (128, 512, 16), (256, 1024, 32)] {
+    let shapes: &[(usize, usize, usize)] = if smoke() {
+        &[(64usize, 256usize, 8usize), (128, 512, 16)]
+    } else {
+        &[(64usize, 256usize, 8usize), (128, 512, 16), (256, 1024, 32)]
+    };
+    for &(m, n, k) in shapes {
         let a = Mat64::from_vec(m, n, (0..m * n).map(|_| rng.normal()).collect());
         let iters = if m >= 256 { 3 } else { 5 };
         let thin = time_stats(1, iters, || {
@@ -75,12 +111,119 @@ fn bench_svd() -> Table {
         t.row(vec![
             format!("{m}x{n}"),
             k.to_string(),
-            f2(thin.p50_ms),
-            f2(rand.p50_ms),
+            f4(thin.p50_ms),
+            f4(rand.p50_ms),
             f2(thin.p50_ms / rand.p50_ms),
         ]);
     }
     t.emit("hot_svd");
+    t
+}
+
+/// Exact O(m³) `(R½, R^{-½})` pair vs the low-rank + diagonal split on a
+/// spiked-spectrum `R_XX` (the qera-exact whitening hot path).  `k` is the
+/// subspace size `rank_mult · rank` at the rank the solver reconstructs.
+fn bench_psd() -> Table {
+    let mut t = Table::new(
+        "psd: exact sqrt pair vs low-rank + diagonal split (ms)",
+        &["dim", "k", "exact p50", "lowrank p50", "speedup"],
+    );
+    // k must satisfy 2k < m or psd_sqrt_pair_lowrank falls back to exact.
+    // (64, 16) is nano's d_model at rank 8 · rank_mult 2 — there the inner
+    // eigh_topk still takes its dense path (k·4 >= m), so the row measures
+    // the split's O(m²k) assembly against the exact recompose (≈1x, the
+    // honest nano cost); the subspace win shows at (256, 32) = nano's d_ff
+    // at rank 8 · rank_mult 4, and at (512, 64).
+    let shapes: &[(usize, usize)] =
+        if smoke() { &[(64, 16), (256, 32)] } else { &[(64, 16), (256, 32), (512, 64)] };
+    for &(m, k) in shapes {
+        let r = spiked_psd(m, m as u64);
+        let iters = if smoke() {
+            2
+        } else if m >= 512 {
+            3
+        } else {
+            5
+        };
+        let exact = time_stats(1, iters, || {
+            std::hint::black_box(psd_sqrt_pair(&r, qera::linalg::psd::EIG_CLAMP_REL));
+        });
+        let low = time_stats(1, iters, || {
+            std::hint::black_box(psd_sqrt_pair_lowrank(
+                &r,
+                qera::linalg::psd::EIG_CLAMP_REL,
+                k,
+                32,
+            ));
+        });
+        t.row(vec![
+            m.to_string(),
+            k.to_string(),
+            f4(exact.p50_ms),
+            f4(low.p50_ms),
+            f2(exact.p50_ms / low.p50_ms),
+        ]);
+    }
+    t.emit("hot_psd");
+    t
+}
+
+/// f32 `Tensor` kernels: the naive triple loop the blocked kernels replaced
+/// vs serial-blocked vs auto-threaded (the low-rank merge / checkpoint
+/// materialization path; PJRT does the forward/serve matmuls on device).
+fn bench_tensor_matmul() -> Table {
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        let (ad, bd) = (a.data(), b.data());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = ad[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += av * bd[kk * n + j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+    let mut t = Table::new(
+        "tensor_matmul: f32 kernels, naive vs blocked serial vs auto (ms)",
+        &["shape", "naive p50", "serial p50", "auto p50", "speedup vs naive"],
+    );
+    let mut rng = Rng::new(2);
+    let shapes: &[(usize, usize, usize)] = if smoke() {
+        &[(256, 256, 256)]
+    } else {
+        // 64-wide rows are the nano layer shapes; the larger shapes are
+        // merged-weight materialization at small/medium model widths
+        &[(64usize, 64usize, 64usize), (256, 256, 256), (256, 1024, 256), (512, 512, 512)]
+    };
+    for &(m, k, n) in shapes {
+        let a = Tensor::randn(vec![m, k], 1.0, &mut rng);
+        let b = Tensor::randn(vec![k, n], 1.0, &mut rng);
+        let iters = if smoke() { 2 } else { 5 };
+        let nv = time_stats(1, iters, || {
+            std::hint::black_box(naive(&a, &b));
+        });
+        let serial = time_stats(1, iters, || {
+            std::hint::black_box(a.matmul_workers(&b, 1));
+        });
+        let auto = time_stats(1, iters, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        t.row(vec![
+            format!("{m}x{k}x{n}"),
+            f4(nv.p50_ms),
+            f4(serial.p50_ms),
+            f4(auto.p50_ms),
+            f2(nv.p50_ms / auto.p50_ms),
+        ]);
+    }
+    t.emit("hot_tensor_matmul");
     t
 }
 
@@ -91,7 +234,12 @@ fn bench_matmul() -> Table {
         &["shape", "serial p50", "auto p50", "speedup", "GFLOP/s (auto)"],
     );
     let mut rng = Rng::new(1);
-    for (m, k, n) in [(256usize, 256usize, 256usize), (256, 1024, 256), (512, 512, 512)] {
+    let shapes: &[(usize, usize, usize)] = if smoke() {
+        &[(256usize, 256usize, 256usize)]
+    } else {
+        &[(256usize, 256usize, 256usize), (256, 1024, 256), (512, 512, 512)]
+    };
+    for &(m, k, n) in shapes {
         let a = Mat64::from_vec(m, k, (0..m * k).map(|_| rng.normal()).collect());
         let b = Mat64::from_vec(k, n, (0..k * n).map(|_| rng.normal()).collect());
         let serial = time_stats(1, 5, || {
@@ -103,8 +251,8 @@ fn bench_matmul() -> Table {
         let gflops = 2.0 * (m * k * n) as f64 / 1e9 / (auto.p50_ms / 1e3);
         t.row(vec![
             format!("{m}x{k}x{n}"),
-            f2(serial.p50_ms),
-            f2(auto.p50_ms),
+            f4(serial.p50_ms),
+            f4(auto.p50_ms),
             f2(serial.p50_ms / auto.p50_ms),
             f2(gflops),
         ]);
@@ -122,24 +270,28 @@ fn bench_solver() -> Table {
     let ckpt = qera::model::Checkpoint::new(spec.clone(), params);
     let calib = CalibResult::synthetic(&spec, 192, 7);
     let fmt = QFormat::Mxint { bits: 3, block: 32 };
+    // backends as columns (baseline exact first, shipped randomized last)
+    // so the bench gate's last-p50-column median tracks the shipped path
     let mut t = Table::new(
         "per-model solve wall time (12 layers, nano, rank 8)",
-        &["method", "svd", "total ms p50"],
+        &["method", "exact total ms p50", "randomized total ms p50"],
     );
+    let rand = SvdBackend::Randomized {
+        oversample: SvdBackend::DEFAULT_OVERSAMPLE,
+        power_iters: SvdBackend::DEFAULT_POWER_ITERS,
+    };
     for method in [Method::ZeroQuantV2, Method::Lqer, Method::QeraApprox, Method::QeraExact] {
-        for svd in [
-            SvdBackend::Exact,
-            SvdBackend::Randomized {
-                oversample: SvdBackend::DEFAULT_OVERSAMPLE,
-                power_iters: SvdBackend::DEFAULT_POWER_ITERS,
-            },
-        ] {
-            let s = time_stats(1, 3, || {
+        let iters = if smoke() { 2 } else { 3 };
+        let p50_of = |svd: SvdBackend| {
+            let s = time_stats(1, iters, || {
                 let cfg = PipelineConfig::new(method, fmt, 8).with_svd(svd);
                 std::hint::black_box(quantize(&ckpt, &cfg, Some(&calib)).unwrap());
             });
-            t.row(vec![method.name(), svd.name(), f2(s.p50_ms)]);
-        }
+            s.p50_ms
+        };
+        let exact_ms = p50_of(SvdBackend::Exact);
+        let rand_ms = p50_of(rand);
+        t.row(vec![method.name(), f4(exact_ms), f4(rand_ms)]);
     }
     t.emit("hot_solver");
     t
@@ -265,7 +417,9 @@ fn main() -> anyhow::Result<()> {
     // cargo bench passes harness flags like `--bench`; keep only filters
     let args: Vec<String> =
         std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.contains(name));
+    // exact group-name matching: substring filters made "matmul" and
+    // "tensor_matmul" inseparable
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a.as_str() == name);
     println!("== hotpath microbenchmarks ==");
     if want("eigh") {
         bench_eigh();
@@ -277,6 +431,12 @@ fn main() -> anyhow::Result<()> {
     if want("matmul") {
         report.push(("matmul", bench_matmul()));
     }
+    if want("tensor_matmul") || want("tensor") {
+        report.push(("tensor_matmul", bench_tensor_matmul()));
+    }
+    if want("psd") {
+        report.push(("psd", bench_psd()));
+    }
     if want("solver") {
         report.push(("solver", bench_solver()));
     }
@@ -287,6 +447,11 @@ fn main() -> anyhow::Result<()> {
         bench_stats();
     }
     if !report.is_empty() {
+        // record the bench profile so check_bench can refuse to diff a
+        // smoke-mode run against a full-mode baseline (different shapes)
+        let mut mode = Table::new("bench mode", &["mode"]);
+        mode.row(vec![if smoke() { "smoke".into() } else { "full".into() }]);
+        report.push(("_mode", mode));
         let refs: Vec<(&str, &Table)> = report.iter().map(|(k, t)| (*k, t)).collect();
         emit_json_report("BENCH_solver.json", &refs);
     }

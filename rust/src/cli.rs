@@ -112,6 +112,7 @@ commands:
 
 common flags: --artifacts DIR --model NAME --method M --format F --rank K
               --svd auto|exact|randomized[:oversample[:power_iters]]
+              --psd auto|exact|lowrank[:rank_mult[:power_iters]]
               --corpus-tokens N --calib-batches N --eval-batches N --seed S
               --ckpt PATH --out PATH --config FILE.json";
 
@@ -181,7 +182,9 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     };
     let qm = quantize(
         &ckpt,
-        &PipelineConfig::new(cfg.method, cfg.format, cfg.rank).with_svd(cfg.svd),
+        &PipelineConfig::new(cfg.method, cfg.format, cfg.rank)
+            .with_svd(cfg.svd)
+            .with_psd(cfg.psd),
         calib.as_ref(),
     )?;
     let out = args.get_or(
@@ -193,11 +196,12 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     }
     qm.ckpt.save(&out)?;
     println!(
-        "quantized with {} ({}, rank {}, svd {}): effective {:.3} bits, payload {:.2} MB, solver {:.1} ms -> {out}",
+        "quantized with {} ({}, rank {}, svd {}, psd {}): effective {:.3} bits, payload {:.2} MB, solver {:.1} ms -> {out}",
         cfg.method.name(),
         cfg.format.name(),
         cfg.rank,
         cfg.svd.name(),
+        cfg.psd.name(),
         qm.effective_bits(),
         qm.ckpt.payload_bytes() as f64 / 1e6,
         qm.solve_ms_total,
@@ -279,7 +283,9 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     for method in Method::ptq_grid() {
         let qm = quantize(
             &ckpt,
-            &PipelineConfig::new(method, cfg.format, cfg.rank).with_svd(cfg.svd),
+            &PipelineConfig::new(method, cfg.format, cfg.rank)
+                .with_svd(cfg.svd)
+                .with_psd(cfg.psd),
             Some(&calib),
         )?;
         let ppl = crate::eval::perplexity(&reg, &spec, &qm.merged, &val, cfg.eval_batches)?;

@@ -5,7 +5,7 @@
 //! (`qera` CLI) reads these; benches construct them programmatically.
 
 use crate::quant::QFormat;
-use crate::solver::{Method, SvdBackend};
+use crate::solver::{Method, PsdBackend, SvdBackend};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 
@@ -25,6 +25,9 @@ pub struct ExperimentConfig {
     pub rank: usize,
     /// SVD backend for the solver (`auto` picks randomized for small ranks).
     pub svd: SvdBackend,
+    /// PSD backend for QERA-exact's whitening pair (`auto` picks the
+    /// low-rank + diagonal split for small ranks).
+    pub psd: PsdBackend,
     /// Calibration batches.
     pub calib_batches: usize,
     /// Pretraining steps for the subject model.
@@ -47,6 +50,7 @@ impl Default for ExperimentConfig {
             format: QFormat::Mxint { bits: 4, block: 32 },
             rank: 8,
             svd: SvdBackend::Auto,
+            psd: PsdBackend::Auto,
             calib_batches: 16,
             pretrain_steps: 300,
             pretrain_lr: 3e-3,
@@ -79,6 +83,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("svd").and_then(Json::as_str) {
             c.svd = SvdBackend::parse(v)?;
+        }
+        if let Some(v) = j.get("psd").and_then(Json::as_str) {
+            c.psd = PsdBackend::parse(v)?;
         }
         if let Some(v) = j.get("calib_batches").and_then(Json::as_usize) {
             c.calib_batches = v;
@@ -113,6 +120,7 @@ impl ExperimentConfig {
             "format" => self.format = QFormat::parse(value)?,
             "rank" => self.rank = value.parse()?,
             "svd" | "svd-backend" | "svd_backend" => self.svd = SvdBackend::parse(value)?,
+            "psd" | "psd-backend" | "psd_backend" => self.psd = PsdBackend::parse(value)?,
             "calib-batches" | "calib_batches" => self.calib_batches = value.parse()?,
             "pretrain-steps" | "pretrain_steps" => self.pretrain_steps = value.parse()?,
             "pretrain-lr" | "pretrain_lr" => self.pretrain_lr = value.parse()?,
@@ -132,6 +140,7 @@ impl ExperimentConfig {
             ("format", Json::str(self.format.name())),
             ("rank", Json::Num(self.rank as f64)),
             ("svd", Json::str(self.svd.name())),
+            ("psd", Json::str(self.psd.name())),
             ("calib_batches", Json::Num(self.calib_batches as f64)),
             ("pretrain_steps", Json::Num(self.pretrain_steps as f64)),
             ("pretrain_lr", Json::Num(self.pretrain_lr as f64)),
@@ -164,24 +173,30 @@ mod tests {
         c.set("rank", "16").unwrap();
         c.set("format", "mxint3:32").unwrap();
         c.set("svd", "randomized:4:1").unwrap();
+        c.set("psd", "lowrank:2:16").unwrap();
         assert_eq!(c.method, Method::Lqer);
         assert_eq!(c.rank, 16);
         assert!((c.format.avg_bits() - 3.25).abs() < 1e-12);
         assert_eq!(c.svd, SvdBackend::Randomized { oversample: 4, power_iters: 1 });
+        assert_eq!(c.psd, PsdBackend::LowRank { rank_mult: 2, power_iters: 16 });
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("rank", "not-a-number").is_err());
         assert!(c.set("svd", "bogus").is_err());
+        assert!(c.set("psd", "bogus").is_err());
     }
 
     #[test]
     fn svd_backend_roundtrips_through_json() {
         let mut c = ExperimentConfig::default();
         c.svd = SvdBackend::Randomized { oversample: 6, power_iters: 3 };
+        c.psd = PsdBackend::LowRank { rank_mult: 3, power_iters: 24 };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.svd, c.svd);
-        // default when absent
+        assert_eq!(back.psd, c.psd);
+        // defaults when absent
         let j = Json::parse(r#"{"model":"small"}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&j).unwrap().svd, SvdBackend::Auto);
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().psd, PsdBackend::Auto);
     }
 
     #[test]

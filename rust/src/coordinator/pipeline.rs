@@ -7,7 +7,7 @@
 use super::calibrate::CalibResult;
 use crate::model::{Checkpoint, QuantCheckpoint};
 use crate::quant::QFormat;
-use crate::solver::{self, Method, SvdBackend};
+use crate::solver::{self, Method, PsdBackend, SvdBackend};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::pool;
@@ -25,16 +25,34 @@ pub struct PipelineConfig {
     /// SVD backend for the per-layer solves.  `Auto` (the default) takes
     /// the randomized fast path whenever `rank * 4 <= min(m, n)`.
     pub svd: SvdBackend,
+    /// PSD backend for QERA-exact's `(R^{1/2}, R^{-1/2})` pair.  `Auto`
+    /// (the default) takes the low-rank + diagonal split whenever the
+    /// reconstruction rank is small relative to the layer width.
+    pub psd: PsdBackend,
 }
 
 impl PipelineConfig {
     pub fn new(method: Method, fmt: QFormat, rank: usize) -> Self {
-        PipelineConfig { method, fmt, rank, seed: 42, workers: 0, svd: SvdBackend::Auto }
+        PipelineConfig {
+            method,
+            fmt,
+            rank,
+            seed: 42,
+            workers: 0,
+            svd: SvdBackend::Auto,
+            psd: PsdBackend::Auto,
+        }
     }
 
     /// Builder-style override of the SVD backend.
     pub fn with_svd(mut self, svd: SvdBackend) -> Self {
         self.svd = svd;
+        self
+    }
+
+    /// Builder-style override of the PSD backend.
+    pub fn with_psd(mut self, psd: PsdBackend) -> Self {
+        self.psd = psd;
         self
     }
 }
@@ -109,6 +127,7 @@ pub fn quantize(
                 stats,
                 cfg.seed ^ (i as u64) << 8,
                 cfg.svd,
+                cfg.psd,
             )?;
             Ok((site.name.clone(), out))
         });
@@ -134,6 +153,7 @@ pub fn quantize(
         ("rank", Json::Num(cfg.rank as f64)),
         ("seed", Json::Num(cfg.seed as f64)),
         ("svd", Json::str(cfg.svd.name())),
+        ("psd", Json::str(cfg.psd.name())),
     ]);
     let qckpt = QuantCheckpoint::from_solved(ckpt, cfg.fmt, &solved, meta);
     let merged = qckpt.materialize_merged();
@@ -267,6 +287,22 @@ mod tests {
         assert_eq!(
             qm.ckpt.meta.get("svd").and_then(crate::util::json::Json::as_str),
             Some("randomized:4:1")
+        );
+        assert_eq!(
+            qm.ckpt.meta.get("psd").and_then(crate::util::json::Json::as_str),
+            Some("auto")
+        );
+    }
+
+    #[test]
+    fn psd_backend_recorded_in_meta() {
+        let ckpt = nano_ckpt(8);
+        let cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4)
+            .with_psd(PsdBackend::LowRank { rank_mult: 2, power_iters: 16 });
+        let qm = quantize(&ckpt, &cfg, None).unwrap();
+        assert_eq!(
+            qm.ckpt.meta.get("psd").and_then(crate::util::json::Json::as_str),
+            Some("lowrank:2:16")
         );
     }
 }

@@ -309,6 +309,17 @@ const SUBSPACE_OVERSAMPLE: usize = 8;
 /// decomposition when `k` is a large fraction of `n` or when the iteration
 /// fails its residual check, so results are always trustworthy.
 pub fn eigh_topk(a: &Mat64, k: usize) -> EighResult {
+    eigh_topk_iters(a, k, SUBSPACE_MAX_ITERS)
+}
+
+/// [`eigh_topk`] with an explicit cap on the subspace (power) iterations.
+/// The cap bounds how long the iteration keeps trying before giving up —
+/// accuracy is never traded away: a basis that has not converged fails the
+/// residual check and falls back to the dense decomposition, so setting
+/// the cap very low on a slowly-decaying spectrum buys the dense cost *on
+/// top of* the wasted subspace work.  The convergence check usually stops
+/// far before any reasonable cap.
+pub fn eigh_topk_iters(a: &Mat64, k: usize, max_iters: usize) -> EighResult {
     assert_eq!(a.r, a.c, "eigh_topk needs a square matrix");
     let n = a.r;
     let k = k.min(n);
@@ -318,7 +329,7 @@ pub fn eigh_topk(a: &Mat64, k: usize) -> EighResult {
     if n <= TOPK_DENSE_MIN_N || k * 4 >= n {
         return dense_topk(a, k);
     }
-    subspace_topk(a, k).unwrap_or_else(|| dense_topk(a, k))
+    subspace_topk(a, k, max_iters.max(1)).unwrap_or_else(|| dense_topk(a, k))
 }
 
 /// Dense decomposition sliced to the top-k pairs (descending).
@@ -338,7 +349,7 @@ fn dense_topk(a: &Mat64, k: usize) -> EighResult {
 }
 
 /// Blocked subspace iteration; `None` when the residual check fails.
-fn subspace_topk(a: &Mat64, k: usize) -> Option<EighResult> {
+fn subspace_topk(a: &Mat64, k: usize, max_iters: usize) -> Option<EighResult> {
     let n = a.r;
     let l = (k + SUBSPACE_OVERSAMPLE).min(n);
     let mut rng = crate::util::rng::Rng::new(
@@ -347,7 +358,7 @@ fn subspace_topk(a: &Mat64, k: usize) -> Option<EighResult> {
     let mut q = Mat64::from_vec(n, l, (0..n * l).map(|_| rng.normal()).collect());
     q.orthonormalize_cols();
     let mut prev = vec![f64::INFINITY; k];
-    for iter in 0..SUBSPACE_MAX_ITERS {
+    for iter in 0..max_iters {
         let z = a.matmul(&q);
         // Rayleigh quotients diag(Qᵀ A Q) before re-orthonormalizing
         let mut ritz = vec![0.0f64; l];

@@ -18,24 +18,12 @@ use crate::util::pool;
 /// k×j tile of `B`: 64 × 256 f64 ≈ 128 KB per tile.
 const BLOCK_K: usize = 64;
 const BLOCK_J: usize = 256;
-/// Minimum m·k·n multiply volume before fanning out to threads.
-const PAR_MIN_WORK: usize = 1 << 21;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat64 {
     pub r: usize,
     pub c: usize,
     pub a: Vec<f64>,
-}
-
-/// Worker count for a multiply of volume `work` with `m` output rows:
-/// serial when small or when already inside a pool worker.
-fn auto_workers(m: usize, work: usize) -> usize {
-    if work < PAR_MIN_WORK || pool::in_pool_worker() {
-        1
-    } else {
-        pool::default_workers().max(1).min(m.max(1))
-    }
 }
 
 /// Blocked kernel for one output-row panel: `out[i0..i1, :] += A[i0..i1, :] B`
@@ -156,7 +144,7 @@ impl Mat64 {
         let (m, k, n) = (self.r, self.c, other.c);
         let mut out = vec![0.0f64; m * n];
         let w = if workers == 0 {
-            auto_workers(m, m.saturating_mul(k).saturating_mul(n))
+            pool::matmul_workers(m, m.saturating_mul(k).saturating_mul(n))
         } else {
             workers.max(1).min(m.max(1))
         };
@@ -182,7 +170,7 @@ impl Mat64 {
         let (k, m, n) = (self.r, self.c, other.c);
         let mut out = vec![0.0f64; m * n];
         let w = if workers == 0 {
-            auto_workers(m, m.saturating_mul(k).saturating_mul(n))
+            pool::matmul_workers(m, m.saturating_mul(k).saturating_mul(n))
         } else {
             workers.max(1).min(m.max(1))
         };
@@ -213,7 +201,7 @@ impl Mat64 {
         let (m, k, n) = (self.r, self.c, other.r);
         let mut out = vec![0.0f64; m * n];
         let w = if workers == 0 {
-            auto_workers(m, m.saturating_mul(k).saturating_mul(n))
+            pool::matmul_workers(m, m.saturating_mul(k).saturating_mul(n))
         } else {
             workers.max(1).min(m.max(1))
         };

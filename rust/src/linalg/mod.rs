@@ -14,14 +14,18 @@
 //!   side), plus [`svd_randomized`] — the Halko rank-k sketch behind the
 //!   solvers' `SvdBackend::Randomized` fast path;
 //! * [`psd`] — PSD matrix square root / inverse square root with eigenvalue
-//!   clamping (Remark 1's diagonal perturbation).
+//!   clamping (Remark 1's diagonal perturbation), plus the low-rank +
+//!   diagonal split ([`psd::PsdBackend::LowRank`]) behind QERA-exact's
+//!   rank-aware whitening fast path.
 
 pub mod mat;
 pub mod eigh;
 pub mod svd;
 pub mod psd;
 
-pub use eigh::{eigh, eigh_jacobi, eigh_topk, EighResult};
+pub use eigh::{eigh, eigh_jacobi, eigh_topk, eigh_topk_iters, EighResult};
 pub use mat::Mat64;
-pub use psd::{psd_inv_sqrt, psd_sqrt, psd_sqrt_pair};
+pub use psd::{
+    psd_inv_sqrt, psd_sqrt, psd_sqrt_pair, psd_sqrt_pair_lowrank, psd_sqrt_pair_with, PsdBackend,
+};
 pub use svd::{svd_randomized, svd_thin, SvdResult};

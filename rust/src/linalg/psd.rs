@@ -6,12 +6,127 @@
 //! the Schur decomposition coincides with the spectral one, so an `eigh`
 //! based sqrt is the numerically-equivalent (and TPU-friendlier) route.
 //! Following App. A.7, all accumulation upstream of this is f64.
+//!
+//! Two paths produce the `(R^{1/2}, R^{-1/2})` pair QERA-exact consumes:
+//!
+//! * [`psd_sqrt_pair`] — exact, via a full dense eigendecomposition, O(m³);
+//! * [`psd_sqrt_pair_with`] + [`PsdBackend::LowRank`] — a low-rank +
+//!   diagonal split: the top-k eigenpairs from [`eigh_topk_iters`]'s
+//!   subspace iteration (O(m²·k·iters)) model the head of the spectrum
+//!   exactly, and the residual spectrum is modeled as a clamped flat
+//!   diagonal `τ·(I − V Vᵀ)` in the eigenbasis, so both roots assemble in
+//!   O(m²k).  At the ranks the solvers reconstruct, only this head of the
+//!   calibration statistics matters (the LQER observation), which is why
+//!   `Auto` takes the split whenever the rank is small relative to `m`.
 
-use super::eigh::eigh;
+use super::eigh::{eigh, eigh_topk_iters};
 use super::mat::Mat64;
+use anyhow::{bail, Result};
 
 /// Relative eigenvalue floor for the inverse (Remark 1's perturbation).
 pub const EIG_CLAMP_REL: f64 = 1e-10;
+
+/// Backend for the `(R^{1/2}, R^{-1/2})` pair inside QERA-exact.
+///
+/// `Exact` pays the full O(m³) eigendecomposition.  `LowRank` extracts the
+/// top `rank_mult · rank` eigenpairs by subspace iteration (capped at
+/// `power_iters` rounds) and models the residual spectrum as a clamped flat
+/// diagonal — O(m²k) total.  `Auto` (the pipeline default) picks the
+/// low-rank split whenever the subspace path can actually win
+/// (`rank_mult · rank · 4 <= m`, mirroring `svd_randomized`'s guard) and
+/// falls back to exact when the reconstruction rank is too close to `m`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PsdBackend {
+    /// Low-rank split when `DEFAULT_RANK_MULT · rank · 4 <= m`, else exact.
+    Auto,
+    /// Full dense eigendecomposition ([`psd_sqrt_pair`]).
+    Exact,
+    /// Top-`rank_mult · rank` eigenpairs + clamped flat residual diagonal.
+    LowRank { rank_mult: usize, power_iters: usize },
+}
+
+impl Default for PsdBackend {
+    fn default() -> PsdBackend {
+        PsdBackend::Auto
+    }
+}
+
+impl PsdBackend {
+    /// Subspace size as a multiple of the reconstruction rank: the whitening
+    /// only has to be faithful on the directions the rank-k SVD can keep,
+    /// plus headroom for the spectrum it competes against.
+    pub const DEFAULT_RANK_MULT: usize = 4;
+    /// Cap on the subspace iterations (the convergence check usually stops
+    /// far earlier on decaying calibration spectra).
+    pub const DEFAULT_POWER_ITERS: usize = 32;
+
+    /// `auto`, `exact`, or `lowrank[:rank_mult[:power_iters]]`.
+    pub fn parse(s: &str) -> Result<PsdBackend> {
+        let s = s.trim().to_lowercase();
+        match s.as_str() {
+            "auto" => return Ok(PsdBackend::Auto),
+            "exact" | "eigh" | "full" => return Ok(PsdBackend::Exact),
+            _ => {}
+        }
+        let rest = s
+            .strip_prefix("lowrank")
+            .or_else(|| s.strip_prefix("low-rank"))
+            .or_else(|| s.strip_prefix("lr"));
+        let Some(rest) = rest else {
+            bail!("unknown psd backend '{s}' (auto | exact | lowrank[:rank_mult[:power_iters]])")
+        };
+        let mut rank_mult = Self::DEFAULT_RANK_MULT;
+        let mut power_iters = Self::DEFAULT_POWER_ITERS;
+        if !rest.is_empty() {
+            let Some(spec) = rest.strip_prefix(':') else {
+                bail!("bad psd backend spec '{s}'")
+            };
+            let parts: Vec<&str> = spec.split(':').collect();
+            if parts.len() > 2 {
+                bail!("bad psd backend spec '{s}' (at most lowrank:rank_mult:power_iters)");
+            }
+            rank_mult = parts[0].parse()?;
+            if parts.len() == 2 {
+                power_iters = parts[1].parse()?;
+            }
+        }
+        // reject 0 rather than silently bumping at use: the backend name
+        // is recorded in checkpoint meta and must describe the actual run
+        if rank_mult == 0 || power_iters == 0 {
+            bail!("psd backend '{s}': rank_mult and power_iters must be >= 1");
+        }
+        Ok(PsdBackend::LowRank { rank_mult, power_iters })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PsdBackend::Auto => "auto".into(),
+            PsdBackend::Exact => "exact".into(),
+            PsdBackend::LowRank { rank_mult, power_iters } => {
+                format!("lowrank:{rank_mult}:{power_iters}")
+            }
+        }
+    }
+
+    /// Resolve `Auto` for an `m×m` correlation matrix whitening a rank-`rank`
+    /// reconstruction; `Exact` and `LowRank` pass through unchanged.
+    pub fn resolve(self, m: usize, rank: usize) -> PsdBackend {
+        match self {
+            PsdBackend::Auto => {
+                let k = Self::DEFAULT_RANK_MULT * rank;
+                if rank > 0 && k * 4 <= m {
+                    PsdBackend::LowRank {
+                        rank_mult: Self::DEFAULT_RANK_MULT,
+                        power_iters: Self::DEFAULT_POWER_ITERS,
+                    }
+                } else {
+                    PsdBackend::Exact
+                }
+            }
+            b => b,
+        }
+    }
+}
 
 /// `R^{1/2}`: eigenvalues clamped at 0 from below.
 pub fn psd_sqrt(r: &Mat64) -> Mat64 {
@@ -34,6 +149,76 @@ pub fn psd_sqrt_pair(r: &Mat64, eps_rel: f64) -> (Mat64, Mat64) {
     (recompose(&e.v, &sq), recompose(&e.v, &isq))
 }
 
+/// [`psd_sqrt_pair`] with backend dispatch (`Auto` resolved against the
+/// downstream reconstruction rank `rank`; see [`PsdBackend::resolve`]).
+pub fn psd_sqrt_pair_with(
+    r: &Mat64,
+    eps_rel: f64,
+    backend: PsdBackend,
+    rank: usize,
+) -> (Mat64, Mat64) {
+    match backend.resolve(r.r, rank) {
+        PsdBackend::LowRank { rank_mult, power_iters } => {
+            let k = rank_mult.max(1).saturating_mul(rank.max(1));
+            psd_sqrt_pair_lowrank(r, eps_rel, k, power_iters)
+        }
+        _ => psd_sqrt_pair(r, eps_rel),
+    }
+}
+
+/// Low-rank + diagonal split of a PSD `R`:
+///
+/// ```text
+///   R ≈ V diag(w) Vᵀ + τ (I − V Vᵀ)
+/// ```
+///
+/// with `(w, V)` the top-k eigenpairs (subspace iteration) and `τ` the
+/// residual spectrum modeled as a single clamped level — the mean of the
+/// unexplained trace over the `m − k` complement dimensions, clamped to
+/// `[λ_max · eps_rel, w_k]` so the inverse stays bounded (Remark 1) and the
+/// tail never exceeds the smallest captured eigenvalue.  Both roots follow
+/// analytically:
+///
+/// ```text
+///   R^{1/2}  = √τ · I + V diag(√w − √τ) Vᵀ
+///   R^{-1/2} = τ^{-1/2} · I + V diag(w_cl^{-1/2} − τ^{-1/2}) Vᵀ
+/// ```
+///
+/// so `R^{1/2} · R^{-1/2} = I` holds exactly on the complement and up to the
+/// eigenvalue clamp on the head.  Falls back to the exact pair when the
+/// requested `k` is too close to `m` for the split to pay (mirroring
+/// `svd_randomized`'s guard).
+pub fn psd_sqrt_pair_lowrank(
+    r: &Mat64,
+    eps_rel: f64,
+    k: usize,
+    power_iters: usize,
+) -> (Mat64, Mat64) {
+    let m = r.r;
+    assert_eq!(r.r, r.c, "psd_sqrt_pair_lowrank needs a square matrix");
+    if k == 0 || 2 * k >= m {
+        return psd_sqrt_pair(r, eps_rel);
+    }
+    let e = eigh_topk_iters(r, k, power_iters.max(1)); // descending w, v: [m, k]
+    let wmax = e.w.first().copied().unwrap_or(0.0).max(f64::MIN_POSITIVE);
+    let floor = (wmax * eps_rel.max(0.0)).max(f64::MIN_POSITIVE);
+    // flat-tail level: unexplained trace spread over the complement dims
+    let trace: f64 = (0..m).map(|i| r.at(i, i)).sum();
+    let captured: f64 = e.w.iter().map(|&w| w.max(0.0)).sum();
+    let wk = e.w.last().copied().unwrap_or(0.0).max(0.0);
+    let tau = ((trace - captured) / (m - k) as f64).clamp(floor, wk.max(floor));
+    let (st, ist) = (tau.sqrt(), 1.0 / tau.sqrt());
+    let d_sq: Vec<f64> = e.w.iter().map(|&w| w.max(0.0).sqrt() - st).collect();
+    let d_isq: Vec<f64> = e.w.iter().map(|&w| 1.0 / w.max(floor).sqrt() - ist).collect();
+    let mut rh = recompose(&e.v, &d_sq);
+    let mut rhi = recompose(&e.v, &d_isq);
+    for i in 0..m {
+        rh.a[i * m + i] += st;
+        rhi.a[i * m + i] += ist;
+    }
+    (rh, rhi)
+}
+
 fn psd_pow(r: &Mat64, p: f64, eps_rel: f64) -> Mat64 {
     let e = eigh(r);
     let wmax = e.w.iter().cloned().fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
@@ -49,13 +234,16 @@ fn psd_pow(r: &Mat64, p: f64, eps_rel: f64) -> Mat64 {
     recompose(&e.v, &d)
 }
 
-/// V diag(d) Vᵀ.
+/// V diag(d) Vᵀ for V `[m, k]` (square V is the k = m case) — the O(m²k)
+/// assembly step of the low-rank split (the matmul is the blocked/threaded
+/// kernel).
 fn recompose(v: &Mat64, d: &[f64]) -> Mat64 {
-    let n = v.r;
+    let (m, k) = (v.r, v.c);
+    debug_assert_eq!(d.len(), k);
     let mut vd = v.clone();
-    for j in 0..n {
-        for i in 0..n {
-            vd.a[i * n + j] *= d[j];
+    for i in 0..m {
+        for j in 0..k {
+            vd.a[i * k + j] *= d[j];
         }
     }
     vd.matmul_nt(v)
@@ -86,6 +274,25 @@ mod tests {
             g = super::recompose(&e.v, &d);
         }
         g
+    }
+
+    /// Spiked-spectrum PSD: `n_spikes` large eigenvalues decaying from
+    /// `top`, then an exactly flat tail at `tail` — the shape of a
+    /// calibration `R_XX` where a few activation directions dominate.
+    fn spiked_psd(n: usize, n_spikes: usize, top: f64, tail: f64, seed: u64) -> Mat64 {
+        let mut rng = Rng::new(seed);
+        let mut q = Mat64::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+        q.orthonormalize_cols();
+        let d: Vec<f64> = (0..n)
+            .map(|i| {
+                if i < n_spikes {
+                    top * 0.6f64.powi(i as i32)
+                } else {
+                    tail
+                }
+            })
+            .collect();
+        super::recompose(&q, &d)
     }
 
     #[test]
@@ -157,5 +364,143 @@ mod tests {
         for &w in &e.w {
             assert!(w > -1e-9, "{w}");
         }
+    }
+
+    #[test]
+    fn lowrank_pair_roundtrips_identity_on_spiked_spectrum() {
+        // the low-rank split must still satisfy R½ · R^{-½} ≈ I: exact on
+        // the complement by construction, up to eigenpair accuracy on the
+        // head
+        let n = 48;
+        let r = spiked_psd(n, 6, 50.0, 0.5, 17);
+        let (rh, rhi) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 8, 32);
+        let prod = rh.matmul(&rhi);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-5, "({i},{j}) {}", prod.at(i, j));
+            }
+        }
+        assert!(rh.is_symmetric(1e-8));
+        assert!(rhi.is_symmetric(1e-8));
+    }
+
+    #[test]
+    fn lowrank_sqrt_squares_back_on_spiked_spectrum() {
+        // with an exactly flat tail the trace estimate recovers τ, so the
+        // split reproduces R itself (up to subspace-iteration accuracy)
+        let n = 64;
+        let r = spiked_psd(n, 5, 20.0, 0.25, 18);
+        let (rh, _) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 8, 32);
+        let err = rh.matmul(&rh).sub(&r).frob_norm() / r.frob_norm();
+        assert!(err < 1e-3, "{err}");
+    }
+
+    #[test]
+    fn lowrank_close_to_exact_pair_on_decaying_spectrum() {
+        let n = 64;
+        let r = spiked_psd(n, 8, 30.0, 0.4, 19);
+        let (rh_e, rhi_e) = psd_sqrt_pair(&r, EIG_CLAMP_REL);
+        let (rh_l, rhi_l) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 12, 32);
+        let rel_h = rh_l.sub(&rh_e).frob_norm() / rh_e.frob_norm();
+        let rel_i = rhi_l.sub(&rhi_e).frob_norm() / rhi_e.frob_norm();
+        assert!(rel_h < 5e-2, "sqrt rel err {rel_h}");
+        assert!(rel_i < 5e-2, "inv sqrt rel err {rel_i}");
+    }
+
+    #[test]
+    fn lowrank_guard_falls_back_to_exact() {
+        // k too close to m: bit-identical to the exact pair
+        let r = rand_psd(12, 21, 20.0);
+        let (rh_e, rhi_e) = psd_sqrt_pair(&r, EIG_CLAMP_REL);
+        let (rh_l, rhi_l) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 6, 32);
+        assert_eq!(rh_e, rh_l);
+        assert_eq!(rhi_e, rhi_l);
+        // k == 0 likewise
+        let (rh_0, _) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 0, 32);
+        assert_eq!(rh_e, rh_0);
+    }
+
+    #[test]
+    fn lowrank_deterministic() {
+        let r = spiked_psd(40, 4, 10.0, 0.2, 22);
+        let (a1, b1) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 6, 32);
+        let (a2, b2) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 6, 32);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn backend_parse_and_name() {
+        assert_eq!(PsdBackend::parse("auto").unwrap(), PsdBackend::Auto);
+        assert_eq!(PsdBackend::parse("exact").unwrap(), PsdBackend::Exact);
+        assert_eq!(
+            PsdBackend::parse("lowrank").unwrap(),
+            PsdBackend::LowRank {
+                rank_mult: PsdBackend::DEFAULT_RANK_MULT,
+                power_iters: PsdBackend::DEFAULT_POWER_ITERS
+            }
+        );
+        assert_eq!(
+            PsdBackend::parse("lowrank:2:16").unwrap(),
+            PsdBackend::LowRank { rank_mult: 2, power_iters: 16 }
+        );
+        assert_eq!(
+            PsdBackend::parse("lr:3").unwrap(),
+            PsdBackend::LowRank {
+                rank_mult: 3,
+                power_iters: PsdBackend::DEFAULT_POWER_ITERS
+            }
+        );
+        assert!(PsdBackend::parse("nope").is_err());
+        assert!(PsdBackend::parse("lowrank:a").is_err());
+        assert!(PsdBackend::parse("lowrank:1:2:3").is_err());
+        assert!(PsdBackend::parse("lowrank:0").is_err());
+        assert!(PsdBackend::parse("lowrank:2:0").is_err());
+        for b in [
+            PsdBackend::Auto,
+            PsdBackend::Exact,
+            PsdBackend::LowRank { rank_mult: 2, power_iters: 12 },
+        ] {
+            assert_eq!(PsdBackend::parse(&b.name()).unwrap(), b);
+        }
+        assert_eq!(PsdBackend::default(), PsdBackend::Auto);
+    }
+
+    #[test]
+    fn backend_auto_resolution() {
+        // small rank relative to m -> low-rank split
+        assert!(matches!(
+            PsdBackend::Auto.resolve(512, 8),
+            PsdBackend::LowRank { .. }
+        ));
+        // rank too close to m (nano-sized layer) or rank 0 -> exact
+        assert_eq!(PsdBackend::Auto.resolve(64, 8), PsdBackend::Exact);
+        assert_eq!(PsdBackend::Auto.resolve(256, 0), PsdBackend::Exact);
+        // explicit choices pass through
+        assert_eq!(PsdBackend::Exact.resolve(4096, 1), PsdBackend::Exact);
+        let fixed = PsdBackend::LowRank { rank_mult: 2, power_iters: 8 };
+        assert_eq!(fixed.resolve(16, 16), fixed);
+    }
+
+    #[test]
+    fn pair_with_dispatches() {
+        let r = spiked_psd(64, 6, 25.0, 0.3, 23);
+        // Exact backend == the plain pair
+        let (rh_e, rhi_e) = psd_sqrt_pair(&r, EIG_CLAMP_REL);
+        let (rh_b, rhi_b) = psd_sqrt_pair_with(&r, EIG_CLAMP_REL, PsdBackend::Exact, 8);
+        assert_eq!(rh_e, rh_b);
+        assert_eq!(rhi_e, rhi_b);
+        // explicit LowRank == the lowrank pair at k = rank_mult * rank
+        let lr = PsdBackend::LowRank { rank_mult: 2, power_iters: 32 };
+        let (rh_l, rhi_l) = psd_sqrt_pair_with(&r, EIG_CLAMP_REL, lr, 8);
+        let (rh_l2, rhi_l2) = psd_sqrt_pair_lowrank(&r, EIG_CLAMP_REL, 16, 32);
+        assert_eq!(rh_l, rh_l2);
+        assert_eq!(rhi_l, rhi_l2);
+        // Auto on a small matrix resolves to exact
+        let small = rand_psd(16, 24, 10.0);
+        let (rh_a, _) = psd_sqrt_pair_with(&small, EIG_CLAMP_REL, PsdBackend::Auto, 4);
+        let (rh_se, _) = psd_sqrt_pair(&small, EIG_CLAMP_REL);
+        assert_eq!(rh_a, rh_se);
     }
 }

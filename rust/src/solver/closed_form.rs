@@ -12,14 +12,19 @@
 //! `diag(√E[x²])` (QERA-approx, Theorem 2), `R_XX^{1/2}` (QERA-exact,
 //! Theorem 1 — the un-scale is `(R_XX^{1/2})⁻¹` with Remark 1's clamping).
 //!
-//! The truncated SVD itself goes through [`SvdBackend`]: the `*_with`
-//! variants take the backend explicitly (the pipeline threads its
-//! `PipelineConfig::svd` knob down here); the short names keep the exact
-//! path for the theorem-level guarantees the unit tests assert.  Every
+//! The truncated SVD itself goes through [`SvdBackend`], and QERA-exact's
+//! `(R^{1/2}, R^{-1/2})` pair through [`PsdBackend`]: the `*_with` variants
+//! take the backends explicitly (the pipeline threads its
+//! `PipelineConfig::{svd, psd}` knobs down here).  The [`qera_exact`] and
+//! [`qera_approx`] short names default to `Auto`, matching the pipeline,
+//! so callers outside the pipeline get the rank-aware fast paths too
+//! (`Auto` resolves to the exact path on small problems, preserving the
+//! theorem-level guarantees the unit tests assert); [`zeroquant_v2`],
+//! [`lqer`], and `loftq` keep the exact SVD for baseline fidelity.  Every
 //! solve is wall-clock timed into [`SolveOutput::wall_ms`].
 
 use super::types::{LowRank, SolveOutput, SvdBackend};
-use crate::linalg::{psd_sqrt_pair, svd_randomized, svd_thin, Mat64, SvdResult};
+use crate::linalg::{psd_sqrt_pair_with, svd_randomized, svd_thin, Mat64, PsdBackend, SvdResult};
 use crate::quant::QFormat;
 use crate::tensor::Tensor;
 use std::time::Instant;
@@ -104,8 +109,13 @@ pub fn lqer_with(
 }
 
 /// QERA-approx (Theorem 2): `S = diag(√E[x_i²])`.
+///
+/// Behavior change: this wrapper previously hardcoded [`SvdBackend::Exact`];
+/// it now uses [`SvdBackend::Auto`] (the pipeline default), so standalone
+/// callers get the randomized fast path on large layers.  `Auto` still
+/// resolves to the exact SVD whenever `rank * 4 > min(m, n)`.
 pub fn qera_approx(w: &Tensor, fmt: QFormat, rank: usize, mean_sq: &[f64]) -> SolveOutput {
-    qera_approx_with(w, fmt, rank, mean_sq, SvdBackend::Exact)
+    qera_approx_with(w, fmt, rank, mean_sq, SvdBackend::Auto)
 }
 
 /// [`qera_approx`] with an explicit SVD backend.
@@ -121,23 +131,32 @@ pub fn qera_approx_with(
 }
 
 /// QERA-exact (Theorem 1): `C_k = (R½)⁻¹ SVD_k(R½ (W − W~))`.
+///
+/// Behavior change: this wrapper previously hardcoded the exact backends;
+/// it now uses the `Auto` ones (the pipeline defaults), so standalone
+/// callers get both rank-aware fast paths — the randomized SVD and the
+/// low-rank `(R^{1/2}, R^{-1/2})` split.  Both `Auto`s still resolve to
+/// the exact algorithms whenever the rank is too close to the problem
+/// size.
 pub fn qera_exact(w: &Tensor, fmt: QFormat, rank: usize, rxx: &Mat64) -> SolveOutput {
-    qera_exact_with(w, fmt, rank, rxx, SvdBackend::Exact)
+    qera_exact_with(w, fmt, rank, rxx, SvdBackend::Auto, PsdBackend::Auto)
 }
 
-/// [`qera_exact`] with an explicit SVD backend.
+/// [`qera_exact`] with explicit SVD and PSD backends (the pipeline's
+/// `PipelineConfig::{svd, psd}` knobs end up here).
 pub fn qera_exact_with(
     w: &Tensor,
     fmt: QFormat,
     rank: usize,
     rxx: &Mat64,
     svd: SvdBackend,
+    psd: PsdBackend,
 ) -> SolveOutput {
     let t0 = Instant::now();
     let w_dq = fmt.qdq(w);
     let err = Mat64::from_tensor(w).sub(&Mat64::from_tensor(&w_dq));
     assert_eq!(rxx.r, err.r, "R_XX dim != weight rows");
-    let (rh, rh_inv) = psd_sqrt_pair(rxx, crate::linalg::psd::EIG_CLAMP_REL);
+    let (rh, rh_inv) = psd_sqrt_pair_with(rxx, crate::linalg::psd::EIG_CLAMP_REL, psd, rank);
     let scaled = rh.matmul(&err);
     let fac = svd_rank_k(&scaled, rank, svd);
     let (u_k, b) = fac.factors_k(rank);
@@ -275,6 +294,35 @@ mod tests {
         let e_rand = Mat64::from_tensor(&rand.merged()).sub(&wm).frob_norm();
         assert!(e_rand >= e_exact * (1.0 - 1e-9), "rand beat the optimum?");
         assert!(e_rand <= e_exact * 1.05, "{e_rand} vs {e_exact}");
+    }
+
+    #[test]
+    fn lowrank_psd_backend_close_to_exact() {
+        // the flat-tail whitening split must not move the Problem-2
+        // objective: the head of R_XX (which decides the rank-k correction)
+        // is represented exactly, so the gap to the optimum stays tiny
+        let (w, _stats, rxx) = crate::solver::tests::instance(64, 48, 512, 10);
+        let rank = 4;
+        let exact =
+            qera_exact_with(&w, fmt(), rank, &rxx, SvdBackend::Exact, PsdBackend::Exact);
+        let low = qera_exact_with(
+            &w,
+            fmt(),
+            rank,
+            &rxx,
+            SvdBackend::Exact,
+            PsdBackend::LowRank { rank_mult: 4, power_iters: 32 },
+        );
+        let wm = Mat64::from_tensor(&w);
+        let e_exact =
+            expected_output_error(&Mat64::from_tensor(&exact.merged()).sub(&wm), &rxx);
+        let e_low = expected_output_error(&Mat64::from_tensor(&low.merged()).sub(&wm), &rxx);
+        // 1e-6 margin: merged() rounds through f32 (~1e-7 relative noise)
+        assert!(e_low >= e_exact * (1.0 - 1e-6), "low-rank beat the optimum?");
+        assert!(
+            (e_low - e_exact).abs() <= 5e-2 * e_exact.max(1e-12),
+            "{e_low} vs {e_exact}"
+        );
     }
 
     #[test]

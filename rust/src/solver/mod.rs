@@ -28,16 +28,19 @@ pub use loftq::{loftq, loftq_with};
 pub use metrics::{expected_output_error, weight_error};
 pub use types::{LowRank, Method, SolveOutput, SvdBackend};
 
+pub use crate::linalg::PsdBackend;
+
 use crate::quant::QFormat;
 use crate::stats::CalibStats;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
-/// Solve one layer with the given method and the exact SVD backend.
+/// Solve one layer with the given method and the exact SVD/PSD backends
+/// (theorem-grade results, no rank-aware approximations).
 ///
 /// `stats` is required for `lqer` / `qera-*`; `rng_seed` only affects
 /// `qlora` (Gaussian A, zero B).  The pipeline goes through [`solve_with`]
-/// to select the rank-aware randomized fast path.
+/// to select the rank-aware randomized fast paths.
 pub fn solve(
     method: Method,
     w: &Tensor,
@@ -46,11 +49,12 @@ pub fn solve(
     stats: Option<&CalibStats>,
     rng_seed: u64,
 ) -> Result<SolveOutput> {
-    solve_with(method, w, fmt, rank, stats, rng_seed, SvdBackend::Exact)
+    solve_with(method, w, fmt, rank, stats, rng_seed, SvdBackend::Exact, PsdBackend::Exact)
 }
 
-/// [`solve`] with an explicit [`SvdBackend`] (the `PipelineConfig::svd`
-/// knob ends up here).  Every solve reports a real wall time.
+/// [`solve`] with explicit [`SvdBackend`] / [`PsdBackend`] knobs (the
+/// `PipelineConfig::{svd, psd}` knobs end up here; `psd` only affects
+/// `qera-exact`).  Every solve reports a real wall time.
 pub fn solve_with(
     method: Method,
     w: &Tensor,
@@ -59,6 +63,7 @@ pub fn solve_with(
     stats: Option<&CalibStats>,
     rng_seed: u64,
     svd: SvdBackend,
+    psd: PsdBackend,
 ) -> Result<SolveOutput> {
     let t0 = std::time::Instant::now();
     let mut out = match method {
@@ -88,7 +93,7 @@ pub fn solve_with(
                 Some(r) => r,
                 None => bail!("qera-exact needs R_XX tracking enabled in calibration"),
             };
-            qera_exact_with(w, fmt, rank, &rxx, svd)
+            qera_exact_with(w, fmt, rank, &rxx, svd, psd)
         }
     };
     // the closed-form solvers time themselves; cover the dense-only and
@@ -251,10 +256,15 @@ mod tests {
             let st = if method.needs_stats() { Some(&stats) } else { None };
             let e_exact = out_err(
                 &w,
-                &solve_with(method, &w, fmt(), rank, st, 0, SvdBackend::Exact).unwrap(),
+                &solve_with(method, &w, fmt(), rank, st, 0, SvdBackend::Exact, PsdBackend::Exact)
+                    .unwrap(),
                 &rxx,
             );
-            let e_rand = out_err(&w, &solve_with(method, &w, fmt(), rank, st, 0, rand).unwrap(), &rxx);
+            let e_rand = out_err(
+                &w,
+                &solve_with(method, &w, fmt(), rank, st, 0, rand, PsdBackend::Exact).unwrap(),
+                &rxx,
+            );
             assert!(
                 (e_rand - e_exact).abs() <= 5e-2 * e_exact.max(1e-12),
                 "{}: rand {e_rand} vs exact {e_exact}",

@@ -1,9 +1,63 @@
 //! Dense row-major f32 tensors — the coordinator's working representation
 //! for weights and activations (device transfers are f32; the numerically
 //! sensitive solver math happens in `linalg` on f64).
+//!
+//! The 2-D multiply kernels mirror [`crate::linalg::mat::Mat64`]: cache
+//! blocked (k×j tiles of `B` kept L2-resident) and threaded over contiguous
+//! output-row panels via [`crate::util::pool::parallel_chunks_mut`].  Only
+//! *output rows* are partitioned and the per-element k-accumulation runs
+//! strictly ascending, so results are bit-identical for every worker count
+//! (and identical to the previous naive loops) — every consumer of these
+//! kernels inherits the speedup with unchanged numerics.  Today those are
+//! the low-rank merges (`LowRank::to_tensor` behind every quantized
+//! checkpoint materialization and the LoRA merged-weight path); the PJRT
+//! forward/eval/serve executables do their matmuls on device, but any
+//! future CPU fallback for them lands on these kernels too.  Nested
+//! parallelism is suppressed: a multiply running inside a pool worker
+//! stays single-threaded ([`pool::in_pool_worker`]).
 
+use crate::util::pool;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
+
+/// k×j tile of `B`: 64 × 512 f32 ≈ 128 KB per tile.
+const BLOCK_K: usize = 64;
+const BLOCK_J: usize = 512;
+
+/// Blocked kernel for one output-row panel: `out[i0..i1, :] += A[i0..i1, :] B`
+/// with `A` row-major and `out` holding only the panel rows.  Per output
+/// element the k-accumulation runs strictly ascending, so the result is
+/// independent of the panel split and of the tile sizes.
+fn mm_nn_panel_f32(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    out: &mut [f32],
+) {
+    for k0 in (0..k).step_by(BLOCK_K) {
+        let k1 = (k0 + BLOCK_K).min(k);
+        for j0 in (0..n).step_by(BLOCK_J) {
+            let j1 = (j0 + BLOCK_J).min(n);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[(i - i0) * n + j0..(i - i0) * n + j1];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -180,47 +234,68 @@ impl Tensor {
     }
 
     // -------------------------------------------------------------- linalg
-    /// 2-D matmul: self [m,k] x other [k,n] -> [m,n].  Blocked over k for
-    /// locality; f32 accumulation (solver-grade math lives in linalg::Mat64).
+    /// 2-D matmul: self [m,k] x other [k,n] -> [m,n].  Cache-blocked and
+    /// auto-threaded over output-row panels; f32 accumulation in ascending-k
+    /// order, bit-identical for any worker count (solver-grade math lives
+    /// in linalg::Mat64).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
+        self.matmul_workers(other, 0)
+    }
+
+    /// [`Tensor::matmul`] with an explicit worker count (`0` = auto).
+    pub fn matmul_workers(&self, other: &Tensor, workers: usize) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (other.rows(), other.cols());
         assert_eq!(k, k2, "matmul inner dim mismatch");
         let mut out = vec![0.0f32; m * n];
-        // i-k-j loop order: streams `other` rows, writes `out` rows hot.
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        let w = if workers == 0 {
+            pool::matmul_workers(m, m.saturating_mul(k).saturating_mul(n))
+        } else {
+            workers.max(1).min(m.max(1))
+        };
+        let rows_per = (m + w - 1) / w.max(1);
+        pool::parallel_chunks_mut(&mut out, rows_per * n, w, |ci, chunk| {
+            let i0 = ci * rows_per;
+            let i1 = i0 + chunk.len() / n.max(1);
+            mm_nn_panel_f32(&self.data, &other.data, k, n, i0, i1, chunk);
+        });
         Tensor { shape: vec![m, n], data: out }
     }
 
-    /// self [m,k] x otherᵀ where other is [n,k] -> [m,n].
+    /// self [m,k] x otherᵀ where other is [n,k] -> [m,n] (row dot products).
+    /// Auto-threaded over output-row panels, bit-identical per worker count.
     pub fn matmul_t(&self, other: &Tensor) -> Tensor {
+        self.matmul_t_workers(other, 0)
+    }
+
+    /// [`Tensor::matmul_t`] with an explicit worker count (`0` = auto).
+    pub fn matmul_t_workers(&self, other: &Tensor, workers: usize) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (n, k2) = (other.rows(), other.cols());
-        assert_eq!(k, k2);
+        assert_eq!(k, k2, "matmul_t inner dim mismatch");
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &other.data[j * k..(j + 1) * k];
-                let mut s = 0.0f32;
-                for kk in 0..k {
-                    s += arow[kk] * brow[kk];
+        let w = if workers == 0 {
+            pool::matmul_workers(m, m.saturating_mul(k).saturating_mul(n))
+        } else {
+            workers.max(1).min(m.max(1))
+        };
+        let rows_per = (m + w - 1) / w.max(1);
+        pool::parallel_chunks_mut(&mut out, rows_per * n, w, |ci, chunk| {
+            let i0 = ci * rows_per;
+            let rows = chunk.len() / n.max(1);
+            for r in 0..rows {
+                let arow = &self.data[(i0 + r) * k..(i0 + r + 1) * k];
+                let orow = &mut chunk[r * n..(r + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = &other.data[j * k..(j + 1) * k];
+                    let mut s = 0.0f32;
+                    for (x, y) in arow.iter().zip(brow) {
+                        s += x * y;
+                    }
+                    *o = s;
                 }
-                out[i * n + j] = s;
             }
-        }
+        });
         Tensor { shape: vec![m, n], data: out }
     }
 
@@ -275,6 +350,59 @@ mod tests {
         let c2 = a.matmul_t(&b.transpose2d());
         for (x, y) in c1.data().iter().zip(c2.data()) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    /// Naive i-k-j reference with the same ascending-k accumulation order
+    /// as the blocked kernel — results must match bit-for-bit.
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.data[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += av * b.data[kk * n + j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitexact_across_block_boundaries() {
+        // sizes straddle BLOCK_K/BLOCK_J and panel splits
+        let mut rng = Rng::new(7);
+        for (m, k, n) in [(70usize, 131usize, 93usize), (1, 300, 5), (65, 64, 513)] {
+            let a = Tensor::randn(vec![m, k], 1.0, &mut rng);
+            let b = Tensor::randn(vec![k, n], 1.0, &mut rng);
+            let want = naive_matmul(&a, &b);
+            assert_eq!(a.matmul(&b), want, "{m}x{k}x{n}");
+            assert_eq!(a.matmul_workers(&b, 3), want, "{m}x{k}x{n} w=3");
+        }
+    }
+
+    #[test]
+    fn workers_are_bit_identical() {
+        let mut rng = Rng::new(8);
+        let a = Tensor::randn(vec![70, 90], 1.0, &mut rng);
+        let b = Tensor::randn(vec![90, 83], 1.0, &mut rng);
+        let serial = a.matmul_workers(&b, 1);
+        for w in [2, 3, 4, 8] {
+            assert_eq!(serial, a.matmul_workers(&b, w), "matmul w={w}");
+        }
+        let bt = b.transpose2d();
+        let t1 = a.matmul_t_workers(&bt, 1);
+        for w in [2, 4] {
+            assert_eq!(t1, a.matmul_t_workers(&bt, w), "matmul_t w={w}");
+        }
+        // and the threaded transposed kernel agrees with the plain one
+        for (x, y) in serial.data().iter().zip(t1.data()) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
         }
     }
 

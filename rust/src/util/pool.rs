@@ -33,6 +33,23 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Minimum m·k·n multiply volume before a matmul kernel fans out to
+/// threads (shared by the `Mat64` f64 and `Tensor` f32 kernels so the two
+/// families can't silently diverge).
+pub const MATMUL_PAR_MIN_WORK: usize = 1 << 21;
+
+/// Worker count for a multiply of volume `work` with `m` output rows:
+/// serial when the volume is small or when already inside a pool worker
+/// (no nested parallelism), otherwise the default worker count capped at
+/// one row per worker.
+pub fn matmul_workers(m: usize, work: usize) -> usize {
+    if work < MATMUL_PAR_MIN_WORK || in_pool_worker() {
+        1
+    } else {
+        default_workers().max(1).min(m.max(1))
+    }
+}
+
 /// Apply `f(i)` for all `i in 0..n` on a scoped pool and collect results in
 /// index order.  `f` may be called from worker threads concurrently.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
@@ -168,6 +185,18 @@ mod tests {
             chunk[0] += 1;
         });
         assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn matmul_worker_heuristic() {
+        // small volume stays serial; large volume is capped by row count
+        assert_eq!(matmul_workers(64, 1 << 10), 1);
+        assert_eq!(matmul_workers(1, 1 << 30), 1);
+        let w = matmul_workers(1 << 20, 1 << 30);
+        assert!(w >= 1 && w <= default_workers().max(1));
+        // inside a pool worker the kernels must stay single-threaded
+        let inner = parallel_map(4, 2, |_| matmul_workers(1 << 20, 1 << 30));
+        assert!(inner.iter().all(|&w| w == 1));
     }
 
     #[test]

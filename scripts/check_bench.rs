@@ -1,0 +1,171 @@
+//! Bench-regression gate: diff a fresh `BENCH_solver.json` against the
+//! committed `BENCH_baseline.json` and fail on a median regression.
+//!
+//! ```bash
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver
+//! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json
+//! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json 0.25
+//! ```
+//!
+//! For every bench group present in both files, the gate takes the median
+//! over rows of the group's LAST `p50` column — the optimized/shipped
+//! path (every hotpath table orders baseline columns first) — and fails
+//! (exit 1) when the fresh median exceeds the baseline by more than the
+//! threshold (default +25%).  Groups absent from the baseline are
+//! reported but do not fail, and a smoke-vs-full `_mode` mismatch skips
+//! the gate entirely (the two profiles bench different shapes), so the
+//! gate degrades gracefully while a baseline is being (re)established.
+//! The reverse direction is strict: a baseline group missing from the
+//! fresh report counts as a failure (lost coverage, e.g. a narrowed
+//! bench filter), so the gate cannot be silenced by dropping a group.
+//!
+//! Refreshing the baseline (run on the machine class CI uses, smoke mode):
+//!
+//! ```bash
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver
+//! cp BENCH_solver.json BENCH_baseline.json   # then commit it
+//! ```
+
+use qera::util::json::Json;
+
+/// Median over rows of a bench table's shipped-path timing column.
+///
+/// Every hotpath table orders its `p50` columns baseline-first (naive /
+/// exact / thin / serial) and optimized-path last (auto / randomized /
+/// lowrank / the single solver total), so the gate watches only the LAST
+/// `p50` column — pooling in the baseline columns would let a regression
+/// in the shipped kernel hide behind the (slower, stable) reference.
+fn group_median(table: &Json) -> Option<f64> {
+    let headers = table.get("headers")?.as_arr()?;
+    let col = headers
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.as_str().map(|s| s.contains("p50")).unwrap_or(false))
+        .map(|(i, _)| i)
+        .next_back()?;
+    let mut vals: Vec<f64> = Vec::new();
+    for row in table.get("rows")?.as_arr()? {
+        let cells = row.as_arr()?;
+        if let Some(v) = cells.get(col).and_then(Json::as_str) {
+            if let Ok(x) = v.parse::<f64>() {
+                if x.is_finite() && x > 0.0 {
+                    vals.push(x);
+                }
+            }
+        }
+    }
+    if vals.is_empty() {
+        return None;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(vals[vals.len() / 2])
+}
+
+/// Bench profile recorded by the hotpath bench (`_mode` table): smoke and
+/// full mode run different shape sets, so their medians are not comparable.
+fn report_mode(j: &Json) -> Option<&str> {
+    j.get("_mode")?.get("rows")?.as_arr()?.first()?.as_arr()?.first()?.as_str()
+}
+
+fn load(path: &str) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text).ok()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 {
+        eprintln!("usage: check_bench <fresh.json> <baseline.json> [max_regress=0.25]");
+        std::process::exit(2);
+    }
+    let max_regress: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.25);
+
+    let Some(fresh) = load(&args[0]) else {
+        eprintln!("check_bench: cannot read fresh report '{}'", args[0]);
+        std::process::exit(2);
+    };
+    let Some(base) = load(&args[1]) else {
+        println!(
+            "check_bench: no readable baseline at '{}' — gate passes vacuously.",
+            args[1]
+        );
+        println!(
+            "refresh: QERA_BENCH_SMOKE=1 cargo bench --bench hotpath && cp {} {}",
+            args[0], args[1]
+        );
+        return;
+    };
+    let (Some(fresh_obj), Some(base_obj)) = (fresh.as_obj(), base.as_obj()) else {
+        eprintln!("check_bench: reports must be JSON objects of bench tables");
+        std::process::exit(2);
+    };
+
+    if let (Some(f), Some(b)) = (report_mode(&fresh), report_mode(&base)) {
+        if f != b {
+            println!(
+                "check_bench: bench-mode mismatch (fresh={f}, baseline={b}) — medians are \
+                 not comparable; refresh the baseline in the same mode. Gate skipped."
+            );
+            return;
+        }
+    }
+
+    let mut failures = 0usize;
+    let mut compared = 0usize;
+    for (group, table) in fresh_obj {
+        if group.starts_with('_') {
+            continue; // metadata keys in hand-edited baselines
+        }
+        let Some(f_med) = group_median(table) else {
+            println!("  {group:<14} no p50 data in fresh report — skipped");
+            continue;
+        };
+        match base_obj.get(group).and_then(group_median) {
+            Some(b_med) => {
+                compared += 1;
+                let ratio = f_med / b_med.max(f64::MIN_POSITIVE);
+                let verdict = if ratio > 1.0 + max_regress {
+                    failures += 1;
+                    "REGRESSION"
+                } else {
+                    "ok"
+                };
+                println!(
+                    "  {group:<14} baseline {b_med:.3} ms -> fresh {f_med:.3} ms \
+                     ({:+.1}%)  {verdict}",
+                    (ratio - 1.0) * 100.0
+                );
+            }
+            None => {
+                println!(
+                    "  {group:<14} fresh {f_med:.3} ms — no committed baseline \
+                     (refresh to start gating)"
+                );
+            }
+        }
+    }
+    // a baseline group absent from the fresh report means lost coverage
+    // (renamed group, narrowed ci.yml bench filter, group crashed before
+    // emitting) — fail loudly instead of gating on the survivors only
+    for (group, table) in base_obj {
+        if group.starts_with('_') || group_median(table).is_none() {
+            continue;
+        }
+        if !fresh_obj.contains_key(group) {
+            failures += 1;
+            println!(
+                "  {group:<14} in baseline but missing from fresh report \
+                 (bench filter changed?)  REGRESSION"
+            );
+        }
+    }
+    if failures > 0 {
+        eprintln!(
+            "check_bench: {failures} group(s) regressed more than {:.0}% over the baseline \
+             (or lost coverage)",
+            max_regress * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!("check_bench: {compared} group(s) within +{:.0}% of baseline", max_regress * 100.0);
+}
