@@ -9,14 +9,15 @@
 //! `matmul` (blocked/threaded `Mat64` kernels), `tensor_matmul` (naive vs
 //! blocked/threaded f32 `Tensor` kernels — low-rank merges / checkpoint
 //! materialization), `psd` (exact vs low-rank `(R½, R^{-½})` pair),
-//! `solver` (per-layer
-//! solve, exact vs randomized backend), `quant` (quantizer kernels),
-//! `stats` (calibration accumulation), and — when PJRT artifacts are built
-//! — `forward` / `serve`.
+//! `solver` (per-layer solve, exact vs randomized backend), `calib` (the
+//! calibration `R_XX` fold: seed scalar loop vs blocked/threaded SYRK),
+//! `qdq` (quantizer kernels, serial vs pool-threaded block chunks),
+//! `quant` (quantizer throughput), `stats` (calibration accumulation), and
+//! — when PJRT artifacts are built — `forward` / `serve`.
 //!
-//! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` p50s
-//! additionally land in `BENCH_solver.json` (machine-readable, for the
-//! perf trajectory and the CI bench-regression gate).  Set
+//! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` / `calib` /
+//! `qdq` p50s additionally land in `BENCH_solver.json` (machine-readable,
+//! for the perf trajectory and the CI bench-regression gate).  Set
 //! `QERA_BENCH_SMOKE=1` to shrink shapes/iterations — the mode CI uses
 //! when diffing against `BENCH_baseline.json`.
 
@@ -341,6 +342,108 @@ fn bench_forward(reg: &Registry) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Calibration `R_XX` fold: the seed scalar triple loop (per-element
+/// f32→f64 casts) vs the blocked SYRK kernel, serial and auto-threaded —
+/// the streaming-statistics ingest behind every QERA-exact calibration
+/// site.  The m=1024 row is the tentpole target: the threaded fold should
+/// beat the scalar loop by ≥ 4x with 8 workers.
+fn bench_calib() -> Table {
+    let mut t = Table::new(
+        "calib: rxx fold, seed scalar loop vs blocked SYRK (ms)",
+        &["rows x dim", "scalar p50", "blocked serial p50", "blocked auto p50", "speedup"],
+    );
+    let mut rng = Rng::new(7);
+    let shapes: &[(usize, usize)] = if smoke() { &[(128, 256)] } else { &[(256, 256), (256, 1024)] };
+    for &(rows, m) in shapes {
+        let x = Tensor::randn(vec![rows, m], 1.0, &mut rng);
+        let iters = if smoke() {
+            2
+        } else if m >= 1024 {
+            3
+        } else {
+            5
+        };
+        let scalar = time_stats(1, iters, || {
+            // the seed kernel: scalar triple loop, f32→f64 cast per element
+            let data = x.data();
+            let mut sum_abs = vec![0.0f64; m];
+            let mut sum_sq = vec![0.0f64; m];
+            let mut rxx = vec![0.0f64; m * m];
+            for r in 0..rows {
+                let row = &data[r * m..(r + 1) * m];
+                for (i, &v) in row.iter().enumerate() {
+                    let v = v as f64;
+                    sum_abs[i] += v.abs();
+                    sum_sq[i] += v * v;
+                }
+                for i in 0..m {
+                    let vi = row[i] as f64;
+                    if vi == 0.0 {
+                        continue;
+                    }
+                    let dst = &mut rxx[i * m..(i + 1) * m];
+                    for j in i..m {
+                        dst[j] += vi * row[j] as f64;
+                    }
+                }
+            }
+            std::hint::black_box((sum_abs, sum_sq, rxx));
+        });
+        let serial = time_stats(1, iters, || {
+            let mut st = CalibStats::new(m, true);
+            st.update_workers(&x, 1);
+            std::hint::black_box(st);
+        });
+        let auto = time_stats(1, iters, || {
+            let mut st = CalibStats::new(m, true);
+            st.update(&x);
+            std::hint::black_box(st);
+        });
+        t.row(vec![
+            format!("{rows}x{m}"),
+            f3(scalar.p50_ms),
+            f3(serial.p50_ms),
+            f3(auto.p50_ms),
+            f2(scalar.p50_ms / auto.p50_ms),
+        ]);
+    }
+    t.emit("hot_calib");
+    t
+}
+
+/// Quantize-dequantize kernels: serial vs pool-threaded block chunks (the
+/// per-layer `q(W)` inside every solve and checkpoint materialization).
+fn bench_qdq() -> Table {
+    let mut t = Table::new(
+        "qdq: quantizer kernels, serial vs threaded block chunks (ms)",
+        &["format", "serial p50", "auto p50", "speedup"],
+    );
+    let mut rng = Rng::new(8);
+    let (r, c) = if smoke() { (256, 512) } else { (1024, 2048) };
+    let w = Tensor::randn(vec![r, c], 0.05, &mut rng);
+    let iters = if smoke() { 3 } else { 5 };
+    for fmt in [
+        QFormat::Mxint { bits: 4, block: 32 },
+        QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 },
+        QFormat::Fp4 { group: 64 },
+    ] {
+        let serial = time_stats(1, iters, || {
+            std::hint::black_box(fmt.qdq_workers(&w, 1));
+        });
+        let auto = time_stats(1, iters, || {
+            std::hint::black_box(fmt.qdq(&w));
+        });
+        t.row(vec![
+            fmt.name(),
+            f3(serial.p50_ms),
+            f3(auto.p50_ms),
+            f2(serial.p50_ms / auto.p50_ms),
+        ]);
+    }
+    t.emit("hot_qdq");
+    t
+}
+
 fn bench_quant() {
     let mut rng = Rng::new(4);
     let w = Tensor::randn(vec![512, 512], 0.02, &mut rng);
@@ -439,6 +542,12 @@ fn main() -> anyhow::Result<()> {
     }
     if want("solver") {
         report.push(("solver", bench_solver()));
+    }
+    if want("calib") {
+        report.push(("calib", bench_calib()));
+    }
+    if want("qdq") {
+        report.push(("qdq", bench_qdq()));
     }
     if want("quant") {
         bench_quant();

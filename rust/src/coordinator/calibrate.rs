@@ -6,14 +6,33 @@
 //!
 //! Sites sharing inputs share statistics: `wq`/`wk`/`wv` all read the
 //! `attn_in` tap (exactly the grouping the paper uses).
+//!
+//! Tap sites are independent, so each batch's taps fold in parallel on the
+//! worker pool ([`fold_taps`]); every site's accumulation stays internally
+//! serial, so the result is bit-identical to the serial fold for every
+//! worker count.  `QERA_CALIB_WORKERS` sizes the fold independently of the
+//! solver pool's `QERA_THREADS`.
 
 use crate::data::corpus::Corpus;
 use crate::data::batch::lm_batches;
 use crate::model::ModelSpec;
 use crate::runtime::{exec::lm_inputs, Registry};
-use crate::stats::CalibStats;
+use crate::stats::{offdiag_element_ratio_of, offdiag_ratio_of, CalibStats};
 use crate::tensor::Tensor;
+use crate::util::pool;
 use anyhow::{ensure, Result};
+
+/// Fold one batch of per-tap activations into the per-site accumulators.
+/// Sites are embarrassingly parallel (each owns its [`CalibStats`]), so
+/// they fold concurrently on the worker pool; within a site the streaming
+/// fold is serial, so the result is **bit-identical to a serial loop for
+/// every worker count**.  `workers == 0` picks `QERA_CALIB_WORKERS` / the
+/// pool default.
+pub fn fold_taps(stats: &mut [CalibStats], taps: &[Tensor], workers: usize) {
+    assert_eq!(stats.len(), taps.len(), "tap/site count mismatch");
+    let w = if workers == 0 { pool::default_calib_workers() } else { workers };
+    pool::parallel_for_each_mut(stats, w, |i, st| st.update(&taps[i]));
+}
 
 /// Per-tap-site statistics for one model.
 pub struct CalibResult {
@@ -37,42 +56,50 @@ impl CalibResult {
     /// anisotropy real activations show (Figure 5), so the activation-aware
     /// solvers exercise their whole path.
     pub fn synthetic(spec: &ModelSpec, rows: usize, seed: u64) -> CalibResult {
-        let mut stats = Vec::with_capacity(spec.n_taps());
-        for b in 0..spec.n_layers {
-            for (ti, &tap) in crate::model::TAP_SITES.iter().enumerate() {
-                let dim = spec.tap_dim(tap);
-                let mut rng =
-                    crate::util::rng::Rng::new(seed ^ ((b as u64) << 24) ^ ((ti as u64) << 16));
-                let scales: Vec<f64> = (0..dim).map(|_| (rng.normal() * 0.8).exp()).collect();
-                let mut mix = crate::linalg::Mat64::zeros(dim, dim);
-                for i in 0..dim {
-                    for j in 0..dim {
-                        mix.set(i, j, rng.normal() / (dim as f64).sqrt() * scales[j]);
-                    }
+        // taps are seeded independently, so they generate and fold in
+        // parallel; the per-tap RNG streams (and therefore the stats) are
+        // identical to a serial loop in (block, tap) order
+        let n_sites = crate::model::TAP_SITES.len();
+        let stats = pool::parallel_map_auto(spec.n_taps(), |idx| {
+            let (b, ti) = (idx / n_sites, idx % n_sites);
+            let tap = crate::model::TAP_SITES[ti];
+            let dim = spec.tap_dim(tap);
+            let mut rng =
+                crate::util::rng::Rng::new(seed ^ ((b as u64) << 24) ^ ((ti as u64) << 16));
+            let scales: Vec<f64> = (0..dim).map(|_| (rng.normal() * 0.8).exp()).collect();
+            let mut mix = crate::linalg::Mat64::zeros(dim, dim);
+            for i in 0..dim {
+                for j in 0..dim {
+                    mix.set(i, j, rng.normal() / (dim as f64).sqrt() * scales[j]);
                 }
-                let z = crate::linalg::Mat64::from_vec(
-                    rows,
-                    dim,
-                    (0..rows * dim).map(|_| rng.normal()).collect(),
-                );
-                let x = z.matmul(&mix);
-                let mut st = CalibStats::new(dim, true);
-                st.update(&x.to_tensor());
-                stats.push(st);
             }
-        }
+            let z = crate::linalg::Mat64::from_vec(
+                rows,
+                dim,
+                (0..rows * dim).map(|_| rng.normal()).collect(),
+            );
+            let x = z.matmul(&mix);
+            let mut st = CalibStats::new(dim, true);
+            st.update(&x.to_tensor());
+            st
+        });
         CalibResult { spec: spec.clone(), stats, n_sequences: rows }
     }
 
     /// Assumption-1 diagnostic per tap (Figure 5):
-    /// (name, Frobenius-mass ratio, per-element ratio).
+    /// (name, Frobenius-mass ratio, per-element ratio).  `R_XX` is
+    /// materialized once per site and shared by both ratios.
     pub fn offdiag_report(&self) -> Vec<(String, f64, f64)> {
         let mut out = Vec::new();
         for b in 0..self.spec.n_layers {
             for &tap in crate::model::TAP_SITES.iter() {
                 let st = &self.stats[self.spec.tap_index(b, tap)];
-                if let (Some(r), Some(e)) = (st.offdiag_ratio(), st.offdiag_element_ratio()) {
-                    out.push((format!("blk{b}.{tap}"), r, e));
+                if let Some(r) = st.rxx_mean() {
+                    out.push((
+                        format!("blk{b}.{tap}"),
+                        offdiag_ratio_of(&r),
+                        offdiag_element_ratio_of(&r),
+                    ));
                 }
             }
         }
@@ -108,11 +135,10 @@ pub fn calibrate(
             break;
         }
         let outputs = exec.run(&lm_inputs(&tokens, None, &[spec.batch, spec.seq], params))?;
-        // outputs[0] = logits; outputs[1..] = taps in (block, tap) order
+        // outputs[0] = logits; outputs[1..] = taps in (block, tap) order,
+        // folded in parallel (bit-identical to the serial fold)
         ensure!(outputs.len() == 1 + spec.n_taps(), "tap count mismatch");
-        for (t, tap) in outputs[1..].iter().zip(stats.iter_mut()) {
-            tap.update(t);
-        }
+        fold_taps(&mut stats, &outputs[1..], 0);
         n_sequences += spec.batch;
     }
     ensure!(n_sequences > 0, "corpus too small for a single calibration batch");
@@ -135,6 +161,41 @@ mod tests {
     fn registry() -> Option<Registry> {
         let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn parallel_tap_fold_matches_serial_exactly() {
+        // no artifacts needed: fold_taps is the per-batch kernel calibrate()
+        // uses; every site must come out bit-identical to the serial loop
+        // for any worker count, across multiple streamed batches
+        let dims = [8usize, 5, 8, 12, 5, 16];
+        for workers in [1usize, 4, 8] {
+            let mut par: Vec<CalibStats> =
+                dims.iter().map(|&d| CalibStats::new(d, true)).collect();
+            let mut ser: Vec<CalibStats> =
+                dims.iter().map(|&d| CalibStats::new(d, true)).collect();
+            let mut batch_rng = Rng::new(21);
+            for _batch in 0..3 {
+                let taps: Vec<Tensor> = dims
+                    .iter()
+                    .map(|&d| Tensor::randn(vec![7, d], 1.0, &mut batch_rng))
+                    .collect();
+                fold_taps(&mut par, &taps, workers);
+                for (st, t) in ser.iter_mut().zip(&taps) {
+                    st.update(t);
+                }
+            }
+            for (i, (p, s)) in par.iter().zip(&ser).enumerate() {
+                assert_eq!(p.count, s.count, "site {i} w={workers}");
+                assert_eq!(p.sum_abs, s.sum_abs, "site {i} w={workers}");
+                assert_eq!(p.sum_sq, s.sum_sq, "site {i} w={workers}");
+                assert_eq!(
+                    p.rxx.as_ref().unwrap().a,
+                    s.rxx.as_ref().unwrap().a,
+                    "site {i} w={workers}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -9,5 +9,5 @@
 pub mod calibrate;
 pub mod pipeline;
 
-pub use calibrate::{calibrate, CalibResult};
+pub use calibrate::{calibrate, fold_taps, CalibResult};
 pub use pipeline::{quantize, PipelineConfig, QuantizedModel};

@@ -37,20 +37,31 @@ pub fn snap(v: f32) -> f32 {
     FP4_GRID[idx].copysign(v)
 }
 
+/// Quantize-dequantize one group sharing an absmax scale.
+#[inline]
+fn qdq_group(g: &mut [f32]) {
+    let amax = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        return;
+    }
+    let s = amax / 6.0;
+    for v in g.iter_mut() {
+        *v = snap(*v / s) * s;
+    }
+}
+
+/// Quantize-dequantize (groups along the last axis), threaded over group
+/// chunks (groups are independent → bit-identical per worker count).
 pub fn qdq(w: &Tensor, group: usize) -> Tensor {
+    qdq_workers(w, group, 0)
+}
+
+/// [`qdq`] with an explicit worker count (`0` = auto).
+pub fn qdq_workers(w: &Tensor, group: usize, workers: usize) -> Tensor {
     let last = *w.shape().last().expect("fp4 on scalar");
     assert_eq!(last % group, 0);
     let mut out = w.clone();
-    for g in out.data_mut().chunks_exact_mut(group) {
-        let amax = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        if amax == 0.0 {
-            continue;
-        }
-        let s = amax / 6.0;
-        for v in g.iter_mut() {
-            *v = snap(*v / s) * s;
-        }
-    }
+    crate::quant::par_groups(out.data_mut(), group, workers, qdq_group);
     out
 }
 

@@ -9,14 +9,18 @@
 
 use crate::tensor::Tensor;
 
-/// Quantize-dequantize with `iters` rounds of (s, z) refinement.
+/// Quantize-dequantize with `iters` rounds of (s, z) refinement, threaded
+/// over group chunks (groups are independent → bit-identical per count).
 pub fn qdq(w: &Tensor, bits: u8, group: usize, iters: usize) -> Tensor {
+    qdq_workers(w, bits, group, iters, 0)
+}
+
+/// [`qdq`] with an explicit worker count (`0` = auto).
+pub fn qdq_workers(w: &Tensor, bits: u8, group: usize, iters: usize, workers: usize) -> Tensor {
     let last = *w.shape().last().expect("intq on scalar");
     assert_eq!(last % group, 0, "last axis {last} % group {group} != 0");
     let mut out = w.clone();
-    for g in out.data_mut().chunks_exact_mut(group) {
-        qdq_group(g, bits, iters);
-    }
+    crate::quant::par_groups(out.data_mut(), group, workers, |g| qdq_group(g, bits, iters));
     out
 }
 

@@ -12,6 +12,10 @@
 //! * [`fp4`] — E2M1 4-bit float with per-group absmax scale (the QLoRA FP4
 //!   family stand-in).
 //! * [`packing`] — bit packing, so checkpoint sizes reflect true W-bits.
+//!
+//! All quantize-dequantize kernels thread over contiguous runs of their
+//! independent blocks via [`par_groups`] — bit-identical for every worker
+//! count, and automatically serial inside the per-layer solver pool jobs.
 
 pub mod mxint;
 pub mod intq;
@@ -19,7 +23,37 @@ pub mod fp4;
 pub mod packing;
 
 use crate::tensor::Tensor;
+use crate::util::pool;
 use anyhow::{bail, Result};
+
+/// Apply `f` to every independent `group`-sized chunk of `data`, threading
+/// over contiguous runs of groups via the worker pool (`workers == 0` =
+/// auto; serial for small tensors or inside pool workers — the per-layer
+/// solver jobs already quantize on the pool).  Groups are transformed
+/// independently by the same scalar code, so the output is **bit-identical
+/// for every worker count**.  Shared by all three quantizer families
+/// (`mxint` / `intq` / `fp4`) so their threading can't diverge.
+pub fn par_groups<F>(data: &mut [f32], group: usize, workers: usize, f: F)
+where
+    F: Fn(&mut [f32]) + Sync,
+{
+    let group = group.max(1);
+    let n_groups = data.len() / group;
+    let base = if workers == 0 { pool::quant_workers(data.len()) } else { workers.max(1) };
+    let w = base.min(n_groups.max(1));
+    if w <= 1 {
+        for g in data.chunks_exact_mut(group) {
+            f(g);
+        }
+        return;
+    }
+    let groups_per = (n_groups + w - 1) / w;
+    pool::parallel_chunks_mut(data, groups_per * group, w, |_, chunk| {
+        for g in chunk.chunks_exact_mut(group) {
+            f(g);
+        }
+    });
+}
 
 /// A quantization format specification.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -80,14 +114,21 @@ impl QFormat {
     }
 
     /// Quantize-dequantize a tensor; groups run along the last axis.
+    /// Threads over block chunks via [`par_groups`] (auto worker count).
     pub fn qdq(&self, w: &Tensor) -> Tensor {
+        self.qdq_workers(w, 0)
+    }
+
+    /// [`QFormat::qdq`] with an explicit worker count (`0` = auto).  Blocks
+    /// are independent, so results are bit-identical for any count.
+    pub fn qdq_workers(&self, w: &Tensor, workers: usize) -> Tensor {
         match self {
             QFormat::None => w.clone(),
-            QFormat::Mxint { bits, block } => mxint::qdq(w, *bits, *block),
+            QFormat::Mxint { bits, block } => mxint::qdq_workers(w, *bits, *block, workers),
             QFormat::IntAffine { bits, group, refine_iters } => {
-                intq::qdq(w, *bits, *group, *refine_iters)
+                intq::qdq_workers(w, *bits, *group, *refine_iters, workers)
             }
-            QFormat::Fp4 { group } => fp4::qdq(w, *group),
+            QFormat::Fp4 { group } => fp4::qdq_workers(w, *group, workers),
         }
     }
 
@@ -145,5 +186,48 @@ mod tests {
         let mut rng = Rng::new(1);
         let w = Tensor::randn(vec![4, 32], 1.0, &mut rng);
         assert_eq!(QFormat::None.qdq(&w), w);
+    }
+
+    #[test]
+    fn threaded_qdq_bit_identical_across_worker_counts() {
+        let mut rng = Rng::new(2);
+        // 48 groups of 32/64/16: enough to straddle chunk boundaries for
+        // every worker count below
+        let w = Tensor::randn(vec![24, 64], 0.05, &mut rng);
+        for fmt in [
+            QFormat::Mxint { bits: 4, block: 32 },
+            QFormat::Mxint { bits: 2, block: 16 },
+            QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 },
+            QFormat::Fp4 { group: 64 },
+        ] {
+            let serial = fmt.qdq_workers(&w, 1);
+            for workers in [2usize, 4, 8] {
+                assert_eq!(serial, fmt.qdq_workers(&w, workers), "{} w={workers}", fmt.name());
+            }
+            // and the auto path (whatever count it picks) agrees too
+            assert_eq!(serial, fmt.qdq(&w), "{} auto", fmt.name());
+        }
+    }
+
+    #[test]
+    fn par_groups_covers_ragged_group_counts() {
+        // group counts that don't divide evenly across workers
+        for (len, group, workers) in [(7 * 16, 16usize, 3usize), (5 * 8, 8, 4), (64, 64, 8)] {
+            let mut data: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let mut want = data.clone();
+            for g in want.chunks_exact_mut(group) {
+                let s: f32 = g.iter().sum();
+                for v in g.iter_mut() {
+                    *v += s;
+                }
+            }
+            par_groups(&mut data, group, workers, |g| {
+                let s: f32 = g.iter().sum();
+                for v in g.iter_mut() {
+                    *v += s;
+                }
+            });
+            assert_eq!(data, want, "len={len} group={group} w={workers}");
+        }
     }
 }

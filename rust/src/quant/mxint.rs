@@ -35,15 +35,19 @@ pub fn qdq_group(group: &mut [f32], bits: u8) {
     }
 }
 
-/// Quantize-dequantize a tensor (groups along the last axis).
+/// Quantize-dequantize a tensor (groups along the last axis), threaded
+/// over block chunks (blocks are independent → bit-identical per count).
 pub fn qdq(w: &Tensor, bits: u8, block: usize) -> Tensor {
+    qdq_workers(w, bits, block, 0)
+}
+
+/// [`qdq`] with an explicit worker count (`0` = auto).
+pub fn qdq_workers(w: &Tensor, bits: u8, block: usize, workers: usize) -> Tensor {
     assert!(bits >= 2, "mxint bits >= 2");
     let last = *w.shape().last().expect("mxint on scalar");
     assert_eq!(last % block, 0, "last axis {last} not divisible by block {block}");
     let mut out = w.clone();
-    for group in out.data_mut().chunks_exact_mut(block) {
-        qdq_group(group, bits);
-    }
+    crate::quant::par_groups(out.data_mut(), block, workers, |group| qdq_group(group, bits));
     out
 }
 

@@ -9,10 +9,43 @@
 //!
 //! The outer products arrive as f32 partials from the L1 `calib_stats`
 //! Pallas kernel or as raw activation taps; folding happens here in f64.
+//!
+//! The raw-tap `Σ xᵀx` fold is a cache-blocked SYRK kernel: each f32 row
+//! panel is converted to f64 once, then upper-triangular output-row bands
+//! (area-balanced, since early rows carry more entries) accumulate j-tiles
+//! with the same blocking shape as the `Mat64` matmuls, threaded over bands
+//! via [`crate::util::pool::parallel_pieces_mut`].  Only *output entries*
+//! are partitioned and the per-entry accumulation runs strictly ascending
+//! in the source-row index, so results are **bit-identical for every worker
+//! count** (and identical to the seed scalar triple loop) — the repo-wide
+//! invariant the pipeline's determinism tests rely on.  `QERA_CALIB_WORKERS`
+//! pins the fold's worker count independently of `QERA_THREADS`.
 
 use crate::linalg::Mat64;
 use crate::tensor::Tensor;
+use crate::util::pool;
 use anyhow::{ensure, Result};
+
+/// Row-panel height for the blocked SYRK fold: the converted f64 panel
+/// (`SYRK_PANEL_ROWS × m`) stays cache-resident while the upper triangle
+/// streams through it.
+const SYRK_PANEL_ROWS: usize = 64;
+/// j-tile width of the SYRK inner loop — the `Mat64` kernels' BLOCK_J shape.
+const SYRK_BLOCK_J: usize = 256;
+
+/// How the `Σ xᵀx` accumulator is laid out.  Explicit — this replaces the
+/// old `frob_norm() == 0.0` triangle-detection heuristic in `rxx_mean`,
+/// which could silently drop data for genuinely sparse statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RxxLayout {
+    /// Raw-tap path: only entries `i <= j` carry data (the strict lower
+    /// triangle is zero); `rxx_mean` mirrors the upper triangle.
+    Upper,
+    /// Partial-fold path: the full (symmetric) matrix carries data, e.g.
+    /// after folding an L1 `calib_stats` kernel partial; `rxx_mean`
+    /// symmetrizes to shed f32 round-trip asymmetry.
+    Full,
+}
 
 /// Per-site accumulator.
 #[derive(Clone, Debug)]
@@ -24,6 +57,158 @@ pub struct CalibStats {
     /// `Σ xᵀx`; optional because QERA-approx / LQER don't need the O(m²)
     /// memory (Table 8's init-time trade-off).
     pub rxx: Option<Mat64>,
+    /// Accumulation layout of `rxx` (see [`RxxLayout`]).
+    pub rxx_layout: RxxLayout,
+}
+
+/// Row-band lengths (in output rows) for an upper-triangular `m×m` fold
+/// split across `w` workers: boundaries chosen so every band owns roughly
+/// the same number of triangle entries — early rows are wider, so equal-row
+/// bands would leave the last workers idle.  The split never affects the
+/// result (each entry is owned by exactly one band and accumulated in a
+/// fixed order); it only balances wall time.
+fn syrk_band_lens(m: usize, w: usize) -> Vec<usize> {
+    let w = w.max(1).min(m.max(1));
+    if w <= 1 {
+        return vec![m];
+    }
+    let total = m * (m + 1) / 2;
+    let target = (total + w - 1) / w;
+    let mut lens = Vec::with_capacity(w);
+    let (mut acc, mut len) = (0usize, 0usize);
+    for i in 0..m {
+        acc += m - i;
+        len += 1;
+        if acc >= target && lens.len() + 1 < w {
+            lens.push(len);
+            acc = 0;
+            len = 0;
+        }
+    }
+    if len > 0 {
+        lens.push(len);
+    }
+    lens
+}
+
+/// One output-row band of the upper-triangular SYRK fold over a converted
+/// f64 panel: `band[(i - i0)·m + j] += Σ_r px[r·m + i] · px[r·m + j]` for
+/// `i0 <= i < i1`, `j >= i`.  j runs in `SYRK_BLOCK_J` tiles aligned to the
+/// global grid, and for each entry the r-accumulation runs strictly
+/// ascending — so the result is independent of the band split and the
+/// tiling, and matches the seed scalar loop bit-for-bit (f32→f64 conversion
+/// is exact, and zero rows are skipped exactly as before).
+fn syrk_upper_band(px: &[f64], pr: usize, m: usize, i0: usize, i1: usize, band: &mut [f64]) {
+    for jt0 in (0..m).step_by(SYRK_BLOCK_J) {
+        let jt1 = (jt0 + SYRK_BLOCK_J).min(m);
+        if jt1 <= i0 {
+            continue;
+        }
+        for r in 0..pr {
+            let xrow = &px[r * m..(r + 1) * m];
+            for i in i0..i1.min(jt1) {
+                let vi = xrow[i];
+                if vi == 0.0 {
+                    continue;
+                }
+                let lo = jt0.max(i);
+                let dst = &mut band[(i - i0) * m + lo..(i - i0) * m + jt1];
+                for (d, &vj) in dst.iter_mut().zip(&xrow[lo..jt1]) {
+                    *d += vi * vj;
+                }
+            }
+        }
+    }
+}
+
+/// Copy the upper triangle into the strict lower triangle (an exact
+/// mirror, no arithmetic) — the `Upper` → [`RxxLayout::Full`] promotion.
+fn mirror_upper(a: &mut Mat64) {
+    let m = a.r;
+    for i in 0..m {
+        for j in (i + 1)..m {
+            a.a[j * m + i] = a.a[i * m + j];
+        }
+    }
+}
+
+/// Add `src`'s upper triangle into both triangles of `dst` (diagonal once):
+/// folding an `Upper`-layout accumulation into a `Full`-layout one.
+fn mirror_add_upper(dst: &mut Mat64, src: &Mat64) {
+    let m = dst.r;
+    for i in 0..m {
+        for j in i..m {
+            let v = src.a[i * m + j];
+            dst.a[i * m + j] += v;
+            if i != j {
+                dst.a[j * m + i] += v;
+            }
+        }
+    }
+}
+
+/// Blocked, threaded `dst += upper(Xᵀ X)` over f32 rows.  Bands own fixed
+/// disjoint output-row ranges; each band converts the row panels to f64
+/// itself (duplicated across bands but O(rows·m) against the fold's
+/// O(rows·m²/2), so it vanishes for the widths that matter).
+fn syrk_upper(dst: &mut Mat64, data: &[f32], rows: usize, m: usize, workers: usize) {
+    let band_rows = syrk_band_lens(m, workers);
+    let mut starts = Vec::with_capacity(band_rows.len());
+    let mut s = 0usize;
+    for &l in &band_rows {
+        starts.push(s);
+        s += l;
+    }
+    let lens: Vec<usize> = band_rows.iter().map(|&l| l * m).collect();
+    pool::parallel_pieces_mut(&mut dst.a, &lens, |pi, band| {
+        let i0 = starts[pi];
+        let i1 = i0 + band_rows[pi];
+        let mut panel = vec![0.0f64; SYRK_PANEL_ROWS.min(rows.max(1)) * m];
+        for p0 in (0..rows).step_by(SYRK_PANEL_ROWS) {
+            let pr = SYRK_PANEL_ROWS.min(rows - p0);
+            for (pv, &sv) in panel[..pr * m].iter_mut().zip(&data[p0 * m..(p0 + pr) * m]) {
+                *pv = sv as f64;
+            }
+            syrk_upper_band(&panel, pr, m, i0, i1, band);
+        }
+    });
+}
+
+/// Per-element Assumption-1 diagnostic on an already-materialized `R_XX`
+/// (Figure 5's "dark pixels"): mean |off-diagonal| element over mean
+/// diagonal element — iid dims give ≈0, perfectly correlated dims ≈1.
+pub fn offdiag_element_ratio_of(r: &Mat64) -> f64 {
+    let m = r.r;
+    if m < 2 {
+        return 0.0;
+    }
+    let mut diag = 0.0f64;
+    let mut off = 0.0f64;
+    for i in 0..m {
+        diag += r.at(i, i).abs();
+        for j in 0..m {
+            if i != j {
+                off += r.at(i, j).abs();
+            }
+        }
+    }
+    let mean_diag = diag / m as f64;
+    let mean_off = off / (m * (m - 1)) as f64;
+    mean_off / mean_diag.max(f64::MIN_POSITIVE)
+}
+
+/// Off-diagonal mass ratio `‖offdiag(R)‖_F / ‖R‖_F` on a materialized
+/// `R_XX` — the Assumption 1 diagnostic behind Figure 5.
+pub fn offdiag_ratio_of(r: &Mat64) -> f64 {
+    let total = r.frob_norm();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let mut diag = 0.0f64;
+    for i in 0..r.r {
+        diag += r.at(i, i) * r.at(i, i);
+    }
+    ((total * total - diag).max(0.0)).sqrt() / total
 }
 
 impl CalibStats {
@@ -34,45 +219,135 @@ impl CalibStats {
             sum_abs: vec![0.0; dim],
             sum_sq: vec![0.0; dim],
             rxx: if track_rxx { Some(Mat64::zeros(dim, dim)) } else { None },
+            rxx_layout: RxxLayout::Upper,
         }
     }
 
-    /// Fold a batch of rows `x` ([rows, dim], any leading shape collapsed).
+    /// Fold a batch of rows `x` ([rows, dim], any leading shape collapsed)
+    /// with an auto-sized worker count (see [`CalibStats::update_workers`]).
     pub fn update(&mut self, x: &Tensor) {
-        let x2 = x.as_2d();
-        assert_eq!(x2.cols(), self.dim, "calib dim mismatch");
-        let rows = x2.rows();
+        self.update_workers(x, 0)
+    }
+
+    /// [`CalibStats::update`] with an explicit worker count (`0` = auto:
+    /// `QERA_CALIB_WORKERS` / pool default, serial for small batches or
+    /// inside pool workers).  **Bit-identical for every worker count** and
+    /// to the pre-blocking scalar loop: threading partitions output rows of
+    /// the upper triangle only, never the per-entry accumulation order.
+    pub fn update_workers(&mut self, x: &Tensor, workers: usize) {
+        let (rows, cols, data) = x.view_2d();
+        assert_eq!(cols, self.dim, "calib dim mismatch");
+        self.update_rows(data, rows, workers);
+    }
+
+    /// Fold `rows` borrowed row-major rows — the zero-copy core of
+    /// [`CalibStats::update_workers`], also handed each shard's row range by
+    /// [`CalibStats::update_sharded`] without duplicating the batch.
+    fn update_rows(&mut self, data: &[f32], rows: usize, workers: usize) {
         let m = self.dim;
-        let data = x2.data();
-        for r in 0..rows {
-            let row = &data[r * m..(r + 1) * m];
-            for (i, &v) in row.iter().enumerate() {
-                let v = v as f64;
-                self.sum_abs[i] += v.abs();
-                self.sum_sq[i] += v * v;
-            }
-        }
+        self.fold_diag(data, rows, workers);
         if let Some(rxx) = &mut self.rxx {
-            // blocked upper-triangular accumulation, mirrored afterwards
-            for r in 0..rows {
-                let row = &data[r * m..(r + 1) * m];
-                for i in 0..m {
-                    let vi = row[i] as f64;
-                    if vi == 0.0 {
-                        continue;
-                    }
-                    let dst = &mut rxx.a[i * m..(i + 1) * m];
-                    for j in i..m {
-                        dst[j] += vi * row[j] as f64;
-                    }
+            let work = rows.saturating_mul(m).saturating_mul(m + 1) / 2;
+            let w = if workers == 0 {
+                pool::calib_workers(m, work)
+            } else {
+                workers.max(1).min(m.max(1))
+            };
+            match self.rxx_layout {
+                RxxLayout::Upper => syrk_upper(rxx, data, rows, m, w),
+                RxxLayout::Full => {
+                    // partials were folded earlier, so the accumulator holds
+                    // a full matrix: fold the batch into a scratch upper
+                    // triangle, then mirror-add to keep both halves in sync
+                    let mut scratch = Mat64::zeros(m, m);
+                    syrk_upper(&mut scratch, data, rows, m, w);
+                    mirror_add_upper(rxx, &scratch);
                 }
             }
         }
         self.count += rows as u64;
     }
 
+    /// `sum_abs` / `sum_sq` accumulation, threaded over channel chunks when
+    /// the batch is large.  Each worker owns a disjoint channel range of the
+    /// *running* accumulators and folds its channels in ascending row order
+    /// — the same additions in the same order as the serial loop, so the
+    /// result is bit-identical for any worker count (a per-batch sub-total
+    /// reduced afterwards would round differently on streamed updates).
+    fn fold_diag(&mut self, data: &[f32], rows: usize, workers: usize) {
+        let m = self.dim;
+        let w = if workers == 0 {
+            pool::diag_workers(m, rows.saturating_mul(m))
+        } else {
+            workers.max(1).min(m.max(1))
+        };
+        if w <= 1 {
+            for r in 0..rows {
+                let row = &data[r * m..(r + 1) * m];
+                for (i, &v) in row.iter().enumerate() {
+                    let v = v as f64;
+                    self.sum_abs[i] += v.abs();
+                    self.sum_sq[i] += v * v;
+                }
+            }
+            return;
+        }
+        let chunk = (m + w - 1) / w;
+        let mut slices: Vec<(usize, &mut [f64], &mut [f64])> = self
+            .sum_abs
+            .chunks_mut(chunk)
+            .zip(self.sum_sq.chunks_mut(chunk))
+            .enumerate()
+            .map(|(ci, (abs_chunk, sq_chunk))| (ci * chunk, abs_chunk, sq_chunk))
+            .collect();
+        pool::parallel_for_each_mut(&mut slices, w, |_, (c0, abs_chunk, sq_chunk)| {
+            for r in 0..rows {
+                let row = &data[r * m + *c0..r * m + *c0 + abs_chunk.len()];
+                for (k, &v) in row.iter().enumerate() {
+                    let v = v as f64;
+                    abs_chunk[k] += v.abs();
+                    sq_chunk[k] += v * v;
+                }
+            }
+        });
+    }
+
+    /// Sharded fold: split the batch into `shards` contiguous row shards,
+    /// accumulate each into its own per-worker [`CalibStats`] on the pool,
+    /// then reduce with [`CalibStats::merge`] in fixed shard order.
+    /// Deterministic for a fixed shard count, but the f64 reduction order
+    /// differs from the streaming fold — use [`CalibStats::update`] when
+    /// bit-identity with the streaming fold matters (it is also threaded).
+    pub fn update_sharded(&mut self, x: &Tensor, shards: usize) {
+        let (rows, cols, data) = x.view_2d();
+        assert_eq!(cols, self.dim, "calib dim mismatch");
+        let m = self.dim;
+        let shards = shards.max(1).min(rows.max(1));
+        if shards <= 1 {
+            self.update(x);
+            return;
+        }
+        let track = self.rxx.is_some();
+        let rows_per = (rows + shards - 1) / shards;
+        let parts: Vec<CalibStats> = pool::parallel_map(shards, shards, |si| {
+            let r0 = (si * rows_per).min(rows);
+            let r1 = ((si + 1) * rows_per).min(rows);
+            let mut st = CalibStats::new(m, track);
+            if r0 < r1 {
+                st.update_rows(&data[r0 * m..r1 * m], r1 - r0, 0);
+            }
+            st
+        });
+        for p in &parts {
+            self.merge(p);
+        }
+    }
+
     /// Fold pre-reduced f32 partials (from the L1 `calib_stats` kernel):
-    /// `sumsq[m]`, `sumabs[m]`, `rxx[m,m]`, over `rows` source rows.
+    /// `sumsq[m]`, `sumabs[m]`, `rxx[m,m]` (a **full** symmetric matrix),
+    /// over `rows` source rows.  Switches the accumulator to the
+    /// [`RxxLayout::Full`] layout, mirroring any raw-tap upper-triangular
+    /// data already present (an exact copy, not arithmetic).
     pub fn update_partial(
         &mut self,
         sumsq: &[f32],
@@ -87,6 +362,10 @@ impl CalibStats {
         }
         if let (Some(acc), Some(part)) = (&mut self.rxx, rxx) {
             ensure!(part.len() == self.dim * self.dim, "rxx partial size");
+            if self.rxx_layout == RxxLayout::Upper {
+                mirror_upper(acc);
+                self.rxx_layout = RxxLayout::Full;
+            }
             for (a, &p) in acc.a.iter_mut().zip(part) {
                 *a += p as f64;
             }
@@ -95,7 +374,9 @@ impl CalibStats {
         Ok(())
     }
 
-    /// Merge another accumulator (parallel calibration shards).
+    /// Merge another accumulator (parallel calibration shards).  Layouts are
+    /// reconciled explicitly: merging a `Full` accumulator promotes the
+    /// receiver to `Full` (mirroring its upper triangle first — exact).
     pub fn merge(&mut self, other: &CalibStats) {
         assert_eq!(self.dim, other.dim);
         self.count += other.count;
@@ -104,11 +385,21 @@ impl CalibStats {
             self.sum_sq[i] += other.sum_sq[i];
         }
         match (&mut self.rxx, &other.rxx) {
-            (Some(a), Some(b)) => {
-                for (x, y) in a.a.iter_mut().zip(&b.a) {
-                    *x += y;
+            (Some(a), Some(b)) => match (self.rxx_layout, other.rxx_layout) {
+                (RxxLayout::Upper, RxxLayout::Upper) | (RxxLayout::Full, RxxLayout::Full) => {
+                    for (x, y) in a.a.iter_mut().zip(&b.a) {
+                        *x += y;
+                    }
                 }
-            }
+                (RxxLayout::Upper, RxxLayout::Full) => {
+                    mirror_upper(a);
+                    self.rxx_layout = RxxLayout::Full;
+                    for (x, y) in a.a.iter_mut().zip(&b.a) {
+                        *x += y;
+                    }
+                }
+                (RxxLayout::Full, RxxLayout::Upper) => mirror_add_upper(a, b),
+            },
             (None, None) => {}
             _ => panic!("merging stats with mismatched rxx tracking"),
         }
@@ -126,67 +417,49 @@ impl CalibStats {
         self.sum_sq.iter().map(|&s| s / n).collect()
     }
 
-    /// `R_XX = E[xᵀx]`, symmetrized (only the upper triangle is accumulated
-    /// on the row-tap path).
+    /// `R_XX = E[xᵀx]`, symmetric.  The accumulation layout is explicit
+    /// ([`RxxLayout`]): the raw-tap path mirrors its upper triangle, the
+    /// partial-fold path symmetrizes the full matrix — no data-dependent
+    /// triangle guessing.  Materializes an m×m matrix; callers that need
+    /// several diagnostics should materialize once and use the
+    /// [`offdiag_ratio_of`] / [`offdiag_element_ratio_of`] helpers.
     pub fn rxx_mean(&self) -> Option<Mat64> {
         let rxx = self.rxx.as_ref()?;
         let n = self.count.max(1) as f64;
         let m = self.dim;
-        let mut out = Mat64::zeros(m, m);
-        for i in 0..m {
-            for j in i..m {
-                let v = rxx.at(i, j) / n;
-                out.set(i, j, v);
-                out.set(j, i, v);
+        match self.rxx_layout {
+            RxxLayout::Upper => {
+                let mut out = Mat64::zeros(m, m);
+                for i in 0..m {
+                    for j in i..m {
+                        let v = rxx.at(i, j) / n;
+                        out.set(i, j, v);
+                        out.set(j, i, v);
+                    }
+                }
+                Some(out)
+            }
+            RxxLayout::Full => {
+                let mut out = rxx.clone();
+                out.symmetrize();
+                Some(out.scale(1.0 / n))
             }
         }
-        // partial-fold path may have filled the lower triangle instead;
-        // prefer whichever half carries data.
-        if out.frob_norm() == 0.0 {
-            let mut alt = rxx.clone();
-            alt.symmetrize();
-            return Some(alt.scale(1.0 / n));
-        }
-        Some(out)
     }
 
     /// Mean |off-diagonal| element over mean diagonal element of `R_XX` —
-    /// the per-element Assumption-1 diagnostic (Figure 5's "dark pixels"):
-    /// iid dims give ≈0, perfectly correlated dims give ≈1.
+    /// the per-element Assumption-1 diagnostic (Figure 5's "dark pixels").
+    /// Materializes `rxx_mean` internally; see [`offdiag_element_ratio_of`]
+    /// to share one materialization across diagnostics.
     pub fn offdiag_element_ratio(&self) -> Option<f64> {
-        let r = self.rxx_mean()?;
-        let m = r.r;
-        if m < 2 {
-            return Some(0.0);
-        }
-        let mut diag = 0.0f64;
-        let mut off = 0.0f64;
-        for i in 0..m {
-            diag += r.at(i, i).abs();
-            for j in 0..m {
-                if i != j {
-                    off += r.at(i, j).abs();
-                }
-            }
-        }
-        let mean_diag = diag / m as f64;
-        let mean_off = off / (m * (m - 1)) as f64;
-        Some(mean_off / mean_diag.max(f64::MIN_POSITIVE))
+        Some(offdiag_element_ratio_of(&self.rxx_mean()?))
     }
 
     /// Off-diagonal mass ratio `‖offdiag(R)‖_F / ‖R‖_F` — the Assumption 1
-    /// diagnostic behind Figure 5.
+    /// diagnostic behind Figure 5.  Materializes `rxx_mean` internally; see
+    /// [`offdiag_ratio_of`] to share one materialization.
     pub fn offdiag_ratio(&self) -> Option<f64> {
-        let r = self.rxx_mean()?;
-        let total = r.frob_norm();
-        if total == 0.0 {
-            return Some(0.0);
-        }
-        let mut diag = 0.0f64;
-        for i in 0..r.r {
-            diag += r.at(i, i) * r.at(i, i);
-        }
-        Some(((total * total - diag).max(0.0)).sqrt() / total)
+        Some(offdiag_ratio_of(&self.rxx_mean()?))
     }
 }
 
@@ -198,6 +471,35 @@ mod tests {
     fn batch(rows: usize, m: usize, seed: u64) -> Tensor {
         let mut rng = Rng::new(seed);
         Tensor::randn(vec![rows, m], 1.0, &mut rng)
+    }
+
+    /// The seed scalar triple loop (pre-blocking reference): the new kernel
+    /// must reproduce it bit-for-bit at every worker count.
+    fn scalar_reference(x: &Tensor, m: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let (rows, cols, data) = x.view_2d();
+        assert_eq!(cols, m);
+        let mut sum_abs = vec![0.0f64; m];
+        let mut sum_sq = vec![0.0f64; m];
+        let mut rxx = vec![0.0f64; m * m];
+        for r in 0..rows {
+            let row = &data[r * m..(r + 1) * m];
+            for (i, &v) in row.iter().enumerate() {
+                let v = v as f64;
+                sum_abs[i] += v.abs();
+                sum_sq[i] += v * v;
+            }
+            for i in 0..m {
+                let vi = row[i] as f64;
+                if vi == 0.0 {
+                    continue;
+                }
+                let dst = &mut rxx[i * m..(i + 1) * m];
+                for j in i..m {
+                    dst[j] += vi * row[j] as f64;
+                }
+            }
+        }
+        (sum_abs, sum_sq, rxx)
     }
 
     #[test]
@@ -227,40 +529,102 @@ mod tests {
     }
 
     #[test]
+    fn blocked_kernel_matches_scalar_reference_bitexact() {
+        // sizes straddle the panel height and j-tile boundaries
+        for (rows, m, seed) in [(7usize, 5usize, 1u64), (130, 67, 2), (65, 300, 3)] {
+            let x = batch(rows, m, seed);
+            let (want_abs, want_sq, want_rxx) = scalar_reference(&x, m);
+            for w in [1usize, 4, 8] {
+                let mut st = CalibStats::new(m, true);
+                st.update_workers(&x, w);
+                assert_eq!(st.sum_abs, want_abs, "{rows}x{m} w={w}");
+                assert_eq!(st.sum_sq, want_sq, "{rows}x{m} w={w}");
+                assert_eq!(st.rxx.as_ref().unwrap().a, want_rxx, "{rows}x{m} w={w}");
+            }
+        }
+    }
+
+    #[test]
     fn streaming_equals_oneshot() {
         let a = batch(30, 6, 1);
         let b = batch(20, 6, 2);
-        let mut st1 = CalibStats::new(6, true);
-        st1.update(&a);
-        st1.update(&b);
         let mut all = a.data().to_vec();
         all.extend_from_slice(b.data());
         let both = Tensor::new(vec![50, 6], all);
-        let mut st2 = CalibStats::new(6, true);
-        st2.update(&both);
-        assert_eq!(st1.count, st2.count);
-        for i in 0..6 {
-            assert!((st1.sum_sq[i] - st2.sum_sq[i]).abs() < 1e-9);
+        for w in [1usize, 4, 8] {
+            let mut st1 = CalibStats::new(6, true);
+            st1.update_workers(&a, w);
+            st1.update_workers(&b, w);
+            let mut st2 = CalibStats::new(6, true);
+            st2.update_workers(&both, w);
+            assert_eq!(st1.count, st2.count, "w={w}");
+            // streaming and one-shot folds share the per-entry accumulation
+            // order (panels ascend through the rows), so they are bit-equal
+            assert_eq!(st1.sum_sq, st2.sum_sq, "w={w}");
+            assert_eq!(st1.sum_abs, st2.sum_abs, "w={w}");
+            assert_eq!(st1.rxx.as_ref().unwrap().a, st2.rxx.as_ref().unwrap().a, "w={w}");
         }
-        let d = st1.rxx_mean().unwrap().sub(&st2.rxx_mean().unwrap()).frob_norm();
-        assert!(d < 1e-9);
     }
 
     #[test]
     fn merge_equals_sequential() {
         let a = batch(16, 4, 3);
         let b = batch(24, 4, 4);
-        let mut st1 = CalibStats::new(4, true);
-        st1.update(&a);
-        let mut st2 = CalibStats::new(4, true);
-        st2.update(&b);
-        st1.merge(&st2);
+        let fold = |w: usize| {
+            let mut st1 = CalibStats::new(4, true);
+            st1.update_workers(&a, w);
+            let mut st2 = CalibStats::new(4, true);
+            st2.update_workers(&b, w);
+            st1.merge(&st2);
+            st1
+        };
+        let merged = fold(1);
+        // merged matches the sequential fold (the f64 reduction order
+        // differs — one addition of B's total vs B's rows one by one — so
+        // this comparison carries a tolerance, not bit-equality)
         let mut seq = CalibStats::new(4, true);
         seq.update(&a);
         seq.update(&b);
-        assert_eq!(st1.count, seq.count);
-        let d = st1.rxx_mean().unwrap().sub(&seq.rxx_mean().unwrap()).frob_norm();
+        assert_eq!(merged.count, seq.count);
+        for i in 0..4 {
+            assert!((merged.sum_sq[i] - seq.sum_sq[i]).abs() < 1e-12);
+        }
+        let d = merged.rxx_mean().unwrap().sub(&seq.rxx_mean().unwrap()).frob_norm();
         assert!(d < 1e-12);
+        // the threaded kernel itself is bit-identical across worker counts
+        for w in [4usize, 8] {
+            let wn = fold(w);
+            assert_eq!(merged.sum_sq, wn.sum_sq, "w={w}");
+            assert_eq!(merged.sum_abs, wn.sum_abs, "w={w}");
+            assert_eq!(merged.rxx.as_ref().unwrap().a, wn.rxx.as_ref().unwrap().a, "w={w}");
+        }
+    }
+
+    #[test]
+    fn sharded_fold_deterministic_and_close_to_streaming() {
+        let x = batch(64, 12, 9);
+        let mut streaming = CalibStats::new(12, true);
+        streaming.update(&x);
+        for shards in [1usize, 3, 8] {
+            let mut a = CalibStats::new(12, true);
+            a.update_sharded(&x, shards);
+            let mut b = CalibStats::new(12, true);
+            b.update_sharded(&x, shards);
+            assert_eq!(a.count, streaming.count, "shards={shards}");
+            // deterministic for a fixed shard count
+            assert_eq!(a.sum_sq, b.sum_sq, "shards={shards}");
+            assert_eq!(a.rxx.as_ref().unwrap().a, b.rxx.as_ref().unwrap().a, "shards={shards}");
+            // and within f64 reduction noise of the streaming fold
+            let d = a.rxx_mean().unwrap().sub(&streaming.rxx_mean().unwrap()).frob_norm();
+            assert!(d < 1e-9, "shards={shards}: {d}");
+            for i in 0..12 {
+                assert!((a.sum_sq[i] - streaming.sum_sq[i]).abs() < 1e-9, "shards={shards}");
+            }
+        }
+        // a single shard IS the streaming fold
+        let mut one = CalibStats::new(12, true);
+        one.update_sharded(&x, 1);
+        assert_eq!(one.rxx.as_ref().unwrap().a, streaming.rxx.as_ref().unwrap().a);
     }
 
     #[test]
@@ -285,11 +649,116 @@ mod tests {
         }
         let mut part = CalibStats::new(5, true);
         part.update_partial(&sumsq, &sumabs, Some(&rxx), 32).unwrap();
+        assert_eq!(part.rxx_layout, RxxLayout::Full);
         for i in 0..5 {
             assert!((raw.mean_sq()[i] - part.mean_sq()[i]).abs() < 1e-4);
         }
         let d = raw.rxx_mean().unwrap().sub(&part.rxx_mean().unwrap()).frob_norm();
         assert!(d < 1e-3);
+    }
+
+    #[test]
+    fn partial_fold_with_zero_upper_triangle_is_not_misread() {
+        // A genuinely sparse partial: only channel correlations on the
+        // diagonal (strictly-zero upper triangle).  The old frob_norm()==0
+        // triangle-detection heuristic classified layouts by data content;
+        // the explicit flag must keep the fold exact.
+        let m = 4;
+        let sumsq = [4.0f32, 9.0, 0.0, 1.0];
+        let sumabs = [2.0f32, 3.0, 0.0, 1.0];
+        let mut rxx = vec![0.0f32; m * m];
+        rxx[0] = 4.0;
+        rxx[5] = 9.0;
+        rxx[15] = 1.0;
+        let mut st = CalibStats::new(m, true);
+        st.update_partial(&sumsq, &sumabs, Some(&rxx), 2).unwrap();
+        assert_eq!(st.rxx_layout, RxxLayout::Full);
+        let r = st.rxx_mean().unwrap();
+        assert_eq!(r.at(0, 0), 2.0);
+        assert_eq!(r.at(1, 1), 4.5);
+        assert_eq!(r.at(3, 3), 0.5);
+        for i in 0..m {
+            for j in 0..m {
+                if i != j {
+                    assert_eq!(r.at(i, j), 0.0, "({i},{j})");
+                }
+            }
+        }
+        // an all-zero partial (the old heuristic's trigger case) stays exact
+        let zeros = vec![0.0f32; 16];
+        let mut z = CalibStats::new(m, true);
+        z.update_partial(&[0.0; 4], &[0.0; 4], Some(&zeros), 8).unwrap();
+        assert_eq!(z.rxx_mean().unwrap().frob_norm(), 0.0);
+        assert_eq!(z.count, 8);
+    }
+
+    #[test]
+    fn mixed_raw_and_partial_folds_promote_layout() {
+        let m = 3;
+        let x = batch(10, m, 6);
+        // raw fold, then a partial fold on top
+        let mut st = CalibStats::new(m, true);
+        st.update(&x);
+        assert_eq!(st.rxx_layout, RxxLayout::Upper);
+        let part: Vec<f32> = (0..m * m)
+            .map(|idx| {
+                let (i, j) = (idx / m, idx % m);
+                ((i * j) as f32 + 1.0) * 0.5 // symmetric: depends on i·j only
+            })
+            .collect();
+        st.update_partial(&[1.0; 3], &[1.0; 3], Some(&part), 5).unwrap();
+        assert_eq!(st.rxx_layout, RxxLayout::Full);
+        // reference: mirror-free math on the dense sum
+        let xm = Mat64::from_tensor(&x);
+        let mut want = xm.matmul_tn(&xm);
+        for idx in 0..m * m {
+            want.a[idx] += part[idx] as f64;
+        }
+        let got = st.rxx_mean().unwrap();
+        let want = want.scale(1.0 / 15.0);
+        assert!(got.sub(&want).frob_norm() < 1e-6 * want.frob_norm().max(1.0));
+        // raw folds keep working after the promotion (mirror-add path)
+        let y = batch(4, m, 7);
+        let mut after = st.clone();
+        after.update(&y);
+        let ym = Mat64::from_tensor(&y);
+        let want2 = want.scale(15.0).add(&ym.matmul_tn(&ym)).scale(1.0 / 19.0);
+        let got2 = after.rxx_mean().unwrap();
+        assert!(got2.sub(&want2).frob_norm() < 1e-6 * want2.frob_norm().max(1.0));
+        assert!(got2.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn merge_reconciles_layouts() {
+        let m = 3;
+        let x = batch(8, m, 10);
+        let part: Vec<f32> = vec![
+            1.0, 0.5, 0.25, //
+            0.5, 2.0, 0.75, //
+            0.25, 0.75, 3.0,
+        ];
+        let mut upper = CalibStats::new(m, true);
+        upper.update(&x);
+        let mut full = CalibStats::new(m, true);
+        full.update_partial(&[1.0; 3], &[1.0; 3], Some(&part), 4).unwrap();
+        // reference sum
+        let xm = Mat64::from_tensor(&x);
+        let mut want = xm.matmul_tn(&xm);
+        for idx in 0..m * m {
+            want.a[idx] += part[idx] as f64;
+        }
+        let want = want.scale(1.0 / 12.0);
+        // upper <- full
+        let mut a = upper.clone();
+        a.merge(&full);
+        assert_eq!(a.rxx_layout, RxxLayout::Full);
+        assert!(a.rxx_mean().unwrap().sub(&want).frob_norm() < 1e-6);
+        // full <- upper
+        let mut b = full.clone();
+        b.merge(&upper);
+        assert_eq!(b.rxx_layout, RxxLayout::Full);
+        assert!(b.rxx_mean().unwrap().sub(&want).frob_norm() < 1e-6);
+        assert!(b.rxx.as_ref().unwrap().is_symmetric(0.0));
     }
 
     #[test]
@@ -312,6 +781,15 @@ mod tests {
         st2.update(&Tensor::new(vec![500, 16], data));
         let corr = st2.offdiag_ratio().unwrap();
         assert!(corr > 0.9, "{corr}");
+    }
+
+    #[test]
+    fn offdiag_helpers_share_one_materialization() {
+        let mut st = CalibStats::new(8, true);
+        st.update(&batch(128, 8, 12));
+        let r = st.rxx_mean().unwrap();
+        assert_eq!(st.offdiag_ratio().unwrap(), offdiag_ratio_of(&r));
+        assert_eq!(st.offdiag_element_ratio().unwrap(), offdiag_element_ratio_of(&r));
     }
 
     #[test]

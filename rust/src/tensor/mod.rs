@@ -153,6 +153,15 @@ impl Tensor {
         Tensor { shape: vec![rows, last], data: self.data.clone() }
     }
 
+    /// Borrowed 2-D view `(rows, cols, data)` with all leading axes merged —
+    /// the no-copy companion of [`Tensor::as_2d`] for kernels that only need
+    /// the flattened row-major layout (e.g. the calibration SYRK fold, which
+    /// previously cloned every batch just to read it).
+    pub fn view_2d(&self) -> (usize, usize, &[f32]) {
+        let last = *self.shape.last().expect("scalar tensor");
+        (self.data.len() / last, last, &self.data)
+    }
+
     // ---------------------------------------------------------- arithmetic
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
@@ -421,6 +430,16 @@ mod tests {
         let back = flat.reshape(vec![2, 3, 4]).unwrap();
         assert_eq!(back.shape(), &[2, 3, 4]);
         assert!(Tensor::zeros(vec![4]).reshape(vec![3]).is_err());
+    }
+
+    #[test]
+    fn view_2d_matches_as_2d_without_copy() {
+        let t = Tensor::new(vec![2, 3, 4], (0..24).map(|x| x as f32).collect());
+        let (rows, cols, data) = t.view_2d();
+        let flat = t.as_2d();
+        assert_eq!((rows, cols), (flat.rows(), flat.cols()));
+        assert_eq!(data, flat.data());
+        assert!(std::ptr::eq(data.as_ptr(), t.data().as_ptr()));
     }
 
     #[test]

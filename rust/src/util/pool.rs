@@ -50,6 +50,64 @@ pub fn matmul_workers(m: usize, work: usize) -> usize {
     }
 }
 
+/// Worker count for the calibration-statistics fold: `QERA_CALIB_WORKERS`
+/// env if set, else the pool default ([`default_workers`], itself
+/// `QERA_THREADS`-pinnable).  A dedicated knob because calibration runs
+/// concurrently with device execution and may want fewer cores than the
+/// solver jobs.
+pub fn default_calib_workers() -> usize {
+    if let Ok(v) = std::env::var("QERA_CALIB_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    default_workers()
+}
+
+/// Worker count for an upper-triangular SYRK fold with `m` output rows and
+/// `work` total multiply volume: serial when the volume is small or inside
+/// a pool worker (no nested parallelism), otherwise
+/// [`default_calib_workers`] capped at one output row per worker.
+pub fn calib_workers(m: usize, work: usize) -> usize {
+    if work < MATMUL_PAR_MIN_WORK || in_pool_worker() {
+        1
+    } else {
+        default_calib_workers().max(1).min(m.max(1))
+    }
+}
+
+/// Minimum `rows × m` element volume before the diagonal (`sum_abs` /
+/// `sum_sq`) calibration accumulation fans out to channel-chunk threads.
+pub const DIAG_PAR_MIN_ELEMS: usize = 1 << 20;
+
+/// Worker count for the diagonal calibration fold over `n = rows·m`
+/// elements with `m` channels: serial when the volume is small or inside a
+/// pool worker, otherwise [`default_calib_workers`] capped at one channel
+/// per worker.  Lives here with the other fan-out policies so the kernel
+/// families can't silently diverge.
+pub fn diag_workers(m: usize, n: usize) -> usize {
+    if n < DIAG_PAR_MIN_ELEMS || in_pool_worker() {
+        1
+    } else {
+        default_calib_workers().max(1).min(m.max(1))
+    }
+}
+
+/// Minimum element count before a quantize-dequantize kernel fans out
+/// (per-element work is tiny, so only large weights benefit).
+pub const QDQ_PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Worker count for a quantize-dequantize over `n` elements: serial for
+/// small tensors or inside pool workers (the per-layer solver jobs already
+/// quantize on the pool), else the default worker count.
+pub fn quant_workers(n: usize) -> usize {
+    if n < QDQ_PAR_MIN_ELEMS || in_pool_worker() {
+        1
+    } else {
+        default_workers()
+    }
+}
+
 /// Apply `f(i)` for all `i in 0..n` on a scoped pool and collect results in
 /// index order.  `f` may be called from worker threads concurrently.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
@@ -117,6 +175,85 @@ where
             scope.spawn(move || {
                 IN_POOL.with(|c| c.set(true));
                 f(ci, chunk);
+            });
+        }
+    });
+}
+
+/// Split `data` into consecutive pieces of the given element lengths and
+/// run `f(piece_index, piece)` on scoped threads, one per non-empty piece.
+/// Unlike [`parallel_chunks_mut`] the pieces may be *uneven* — the caller
+/// chooses boundaries that balance work (e.g. the upper-triangular SYRK
+/// fold, where early output rows carry more entries than late ones).  The
+/// partition is deterministic, so a kernel that writes only its own piece
+/// produces identical output for every piece layout.
+pub fn parallel_pieces_mut<T, F>(data: &mut [T], lens: &[usize], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(lens.iter().sum::<usize>(), data.len(), "piece lengths must cover data");
+    // carve the disjoint pieces up front (move-out split so each piece
+    // keeps the full input lifetime)
+    let mut pieces: Vec<(usize, &mut [T])> = Vec::with_capacity(lens.len());
+    let mut rest = data;
+    for (pi, &len) in lens.iter().enumerate() {
+        let tmp = rest;
+        let (piece, tail) = tmp.split_at_mut(len);
+        rest = tail;
+        if len > 0 {
+            pieces.push((pi, piece));
+        }
+    }
+    debug_assert!(rest.is_empty());
+    if pieces.len() <= 1 {
+        // run inline on the caller thread
+        for (pi, piece) in pieces {
+            f(pi, piece);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (pi, piece) in pieces {
+            scope.spawn(move || {
+                IN_POOL.with(|c| c.set(true));
+                f(pi, piece);
+            });
+        }
+    });
+}
+
+/// Run `f(index, &mut item)` over every item on a scoped worker pool with a
+/// shared work queue (at most `workers` threads).  Each item is handed to
+/// exactly one worker, so per-item state mutates without locks and —
+/// because each item's update is internally serial — the result per item is
+/// identical for every worker count.  Used for the embarrassingly parallel
+/// per-tap calibration fold.
+pub fn parallel_for_each_mut<T, F>(items: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let queue = Mutex::new(items.iter_mut().enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let next = queue.lock().unwrap().next();
+                    match next {
+                        Some((i, item)) => f(i, item),
+                        None => break,
+                    }
+                }
             });
         }
     });
@@ -207,6 +344,74 @@ mod tests {
         // serial path runs inline on the caller thread
         let inline = parallel_map(1, 1, |_| in_pool_worker());
         assert!(!inline[0]);
+    }
+
+    #[test]
+    fn pieces_cover_everything_uneven() {
+        // uneven boundaries, including an empty piece in the middle
+        let mut v = vec![0usize; 10];
+        parallel_pieces_mut(&mut v, &[4, 0, 1, 5], |pi, piece| {
+            for x in piece.iter_mut() {
+                *x = pi + 1;
+            }
+        });
+        assert_eq!(v, vec![1, 1, 1, 1, 3, 4, 4, 4, 4, 4]);
+        // single non-empty piece runs inline (no pool marker)
+        let mut one = vec![0u8; 3];
+        parallel_pieces_mut(&mut one, &[3], |_, piece| {
+            assert!(!in_pool_worker());
+            piece[0] = 9;
+        });
+        assert_eq!(one[0], 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pieces_must_cover_data() {
+        let mut v = vec![0u8; 4];
+        parallel_pieces_mut(&mut v, &[1, 2], |_, _| {});
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_item_once() {
+        for workers in [1usize, 3, 8] {
+            let mut items: Vec<u64> = (0..57).collect();
+            parallel_for_each_mut(&mut items, workers, |i, v| {
+                assert_eq!(*v, i as u64);
+                *v += 100;
+            });
+            assert_eq!(items, (100..157).collect::<Vec<u64>>());
+        }
+        let mut empty: Vec<u8> = vec![];
+        parallel_for_each_mut(&mut empty, 4, |_, _| panic!("no items expected"));
+    }
+
+    #[test]
+    fn for_each_mut_workers_are_marked_in_pool() {
+        let mut flags = vec![false; 8];
+        parallel_for_each_mut(&mut flags, 4, |_, b| *b = in_pool_worker());
+        assert!(flags.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn quant_and_calib_worker_heuristics() {
+        assert_eq!(quant_workers(16), 1);
+        assert!(quant_workers(1 << 20) >= 1);
+        assert_eq!(calib_workers(64, 1 << 10), 1);
+        assert_eq!(diag_workers(64, 1 << 10), 1);
+        let w = calib_workers(1 << 20, 1 << 30);
+        assert!(w >= 1 && w <= default_calib_workers().max(1));
+        let d = diag_workers(1 << 20, 1 << 30);
+        assert!(d >= 1 && d <= default_calib_workers().max(1));
+        // nested: all stay serial inside pool workers
+        let inner = parallel_map(4, 2, |_| {
+            (
+                quant_workers(1 << 20),
+                calib_workers(1 << 20, 1 << 30),
+                diag_workers(1 << 20, 1 << 30),
+            )
+        });
+        assert!(inner.iter().all(|&(q, c, d)| q == 1 && c == 1 && d == 1));
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! committed `BENCH_baseline.json` and fail on a median regression.
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json 0.25
 //! ```
@@ -22,9 +22,13 @@
 //! Refreshing the baseline (run on the machine class CI uses, smoke mode):
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq
 //! cp BENCH_solver.json BENCH_baseline.json   # then commit it
 //! ```
+//!
+//! Gated groups (each table's last `p50` column is the shipped path):
+//! `svd`, `matmul`, `tensor_matmul`, `psd`, `solver`, `calib` (blocked
+//! threaded rxx fold), `qdq` (threaded quantizer kernels).
 
 use qera::util::json::Json;
 
@@ -90,7 +94,8 @@ fn main() {
             args[1]
         );
         println!(
-            "refresh: QERA_BENCH_SMOKE=1 cargo bench --bench hotpath && cp {} {}",
+            "refresh: QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul \
+             svd matmul solver calib qdq && cp {} {}",
             args[0], args[1]
         );
         return;
