@@ -10,6 +10,7 @@
 //! QERA_MODEL=small cargo run --release --example ptq_pipeline
 //! QERA_SVD=exact cargo run --release --example ptq_pipeline   # force exact SVD
 //! QERA_PSD=exact cargo run --release --example ptq_pipeline   # force exact R½
+//! QERA_BUDGET_BITS=3.5 cargo run --release --example ptq_pipeline  # budget target
 //! ```
 //!
 //! `QERA_SVD` selects the solver SVD backend (`auto` | `exact` |
@@ -21,6 +22,7 @@
 //! layer width.
 
 use qera::bench_util::Table;
+use qera::budget::{allocate, profile, AllocStrategy, BudgetPlan, CandidateGrid};
 use qera::coordinator::{calibrate, quantize, PipelineConfig};
 use qera::data::Corpus;
 use qera::eval::{perplexity, win_rate};
@@ -110,5 +112,39 @@ fn main() -> anyhow::Result<()> {
         }
         table.emit(&format!("ptq_{}_{}", spec.name, fmt.name().replace(':', "_")));
     }
+
+    // Budget-aware mixed precision: profile every layer x (format, rank)
+    // cell once, then compare allocation strategies at one matched
+    // bits/weight budget (`QERA_BUDGET_BITS`, default 3.75) — including
+    // the plan-artifact round trip the CLI exposes as --plan-out/--plan-in.
+    let budget_bits: f64 = std::env::var("QERA_BUDGET_BITS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3.75);
+    let base = PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 4, block: 32 }, 8)
+        .with_svd(svd)
+        .with_psd(psd);
+    let prof = profile(&ckpt, &calib, &base, &CandidateGrid::default_ptq())?;
+    let mut table = Table::new(
+        &format!("budget plans {} @ {budget_bits:.2} bits/weight", spec.name),
+        &["strategy", "achieved-bits", "pred-error", "ppl", "delta"],
+    );
+    for strat in AllocStrategy::all() {
+        let plan = allocate(&prof, budget_bits, strat)?;
+        let path = format!("results/{}-plan-{}.json", spec.name, strat.name());
+        plan.save(&path)?;
+        let reloaded = BudgetPlan::load(&path)?;
+        assert_eq!(reloaded, plan, "plan artifact round-trip");
+        let qm = quantize(&ckpt, &base.clone().with_plan(reloaded), Some(&calib))?;
+        let ppl = perplexity(&reg, &spec, &qm.merged, &val, 8)?;
+        table.row(vec![
+            strat.name(),
+            format!("{:.3}", qm.effective_bits()),
+            format!("{:.4}", plan.total_error),
+            format!("{ppl:.3}"),
+            format!("{:+.3}", ppl - bf16_ppl),
+        ]);
+    }
+    table.emit(&format!("budget_{}", spec.name));
     Ok(())
 }

@@ -12,14 +12,16 @@
 //! `solver` (per-layer solve, exact vs randomized backend), `calib` (the
 //! calibration `R_XX` fold: seed scalar loop vs blocked/threaded SYRK),
 //! `qdq` (quantizer kernels, serial vs pool-threaded block chunks),
-//! `quant` (quantizer throughput), `stats` (calibration accumulation), and
-//! — when PJRT artifacts are built — `forward` / `serve`.
+//! `budget` (the mixed-precision planner: layer × cell profiling +
+//! allocator sweeps), `quant` (quantizer throughput), `stats` (calibration
+//! accumulation), and — when PJRT artifacts are built — `forward` /
+//! `serve`.
 //!
 //! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` / `calib` /
-//! `qdq` p50s additionally land in `BENCH_solver.json` (machine-readable,
-//! for the perf trajectory and the CI bench-regression gate).  Set
-//! `QERA_BENCH_SMOKE=1` to shrink shapes/iterations — the mode CI uses
-//! when diffing against `BENCH_baseline.json`.
+//! `qdq` / `budget` p50s additionally land in `BENCH_solver.json`
+//! (machine-readable, for the perf trajectory and the CI bench-regression
+//! gate).  Set `QERA_BENCH_SMOKE=1` to shrink shapes/iterations — the mode
+//! CI uses when diffing against `BENCH_baseline.json`.
 
 use qera::bench_util::{emit_json_report, f2, f3, f4, time_stats, Table};
 use qera::coordinator::{quantize, CalibResult, PipelineConfig};
@@ -337,7 +339,12 @@ fn bench_forward(reg: &Registry) -> anyhow::Result<()> {
         std::hint::black_box(exec_lr.run(&inputs).unwrap());
     });
     let toks = (spec.batch * spec.seq) as f64 / (s.p50_ms / 1e3);
-    t.row(vec!["lm_fwd_lr.nano.r8 (A,B separate)".into(), f2(s.p50_ms), f2(s.p95_ms), format!("{toks:.0}")]);
+    t.row(vec![
+        "lm_fwd_lr.nano.r8 (A,B separate)".into(),
+        f2(s.p50_ms),
+        f2(s.p95_ms),
+        format!("{toks:.0}"),
+    ]);
     t.emit("hot_forward");
     Ok(())
 }
@@ -353,7 +360,8 @@ fn bench_calib() -> Table {
         &["rows x dim", "scalar p50", "blocked serial p50", "blocked auto p50", "speedup"],
     );
     let mut rng = Rng::new(7);
-    let shapes: &[(usize, usize)] = if smoke() { &[(128, 256)] } else { &[(256, 256), (256, 1024)] };
+    let shapes: &[(usize, usize)] =
+        if smoke() { &[(128, 256)] } else { &[(256, 256), (256, 1024)] };
     for &(rows, m) in shapes {
         let x = Tensor::randn(vec![rows, m], 1.0, &mut rng);
         let iters = if smoke() {
@@ -411,6 +419,74 @@ fn bench_calib() -> Table {
     t
 }
 
+/// Budget planner hot path: one layer's candidate-grid profiling (the
+/// layer × cell solve loop behind `budget::profile`) and the allocator
+/// sweeps over a 16-layer synthetic model, at widths m ∈ {256, 1024}
+/// (smoke: 256 only).  Column order puts the heavy profile pass last so
+/// the bench gate tracks it.
+fn bench_budget() -> Table {
+    use qera::budget::{allocate, score_layer, AllocStrategy, BudgetProfile, CandidateGrid};
+    let mut t = Table::new(
+        "budget: layer x cell profile + allocator sweeps (ms)",
+        &["m", "alloc greedy p50", "alloc lagrangian p50", "profile p50"],
+    );
+    let grid = CandidateGrid::default_ptq();
+    let shapes: &[usize] = if smoke() { &[256] } else { &[256, 1024] };
+    for &m in shapes {
+        let mut rng = Rng::new(m as u64);
+        let w = Tensor::randn(vec![m, m], 1.0, &mut rng);
+        let rows = 2 * m.min(256);
+        let x = Tensor::randn(vec![rows, m], 1.0, &mut rng);
+        let mut stats = CalibStats::new(m, true);
+        stats.update(&x);
+        let rxx = stats.rxx_mean().unwrap();
+        let cfg = PipelineConfig::new(
+            Method::QeraExact,
+            QFormat::Mxint { bits: 4, block: 32 },
+            8,
+        );
+        let iters = if smoke() {
+            2
+        } else if m >= 1024 {
+            2
+        } else {
+            3
+        };
+        let prof_s = time_stats(1, iters, || {
+            std::hint::black_box(score_layer("bench", &w, &stats, &rxx, &cfg, 0, &grid).unwrap());
+        });
+        // allocator timing over a 16-layer model built from the scored layer
+        let layer = score_layer("bench", &w, &stats, &rxx, &cfg, 0, &grid).unwrap();
+        let prof = BudgetProfile {
+            model: "bench".into(),
+            method: Method::QeraExact,
+            svd: SvdBackend::Auto,
+            psd: qera::solver::PsdBackend::Auto,
+            layers: (0..16)
+                .map(|i| {
+                    let mut l = layer.clone();
+                    l.name = format!("blk{i:02}.w");
+                    l
+                })
+                .collect(),
+        };
+        let greedy_s = time_stats(1, iters * 10, || {
+            std::hint::black_box(allocate(&prof, 3.75, AllocStrategy::Greedy).unwrap());
+        });
+        let lag_s = time_stats(1, iters * 10, || {
+            std::hint::black_box(allocate(&prof, 3.75, AllocStrategy::Lagrangian).unwrap());
+        });
+        t.row(vec![
+            m.to_string(),
+            f4(greedy_s.p50_ms),
+            f4(lag_s.p50_ms),
+            f3(prof_s.p50_ms),
+        ]);
+    }
+    t.emit("hot_budget");
+    t
+}
+
 /// Quantize-dequantize kernels: serial vs pool-threaded block chunks (the
 /// per-layer `q(W)` inside every solve and checkpoint materialization).
 fn bench_qdq() -> Table {
@@ -447,7 +523,8 @@ fn bench_qdq() -> Table {
 fn bench_quant() {
     let mut rng = Rng::new(4);
     let w = Tensor::randn(vec![512, 512], 0.02, &mut rng);
-    let mut t = Table::new("quantizer throughput (512x512 weight)", &["format", "p50 ms", "Melem/s"]);
+    let mut t =
+        Table::new("quantizer throughput (512x512 weight)", &["format", "p50 ms", "Melem/s"]);
     for fmt in [
         QFormat::Mxint { bits: 4, block: 32 },
         QFormat::Mxint { bits: 2, block: 16 },
@@ -457,7 +534,11 @@ fn bench_quant() {
         let s = time_stats(1, 10, || {
             std::hint::black_box(fmt.qdq(&w));
         });
-        t.row(vec![fmt.name(), f3(s.p50_ms), format!("{:.1}", 512.0 * 512.0 / 1e6 / (s.p50_ms / 1e3))]);
+        t.row(vec![
+            fmt.name(),
+            f3(s.p50_ms),
+            format!("{:.1}", 512.0 * 512.0 / 1e6 / (s.p50_ms / 1e3)),
+        ]);
     }
     t.emit("hot_quant");
 }
@@ -491,7 +572,7 @@ fn bench_serve(reg: &Registry) -> anyhow::Result<()> {
     let params = qera::model::init::init_params(&spec, &mut rng);
     let mut t = Table::new(
         "serving throughput vs batching window",
-        &["max-wait ms", "requests", "tok/s", "mean batch"],
+        &["max-wait ms", "requests", "tok/s", "mean batch", "queue p50/p95 ms", "total p50/p95 ms"],
     );
     for wait_ms in [0u64, 10, 50] {
         let server = qera::serve::Server::start(
@@ -510,6 +591,8 @@ fn bench_serve(reg: &Registry) -> anyhow::Result<()> {
             stats.requests.to_string(),
             format!("{:.1}", stats.throughput_tok_s()),
             f2(stats.mean_batch()),
+            format!("{}/{}", f2(stats.queue_p50_ms()), f2(stats.queue_p95_ms())),
+            format!("{}/{}", f2(stats.total_p50_ms()), f2(stats.total_p95_ms())),
         ]);
     }
     t.emit("hot_serve");
@@ -548,6 +631,9 @@ fn main() -> anyhow::Result<()> {
     }
     if want("qdq") {
         report.push(("qdq", bench_qdq()));
+    }
+    if want("budget") {
+        report.push(("budget", bench_budget()));
     }
     if want("quant") {
         bench_quant();

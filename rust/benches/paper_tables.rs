@@ -45,5 +45,9 @@ fn main() -> anyhow::Result<()> {
         let sweep_model = if reg.specs.contains_key("small") { "small" } else { model };
         qpeft::table9(&reg, sweep_model, scale)?.emit("table9_10");
     }
+    if want("budget") {
+        // beyond the paper: per-layer budget plans at matched bits/weight
+        qera::experiments::budget::budget_sweep(&reg, model, scale)?.emit("budget_sweep");
+    }
     Ok(())
 }

@@ -1,0 +1,638 @@
+//! Budget allocation over a [`BudgetProfile`] and the [`BudgetPlan`]
+//! artifact.
+//!
+//! The constraint is the paper's memory accounting: average bits per
+//! quantizable weight element, low-rank overhead included.  Three
+//! strategies:
+//!
+//! * [`AllocStrategy::Uniform`] — every layer gets the same grid cell; the
+//!   best single cell that fits the budget (the repo's pre-PR-5 behavior,
+//!   as a controlled baseline).
+//! * [`AllocStrategy::Greedy`] — steepest-descent cell upgrades: start at
+//!   the cheapest per-layer cells and repeatedly buy the upgrade with the
+//!   best predicted Δerror per Δbit until the next-best upgrade no longer
+//!   fits.  The upgrade trajectory never looks at the budget, so the plan
+//!   for budget `B` is a prefix of the plan for any `B' > B` — predicted
+//!   error is monotone non-increasing in the budget by construction.
+//!   Tie-breaks are deterministic (layer name, then cell index).
+//! * [`AllocStrategy::Lagrangian`] — sweep a multiplier λ over the
+//!   per-layer `(bits, error)` frontiers: each layer picks
+//!   `argmin error + λ · bits·elems`, which touches exactly the lower
+//!   convex hull of its frontier; bisection on λ meets the budget.
+//!
+//! All three are pure f64 arithmetic over the profile — deterministic for
+//! a fixed profile, independent of worker counts.
+
+use super::profile::BudgetProfile;
+use crate::quant::QFormat;
+use crate::solver::{Method, PsdBackend, SvdBackend};
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// Allocation strategy for [`allocate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocStrategy {
+    Uniform,
+    Greedy,
+    Lagrangian,
+}
+
+impl AllocStrategy {
+    /// `uniform`, `greedy`, or `lagrangian`.
+    pub fn parse(s: &str) -> Result<AllocStrategy> {
+        match s.trim().to_lowercase().as_str() {
+            "uniform" => Ok(AllocStrategy::Uniform),
+            "greedy" => Ok(AllocStrategy::Greedy),
+            "lagrangian" | "lagrange" => Ok(AllocStrategy::Lagrangian),
+            other => bail!("unknown alloc strategy '{other}' (uniform | greedy | lagrangian)"),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AllocStrategy::Uniform => "uniform".into(),
+            AllocStrategy::Greedy => "greedy".into(),
+            AllocStrategy::Lagrangian => "lagrangian".into(),
+        }
+    }
+
+    /// All strategies, in comparison-table order.
+    pub fn all() -> [AllocStrategy; 3] {
+        [AllocStrategy::Uniform, AllocStrategy::Greedy, AllocStrategy::Lagrangian]
+    }
+}
+
+impl Default for AllocStrategy {
+    fn default() -> AllocStrategy {
+        AllocStrategy::Greedy
+    }
+}
+
+/// One layer's assignment in a plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanCell {
+    pub fmt: QFormat,
+    pub rank: usize,
+    /// Bits/weight this cell costs on its layer (incl. low-rank overhead).
+    pub bits: f64,
+    /// Predicted expected output error for this layer under the cell.
+    pub predicted_error: f64,
+}
+
+/// A serializable per-layer `(format, rank)` plan.
+///
+/// The JSON form round-trips exactly (`from_json(to_json(p)) == p`): the
+/// serializer prints shortest-round-trip f64s, so `--plan-out` followed by
+/// `--plan-in` reproduces the identical quantized checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetPlan {
+    pub model: String,
+    /// Reconstruction method for rank > 0 cells (rank 0 executes `w-only`).
+    pub method: Method,
+    /// Solver backends the profile was scored with; plan execution uses
+    /// these (not the session's flags) so a saved plan replays the exact
+    /// same solves regardless of later `--svd`/`--psd` settings.
+    pub svd: SvdBackend,
+    pub psd: PsdBackend,
+    pub strategy: AllocStrategy,
+    /// The requested budget (average bits/weight).
+    pub budget_bits: f64,
+    /// What the allocation actually spends (≤ `budget_bits`).
+    pub achieved_bits: f64,
+    /// Total predicted output error across layers.
+    pub total_error: f64,
+    pub layers: BTreeMap<String, PlanCell>,
+}
+
+impl BudgetPlan {
+    /// Assignment for a layer, if present.
+    pub fn cell(&self, name: &str) -> Option<&PlanCell> {
+        self.layers.get(name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: BTreeMap<String, Json> = self
+            .layers
+            .iter()
+            .map(|(k, c)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("format", Json::str(c.fmt.name())),
+                        ("rank", Json::Num(c.rank as f64)),
+                        ("bits", Json::Num(c.bits)),
+                        ("predicted_error", Json::Num(c.predicted_error)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("method", Json::str(self.method.name())),
+            ("svd", Json::str(self.svd.name())),
+            ("psd", Json::str(self.psd.name())),
+            ("strategy", Json::str(self.strategy.name())),
+            ("budget_bits", Json::Num(self.budget_bits)),
+            ("achieved_bits", Json::Num(self.achieved_bits)),
+            ("total_error", Json::Num(self.total_error)),
+            ("layers", Json::Obj(layers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BudgetPlan> {
+        let lobj = j.get("layers").and_then(Json::as_obj).context("missing 'layers' object")?;
+        let mut layers = BTreeMap::new();
+        for (k, v) in lobj {
+            layers.insert(
+                k.clone(),
+                PlanCell {
+                    fmt: QFormat::parse(v.req_str("format")?)?,
+                    rank: v.req_usize("rank")?,
+                    bits: v.req_f64("bits")?,
+                    predicted_error: v.req_f64("predicted_error")?,
+                },
+            );
+        }
+        Ok(BudgetPlan {
+            model: j.req_str("model")?.to_string(),
+            method: Method::parse(j.req_str("method")?)?,
+            svd: SvdBackend::parse(j.req_str("svd")?)?,
+            psd: PsdBackend::parse(j.req_str("psd")?)?,
+            strategy: AllocStrategy::parse(j.req_str("strategy")?)?,
+            budget_bits: j.req_f64("budget_bits")?,
+            achieved_bits: j.req_f64("achieved_bits")?,
+            total_error: j.req_f64("total_error")?,
+            layers,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::util::fsio::write_atomic(path.as_ref(), self.to_json().dump_pretty().as_bytes())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<BudgetPlan> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading plan {}", path.as_ref().display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Choose one cell per layer minimizing total predicted output error under
+/// the budget (average bits/weight over all quantizable elements).
+pub fn allocate(
+    prof: &BudgetProfile,
+    budget_bits: f64,
+    strategy: AllocStrategy,
+) -> Result<BudgetPlan> {
+    ensure!(!prof.layers.is_empty(), "empty profile");
+    ensure!(
+        budget_bits.is_finite() && budget_bits > 0.0,
+        "budget must be a positive bits/weight value, got {budget_bits}"
+    );
+    for lp in &prof.layers {
+        ensure!(!lp.cells.is_empty(), "layer '{}' has no candidate cells", lp.name);
+    }
+    let pick = match strategy {
+        AllocStrategy::Uniform => alloc_uniform(prof, budget_bits)?,
+        AllocStrategy::Greedy => alloc_greedy(prof, budget_bits)?,
+        AllocStrategy::Lagrangian => alloc_lagrangian(prof, budget_bits)?,
+    };
+
+    let total_elems = prof.total_elems();
+    let mut layers = BTreeMap::new();
+    let mut total_bits = 0.0f64;
+    let mut total_error = 0.0f64;
+    for (lp, &ci) in prof.layers.iter().zip(&pick) {
+        let c = &lp.cells[ci];
+        total_bits += c.bits * lp.elems();
+        total_error += c.error;
+        layers.insert(
+            lp.name.clone(),
+            PlanCell { fmt: c.fmt, rank: c.rank, bits: c.bits, predicted_error: c.error },
+        );
+    }
+    let achieved_bits = total_bits / total_elems;
+    ensure!(
+        achieved_bits <= budget_bits + 1e-9,
+        "{} allocation exceeded the budget: {achieved_bits} > {budget_bits}",
+        strategy.name()
+    );
+    Ok(BudgetPlan {
+        model: prof.model.clone(),
+        method: prof.method,
+        svd: prof.svd,
+        psd: prof.psd,
+        strategy,
+        budget_bits,
+        achieved_bits,
+        total_error,
+        layers,
+    })
+}
+
+/// Same grid cell for every layer: the best single cell that fits.
+fn alloc_uniform(prof: &BudgetProfile, budget_bits: f64) -> Result<Vec<usize>> {
+    let n_cells = prof.layers[0].cells.len();
+    for lp in &prof.layers {
+        ensure!(
+            lp.cells.len() == n_cells,
+            "uniform allocation needs one shared candidate grid (layer '{}')",
+            lp.name
+        );
+        for (a, b) in lp.cells.iter().zip(&prof.layers[0].cells) {
+            ensure!(
+                a.fmt == b.fmt && a.rank == b.rank,
+                "uniform allocation needs one shared candidate grid (layer '{}')",
+                lp.name
+            );
+        }
+    }
+    let total_elems = prof.total_elems();
+    let mut best: Option<(f64, f64, usize)> = None; // (error, bits, cell)
+    for ci in 0..n_cells {
+        let bits: f64 =
+            prof.layers.iter().map(|lp| lp.cells[ci].bits * lp.elems()).sum::<f64>() / total_elems;
+        if bits > budget_bits + 1e-12 {
+            continue;
+        }
+        let err: f64 = prof.layers.iter().map(|lp| lp.cells[ci].error).sum();
+        let better = match best {
+            None => true,
+            Some((be, bb, _)) => (err, bits) < (be, bb),
+        };
+        if better {
+            best = Some((err, bits, ci));
+        }
+    }
+    match best {
+        Some((_, _, ci)) => Ok(vec![ci; prof.layers.len()]),
+        None => bail!(
+            "budget {budget_bits} bits/weight is below the cheapest uniform candidate cell"
+        ),
+    }
+}
+
+/// Cheapest cell per layer (tie: lower error, then cell index).
+fn floor_pick(prof: &BudgetProfile) -> Vec<usize> {
+    prof.layers
+        .iter()
+        .map(|lp| {
+            let mut best = 0usize;
+            for i in 1..lp.cells.len() {
+                let (c, b) = (&lp.cells[i], &lp.cells[best]);
+                if (c.bits, c.error) < (b.bits, b.error) {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Steepest-descent upgrades from the per-layer floor.  The trajectory is
+/// budget-independent; execution stops at the first upgrade that does not
+/// fit, so larger budgets replay a strict superset of the same steps.
+fn alloc_greedy(prof: &BudgetProfile, budget_bits: f64) -> Result<Vec<usize>> {
+    let total_elems = prof.total_elems();
+    let budget_total = budget_bits * total_elems;
+    let eps = 1e-9 * total_elems;
+
+    let mut pick = floor_pick(prof);
+    let used: f64 =
+        pick.iter().zip(&prof.layers).map(|(&ci, lp)| lp.cells[ci].bits * lp.elems()).sum();
+    ensure!(
+        used <= budget_total + eps,
+        "budget {budget_bits} bits/weight is below the cheapest per-layer plan ({:.4})",
+        used / total_elems
+    );
+    greedy_fill(prof, &mut pick, used, budget_total, eps);
+    Ok(pick)
+}
+
+/// Steepest-descent upgrade loop shared by the greedy allocator (from the
+/// floor) and the Lagrangian slack fill (from a hull allocation): apply
+/// the best Δerror/Δbit upgrade until the next-best no longer fits.
+fn greedy_fill(
+    prof: &BudgetProfile,
+    pick: &mut [usize],
+    mut used: f64,
+    budget_total: f64,
+    eps: f64,
+) {
+    loop {
+        // best upgrade across layers: max predicted Δerror per Δ(total bit)
+        let mut cand: Option<(f64, usize, usize, f64)> = None; // (ratio, layer, cell, Δbits)
+        for (li, lp) in prof.layers.iter().enumerate() {
+            let cur = &lp.cells[pick[li]];
+            for (ci, c) in lp.cells.iter().enumerate() {
+                let dbits = (c.bits - cur.bits) * lp.elems();
+                let derr = cur.error - c.error;
+                if dbits <= 0.0 || derr <= 0.0 {
+                    continue;
+                }
+                let ratio = derr / dbits;
+                let better = match &cand {
+                    None => true,
+                    Some((r, bli, bci, _)) => {
+                        ratio > *r
+                            || (ratio == *r
+                                && (lp.name.as_str(), ci)
+                                    < (prof.layers[*bli].name.as_str(), *bci))
+                    }
+                };
+                if better {
+                    cand = Some((ratio, li, ci, dbits));
+                }
+            }
+        }
+        match cand {
+            Some((_, li, ci, dbits)) => {
+                if used + dbits > budget_total + eps {
+                    break; // budget exhausted: keep the feasible prefix
+                }
+                used += dbits;
+                pick[li] = ci;
+            }
+            None => break, // nothing left that reduces error
+        }
+    }
+}
+
+/// Multiplier sweep: each layer picks `argmin error + λ · bits · elems`
+/// (which touches exactly the lower convex hull of its `(bits, error)`
+/// frontier); bisection on λ finds the least-penalized allocation that
+/// fits the budget.  Hull sweeps can leave bit slack when the budget falls
+/// in a gap between hull allocations, so a final greedy fill spends the
+/// remainder on the best-ratio upgrades that still fit.
+fn alloc_lagrangian(prof: &BudgetProfile, budget_bits: f64) -> Result<Vec<usize>> {
+    let total_elems = prof.total_elems();
+    let budget_total = budget_bits * total_elems;
+    let eps = 1e-9 * total_elems;
+
+    let pick_at = |lam: f64| -> (Vec<usize>, f64) {
+        let mut pick = Vec::with_capacity(prof.layers.len());
+        let mut total_bits = 0.0f64;
+        for lp in &prof.layers {
+            let mut best = 0usize;
+            let mut best_obj = f64::INFINITY;
+            for (ci, c) in lp.cells.iter().enumerate() {
+                let obj = c.error + lam * c.bits * lp.elems();
+                // tie: prefer fewer bits (keeps bits(λ) monotone), then index
+                let better = obj < best_obj || (obj == best_obj && c.bits < lp.cells[best].bits);
+                if better {
+                    best = ci;
+                    best_obj = obj;
+                }
+            }
+            total_bits += lp.cells[best].bits * lp.elems();
+            pick.push(best);
+        }
+        (pick, total_bits)
+    };
+
+    let (p0, b0) = pick_at(0.0);
+    if b0 <= budget_total + eps {
+        return Ok(p0); // the unconstrained optimum already fits
+    }
+    let floor = floor_pick(prof);
+    let floor_bits: f64 =
+        floor.iter().zip(&prof.layers).map(|(&ci, lp)| lp.cells[ci].bits * lp.elems()).sum();
+    ensure!(
+        floor_bits <= budget_total + eps,
+        "budget {budget_bits} bits/weight is below the cheapest per-layer plan ({:.4})",
+        floor_bits / total_elems
+    );
+
+    // grow λ until the allocation fits, then bisect
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    let mut grew = 0usize;
+    while pick_at(hi).1 > budget_total + eps {
+        hi *= 2.0;
+        grew += 1;
+        ensure!(grew < 200, "lagrangian sweep failed to converge");
+    }
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if pick_at(mid).1 > budget_total + eps {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let (mut pick, bits) = pick_at(hi);
+    ensure!(bits <= budget_total + eps, "lagrangian sweep failed to meet the budget");
+    // spend any hull-gap slack on the best remaining upgrades
+    greedy_fill(prof, &mut pick, bits, budget_total, eps);
+    Ok(pick)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::profile::{profile, CandidateGrid, CellScore, LayerProfile};
+    use super::*;
+    use crate::coordinator::{CalibResult, PipelineConfig};
+    use crate::model::init::init_params;
+    use crate::model::{Checkpoint, ModelSpec};
+    use crate::util::rng::Rng;
+
+    /// Hand-built two-layer profile with transparent numbers.
+    fn toy_profile() -> BudgetProfile {
+        let fmt2 = QFormat::Mxint { bits: 2, block: 16 };
+        let fmt4 = QFormat::Mxint { bits: 4, block: 32 };
+        let mk = |name: &str, shape: [usize; 2], errs: [f64; 4]| LayerProfile {
+            name: name.into(),
+            shape,
+            cells: vec![
+                CellScore { fmt: fmt2, rank: 0, bits: 2.5, error: errs[0] },
+                CellScore { fmt: fmt2, rank: 4, bits: 3.5, error: errs[1] },
+                CellScore { fmt: fmt4, rank: 0, bits: 4.25, error: errs[2] },
+                CellScore { fmt: fmt4, rank: 4, bits: 5.25, error: errs[3] },
+            ],
+        };
+        BudgetProfile {
+            model: "toy".into(),
+            method: Method::QeraExact,
+            svd: SvdBackend::Auto,
+            psd: PsdBackend::Auto,
+            layers: vec![
+                // layer a: very sensitive (big wins from spending)
+                mk("a", [32, 32], [10.0, 2.0, 1.0, 0.2]),
+                // layer b: nearly flat (spending is wasted here)
+                mk("b", [32, 32], [1.0, 0.9, 0.85, 0.8]),
+            ],
+        }
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in AllocStrategy::all() {
+            assert_eq!(AllocStrategy::parse(&s.name()).unwrap(), s);
+        }
+        assert_eq!(AllocStrategy::parse("lagrange").unwrap(), AllocStrategy::Lagrangian);
+        assert!(AllocStrategy::parse("nope").is_err());
+        assert_eq!(AllocStrategy::default(), AllocStrategy::Greedy);
+    }
+
+    #[test]
+    fn uniform_picks_best_single_cell_that_fits() {
+        let prof = toy_profile();
+        // budget 4.0: fitting cells are 2.5 and 3.5; 3.5 has lower error
+        let plan = allocate(&prof, 4.0, AllocStrategy::Uniform).unwrap();
+        for c in plan.layers.values() {
+            assert_eq!(c.rank, 4);
+            assert_eq!(c.fmt, QFormat::Mxint { bits: 2, block: 16 });
+        }
+        assert!((plan.achieved_bits - 3.5).abs() < 1e-12);
+        assert!((plan.total_error - 2.9).abs() < 1e-12);
+        // budget below the cheapest cell fails loudly
+        assert!(allocate(&prof, 2.0, AllocStrategy::Uniform).is_err());
+    }
+
+    #[test]
+    fn greedy_spends_where_the_error_drops() {
+        let prof = toy_profile();
+        // budget 3.875 total-bits: uniform can only afford 2.5+rank (3.5 avg);
+        // greedy should upgrade layer a aggressively and leave b at the floor
+        let plan = allocate(&prof, 3.875, AllocStrategy::Greedy).unwrap();
+        assert!(plan.achieved_bits <= 3.875 + 1e-12);
+        let a = &plan.layers["a"];
+        let b = &plan.layers["b"];
+        assert!(a.bits > b.bits, "a {:?} b {:?}", a.bits, b.bits);
+        let uni = allocate(&prof, 3.875, AllocStrategy::Uniform).unwrap();
+        assert!(plan.total_error < uni.total_error);
+    }
+
+    #[test]
+    fn greedy_error_monotone_in_budget() {
+        let prof = toy_profile();
+        let mut prev = f64::INFINITY;
+        for budget in [2.6, 3.0, 3.5, 4.0, 4.6, 5.25] {
+            let plan = allocate(&prof, budget, AllocStrategy::Greedy).unwrap();
+            assert!(plan.achieved_bits <= budget + 1e-12, "budget {budget}");
+            assert!(
+                plan.total_error <= prev + 1e-12,
+                "budget {budget}: {} > {prev}",
+                plan.total_error
+            );
+            prev = plan.total_error;
+        }
+    }
+
+    #[test]
+    fn lagrangian_feasible_and_competitive() {
+        let prof = toy_profile();
+        for budget in [2.6, 3.5, 4.0, 4.6] {
+            let lag = allocate(&prof, budget, AllocStrategy::Lagrangian).unwrap();
+            assert!(lag.achieved_bits <= budget + 1e-12, "budget {budget}");
+            if let Ok(uni) = allocate(&prof, budget, AllocStrategy::Uniform) {
+                assert!(
+                    lag.total_error <= uni.total_error + 1e-12,
+                    "budget {budget}: lag {} vs uni {}",
+                    lag.total_error,
+                    uni.total_error
+                );
+            }
+        }
+        // an unconstrained budget takes the minimum-error cells everywhere
+        let all = allocate(&prof, 100.0, AllocStrategy::Lagrangian).unwrap();
+        assert!((all.total_error - (0.2 + 0.8)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_json_roundtrips_exactly() {
+        let prof = toy_profile();
+        let plan = allocate(&prof, 3.9, AllocStrategy::Greedy).unwrap();
+        let back = BudgetPlan::from_json(&Json::parse(&plan.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        let pretty =
+            BudgetPlan::from_json(&Json::parse(&plan.to_json().dump_pretty()).unwrap()).unwrap();
+        assert_eq!(pretty, plan);
+    }
+
+    #[test]
+    fn plan_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("qera_budget_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let plan = allocate(&toy_profile(), 4.5, AllocStrategy::Lagrangian).unwrap();
+        plan.save(&path).unwrap();
+        assert_eq!(BudgetPlan::load(&path).unwrap(), plan);
+    }
+
+    /// Real profile on the micro model: greedy must land within a few
+    /// percent of the exhaustive optimum (greedy marginal-ratio upgrades
+    /// are optimal up to the last discrete step), and never beat it.
+    #[test]
+    fn greedy_close_to_exhaustive_on_micro_model() {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut Rng::new(5));
+        let ckpt = Checkpoint::new(spec.clone(), params);
+        let calib = CalibResult::synthetic(&spec, 64, 6);
+        let grid = CandidateGrid {
+            formats: vec![
+                QFormat::Mxint { bits: 2, block: 16 },
+                QFormat::Mxint { bits: 4, block: 32 },
+            ],
+            ranks: vec![0, 4],
+        };
+        let cfg = PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 3, block: 32 }, 4);
+        let prof = profile(&ckpt, &calib, &cfg, &grid).unwrap();
+        let n_cells = 4usize;
+        let n_layers = prof.layers.len();
+        assert_eq!(n_layers, 6);
+        let total_elems = prof.total_elems();
+
+        for budget in [3.0f64, 3.75, 4.5] {
+            // exhaustive search over all 4^6 assignments
+            let mut best_err = f64::INFINITY;
+            for combo in 0..n_cells.pow(n_layers as u32) {
+                let (mut bits, mut err, mut c) = (0.0f64, 0.0f64, combo);
+                for lp in &prof.layers {
+                    let cell = &lp.cells[c % n_cells];
+                    c /= n_cells;
+                    bits += cell.bits * lp.elems();
+                    err += cell.error;
+                }
+                if bits / total_elems <= budget + 1e-12 && err < best_err {
+                    best_err = err;
+                }
+            }
+            let greedy = allocate(&prof, budget, AllocStrategy::Greedy).unwrap();
+            assert!(
+                greedy.total_error >= best_err - 1e-9,
+                "budget {budget}: greedy beat the exhaustive optimum?"
+            );
+            assert!(
+                greedy.total_error <= best_err * 1.10 + 1e-12,
+                "budget {budget}: greedy {} vs exhaustive {best_err}",
+                greedy.total_error
+            );
+            let lag = allocate(&prof, budget, AllocStrategy::Lagrangian).unwrap();
+            assert!(lag.total_error >= best_err - 1e-9, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn greedy_deterministic_across_runs_and_worker_counts() {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut Rng::new(7));
+        let ckpt = Checkpoint::new(spec.clone(), params);
+        let calib = CalibResult::synthetic(&spec, 64, 8);
+        let grid = CandidateGrid::default_ptq();
+        let mut cfg =
+            PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 3, block: 32 }, 4);
+        cfg.workers = 1;
+        let prof1 = profile(&ckpt, &calib, &cfg, &grid).unwrap();
+        let p1 = allocate(&prof1, 3.75, AllocStrategy::Greedy).unwrap();
+        cfg.workers = 4;
+        let prof4 = profile(&ckpt, &calib, &cfg, &grid).unwrap();
+        let p4 = allocate(&prof4, 3.75, AllocStrategy::Greedy).unwrap();
+        assert_eq!(p1, p4);
+        let again =
+            allocate(&profile(&ckpt, &calib, &cfg, &grid).unwrap(), 3.75, AllocStrategy::Greedy)
+                .unwrap();
+        assert_eq!(p4, again);
+    }
+}

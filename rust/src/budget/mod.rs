@@ -1,0 +1,32 @@
+//! Analytical mixed-precision budget allocator.
+//!
+//! QERA's closed-form machinery prices any candidate `(QFormat, rank)` cell
+//! on any layer for the cost of one solve: the expected layer output error
+//! `Tr(R_XX P Pᵀ)` (Equation 15) is computable from calibration statistics
+//! alone, no forward passes.  This subsystem turns that price list into a
+//! budget-aware quantization plan:
+//!
+//! 1. [`profile`] scores every layer × candidate cell with the existing
+//!    solvers (threaded over the worker pool, reusing the per-site
+//!    `CalibStats` / `rxx_mean` calibration already produced);
+//! 2. [`allocate`] picks one cell per layer minimizing total predicted
+//!    output error subject to a global memory budget (average bits per
+//!    weight, low-rank overhead included) under an [`AllocStrategy`]
+//!    (`Uniform` / `Greedy` / `Lagrangian`);
+//! 3. the resulting [`BudgetPlan`] is a serializable JSON artifact that
+//!    [`crate::coordinator::quantize`] executes via per-layer format/rank
+//!    overrides (`PipelineConfig::with_plan`), and that the CLI round-trips
+//!    through `--plan-out` / `--plan-in`.
+//!
+//! Unlike the hand-crafted per-layer heuristics in related work
+//! (saliency-weighted capacity, balanced rank budgets), the allocation here
+//! descends the paper's own objective: every upgrade is bought at the cell
+//! with the best predicted Δerror per Δbit.
+
+pub mod alloc;
+pub mod profile;
+
+pub use alloc::{allocate, AllocStrategy, BudgetPlan, PlanCell};
+pub use profile::{
+    cell_bits, profile, score_layer, BudgetProfile, CandidateGrid, CellScore, LayerProfile,
+};

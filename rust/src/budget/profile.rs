@@ -1,0 +1,338 @@
+//! Layer × candidate-cell profiler.
+//!
+//! For every quantizable layer and every `(QFormat, rank)` candidate the
+//! profiler runs the configured closed-form solver and evaluates the
+//! paper's Problem-2 objective `Tr(R_XX P Pᵀ)` via
+//! [`crate::solver::metrics::output_error_of`] — a *prediction* of the
+//! layer's expected output error under that cell, no forward pass needed.
+//! Jobs are independent, so they run on the worker pool (one job per
+//! layer × cell, nested kernels stay serial as usual); each tap site's
+//! `R_XX` is materialized once and shared across all its cells.
+//!
+//! Seeds match the pipeline (`seed ^ (site_index << 8)`), so for the
+//! deterministic backends a plan's predicted error is exactly the error
+//! the executed pipeline realizes.
+
+use crate::coordinator::{CalibResult, PipelineConfig};
+use crate::linalg::Mat64;
+use crate::model::Checkpoint;
+use crate::quant::QFormat;
+use crate::solver::{self, Method};
+use crate::stats::CalibStats;
+use crate::tensor::Tensor;
+use crate::util::pool;
+use anyhow::{ensure, Result};
+
+/// Candidate `(format, rank)` grid, shared by every layer.
+#[derive(Clone, Debug)]
+pub struct CandidateGrid {
+    pub formats: Vec<QFormat>,
+    pub ranks: Vec<usize>,
+}
+
+impl CandidateGrid {
+    /// The paper's PTQ precision ladder (2.50 / 3.25 / 4.25 W-bits) crossed
+    /// with a small rank ladder (0 = quantize only, no reconstruction).
+    pub fn default_ptq() -> CandidateGrid {
+        CandidateGrid {
+            formats: vec![
+                QFormat::Mxint { bits: 2, block: 16 },
+                QFormat::Mxint { bits: 3, block: 32 },
+                QFormat::Mxint { bits: 4, block: 32 },
+            ],
+            ranks: vec![0, 4, 8, 16],
+        }
+    }
+
+    /// Flattened format-major cell list (the profiler's column order).
+    pub fn cells(&self) -> Vec<(QFormat, usize)> {
+        let mut out = Vec::with_capacity(self.formats.len() * self.ranks.len());
+        for &fmt in &self.formats {
+            for &rank in &self.ranks {
+                out.push((fmt, rank));
+            }
+        }
+        out
+    }
+}
+
+/// Average bits per weight element a cell costs on an `[m, n]` layer: the
+/// quantizer's W-bits plus the f32 low-rank overhead
+/// `rank · (m + n) · 32 / (m · n)` — the paper's accounting, matching
+/// [`crate::coordinator::QuantizedModel::effective_bits`] exactly.
+pub fn cell_bits(fmt: QFormat, rank: usize, shape: [usize; 2]) -> f64 {
+    let (m, n) = (shape[0] as f64, shape[1] as f64);
+    fmt.avg_bits() + rank as f64 * (m + n) * 32.0 / (m * n)
+}
+
+/// One scored candidate cell.
+#[derive(Clone, Debug)]
+pub struct CellScore {
+    pub fmt: QFormat,
+    pub rank: usize,
+    /// Average bits/weight this cell costs on its layer ([`cell_bits`]).
+    pub bits: f64,
+    /// Predicted expected output error `Tr(R_XX P Pᵀ)`.
+    pub error: f64,
+}
+
+/// All candidate scores for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub name: String,
+    /// `[in_dim, out_dim]`.
+    pub shape: [usize; 2],
+    /// Scores in the grid's [`CandidateGrid::cells`] order.
+    pub cells: Vec<CellScore>,
+}
+
+impl LayerProfile {
+    /// Weight elements in this layer.
+    pub fn elems(&self) -> f64 {
+        (self.shape[0] * self.shape[1]) as f64
+    }
+}
+
+/// The full layer × cell score table the allocator consumes.
+#[derive(Clone, Debug)]
+pub struct BudgetProfile {
+    pub model: String,
+    /// Reconstruction method the cells were scored with (rank-0 cells score
+    /// as plain `w-only`).
+    pub method: Method,
+    /// Backends the cells were scored with — carried into the plan so that
+    /// executing the plan replays the exact same solves.
+    pub svd: solver::SvdBackend,
+    pub psd: solver::PsdBackend,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl BudgetProfile {
+    /// Total quantizable weight elements across all layers.
+    pub fn total_elems(&self) -> f64 {
+        self.layers.iter().map(LayerProfile::elems).sum()
+    }
+}
+
+/// Solve one cell and price it: predicted output error + bits/weight.
+/// Rank 0 means "no reconstruction", so it always solves as `w-only`.
+fn score_cell(
+    w: &Tensor,
+    stats: &CalibStats,
+    rxx: &Mat64,
+    method: Method,
+    fmt: QFormat,
+    rank: usize,
+    seed: u64,
+    svd: solver::SvdBackend,
+    psd: solver::PsdBackend,
+) -> Result<CellScore> {
+    let m = if rank == 0 { Method::WOnly } else { method };
+    let out = match m {
+        // reuse the caller's materialized R_XX instead of letting
+        // solve_with re-materialize it from the stats for every cell
+        Method::QeraExact => solver::qera_exact_with(w, fmt, rank, rxx, svd, psd),
+        _ => solver::solve_with(m, w, fmt, rank, Some(stats), seed, svd, psd)?,
+    };
+    let error = solver::metrics::output_error_of(w, &out, rxx);
+    Ok(CellScore { fmt, rank, bits: cell_bits(fmt, rank, [w.rows(), w.cols()]), error })
+}
+
+/// Score every grid cell on one weight matrix (serially — callers fan out
+/// across layers; the hotpath bench times this directly on synthetic wide
+/// layers).
+pub fn score_layer(
+    name: &str,
+    w: &Tensor,
+    stats: &CalibStats,
+    rxx: &Mat64,
+    cfg: &PipelineConfig,
+    seed: u64,
+    grid: &CandidateGrid,
+) -> Result<LayerProfile> {
+    let mut cells = Vec::with_capacity(grid.formats.len() * grid.ranks.len());
+    for (fmt, rank) in grid.cells() {
+        cells.push(score_cell(w, stats, rxx, cfg.method, fmt, rank, seed, cfg.svd, cfg.psd)?);
+    }
+    Ok(LayerProfile { name: name.to_string(), shape: [w.rows(), w.cols()], cells })
+}
+
+/// Profile every quantizable layer of `ckpt` against `grid`.
+///
+/// Needs calibration with `R_XX` tracking (the predicted error is the
+/// trace objective).  `cfg` supplies the method/backends/seed/worker
+/// count; its `fmt` / `rank` / `plan` fields are ignored.
+pub fn profile(
+    ckpt: &Checkpoint,
+    calib: &CalibResult,
+    cfg: &PipelineConfig,
+    grid: &CandidateGrid,
+) -> Result<BudgetProfile> {
+    let spec = &ckpt.spec;
+    ensure!(calib.spec == *spec, "calibration spec does not match checkpoint");
+    let sites = spec.linear_sites();
+    let cells = grid.cells();
+    ensure!(!cells.is_empty(), "empty candidate grid");
+
+    // materialize each tap's R_XX once; shared by every cell of every site
+    // fed by that tap (wq/wk/wv share attn_in, exactly like the solvers)
+    let rxx: Vec<Option<Mat64>> =
+        pool::parallel_map_auto(spec.n_taps(), |t| calib.stats[t].rxx_mean());
+    for site in &sites {
+        ensure!(
+            rxx[spec.tap_index(site.block, site.tap)].is_some(),
+            "budget profiling needs R_XX tracking in calibration (site {})",
+            site.name
+        );
+    }
+
+    let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
+    let n_cells = cells.len();
+    let scores: Vec<Result<CellScore>> =
+        pool::parallel_map(sites.len() * n_cells, workers, |j| {
+            let (si, ci) = (j / n_cells, j % n_cells);
+            let site = &sites[si];
+            let w = &ckpt.params[site.param_idx];
+            let stats = calib.for_site(site);
+            let r = rxx[spec.tap_index(site.block, site.tap)].as_ref().unwrap();
+            let (fmt, rank) = cells[ci];
+            score_cell(
+                w,
+                stats,
+                r,
+                cfg.method,
+                fmt,
+                rank,
+                cfg.seed ^ ((si as u64) << 8),
+                cfg.svd,
+                cfg.psd,
+            )
+        });
+
+    let mut layers = Vec::with_capacity(sites.len());
+    let mut it = scores.into_iter();
+    for site in &sites {
+        let mut cs = Vec::with_capacity(n_cells);
+        for _ in 0..n_cells {
+            cs.push(it.next().unwrap()?);
+        }
+        layers.push(LayerProfile { name: site.name.clone(), shape: site.shape, cells: cs });
+    }
+    crate::info!(
+        "profiled {} layers x {} cells ({}, grid {} formats x {} ranks)",
+        layers.len(),
+        n_cells,
+        cfg.method.name(),
+        grid.formats.len(),
+        grid.ranks.len()
+    );
+    Ok(BudgetProfile {
+        model: spec.name.clone(),
+        method: cfg.method,
+        svd: cfg.svd,
+        psd: cfg.psd,
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CalibResult;
+    use crate::model::init::init_params;
+    use crate::model::ModelSpec;
+    use crate::util::rng::Rng;
+
+    fn micro_setup(seed: u64) -> (Checkpoint, CalibResult) {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut Rng::new(seed));
+        let calib = CalibResult::synthetic(&spec, 64, seed ^ 0x5eed);
+        (Checkpoint::new(spec, params), calib)
+    }
+
+    fn small_grid() -> CandidateGrid {
+        CandidateGrid {
+            formats: vec![
+                QFormat::Mxint { bits: 2, block: 16 },
+                QFormat::Mxint { bits: 4, block: 32 },
+            ],
+            ranks: vec![0, 4],
+        }
+    }
+
+    #[test]
+    fn cell_bits_accounting() {
+        // rank 0: the quantizer's W-bits alone
+        let f = QFormat::Mxint { bits: 4, block: 32 };
+        assert!((cell_bits(f, 0, [64, 64]) - 4.25).abs() < 1e-12);
+        // rank overhead: k (m + n) f32 params over m*n elements
+        let b = cell_bits(f, 8, [64, 64]);
+        assert!((b - (4.25 + 8.0 * 128.0 * 32.0 / 4096.0)).abs() < 1e-12);
+        // wider layers amortize the same rank better
+        assert!(cell_bits(f, 8, [64, 256]) < cell_bits(f, 8, [64, 64]));
+    }
+
+    #[test]
+    fn grid_cells_are_format_major() {
+        let g = small_grid();
+        let cells = g.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0], (g.formats[0], 0));
+        assert_eq!(cells[1], (g.formats[0], 4));
+        assert_eq!(cells[2], (g.formats[1], 0));
+        assert_eq!(cells[3], (g.formats[1], 4));
+    }
+
+    #[test]
+    fn profile_covers_every_layer_and_cell() {
+        let (ckpt, calib) = micro_setup(1);
+        let cfg = PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 3, block: 32 }, 4);
+        let prof = profile(&ckpt, &calib, &cfg, &small_grid()).unwrap();
+        assert_eq!(prof.layers.len(), ckpt.spec.linear_sites().len());
+        for lp in &prof.layers {
+            assert_eq!(lp.cells.len(), 4);
+            for c in &lp.cells {
+                assert!(c.error.is_finite() && c.error >= 0.0, "{}", lp.name);
+                assert!(c.bits > 0.0);
+            }
+            // more bits at the same rank must not hurt the predicted error
+            // by much, and adding rank at the same format strictly helps
+            let e_r0 = lp.cells[2].error; // mxint4 rank 0
+            let e_r4 = lp.cells[3].error; // mxint4 rank 4
+            assert!(e_r4 <= e_r0 * (1.0 + 1e-9), "{}: {e_r4} vs {e_r0}", lp.name);
+        }
+    }
+
+    #[test]
+    fn profile_deterministic_across_worker_counts() {
+        let (ckpt, calib) = micro_setup(2);
+        let mut cfg =
+            PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 3, block: 32 }, 4);
+        cfg.workers = 1;
+        let a = profile(&ckpt, &calib, &cfg, &small_grid()).unwrap();
+        cfg.workers = 4;
+        let b = profile(&ckpt, &calib, &cfg, &small_grid()).unwrap();
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.name, lb.name);
+            for (ca, cb) in la.cells.iter().zip(&lb.cells) {
+                assert_eq!(ca.error.to_bits(), cb.error.to_bits(), "{}", la.name);
+                assert_eq!(ca.bits.to_bits(), cb.bits.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn profile_requires_rxx_tracking() {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut Rng::new(3));
+        let ckpt = Checkpoint::new(spec.clone(), params);
+        // diag-only stats: every site folded without R_XX
+        let mut calib = CalibResult::synthetic(&spec, 32, 4);
+        for st in &mut calib.stats {
+            st.rxx = None;
+        }
+        let cfg = PipelineConfig::new(Method::QeraApprox, QFormat::Mxint { bits: 3, block: 32 }, 4);
+        let err = profile(&ckpt, &calib, &cfg, &small_grid()).unwrap_err();
+        assert!(err.to_string().contains("R_XX"), "{err}");
+    }
+}

@@ -9,6 +9,7 @@
 //! qera e2e       [--model nano ...]       full pipeline, end to end
 //! ```
 
+use crate::budget::{self, BudgetPlan};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{calibrate, quantize, PipelineConfig};
 use crate::data::corpus::Corpus;
@@ -66,7 +67,14 @@ impl Args {
             None => ExperimentConfig::default(),
         };
         for (k, v) in &self.kv {
-            if k == "config" || k == "ckpt" || k == "qckpt" || k == "out" || k == "artifacts" {
+            if k == "config"
+                || k == "ckpt"
+                || k == "qckpt"
+                || k == "out"
+                || k == "artifacts"
+                || k == "plan-in"
+                || k == "plan-out"
+            {
                 continue;
             }
             cfg.set(k, v)?;
@@ -114,7 +122,16 @@ common flags: --artifacts DIR --model NAME --method M --format F --rank K
               --svd auto|exact|randomized[:oversample[:power_iters]]
               --psd auto|exact|lowrank[:rank_mult[:power_iters]]
               --corpus-tokens N --calib-batches N --eval-batches N --seed S
-              --ckpt PATH --out PATH --config FILE.json";
+              --ckpt PATH --out PATH --config FILE.json
+
+budget planning (quantize): --budget-bits B  target avg bits/weight; profiles
+              every layer x (format, rank) cell with the closed-form error
+              and allocates per-layer precision under the budget
+              --alloc uniform|greedy|lagrangian   (default greedy)
+              --plan-out PATH   write the BudgetPlan JSON artifact
+              --plan-in PATH    execute a saved plan (skips profiling; the
+                                plan's method/svd/psd/format/rank override
+                                the session flags)";
 
 fn cmd_info(args: &Args) -> Result<()> {
     let reg = registry(args)?;
@@ -168,44 +185,95 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let ckpt_path = args.get("ckpt").context("--ckpt required")?;
     let ckpt = Checkpoint::load(ckpt_path)?;
     let corpus = Corpus::generate(ckpt.spec.vocab, cfg.corpus_tokens, cfg.seed);
-    let calib = if cfg.method.needs_stats() {
+
+    // --plan-in executes a saved plan; --budget-bits profiles + allocates
+    // a fresh one (optionally saved via --plan-out)
+    let plan_in = match args.get("plan-in") {
+        Some(p) => Some(BudgetPlan::load(p)?),
+        None => None,
+    };
+    let method = plan_in.as_ref().map(|p| p.method).unwrap_or(cfg.method);
+    let budgeting = plan_in.is_none() && cfg.budget_bits.is_some();
+    let calib = if method.needs_stats() || budgeting {
         Some(calibrate(
             &reg,
             &ckpt.spec,
             &ckpt.params,
             &corpus,
             cfg.calib_batches,
-            cfg.method.needs_rxx(),
+            method.needs_rxx() || budgeting,
         )?)
     } else {
         None
     };
-    let qm = quantize(
-        &ckpt,
-        &PipelineConfig::new(cfg.method, cfg.format, cfg.rank)
-            .with_svd(cfg.svd)
-            .with_psd(cfg.psd),
-        calib.as_ref(),
-    )?;
+    let base = PipelineConfig::new(cfg.method, cfg.format, cfg.rank)
+        .with_svd(cfg.svd)
+        .with_psd(cfg.psd);
+    let plan = match (plan_in, cfg.budget_bits) {
+        (Some(p), _) => Some(p),
+        (None, Some(bits)) => {
+            let prof = budget::profile(
+                &ckpt,
+                calib.as_ref().expect("budget profiling calibrates"),
+                &base,
+                &budget::CandidateGrid::default_ptq(),
+            )?;
+            let plan = budget::allocate(&prof, bits, cfg.alloc)?;
+            println!(
+                "allocated {} plan: {:.3}/{:.3} bits/weight, predicted error {:.4}",
+                plan.strategy.name(),
+                plan.achieved_bits,
+                plan.budget_bits,
+                plan.total_error,
+            );
+            Some(plan)
+        }
+        (None, None) => None,
+    };
+    if let Some(out) = args.get("plan-out") {
+        match &plan {
+            Some(p) => {
+                p.save(out)?;
+                println!("plan -> {out}");
+            }
+            None => bail!("--plan-out requires --budget-bits or --plan-in"),
+        }
+    }
+    let pcfg = match plan {
+        Some(p) => base.with_plan(p),
+        None => base,
+    };
+    let qm = quantize(&ckpt, &pcfg, calib.as_ref())?;
     let out = args.get_or(
         "out",
-        &format!("{}/{}-{}.qqkpt", cfg.out_dir, ckpt.spec.name, cfg.method.name()),
+        &format!("{}/{}-{}.qqkpt", cfg.out_dir, ckpt.spec.name, method.name()),
     );
     if let Some(dir) = std::path::Path::new(&out).parent() {
         std::fs::create_dir_all(dir)?;
     }
     qm.ckpt.save(&out)?;
-    println!(
-        "quantized with {} ({}, rank {}, svd {}, psd {}): effective {:.3} bits, payload {:.2} MB, solver {:.1} ms -> {out}",
-        cfg.method.name(),
-        cfg.format.name(),
-        cfg.rank,
-        cfg.svd.name(),
-        cfg.psd.name(),
-        qm.effective_bits(),
-        qm.ckpt.payload_bytes() as f64 / 1e6,
-        qm.solve_ms_total,
-    );
+    match &pcfg.plan {
+        Some(p) => println!(
+            "quantized with {} ({} plan @ {:.3} bits budget): effective {:.3} bits, payload {:.2} MB, solver {:.1} ms -> {out}",
+            p.method.name(),
+            p.strategy.name(),
+            p.budget_bits,
+            qm.effective_bits(),
+            qm.ckpt.payload_bytes() as f64 / 1e6,
+            qm.solve_ms_total,
+        ),
+        None => println!(
+            "quantized with {} ({}, rank {}, svd {}, psd {}): effective {:.3} bits, payload {:.2} MB, solver {:.1} ms -> {out}",
+            cfg.method.name(),
+            cfg.format.name(),
+            cfg.rank,
+            cfg.svd.name(),
+            cfg.psd.name(),
+            qm.effective_bits(),
+            qm.ckpt.payload_bytes() as f64 / 1e6,
+            qm.solve_ms_total,
+        ),
+    }
     Ok(())
 }
 

@@ -4,6 +4,7 @@
 //! quantization method grid, rank, calibration budget, seeds.  The launcher
 //! (`qera` CLI) reads these; benches construct them programmatically.
 
+use crate::budget::AllocStrategy;
 use crate::quant::QFormat;
 use crate::solver::{Method, PsdBackend, SvdBackend};
 use crate::util::json::Json;
@@ -28,6 +29,12 @@ pub struct ExperimentConfig {
     /// PSD backend for QERA-exact's whitening pair (`auto` picks the
     /// low-rank + diagonal split for small ranks).
     pub psd: PsdBackend,
+    /// Memory budget in average bits/weight (low-rank overhead included).
+    /// When set, quantization runs from a per-layer budget plan instead of
+    /// the single global `(format, rank)` pair.
+    pub budget_bits: Option<f64>,
+    /// Allocation strategy for the budget plan.
+    pub alloc: AllocStrategy,
     /// Calibration batches.
     pub calib_batches: usize,
     /// Pretraining steps for the subject model.
@@ -51,6 +58,8 @@ impl Default for ExperimentConfig {
             rank: 8,
             svd: SvdBackend::Auto,
             psd: PsdBackend::Auto,
+            budget_bits: None,
+            alloc: AllocStrategy::Greedy,
             calib_batches: 16,
             pretrain_steps: 300,
             pretrain_lr: 3e-3,
@@ -87,6 +96,12 @@ impl ExperimentConfig {
         if let Some(v) = j.get("psd").and_then(Json::as_str) {
             c.psd = PsdBackend::parse(v)?;
         }
+        if let Some(v) = j.get("budget_bits").and_then(Json::as_f64) {
+            c.budget_bits = Some(v);
+        }
+        if let Some(v) = j.get("alloc").and_then(Json::as_str) {
+            c.alloc = AllocStrategy::parse(v)?;
+        }
         if let Some(v) = j.get("calib_batches").and_then(Json::as_usize) {
             c.calib_batches = v;
         }
@@ -121,6 +136,15 @@ impl ExperimentConfig {
             "rank" => self.rank = value.parse()?,
             "svd" | "svd-backend" | "svd_backend" => self.svd = SvdBackend::parse(value)?,
             "psd" | "psd-backend" | "psd_backend" => self.psd = PsdBackend::parse(value)?,
+            "budget-bits" | "budget_bits" => {
+                self.budget_bits = match value {
+                    "none" | "off" => None,
+                    v => Some(v.parse()?),
+                }
+            }
+            "alloc" | "alloc-strategy" | "alloc_strategy" => {
+                self.alloc = AllocStrategy::parse(value)?
+            }
             "calib-batches" | "calib_batches" => self.calib_batches = value.parse()?,
             "pretrain-steps" | "pretrain_steps" => self.pretrain_steps = value.parse()?,
             "pretrain-lr" | "pretrain_lr" => self.pretrain_lr = value.parse()?,
@@ -141,6 +165,14 @@ impl ExperimentConfig {
             ("rank", Json::Num(self.rank as f64)),
             ("svd", Json::str(self.svd.name())),
             ("psd", Json::str(self.psd.name())),
+            (
+                "budget_bits",
+                match self.budget_bits {
+                    Some(b) => Json::Num(b),
+                    None => Json::Null,
+                },
+            ),
+            ("alloc", Json::str(self.alloc.name())),
             ("calib_batches", Json::Num(self.calib_batches as f64)),
             ("pretrain_steps", Json::Num(self.pretrain_steps as f64)),
             ("pretrain_lr", Json::Num(self.pretrain_lr as f64)),
@@ -174,15 +206,23 @@ mod tests {
         c.set("format", "mxint3:32").unwrap();
         c.set("svd", "randomized:4:1").unwrap();
         c.set("psd", "lowrank:2:16").unwrap();
+        c.set("budget-bits", "3.75").unwrap();
+        c.set("alloc", "lagrangian").unwrap();
         assert_eq!(c.method, Method::Lqer);
         assert_eq!(c.rank, 16);
         assert!((c.format.avg_bits() - 3.25).abs() < 1e-12);
         assert_eq!(c.svd, SvdBackend::Randomized { oversample: 4, power_iters: 1 });
         assert_eq!(c.psd, PsdBackend::LowRank { rank_mult: 2, power_iters: 16 });
+        assert_eq!(c.budget_bits, Some(3.75));
+        assert_eq!(c.alloc, AllocStrategy::Lagrangian);
+        c.set("budget-bits", "none").unwrap();
+        assert_eq!(c.budget_bits, None);
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("rank", "not-a-number").is_err());
         assert!(c.set("svd", "bogus").is_err());
         assert!(c.set("psd", "bogus").is_err());
+        assert!(c.set("alloc", "bogus").is_err());
+        assert!(c.set("budget-bits", "not-a-number").is_err());
     }
 
     #[test]
@@ -205,5 +245,21 @@ mod tests {
         let c = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c.model, "small");
         assert_eq!(c.rank, ExperimentConfig::default().rank);
+        assert_eq!(c.budget_bits, None);
+        assert_eq!(c.alloc, AllocStrategy::Greedy);
+    }
+
+    #[test]
+    fn budget_roundtrips_through_json() {
+        let mut c = ExperimentConfig::default();
+        c.budget_bits = Some(3.25);
+        c.alloc = AllocStrategy::Uniform;
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.budget_bits, Some(3.25));
+        assert_eq!(back.alloc, AllocStrategy::Uniform);
+        // unset budget serializes as null and deserializes as None
+        let d = ExperimentConfig::default();
+        let back = ExperimentConfig::from_json(&d.to_json()).unwrap();
+        assert_eq!(back.budget_bits, None);
     }
 }

@@ -8,10 +8,12 @@
 //! `attn_in` tap (exactly the grouping the paper uses).
 //!
 //! Tap sites are independent, so each batch's taps fold in parallel on the
-//! worker pool ([`fold_taps`]); every site's accumulation stays internally
-//! serial, so the result is bit-identical to the serial fold for every
-//! worker count.  `QERA_CALIB_WORKERS` sizes the fold independently of the
-//! solver pool's `QERA_THREADS`.
+//! worker pool ([`fold_taps`]); when there are fewer sites than workers,
+//! the surplus threads each site's banded SYRK fold instead of idling.
+//! Both levels partition output entries only (the per-entry accumulation
+//! order is fixed), so the result is bit-identical to the serial fold for
+//! every worker count.  `QERA_CALIB_WORKERS` sizes the fold independently
+//! of the solver pool's `QERA_THREADS`.
 
 use crate::data::corpus::Corpus;
 use crate::data::batch::lm_batches;
@@ -24,14 +26,21 @@ use anyhow::{ensure, Result};
 
 /// Fold one batch of per-tap activations into the per-site accumulators.
 /// Sites are embarrassingly parallel (each owns its [`CalibStats`]), so
-/// they fold concurrently on the worker pool; within a site the streaming
-/// fold is serial, so the result is **bit-identical to a serial loop for
-/// every worker count**.  `workers == 0` picks `QERA_CALIB_WORKERS` / the
-/// pool default.
+/// they fold concurrently on the worker pool.  When a model has fewer tap
+/// sites than workers (wide-layer/few-site models), the surplus workers go
+/// *inside* each site's fold as an explicit SYRK band count — the banded
+/// kernel partitions output entries only, never the accumulation order, so
+/// the result is **bit-identical to a serial loop for every worker count**
+/// (sharded `merge`-based folds would change the f64 reduction order per
+/// shard count, which is why [`CalibStats::update_sharded`] is not used
+/// here).  `workers == 0` picks `QERA_CALIB_WORKERS` / the pool default.
 pub fn fold_taps(stats: &mut [CalibStats], taps: &[Tensor], workers: usize) {
     assert_eq!(stats.len(), taps.len(), "tap/site count mismatch");
     let w = if workers == 0 { pool::default_calib_workers() } else { workers };
-    pool::parallel_for_each_mut(stats, w, |i, st| st.update(&taps[i]));
+    let n = stats.len().max(1);
+    // surplus workers per site once tap-level parallelism is exhausted
+    let inner = (w + n - 1) / n;
+    pool::parallel_for_each_mut(stats, w.min(n), |i, st| st.update_workers(&taps[i], inner));
 }
 
 /// Per-tap-site statistics for one model.
@@ -184,6 +193,42 @@ mod tests {
                 for (st, t) in ser.iter_mut().zip(&taps) {
                     st.update(t);
                 }
+            }
+            for (i, (p, s)) in par.iter().zip(&ser).enumerate() {
+                assert_eq!(p.count, s.count, "site {i} w={workers}");
+                assert_eq!(p.sum_abs, s.sum_abs, "site {i} w={workers}");
+                assert_eq!(p.sum_sq, s.sum_sq, "site {i} w={workers}");
+                assert_eq!(
+                    p.rxx.as_ref().unwrap().a,
+                    s.rxx.as_ref().unwrap().a,
+                    "site {i} w={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn few_sites_saturate_pool_bit_identically() {
+        // wide-layer/few-site shape: 2 taps, up to 8 workers — the surplus
+        // workers thread each site's SYRK bands, and the result must stay
+        // bit-identical to the serial fold for every worker count
+        let dims = [48usize, 33];
+        let mut ser: Vec<CalibStats> = dims.iter().map(|&d| CalibStats::new(d, true)).collect();
+        let mut rng = Rng::new(31);
+        let mk_taps = |rng: &mut Rng| -> Vec<Tensor> {
+            dims.iter().map(|&d| Tensor::randn(vec![9, d], 1.0, rng)).collect()
+        };
+        let batches: Vec<Vec<Tensor>> = (0..3).map(|_| mk_taps(&mut rng)).collect();
+        for taps in &batches {
+            for (st, t) in ser.iter_mut().zip(taps) {
+                st.update_workers(t, 1);
+            }
+        }
+        for workers in [1usize, 2, 3, 8] {
+            let mut par: Vec<CalibStats> =
+                dims.iter().map(|&d| CalibStats::new(d, true)).collect();
+            for taps in &batches {
+                fold_taps(&mut par, taps, workers);
             }
             for (i, (p, s)) in par.iter().zip(&ser).enumerate() {
                 assert_eq!(p.count, s.count, "site {i} w={workers}");

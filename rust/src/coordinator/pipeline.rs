@@ -5,6 +5,7 @@
 //! the pool free of thread-affine handles.
 
 use super::calibrate::CalibResult;
+use crate::budget::BudgetPlan;
 use crate::model::{Checkpoint, QuantCheckpoint};
 use crate::quant::QFormat;
 use crate::solver::{self, Method, PsdBackend, SvdBackend};
@@ -29,6 +30,11 @@ pub struct PipelineConfig {
     /// (the default) takes the low-rank + diagonal split whenever the
     /// reconstruction rank is small relative to the layer width.
     pub psd: PsdBackend,
+    /// Per-layer `(format, rank)` overrides from the budget allocator.
+    /// When set, it must cover every linear site; `fmt` / `rank` above are
+    /// ignored, the plan's method replaces `method`, and rank-0 cells
+    /// execute as plain `w-only`.
+    pub plan: Option<BudgetPlan>,
 }
 
 impl PipelineConfig {
@@ -41,6 +47,7 @@ impl PipelineConfig {
             workers: 0,
             svd: SvdBackend::Auto,
             psd: PsdBackend::Auto,
+            plan: None,
         }
     }
 
@@ -53,6 +60,12 @@ impl PipelineConfig {
     /// Builder-style override of the PSD backend.
     pub fn with_psd(mut self, psd: PsdBackend) -> Self {
         self.psd = psd;
+        self
+    }
+
+    /// Builder-style attachment of a budget plan.
+    pub fn with_plan(mut self, plan: BudgetPlan) -> Self {
+        self.plan = Some(plan);
         self
     }
 }
@@ -80,13 +93,21 @@ pub struct QuantizedModel {
 impl QuantizedModel {
     /// Average W-bits including the low-rank overhead (paper's accounting:
     /// low-rank params are high-precision extras on top of `fmt.avg_bits()`).
+    /// With a budget plan, each layer is priced at its own format.
     pub fn effective_bits(&self) -> f64 {
         let mut wbits = 0.0f64;
         let mut elems = 0.0f64;
         for site in self.ckpt.spec.linear_sites() {
             let n = (site.shape[0] * site.shape[1]) as f64;
             elems += n;
-            wbits += n * self.config.fmt.avg_bits();
+            let fmt = self
+                .config
+                .plan
+                .as_ref()
+                .and_then(|p| p.cell(&site.name))
+                .map(|c| c.fmt)
+                .unwrap_or(self.config.fmt);
+            wbits += n * fmt.avg_bits();
         }
         let lr_bits: f64 =
             self.ckpt.lowrank.values().map(|l| (l.n_params() * 32) as f64).sum();
@@ -96,21 +117,43 @@ impl QuantizedModel {
 
 /// Quantize every linear layer of `ckpt`.
 ///
-/// `calib` may be `None` for methods that don't need statistics.
+/// `calib` may be `None` for methods that don't need statistics.  With a
+/// budget plan attached (`PipelineConfig::with_plan`), each layer solves
+/// at its planned `(format, rank)` under the plan's method (rank-0 cells
+/// run as plain `w-only`) and packs at its own format.
 pub fn quantize(
     ckpt: &Checkpoint,
     cfg: &PipelineConfig,
     calib: Option<&CalibResult>,
 ) -> Result<QuantizedModel> {
     let spec = &ckpt.spec;
-    if cfg.method.needs_stats() {
-        ensure!(calib.is_some(), "{} requires calibration", cfg.method.name());
+    let sites = spec.linear_sites();
+    if let Some(plan) = &cfg.plan {
+        ensure!(
+            plan.model == spec.name,
+            "budget plan is for model '{}', checkpoint is '{}'",
+            plan.model,
+            spec.name
+        );
+        for site in &sites {
+            ensure!(plan.cell(&site.name).is_some(), "budget plan missing layer '{}'", site.name);
+        }
+    }
+    let method = cfg.plan.as_ref().map(|p| p.method).unwrap_or(cfg.method);
+    // a plan replays the profile's exact solves: its backends override the
+    // session's, so --plan-in reproduces the checkpoint regardless of the
+    // current --svd/--psd flags
+    let (svd, psd) = match &cfg.plan {
+        Some(p) => (p.svd, p.psd),
+        None => (cfg.svd, cfg.psd),
+    };
+    if method.needs_stats() {
+        ensure!(calib.is_some(), "{} requires calibration", method.name());
         ensure!(
             calib.unwrap().spec == *spec,
             "calibration spec does not match checkpoint"
         );
     }
-    let sites = spec.linear_sites();
     let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
 
     let t0 = std::time::Instant::now();
@@ -119,15 +162,24 @@ pub fn quantize(
             let site = &sites[i];
             let w = &ckpt.params[site.param_idx];
             let stats = calib.map(|c| c.for_site(site));
+            let (fmt, rank) = match &cfg.plan {
+                Some(p) => {
+                    let c = p.cell(&site.name).unwrap();
+                    (c.fmt, c.rank)
+                }
+                None => (cfg.fmt, cfg.rank),
+            };
+            let solve_method =
+                if cfg.plan.is_some() && rank == 0 { Method::WOnly } else { method };
             let out = solver::solve_with(
-                cfg.method,
+                solve_method,
                 w,
-                cfg.fmt,
-                cfg.rank,
+                fmt,
+                rank,
                 stats,
                 cfg.seed ^ (i as u64) << 8,
-                cfg.svd,
-                cfg.psd,
+                svd,
+                psd,
             )?;
             Ok((site.name.clone(), out))
         });
@@ -147,25 +199,69 @@ pub fn quantize(
         solved.insert(name, (out.w_dq, out.lowrank));
     }
 
-    let meta = Json::obj(vec![
-        ("method", Json::str(cfg.method.name())),
-        ("format", Json::str(cfg.fmt.name())),
-        ("rank", Json::Num(cfg.rank as f64)),
+    // with a plan, format/rank vary per layer — the per-layer cells live in
+    // the plan artifact, so the meta says "per-layer" instead of recording
+    // the ignored global pair
+    let mut meta_pairs = vec![
+        ("method", Json::str(method.name())),
+        (
+            "format",
+            match &cfg.plan {
+                Some(_) => Json::str("per-layer"),
+                None => Json::str(cfg.fmt.name()),
+            },
+        ),
+        (
+            "rank",
+            match &cfg.plan {
+                Some(_) => Json::Null,
+                None => Json::Num(cfg.rank as f64),
+            },
+        ),
         ("seed", Json::Num(cfg.seed as f64)),
-        ("svd", Json::str(cfg.svd.name())),
-        ("psd", Json::str(cfg.psd.name())),
-    ]);
-    let qckpt = QuantCheckpoint::from_solved(ckpt, cfg.fmt, &solved, meta);
+        ("svd", Json::str(svd.name())),
+        ("psd", Json::str(psd.name())),
+    ];
+    if let Some(p) = &cfg.plan {
+        meta_pairs.push(("plan_strategy", Json::str(p.strategy.name())));
+        meta_pairs.push(("budget_bits", Json::Num(p.budget_bits)));
+        meta_pairs.push(("plan_bits", Json::Num(p.achieved_bits)));
+    }
+    let meta = Json::obj(meta_pairs);
+    let fmts: BTreeMap<String, QFormat> = sites
+        .iter()
+        .map(|s| {
+            let fmt = cfg
+                .plan
+                .as_ref()
+                .and_then(|p| p.cell(&s.name))
+                .map(|c| c.fmt)
+                .unwrap_or(cfg.fmt);
+            (s.name.clone(), fmt)
+        })
+        .collect();
+    let qckpt = QuantCheckpoint::from_solved_per_site(ckpt, &fmts, &solved, meta);
     let merged = qckpt.materialize_merged();
-    crate::info!(
-        "quantized {} layers ({}, {}, rank {}) in {:.2}s wall / {:.2}s solver",
-        sites.len(),
-        cfg.method.name(),
-        cfg.fmt.name(),
-        cfg.rank,
-        t0.elapsed().as_secs_f64(),
-        solve_ms_total / 1e3,
-    );
+    match &cfg.plan {
+        Some(p) => crate::info!(
+            "quantized {} layers ({}, {} plan, {:.3} bits/weight) in {:.2}s wall / {:.2}s solver",
+            sites.len(),
+            method.name(),
+            p.strategy.name(),
+            p.achieved_bits,
+            t0.elapsed().as_secs_f64(),
+            solve_ms_total / 1e3,
+        ),
+        None => crate::info!(
+            "quantized {} layers ({}, {}, rank {}) in {:.2}s wall / {:.2}s solver",
+            sites.len(),
+            method.name(),
+            cfg.fmt.name(),
+            cfg.rank,
+            t0.elapsed().as_secs_f64(),
+            solve_ms_total / 1e3,
+        ),
+    }
     Ok(QuantizedModel { ckpt: qckpt, merged, diags, config: cfg.clone(), solve_ms_total })
 }
 
@@ -228,7 +324,8 @@ mod tests {
         let ckpt = nano_ckpt(3);
         let w_only = quantize(&ckpt, &PipelineConfig::new(Method::WOnly, fmt(), 0), None).unwrap();
         assert!((w_only.effective_bits() - 4.25).abs() < 1e-9);
-        let zq = quantize(&ckpt, &PipelineConfig::new(Method::ZeroQuantV2, fmt(), 8), None).unwrap();
+        let zq =
+            quantize(&ckpt, &PipelineConfig::new(Method::ZeroQuantV2, fmt(), 8), None).unwrap();
         assert!(zq.effective_bits() > 4.25);
         assert!(zq.effective_bits() < 16.0);
     }
@@ -271,7 +368,8 @@ mod tests {
     #[test]
     fn solver_wall_times_are_reported() {
         let ckpt = nano_ckpt(6);
-        let qm = quantize(&ckpt, &PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4), None).unwrap();
+        let qm =
+            quantize(&ckpt, &PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4), None).unwrap();
         assert!(qm.solve_ms_total > 0.0);
         for d in &qm.diags {
             assert!(d.wall_ms > 0.0, "{} reported zero wall time", d.name);
@@ -292,6 +390,68 @@ mod tests {
             qm.ckpt.meta.get("psd").and_then(crate::util::json::Json::as_str),
             Some("auto")
         );
+    }
+
+    #[test]
+    fn plan_overrides_format_and_rank_per_layer() {
+        use crate::budget::{allocate, profile, AllocStrategy, CandidateGrid};
+        let ckpt = nano_ckpt(9);
+        let calib = super::CalibResult::synthetic(&ckpt.spec, 96, 17);
+        let grid = CandidateGrid {
+            formats: vec![
+                QFormat::Mxint { bits: 2, block: 16 },
+                QFormat::Mxint { bits: 4, block: 32 },
+            ],
+            ranks: vec![0, 4],
+        };
+        let base = PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 3, block: 32 }, 8);
+        let prof = profile(&ckpt, &calib, &base, &grid).unwrap();
+        let plan = allocate(&prof, 3.6, AllocStrategy::Greedy).unwrap();
+        let qm =
+            quantize(&ckpt, &base.clone().with_plan(plan.clone()), Some(&calib)).unwrap();
+        // the executed model costs exactly what the plan priced
+        assert!(
+            (qm.effective_bits() - plan.achieved_bits).abs() < 1e-9,
+            "{} vs {}",
+            qm.effective_bits(),
+            plan.achieved_bits
+        );
+        assert!(qm.effective_bits() <= 3.6 + 1e-9);
+        // low-rank terms exist exactly where the plan bought rank
+        for site in ckpt.spec.linear_sites() {
+            let cell = plan.cell(&site.name).unwrap();
+            assert_eq!(
+                qm.ckpt.lowrank.contains_key(&site.name),
+                cell.rank > 0,
+                "{}",
+                site.name
+            );
+            if let Some(lr) = qm.ckpt.lowrank.get(&site.name) {
+                assert_eq!(lr.rank(), cell.rank, "{}", site.name);
+            }
+        }
+        // plan provenance lands in the checkpoint meta
+        assert_eq!(
+            qm.ckpt.meta.get("plan_strategy").and_then(crate::util::json::Json::as_str),
+            Some("greedy")
+        );
+    }
+
+    #[test]
+    fn plan_must_cover_every_site() {
+        use crate::budget::{allocate, profile, AllocStrategy, CandidateGrid};
+        let ckpt = nano_ckpt(10);
+        let calib = super::CalibResult::synthetic(&ckpt.spec, 64, 18);
+        let base = PipelineConfig::new(Method::QeraExact, fmt(), 4);
+        let grid = CandidateGrid {
+            formats: vec![QFormat::Mxint { bits: 3, block: 32 }],
+            ranks: vec![0, 4],
+        };
+        let prof = profile(&ckpt, &calib, &base, &grid).unwrap();
+        let mut plan = allocate(&prof, 4.0, AllocStrategy::Uniform).unwrap();
+        plan.layers.remove("blk0.wq");
+        let err = quantize(&ckpt, &base.with_plan(plan), Some(&calib)).unwrap_err();
+        assert!(err.to_string().contains("missing layer"), "{err}");
     }
 
     #[test]

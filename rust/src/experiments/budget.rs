@@ -1,0 +1,79 @@
+//! Budget-allocator sweep: uniform vs greedy vs Lagrangian plans at
+//! matched average bits/weight.
+//!
+//! For each budget the three strategies allocate over one shared profile,
+//! then each plan is executed end to end (quantize → perplexity), so the
+//! table shows both the *predicted* output error the allocator optimized
+//! and the realized perplexity at the same memory spend.
+
+use super::common::{corpus_for, subject_model, Scale};
+use crate::bench_util::Table;
+use crate::budget::{allocate, profile, AllocStrategy, CandidateGrid};
+use crate::coordinator::{calibrate, quantize, PipelineConfig};
+use crate::eval::perplexity;
+use crate::quant::QFormat;
+use crate::runtime::Registry;
+use crate::solver::Method;
+use anyhow::Result;
+
+/// Budgets swept per scale (average bits/weight; the grid's cheapest
+/// uniform cell is 2.50, so every budget is feasible for all strategies).
+pub fn budgets(scale: Scale) -> Vec<f64> {
+    match scale {
+        Scale::Quick => vec![3.25, 3.75],
+        Scale::Full => vec![2.75, 3.25, 3.75, 4.5],
+    }
+}
+
+/// Uniform-vs-greedy-vs-lagrangian comparison at matched bits/weight.
+pub fn budget_sweep(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
+    let spec = reg.spec(model)?.clone();
+    let ckpt = subject_model(reg, &spec, scale)?;
+    let (train, val) = corpus_for(&spec);
+    let calib = calibrate(reg, &spec, &ckpt.params, &train, 16, true)?;
+
+    let grid = CandidateGrid::default_ptq();
+    let base = PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 4, block: 32 }, 8);
+    let prof = profile(&ckpt, &calib, &base, &grid)?;
+
+    let base_ppl = perplexity(reg, &spec, &ckpt.params, &val, 8)?;
+    let title =
+        format!("budget sweep {model}: plans at matched bits/weight (bf16 ppl {base_ppl:.3})");
+    let mut table = Table::new(
+        &title,
+        &["budget", "strategy", "achieved-bits", "pred-error", "ppl", "delta-vs-bf16"],
+    );
+    for &b in &budgets(scale) {
+        for strat in AllocStrategy::all() {
+            let plan = allocate(&prof, b, strat)?;
+            let qm = quantize(&ckpt, &base.clone().with_plan(plan.clone()), Some(&calib))?;
+            let ppl = perplexity(reg, &spec, &qm.merged, &val, 8)?;
+            table.row(vec![
+                format!("{b:.2}"),
+                strat.name(),
+                format!("{:.3}", plan.achieved_bits),
+                format!("{:.4}", plan.total_error),
+                format!("{ppl:.3}"),
+                format!("{:+.3}", ppl - base_ppl),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_are_feasible_for_the_default_grid() {
+        // cheapest default-grid cell is mxint2:16 rank 0 = 2.50 bits/weight;
+        // every swept budget must sit above it or the sweep would bail
+        let cheapest = QFormat::Mxint { bits: 2, block: 16 }.avg_bits();
+        for scale in [Scale::Quick, Scale::Full] {
+            for b in budgets(scale) {
+                assert!(b >= cheapest, "{b} below {cheapest}");
+            }
+        }
+    }
+}

@@ -11,5 +11,6 @@ pub mod common;
 pub mod ptq;
 pub mod qpeft;
 pub mod analysis;
+pub mod budget;
 
 pub use common::{subject_model, Scale};

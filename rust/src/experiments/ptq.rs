@@ -14,8 +14,9 @@ use anyhow::Result;
 /// The PTQ method rows of Tables 3/4 (+ HQQ).
 fn method_rows() -> Vec<(String, Method, QFormat, usize)> {
     // (label, method, format override?, rank) — HQQ uses its own format
+    let hqq = QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 };
     vec![
-        ("hqq".into(), Method::WOnly, QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 }, 0),
+        ("hqq".into(), Method::WOnly, hqq, 0),
         ("w-only".into(), Method::WOnly, QFormat::None, 0),
         ("zeroquant-v2".into(), Method::ZeroQuantV2, QFormat::None, usize::MAX),
         ("lqer".into(), Method::Lqer, QFormat::None, usize::MAX),
@@ -117,18 +118,19 @@ pub fn table4(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
         datasets.push((tr, te, t.n_classes()));
     }
 
-    let eval_params = |label: &str, params: &[crate::tensor::Tensor], table: &mut Table| -> Result<()> {
-        let mut row = vec![label.to_string()];
-        let mut sum = 0.0;
-        for (tr, te, classes) in &datasets {
-            let acc = probe_accuracy(reg, &spec, params, tr, te, *classes)?;
-            sum += acc;
-            row.push(format!("{:.1}", acc * 100.0));
-        }
-        row.push(format!("{:.2}", 100.0 * sum / datasets.len() as f64));
-        table.row(row);
-        Ok(())
-    };
+    let eval_params =
+        |label: &str, params: &[crate::tensor::Tensor], table: &mut Table| -> Result<()> {
+            let mut row = vec![label.to_string()];
+            let mut sum = 0.0;
+            for (tr, te, classes) in &datasets {
+                let acc = probe_accuracy(reg, &spec, params, tr, te, *classes)?;
+                sum += acc;
+                row.push(format!("{:.1}", acc * 100.0));
+            }
+            row.push(format!("{:.2}", 100.0 * sum / datasets.len() as f64));
+            table.row(row);
+            Ok(())
+        };
 
     eval_params("bf16", &ckpt.params, &mut table)?;
     for (label, method, fmt_ovr, r) in method_rows() {

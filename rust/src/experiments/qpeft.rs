@@ -58,7 +58,8 @@ pub fn table1(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
         let methods: Vec<Method> =
             if fmt == QFormat::None { vec![Method::QloraZero] } else { qpeft_methods() };
         for method in methods {
-            let label = if fmt == QFormat::None { "lora (16-bit)".to_string() } else { method.name() };
+            let label =
+                if fmt == QFormat::None { "lora (16-bit)".to_string() } else { method.name() };
             let mut row = vec![wbits.to_string(), label];
             let mut sum = 0.0;
             for task in &tasks {
@@ -114,7 +115,13 @@ pub fn table2(reg: &Registry, model: &str, scale: Scale) -> Result<Table> {
         &format!("Table 2 analog: QPEFT LM ppl + arithmetic-QA acc ({model}, rank {rank})"),
         &["w-bits", "method", "ppl", "delta-ppl", "qa-digit-acc %"],
     );
-    table.row(vec!["16".into(), "bf16 (no ft)".into(), format!("{base_ppl:.3}"), "-".into(), "-".into()]);
+    table.row(vec![
+        "16".into(),
+        "bf16 (no ft)".into(),
+        format!("{base_ppl:.3}"),
+        "-".into(),
+        "-".into(),
+    ]);
 
     for (fmt, wbits) in [
         (QFormat::Mxint { bits: 4, block: 32 }, "4.25"),

@@ -12,6 +12,9 @@
 //! * [`solver`] `qera_approx` — Theorem 2: diagonal `S = diag(√E[x_i²])`.
 //! * Baselines: `zeroquant_v2` (weight-error SVD), `lqer` (abs-mean
 //!   heuristic), `loftq` (iterative), QLoRA-zero.
+//! * [`budget`] — analytical mixed-precision planning: score every layer ×
+//!   `(format, rank)` cell with the closed-form error, then allocate a
+//!   global bits/weight budget (uniform / greedy / Lagrangian).
 //!
 //! ## Architecture (three layers, python never at request time)
 //!
@@ -34,6 +37,7 @@ pub mod data;
 pub mod model;
 pub mod runtime;
 pub mod coordinator;
+pub mod budget;
 pub mod train;
 pub mod eval;
 pub mod serve;

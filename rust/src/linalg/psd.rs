@@ -145,7 +145,8 @@ pub fn psd_sqrt_pair(r: &Mat64, eps_rel: f64) -> (Mat64, Mat64) {
     let wmax = e.w.iter().cloned().fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
     let floor = wmax * eps_rel.max(0.0);
     let sq: Vec<f64> = e.w.iter().map(|&w| w.max(0.0).sqrt()).collect();
-    let isq: Vec<f64> = e.w.iter().map(|&w| 1.0 / w.max(floor).max(f64::MIN_POSITIVE).sqrt()).collect();
+    let isq: Vec<f64> =
+        e.w.iter().map(|&w| 1.0 / w.max(floor).max(f64::MIN_POSITIVE).sqrt()).collect();
     (recompose(&e.v, &sq), recompose(&e.v, &isq))
 }
 

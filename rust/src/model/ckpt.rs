@@ -163,10 +163,24 @@ pub struct QuantCheckpoint {
 }
 
 impl QuantCheckpoint {
-    /// Build from a dense checkpoint + solved layers.
+    /// Build from a dense checkpoint + solved layers, one shared format.
     pub fn from_solved(
         ckpt: &Checkpoint,
         fmt: QFormat,
+        solved: &BTreeMap<String, (Tensor, Option<LowRank>)>,
+        meta: Json,
+    ) -> Self {
+        let fmts: BTreeMap<String, QFormat> =
+            solved.keys().map(|k| (k.clone(), fmt)).collect();
+        Self::from_solved_per_site(ckpt, &fmts, solved, meta)
+    }
+
+    /// Build from a dense checkpoint + solved layers with per-layer formats
+    /// (the budget-plan execution path): `fmts` must name a format for
+    /// every solved layer, so each MXINT layer bit-packs at its own width.
+    pub fn from_solved_per_site(
+        ckpt: &Checkpoint,
+        fmts: &BTreeMap<String, QFormat>,
         solved: &BTreeMap<String, (Tensor, Option<LowRank>)>,
         meta: Json,
     ) -> Self {
@@ -176,6 +190,7 @@ impl QuantCheckpoint {
         let mut lowrank = BTreeMap::new();
         for (p, (name, _)) in ckpt.params.iter().zip(&layout) {
             if let Some((w_dq, lr)) = solved.get(name) {
+                let fmt = *fmts.get(name).expect("format for every solved layer");
                 let qw = match fmt {
                     QFormat::Mxint { bits, block } => {
                         let (codes, exps) = mxint::quantize_packed(p, bits, block);
@@ -435,6 +450,40 @@ mod tests {
             let direct = fmt.qdq(w);
             let viapack = back.qweights[&site.name].dequantize();
             assert_eq!(direct, viapack, "{}", site.name);
+        }
+    }
+
+    #[test]
+    fn quant_roundtrip_per_site_formats() {
+        // budget plans quantize different layers at different widths; the
+        // packed checkpoint must round-trip each layer at its own format
+        let ckpt = nano_ckpt(7);
+        let f2 = QFormat::Mxint { bits: 2, block: 16 };
+        let f4 = QFormat::Mxint { bits: 4, block: 32 };
+        let mut solved = BTreeMap::new();
+        let mut fmts = BTreeMap::new();
+        for (i, site) in ckpt.spec.linear_sites().iter().enumerate() {
+            let fmt = if i % 2 == 0 { f2 } else { f4 };
+            let w = &ckpt.params[site.param_idx];
+            solved.insert(site.name.clone(), (fmt.qdq(w), None));
+            fmts.insert(site.name.clone(), fmt);
+        }
+        let q = QuantCheckpoint::from_solved_per_site(&ckpt, &fmts, &solved, Json::obj(vec![]));
+        let path = tmpfile("quant_mixed.qkpt");
+        q.save(&path).unwrap();
+        let back = QuantCheckpoint::load(&path).unwrap();
+        assert_eq!(q.materialize_merged(), back.materialize_merged());
+        for site in ckpt.spec.linear_sites() {
+            let fmt = fmts[&site.name];
+            let direct = fmt.qdq(&ckpt.params[site.param_idx]);
+            assert_eq!(direct, back.qweights[&site.name].dequantize(), "{}", site.name);
+            match &back.qweights[&site.name] {
+                QWeight::Mxint { bits, .. } => {
+                    let want = if let QFormat::Mxint { bits: b, .. } = fmt { b } else { 0 };
+                    assert_eq!(*bits, want, "{}", site.name);
+                }
+                QWeight::Dense(_) => panic!("{} should be packed", site.name),
+            }
         }
     }
 

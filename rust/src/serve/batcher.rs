@@ -4,7 +4,8 @@
 //! the PJRT handles (they are not `Send`), drains the queue into batches of
 //! up to `spec.batch` requests within a `max_wait` window, decodes
 //! step-locked batches, and completes each request on its response channel.
-//! Latency statistics (queue / first-token / total) feed the serving bench.
+//! Latency statistics (per-request queue / total samples with p50/p95
+//! accessors, not just means) feed the serving bench's tail gates.
 
 use crate::model::ModelSpec;
 use crate::util::rng::Rng;
@@ -47,6 +48,11 @@ pub struct ServerStats {
     pub batches: usize,
     pub tokens_generated: usize,
     pub wall_s: f64,
+    /// Per-request queue latency samples (ms), in completion order — the
+    /// serving bench gates on the tails, not just the means.
+    pub queue_ms: Vec<f64>,
+    /// Per-request total latency samples (ms), in completion order.
+    pub total_ms: Vec<f64>,
 }
 
 impl ServerStats {
@@ -64,6 +70,43 @@ impl ServerStats {
         } else {
             0.0
         }
+    }
+
+    /// Percentile over a sample set (same convention as `bench_util`:
+    /// nearest-rank on the sorted samples); 0.0 when empty.
+    fn pct(samples: &[f64], p: f64) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() - 1) as f64 * p) as usize]
+    }
+
+    fn mean(samples: &[f64]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
+
+    pub fn queue_mean_ms(&self) -> f64 {
+        Self::mean(&self.queue_ms)
+    }
+    pub fn queue_p50_ms(&self) -> f64 {
+        Self::pct(&self.queue_ms, 0.5)
+    }
+    pub fn queue_p95_ms(&self) -> f64 {
+        Self::pct(&self.queue_ms, 0.95)
+    }
+    pub fn total_mean_ms(&self) -> f64 {
+        Self::mean(&self.total_ms)
+    }
+    pub fn total_p50_ms(&self) -> f64 {
+        Self::pct(&self.total_ms, 0.5)
+    }
+    pub fn total_p95_ms(&self) -> f64 {
+        Self::pct(&self.total_ms, 0.95)
     }
 }
 
@@ -207,6 +250,8 @@ fn run_batch(
             total_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
             batch_size: bsize,
         };
+        stats.queue_ms.push(resp.queue_ms);
+        stats.total_ms.push(resp.total_ms);
         let _ = req.reply.send(resp);
         stats.requests += 1;
     }
@@ -224,6 +269,23 @@ mod tests {
     fn artifact_dir() -> Option<PathBuf> {
         let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn latency_percentiles_from_samples() {
+        // artifact-free: the tail accessors must follow the bench_util
+        // nearest-rank convention and degrade to 0.0 on empty stats
+        let mut st = ServerStats::default();
+        assert_eq!(st.queue_p50_ms(), 0.0);
+        assert_eq!(st.total_p95_ms(), 0.0);
+        st.queue_ms = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        st.total_ms = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(st.queue_p50_ms(), 3.0);
+        assert_eq!(st.queue_p95_ms(), 4.0); // idx (5-1)*0.95 = 3
+        assert_eq!(st.queue_mean_ms(), 3.0);
+        assert_eq!(st.total_p50_ms(), 50.0); // idx 49
+        assert_eq!(st.total_p95_ms(), 95.0); // idx (99*0.95)=94
+        assert!((st.total_mean_ms() - 50.5).abs() < 1e-12);
     }
 
     #[test]
@@ -254,6 +316,12 @@ mod tests {
         let stats = server.stop();
         assert_eq!(stats.requests, 6);
         assert!(stats.tokens_generated >= 24);
+        // one latency sample per request, with coherent tails
+        assert_eq!(stats.queue_ms.len(), 6);
+        assert_eq!(stats.total_ms.len(), 6);
+        assert!(stats.queue_p50_ms() <= stats.queue_p95_ms());
+        assert!(stats.total_p50_ms() <= stats.total_p95_ms());
+        assert!(stats.total_p50_ms() >= stats.queue_p50_ms());
         assert!(batched > 0, "burst never batched");
         assert!(stats.batches < 6, "no batching happened: {}", stats.batches);
     }

@@ -171,10 +171,20 @@ mod tests {
         for seed in 0..3 {
             let (w, stats, rxx) = instance(16, 16, 256, seed);
             let k = 4;
-            let e_zq = out_err(&w, &solve(Method::ZeroQuantV2, &w, fmt(), k, None, 0).unwrap(), &rxx);
-            let e_lq = out_err(&w, &solve(Method::Lqer, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
-            let e_ap = out_err(&w, &solve(Method::QeraApprox, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
-            let e_ex = out_err(&w, &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+            let e_zq =
+                out_err(&w, &solve(Method::ZeroQuantV2, &w, fmt(), k, None, 0).unwrap(), &rxx);
+            let e_lq =
+                out_err(&w, &solve(Method::Lqer, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+            let e_ap = out_err(
+                &w,
+                &solve(Method::QeraApprox, &w, fmt(), k, Some(&stats), 0).unwrap(),
+                &rxx,
+            );
+            let e_ex = out_err(
+                &w,
+                &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(),
+                &rxx,
+            );
             assert!(e_ex <= e_zq * (1.0 + 1e-9), "seed {seed}: exact {e_ex} vs zq {e_zq}");
             assert!(e_ex <= e_lq * (1.0 + 1e-9), "seed {seed}: exact {e_ex} vs lqer {e_lq}");
             assert!(e_ex <= e_ap * (1.0 + 1e-9), "seed {seed}: exact {e_ex} vs approx {e_ap}");
@@ -222,7 +232,11 @@ mod tests {
         let (w, stats, rxx) = instance(16, 16, 256, 4);
         let mut prev = f64::INFINITY;
         for k in [1usize, 2, 4, 8, 16] {
-            let e = out_err(&w, &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+            let e = out_err(
+                &w,
+                &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(),
+                &rxx,
+            );
             assert!(e <= prev + 1e-9, "k={k}: {e} > {prev}");
             prev = e;
         }
@@ -232,7 +246,8 @@ mod tests {
     fn full_rank_recovers_everything() {
         let (w, stats, rxx) = instance(8, 8, 128, 5);
         let k = 8; // = min(m,n)
-        let e = out_err(&w, &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
+        let e =
+            out_err(&w, &solve(Method::QeraExact, &w, fmt(), k, Some(&stats), 0).unwrap(), &rxx);
         assert!(e < 1e-8, "{e}");
         let e2 = out_err(&w, &solve(Method::ZeroQuantV2, &w, fmt(), k, None, 0).unwrap(), &rxx);
         assert!(e2 < 1e-8, "{e2}");

@@ -108,7 +108,9 @@ impl SvdBackend {
             .strip_prefix("randomized")
             .or_else(|| s.strip_prefix("rand"));
         let Some(rest) = rest else {
-            bail!("unknown svd backend '{s}' (auto | exact | randomized[:oversample[:power_iters]])")
+            bail!(
+                "unknown svd backend '{s}' (auto | exact | randomized[:oversample[:power_iters]])"
+            )
         };
         let mut oversample = Self::DEFAULT_OVERSAMPLE;
         let mut power_iters = Self::DEFAULT_POWER_ITERS;

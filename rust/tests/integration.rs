@@ -4,6 +4,7 @@
 //! These need built artifacts (`make artifacts`); they skip gracefully when
 //! the directory is absent so `cargo test` stays green on a fresh clone.
 
+use qera::budget::{allocate, profile, AllocStrategy, BudgetPlan, CandidateGrid};
 use qera::coordinator::{calibrate, quantize, CalibResult, PipelineConfig};
 use qera::data::Corpus;
 use qera::linalg::Mat64;
@@ -174,6 +175,113 @@ fn randomized_backend_pipeline_is_deterministic() {
 }
 
 #[test]
+fn budget_plans_beat_uniform_at_matched_bits() {
+    // Acceptance check for the budget allocator (PR 5): on the nano PTQ
+    // setup, the greedy and Lagrangian plans must achieve strictly lower
+    // total predicted output error than the uniform plan at the same
+    // bits/weight budget, and the executed pipeline must realize exactly
+    // the error and bits the plan predicted (same seeds, same solves).
+    // Runs without PJRT artifacts: calibration statistics are synthetic.
+    let spec = ModelSpec::builtin("nano").unwrap();
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(21)));
+    let calib = CalibResult::synthetic(&spec, 256, 22);
+    let base = PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 4, block: 32 }, 8);
+    let prof = profile(&ckpt, &calib, &base, &CandidateGrid::default_ptq()).unwrap();
+    let budget = 3.75;
+
+    let uni = allocate(&prof, budget, AllocStrategy::Uniform).unwrap();
+    let gre = allocate(&prof, budget, AllocStrategy::Greedy).unwrap();
+    let lag = allocate(&prof, budget, AllocStrategy::Lagrangian).unwrap();
+    for plan in [&uni, &gre, &lag] {
+        assert!(
+            plan.achieved_bits <= budget + 1e-9,
+            "{}: {} > {budget}",
+            plan.strategy.name(),
+            plan.achieved_bits
+        );
+    }
+    // the acceptance bound: non-uniform spending strictly wins
+    assert!(
+        gre.total_error < uni.total_error,
+        "greedy {} !< uniform {}",
+        gre.total_error,
+        uni.total_error
+    );
+    assert!(
+        lag.total_error <= uni.total_error + 1e-12,
+        "lagrangian {} > uniform {}",
+        lag.total_error,
+        uni.total_error
+    );
+
+    // executing the greedy plan realizes the predicted error and bits:
+    // the profiler solves with the pipeline's own per-site seeds
+    let qm = quantize(&ckpt, &base.clone().with_plan(gre.clone()), Some(&calib)).unwrap();
+    assert!(
+        (qm.effective_bits() - gre.achieved_bits).abs() < 1e-9,
+        "{} vs {}",
+        qm.effective_bits(),
+        gre.achieved_bits
+    );
+    let sites = spec.linear_sites();
+    let mut realized = 0.0f64;
+    for site in &sites {
+        let rxx = calib.for_site(site).rxx_mean().unwrap();
+        let w = Mat64::from_tensor(&ckpt.params[site.param_idx]);
+        let p = Mat64::from_tensor(&qm.merged[site.param_idx]).sub(&w);
+        realized += expected_output_error(&p, &rxx);
+    }
+    assert!(
+        (realized - gre.total_error).abs() <= 1e-6 * gre.total_error.max(1e-12),
+        "realized {realized} vs predicted {}",
+        gre.total_error
+    );
+
+    // ... and strictly beats the executed uniform plan on the same metric
+    let qm_uni = quantize(&ckpt, &base.clone().with_plan(uni.clone()), Some(&calib)).unwrap();
+    let mut realized_uni = 0.0f64;
+    for site in &sites {
+        let rxx = calib.for_site(site).rxx_mean().unwrap();
+        let w = Mat64::from_tensor(&ckpt.params[site.param_idx]);
+        let p = Mat64::from_tensor(&qm_uni.merged[site.param_idx]).sub(&w);
+        realized_uni += expected_output_error(&p, &rxx);
+    }
+    assert!(realized < realized_uni, "{realized} !< {realized_uni}");
+}
+
+#[test]
+fn budget_plan_artifact_reproduces_identical_checkpoint() {
+    // Acceptance check for the plan round trip: --plan-out then --plan-in
+    // must reproduce the identical quantized checkpoint.  The JSON form
+    // prints shortest-round-trip f64s, so the reloaded plan is equal and
+    // the re-executed pipeline is bit-identical.
+    let spec = ModelSpec::builtin("nano").unwrap();
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(23)));
+    let calib = CalibResult::synthetic(&spec, 192, 24);
+    let base = PipelineConfig::new(Method::QeraExact, QFormat::Mxint { bits: 3, block: 32 }, 8);
+    let prof = profile(&ckpt, &calib, &base, &CandidateGrid::default_ptq()).unwrap();
+    let plan = allocate(&prof, 3.5, AllocStrategy::Greedy).unwrap();
+
+    let path = tmpdir().join("nano-plan.json");
+    plan.save(&path).unwrap();
+    let reloaded = BudgetPlan::load(&path).unwrap();
+    assert_eq!(reloaded, plan);
+
+    let a = quantize(&ckpt, &base.clone().with_plan(plan), Some(&calib)).unwrap();
+    let b = quantize(&ckpt, &base.clone().with_plan(reloaded), Some(&calib)).unwrap();
+    for (x, y) in a.merged.iter().zip(&b.merged) {
+        assert_eq!(x, y);
+    }
+    assert_eq!(a.ckpt.payload_bytes(), b.ckpt.payload_bytes());
+
+    // the packed on-disk form round-trips too
+    let qpath = tmpdir().join("nano-plan.qqkpt");
+    a.ckpt.save(&qpath).unwrap();
+    let back = QuantCheckpoint::load(&qpath).unwrap();
+    assert_eq!(back.materialize_merged(), a.merged);
+}
+
+#[test]
 fn full_ptq_pipeline_roundtrip() {
     let Some(reg) = registry() else {
         eprintln!("skipped: artifacts not built");
@@ -281,8 +389,18 @@ fn cli_pretrain_quantize_eval() {
     .unwrap();
     assert!(PathBuf::from(&q_path).exists());
 
-    run(&["eval-ppl", "--artifacts", &art, "--qckpt", &q_path, "--corpus-tokens", "30000", "--eval-batches", "2"])
-        .unwrap();
+    run(&[
+        "eval-ppl",
+        "--artifacts",
+        &art,
+        "--qckpt",
+        &q_path,
+        "--corpus-tokens",
+        "30000",
+        "--eval-batches",
+        "2",
+    ])
+    .unwrap();
 
     // unknown command / bad flags fail cleanly
     assert!(run(&["frobnicate"]).is_err());
@@ -348,8 +466,17 @@ fn manifest_covers_every_needed_artifact() {
     let Some(reg) = registry() else {
         return;
     };
+    let arts = [
+        "lm_fwd",
+        "lm_nll",
+        "lm_logits_last",
+        "lm_fwd_taps",
+        "lm_pool",
+        "pretrain_step",
+        "full_cls_step",
+    ];
     for cfg in ["nano", "small"] {
-        for art in ["lm_fwd", "lm_nll", "lm_logits_last", "lm_fwd_taps", "lm_pool", "pretrain_step", "full_cls_step"] {
+        for art in arts {
             assert!(reg.info(&format!("{art}.{cfg}")).is_ok(), "{art}.{cfg}");
         }
     }
