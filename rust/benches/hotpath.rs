@@ -13,12 +13,13 @@
 //! calibration `R_XX` fold: seed scalar loop vs blocked/threaded SYRK),
 //! `qdq` (quantizer kernels, serial vs pool-threaded block chunks),
 //! `budget` (the mixed-precision planner: layer × cell profiling +
-//! allocator sweeps), `quant` (quantizer throughput), `stats` (calibration
-//! accumulation), and — when PJRT artifacts are built — `forward` /
-//! `serve`.
+//! allocator sweeps), `exec` (fused-from-packed matmul vs
+//! dequantize-then-matmul — the native serve/eval hot path), `quant`
+//! (quantizer throughput), `stats` (calibration accumulation), and — when
+//! PJRT artifacts are built — `forward` / `serve`.
 //!
 //! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` / `calib` /
-//! `qdq` / `budget` p50s additionally land in `BENCH_solver.json`
+//! `qdq` / `budget` / `exec` p50s additionally land in `BENCH_solver.json`
 //! (machine-readable, for the perf trajectory and the CI bench-regression
 //! gate).  Set `QERA_BENCH_SMOKE=1` to shrink shapes/iterations — the mode
 //! CI uses when diffing against `BENCH_baseline.json`.
@@ -335,7 +336,7 @@ fn bench_forward(reg: &Registry) -> anyhow::Result<()> {
         .collect();
     let s = time_stats(2, 20, || {
         let mut inputs = lm_inputs(&tokens, None, &shape, &params);
-        inputs.extend(lora.iter().cloned().map(qera::runtime::Value::F32));
+        inputs.extend(lora.iter().cloned().map(qera::runtime::Value::from));
         std::hint::black_box(exec_lr.run(&inputs).unwrap());
     });
     let toks = (spec.batch * spec.seq) as f64 / (s.p50_ms / 1e3);
@@ -520,6 +521,57 @@ fn bench_qdq() -> Table {
     t
 }
 
+/// Fused quantized execution vs dequantize-then-matmul: the serve /
+/// eval-ppl hot path on the native backend, `y = x·W_q (+ (x·A)·B)` from
+/// packed blocks.  The fused column is the shipped path (last p50 — the CI
+/// gate watches it); the reference materializes the dense `[k,n]` f32
+/// weight per call.
+fn bench_exec() -> Table {
+    use qera::quant::{exec as qexec, PackedWeight};
+    let mut t = Table::new(
+        "exec: fused-from-packed vs dequantize-then-matmul (ms)",
+        &["fmt m k n rank", "dequant+mm p50", "fused p50", "speedup"],
+    );
+    let mut rng = Rng::new(9);
+    let (k, n) = (512usize, 512usize);
+    let ms: &[usize] = if smoke() { &[256] } else { &[256, 1024] };
+    let iters = if smoke() { 3 } else { 5 };
+    for fmt in [
+        QFormat::Mxint { bits: 4, block: 32 },
+        QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 },
+        QFormat::Fp4 { group: 64 },
+    ] {
+        let w = Tensor::randn(vec![k, n], 0.05, &mut rng);
+        let pw = PackedWeight::quantize(w.data(), &fmt).expect("packable format");
+        for &m in ms {
+            let x = Tensor::randn(vec![m, k], 1.0, &mut rng);
+            for rank in [0usize, 16] {
+                let lr = (rank > 0).then(|| {
+                    (
+                        Tensor::randn(vec![k, rank], 0.02, &mut rng),
+                        Tensor::randn(vec![rank, n], 0.02, &mut rng),
+                    )
+                });
+                let lr_ref = lr.as_ref().map(|(a, b)| (a, b));
+                let dq = time_stats(1, iters, || {
+                    std::hint::black_box(qexec::dequant_matmul_ref(&x, &pw, k, n, lr_ref));
+                });
+                let fused = time_stats(1, iters, || {
+                    std::hint::black_box(qexec::fused_matmul(&x, &pw, k, n, lr_ref));
+                });
+                t.row(vec![
+                    format!("{} {m}x{k}x{n} r{rank}", fmt.name()),
+                    f3(dq.p50_ms),
+                    f3(fused.p50_ms),
+                    f2(dq.p50_ms / fused.p50_ms),
+                ]);
+            }
+        }
+    }
+    t.emit("hot_exec");
+    t
+}
+
 fn bench_quant() {
     let mut rng = Rng::new(4);
     let w = Tensor::randn(vec![512, 512], 0.02, &mut rng);
@@ -579,7 +631,11 @@ fn bench_serve(reg: &Registry) -> anyhow::Result<()> {
             reg.dir.clone(),
             spec.clone(),
             params.clone(),
-            qera::serve::ServerConfig { max_wait: Duration::from_millis(wait_ms), seed: 1 },
+            qera::serve::ServerConfig {
+                max_wait: Duration::from_millis(wait_ms),
+                seed: 1,
+                ..Default::default()
+            },
         );
         let rxs: Vec<_> = (0..8).map(|i| server.submit(vec![i as i32 + 1, 2], 8, 0.0)).collect();
         for rx in rxs {
@@ -634,6 +690,9 @@ fn main() -> anyhow::Result<()> {
     }
     if want("budget") {
         report.push(("budget", bench_budget()));
+    }
+    if want("exec") {
+        report.push(("exec", bench_exec()));
     }
     if want("quant") {
         bench_quant();

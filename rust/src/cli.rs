@@ -4,7 +4,8 @@
 //! qera info                               list artifacts + configs
 //! qera pretrain  [--model nano --steps 300 --out ckpt.qkpt ...]
 //! qera quantize  [--ckpt x.qkpt --method qera-exact --format mxint4:32 ...]
-//! qera eval-ppl  [--ckpt x.qkpt | --qckpt q.qkpt ...]
+//! qera eval-ppl  [--ckpt x.qkpt | --qckpt q.qkpt --exec native ...]
+//! qera serve     [--qckpt q.qkpt --exec native --prompts 8 ...]
 //! qera assumption [--ckpt x.qkpt]         Figure-5 off-diagonal report
 //! qera e2e       [--model nano ...]       full pipeline, end to end
 //! ```
@@ -14,7 +15,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{calibrate, quantize, PipelineConfig};
 use crate::data::corpus::Corpus;
 use crate::model::Checkpoint;
-use crate::runtime::Registry;
+use crate::runtime::{ExecBackend, NativeModel, Registry};
 use crate::solver::Method;
 use crate::train::{pretrain, PretrainConfig};
 use anyhow::{bail, Context, Result};
@@ -74,6 +75,10 @@ impl Args {
                 || k == "artifacts"
                 || k == "plan-in"
                 || k == "plan-out"
+                || k == "exec"
+                || k == "prompts"
+                || k == "new-tokens"
+                || k == "temperature"
             {
                 continue;
             }
@@ -90,6 +95,21 @@ fn registry(args: &Args) -> Result<Registry> {
     }
 }
 
+/// `--exec` flag, falling back to `QERA_EXEC`, then the stub default.
+fn exec_backend(args: &Args) -> Result<ExecBackend> {
+    match args.get("exec") {
+        Some(s) => ExecBackend::parse(s),
+        None => Ok(ExecBackend::from_env()),
+    }
+}
+
+fn artifact_dir(args: &Args) -> std::path::PathBuf {
+    match args.get("artifacts") {
+        Some(d) => d.into(),
+        None => std::env::var("QERA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()).into(),
+    }
+}
+
 /// CLI entry point; returns the process exit code.
 pub fn main_with_args(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
@@ -102,6 +122,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "pretrain" => cmd_pretrain(&args),
         "quantize" => cmd_quantize(&args),
         "eval-ppl" => cmd_eval_ppl(&args),
+        "serve" => cmd_serve(&args),
         "assumption" => cmd_assumption(&args),
         "e2e" => cmd_e2e(&args),
         other => bail!("unknown command '{other}'; try `qera help`"),
@@ -115,6 +136,7 @@ commands:
   pretrain     pretrain a subject model on the synthetic corpus
   quantize     calibrate + quantize a checkpoint with a chosen method
   eval-ppl     perplexity of a dense or quantized checkpoint
+  serve        batched generation server over a checkpoint
   assumption   Figure-5 off-diagonal (Assumption 1) report
   e2e          pretrain -> calibrate -> quantize (all methods) -> eval
 
@@ -123,6 +145,15 @@ common flags: --artifacts DIR --model NAME --method M --format F --rank K
               --psd auto|exact|lowrank[:rank_mult[:power_iters]]
               --corpus-tokens N --calib-batches N --eval-batches N --seed S
               --ckpt PATH --out PATH --config FILE.json
+              --exec stub|native   execution backend (or QERA_EXEC env);
+                                   native runs the pure-Rust fused path:
+                                   quantized linears evaluate straight from
+                                   packed blocks, no artifacts needed
+
+serving (serve): --prompts N --new-tokens N --temperature T  synthetic
+              request burst against the dynamic batcher; with --qckpt and
+              --exec native the packed weights serve without dense
+              materialization
 
 budget planning (quantize): --budget-bits B  target avg bits/weight; profiles
               every layer x (format, rank) cell with the closed-form error
@@ -279,6 +310,24 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 
 fn cmd_eval_ppl(args: &Args) -> Result<()> {
     let cfg = args.to_config()?;
+    let backend = exec_backend(args)?;
+    // native path first: no registry / artifacts needed, and a quantized
+    // checkpoint evaluates fused straight from its packed payload
+    if backend == ExecBackend::Native {
+        let model = if let Some(p) = args.get("qckpt") {
+            let q = crate::model::QuantCheckpoint::load(p)?;
+            NativeModel::from_quant(&q)
+        } else {
+            let p = args.get("ckpt").context("--ckpt or --qckpt required")?;
+            let c = Checkpoint::load(p)?;
+            NativeModel::from_dense(c.spec.clone(), c.params)
+        };
+        let corpus = Corpus::generate(model.spec.vocab, cfg.corpus_tokens, cfg.seed);
+        let (_, val) = corpus.split(0.1);
+        let ppl = crate::eval::perplexity_native(&model, &val, cfg.eval_batches)?;
+        println!("perplexity: {ppl:.4} (exec native)");
+        return Ok(());
+    }
     let reg = registry(args)?;
     let (spec, params) = if let Some(p) = args.get("qckpt") {
         let q = crate::model::QuantCheckpoint::load(p)?;
@@ -292,6 +341,72 @@ fn cmd_eval_ppl(args: &Args) -> Result<()> {
     let (_, val) = corpus.split(0.1);
     let ppl = crate::eval::perplexity(&reg, &spec, &params, &val, cfg.eval_batches)?;
     println!("perplexity: {ppl:.4}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::serve::{ServeModel, Server, ServerConfig};
+    let cfg = args.to_config()?;
+    let backend = exec_backend(args)?;
+    let (spec, model) = if let Some(p) = args.get("qckpt") {
+        let q = crate::model::QuantCheckpoint::load(p)?;
+        (q.spec.clone(), ServeModel::Quant(Box::new(q)))
+    } else {
+        let p = args.get("ckpt").context("--ckpt or --qckpt required")?;
+        let c = Checkpoint::load(p)?;
+        (c.spec.clone(), ServeModel::Dense(c.params))
+    };
+    let n_prompts = args.usize_or("prompts", 8)?;
+    let new_tokens = args.usize_or("new-tokens", 16)?;
+    let temperature: f32 = match args.get("temperature") {
+        Some(v) => v.parse().context("--temperature must be a float")?,
+        None => 0.0,
+    };
+    println!(
+        "serving {} ({} backend): {n_prompts} prompts x {new_tokens} tokens",
+        spec.name,
+        backend.name()
+    );
+    let server = Server::start_model(
+        artifact_dir(args),
+        spec.clone(),
+        model,
+        ServerConfig { seed: cfg.seed, backend, ..Default::default() },
+    );
+    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0x5e17e);
+    let rxs: Vec<_> = (0..n_prompts)
+        .map(|_| {
+            let len = 1 + rng.below(spec.seq / 2);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(spec.vocab) as i32).collect();
+            server.submit(prompt, new_tokens, temperature)
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().context("serve loop died before responding")?;
+        anyhow::ensure!(
+            resp.tokens.len() == new_tokens,
+            "prompt {i}: got {} tokens, wanted {new_tokens}",
+            resp.tokens.len()
+        );
+        println!(
+            "  prompt {i}: {} tokens (batch {}, queue {:.1} ms, total {:.1} ms)",
+            resp.tokens.len(),
+            resp.batch_size,
+            resp.queue_ms,
+            resp.total_ms
+        );
+    }
+    let stats = server.stop();
+    println!(
+        "served {} requests in {} batches: {:.1} tok/s, queue p50/p95 {:.1}/{:.1} ms, total p50/p95 {:.1}/{:.1} ms",
+        stats.requests,
+        stats.batches,
+        stats.throughput_tok_s(),
+        stats.queue_p50_ms(),
+        stats.queue_p95_ms(),
+        stats.total_p50_ms(),
+        stats.total_p95_ms()
+    );
     Ok(())
 }
 

@@ -18,7 +18,10 @@
 use crate::data::corpus::Corpus;
 use crate::data::batch::lm_batches;
 use crate::model::ModelSpec;
-use crate::runtime::{exec::lm_inputs, Registry};
+use crate::runtime::{
+    exec::{lm_inputs, rc_params},
+    Registry,
+};
 use crate::stats::{offdiag_element_ratio_of, offdiag_ratio_of, CalibStats};
 use crate::tensor::Tensor;
 use crate::util::pool;
@@ -138,12 +141,14 @@ pub fn calibrate(
         })
         .collect();
 
+    // wrap once; each batch then passes params by refcount, not by copy
+    let params = rc_params(params);
     let mut n_sequences = 0usize;
     for (bi, (tokens, _targets)) in lm_batches(corpus, spec.batch, spec.seq).enumerate() {
         if bi >= max_batches {
             break;
         }
-        let outputs = exec.run(&lm_inputs(&tokens, None, &[spec.batch, spec.seq], params))?;
+        let outputs = exec.run(&lm_inputs(&tokens, None, &[spec.batch, spec.seq], &params))?;
         // outputs[0] = logits; outputs[1..] = taps in (block, tap) order,
         // folded in parallel (bit-identical to the serial fold)
         ensure!(outputs.len() == 1 + spec.n_taps(), "tap count mismatch");

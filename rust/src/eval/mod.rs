@@ -9,7 +9,7 @@ pub mod tasks;
 pub mod winrate;
 
 pub use output_error::model_output_error;
-pub use ppl::perplexity;
+pub use ppl::{perplexity, perplexity_native};
 pub use probe::probe_accuracy;
 pub use tasks::{cls_accuracy, qa_digit_accuracy, qa_exact_match};
 pub use winrate::win_rate;

@@ -7,7 +7,10 @@
 use crate::data::batch::lm_batches;
 use crate::data::corpus::Corpus;
 use crate::model::ModelSpec;
-use crate::runtime::{exec::lm_inputs, Registry};
+use crate::runtime::{
+    exec::{lm_inputs, rc_params},
+    NativeModel, Registry,
+};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 
@@ -21,15 +24,39 @@ pub fn perplexity(
 ) -> Result<f64> {
     let exec = reg.load(&format!("lm_nll.{}", spec.name))?;
     let shape = [spec.batch, spec.seq];
+    // wrap once; each batch then passes params by refcount, not by copy
+    let params = rc_params(params);
     let mut total = 0.0f64;
     let mut count = 0usize;
     for (bi, (tokens, targets)) in lm_batches(corpus, spec.batch, spec.seq).enumerate() {
         if bi >= max_batches {
             break;
         }
-        let out = exec.run(&lm_inputs(&tokens, Some((&targets, &shape)), &shape, params))?;
+        let out = exec.run(&lm_inputs(&tokens, Some((&targets, &shape)), &shape, &params))?;
         total += out[0].data().iter().map(|&v| v as f64).sum::<f64>();
         count += out[0].numel();
+    }
+    ensure!(count > 0, "corpus too small for one evaluation batch");
+    Ok((total / count as f64).exp())
+}
+
+/// [`perplexity`] on the native backend — no artifacts needed, and a
+/// quantized [`NativeModel`] streams NLL straight from packed weights.
+pub fn perplexity_native(
+    model: &NativeModel,
+    corpus: &Corpus,
+    max_batches: usize,
+) -> Result<f64> {
+    let (b, s) = (model.spec.batch, model.spec.seq);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (bi, (tokens, targets)) in lm_batches(corpus, b, s).enumerate() {
+        if bi >= max_batches {
+            break;
+        }
+        let nll = model.nll(&tokens, &targets, b, s);
+        total += nll.iter().map(|&v| v as f64).sum::<f64>();
+        count += nll.len();
     }
     ensure!(count > 0, "corpus too small for one evaluation batch");
     Ok((total / count as f64).exp())
@@ -45,6 +72,41 @@ mod tests {
     fn registry() -> Option<Registry> {
         let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         p.join("manifest.json").exists().then(|| Registry::open(p).unwrap())
+    }
+
+    #[test]
+    fn native_ppl_near_uniform_without_artifacts() {
+        let spec = crate::model::ModelSpec::builtin("nano").unwrap();
+        let params = init_params(&spec, &mut Rng::new(0));
+        let corpus = Corpus::generate(spec.vocab, 4096, 1);
+        let model = NativeModel::from_dense(spec.clone(), params);
+        let ppl = perplexity_native(&model, &corpus, 4).unwrap();
+        assert!(ppl.is_finite());
+        assert!(ppl > spec.vocab as f64 * 0.3, "{ppl}");
+        assert!(ppl < spec.vocab as f64 * 3.0, "{ppl}");
+        // deterministic
+        assert_eq!(ppl, perplexity_native(&model, &corpus, 4).unwrap());
+    }
+
+    #[test]
+    fn native_quantized_ppl_finite_and_tracks_merged() {
+        let spec = crate::model::ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut Rng::new(5));
+        let corpus = Corpus::generate(spec.vocab, 2048, 6);
+        let ckpt = crate::model::Checkpoint::new(spec.clone(), params);
+        let cfg = crate::coordinator::PipelineConfig::new(
+            crate::solver::Method::WOnly,
+            crate::quant::QFormat::Mxint { bits: 4, block: 32 },
+            0,
+        );
+        let qm = crate::coordinator::quantize(&ckpt, &cfg, None).unwrap();
+        // fused-from-packed vs dense execution of the same merged weights
+        let q_native = NativeModel::from_quant(&qm.ckpt);
+        let d_native = NativeModel::from_dense(spec, qm.merged.clone());
+        let qp = perplexity_native(&q_native, &corpus, 2).unwrap();
+        let dp = perplexity_native(&d_native, &corpus, 2).unwrap();
+        assert!(qp.is_finite() && dp.is_finite());
+        assert!((qp - dp).abs() / dp < 1e-3, "packed {qp} vs dense {dp}");
     }
 
     #[test]

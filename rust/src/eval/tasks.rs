@@ -28,10 +28,10 @@ pub fn cls_accuracy(
     for b in cls_epoch(data, spec.batch, &mut rng) {
         let mut inputs: Vec<Value> =
             vec![Value::I32(b.tokens.clone(), vec![spec.batch, data[0].tokens.len()])];
-        inputs.extend(base.iter().cloned().map(Value::F32));
-        inputs.extend(lora.iter().cloned().map(Value::F32));
-        inputs.push(Value::F32(head.0.clone()));
-        inputs.push(Value::F32(head.1.clone()));
+        inputs.extend(base.iter().cloned().map(Value::from));
+        inputs.extend(lora.iter().cloned().map(Value::from));
+        inputs.push(Value::from(head.0.clone()));
+        inputs.push(Value::from(head.1.clone()));
         let out = exec.run(&inputs)?;
         let preds = out[0].argmax_rows();
         for i in 0..b.real {

@@ -10,5 +10,5 @@ pub mod spec;
 pub mod ckpt;
 pub mod init;
 
-pub use ckpt::{Checkpoint, QuantCheckpoint};
+pub use ckpt::{Checkpoint, QWeight, QuantCheckpoint};
 pub use spec::{LinearSite, ModelSpec, TAP_SITES};

@@ -12,12 +12,12 @@ use crate::tensor::Tensor;
 /// The non-negative E2M1 value grid.
 pub const FP4_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
 
-/// Nearest grid value (ties to the even-indexed neighbour).
+/// Grid index of the nearest representable magnitude for `a = |v|` —
+/// shared by [`snap`] and the packed storage path so the two can't drift.
 #[inline]
-pub fn snap(v: f32) -> f32 {
-    let a = v.abs();
+pub(crate) fn snap_idx(a: f32) -> usize {
     // midpoints between consecutive grid values
-    let idx = if a < 0.25 {
+    if a < 0.25 {
         0
     } else if a < 0.75 {
         1
@@ -33,8 +33,13 @@ pub fn snap(v: f32) -> f32 {
         6
     } else {
         7
-    };
-    FP4_GRID[idx].copysign(v)
+    }
+}
+
+/// Nearest grid value (ties to the even-indexed neighbour).
+#[inline]
+pub fn snap(v: f32) -> f32 {
+    FP4_GRID[snap_idx(v.abs())].copysign(v)
 }
 
 /// Quantize-dequantize one group sharing an absmax scale.
@@ -62,6 +67,53 @@ pub fn qdq_workers(w: &Tensor, group: usize, workers: usize) -> Tensor {
     assert_eq!(last % group, 0);
     let mut out = w.clone();
     crate::quant::par_groups(out.data_mut(), group, workers, qdq_group);
+    out
+}
+
+/// Quantize to storage form: one 4-bit code per element (bit 3 = sign,
+/// bits 0..=2 = grid index) plus one absmax scale per group.  `scale == 0`
+/// marks an all-zero group, where [`qdq`] leaves every element untouched —
+/// the sign bits are kept so decode reproduces `±0.0` exactly.  Decoding
+/// reproduces [`qdq`] bit-for-bit.  A ragged final chunk becomes its own
+/// short group.
+pub fn quantize_packed(w: &[f32], group: usize) -> (Vec<i32>, Vec<f32>) {
+    let group = group.max(1);
+    let mut codes = Vec::with_capacity(w.len());
+    let mut scales = Vec::with_capacity(w.len().div_ceil(group));
+    for g in w.chunks(group) {
+        let amax = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            scales.push(0.0);
+            codes.extend(g.iter().map(|&v| (v.is_sign_negative() as i32) << 3));
+            continue;
+        }
+        let s = amax / 6.0;
+        scales.push(s);
+        codes.extend(g.iter().map(|&v| {
+            let t = v / s;
+            (snap_idx(t.abs()) as i32) | ((t.is_sign_negative() as i32) << 3)
+        }));
+    }
+    (codes, scales)
+}
+
+/// Decode one group's 4-bit codes given its stored scale.
+#[inline]
+pub fn decode_group(codes: &[i32], s: f32, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        let mag = FP4_GRID[(c & 7) as usize];
+        let signed = if c & 8 != 0 { -mag } else { mag };
+        *o = signed * s;
+    }
+}
+
+/// Dequantize storage form back to f32 (flat stream of groups).
+pub fn dequantize_packed(codes: &[i32], scales: &[f32], group: usize) -> Vec<f32> {
+    let group = group.max(1);
+    let mut out = vec![0.0f32; codes.len()];
+    for (gi, chunk) in out.chunks_mut(group).enumerate() {
+        decode_group(&codes[gi * group..gi * group + chunk.len()], scales[gi], chunk);
+    }
     out
 }
 
@@ -117,6 +169,32 @@ mod tests {
     fn zero_group() {
         let w = Tensor::zeros(vec![1, 64]);
         assert_eq!(qdq(&w, 64), w);
+    }
+
+    #[test]
+    fn packed_roundtrip_matches_qdq() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(vec![8, 64], 0.1, &mut rng);
+        for group in [32usize, 64] {
+            let want = qdq(&w, group);
+            let (codes, scales) = quantize_packed(w.data(), group);
+            assert_eq!(dequantize_packed(&codes, &scales, group), want.data(), "group={group}");
+            assert!(codes.iter().all(|&c| (0..16).contains(&c)));
+        }
+        // all-zero group: s = 0 sentinel, signs preserved bit-for-bit
+        let z = vec![0.0f32, -0.0, 0.0, -0.0];
+        let (codes, scales) = quantize_packed(&z, 4);
+        assert_eq!(scales, vec![0.0]);
+        let back = dequantize_packed(&codes, &scales, 4);
+        for (a, b) in back.iter().zip(&z) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // ragged tail becomes its own short group with its own scale
+        let v: Vec<f32> = (0..70).map(|i| (i as f32 * 0.17).cos()).collect();
+        let (codes, scales) = quantize_packed(&v, 64);
+        assert_eq!((codes.len(), scales.len()), (70, 2));
+        let back = dequantize_packed(&codes, &scales, 64);
+        assert!(back.iter().zip(&v).all(|(a, b)| (a - b).abs() < 0.3));
     }
 
     #[test]

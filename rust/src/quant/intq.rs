@@ -24,7 +24,23 @@ pub fn qdq_workers(w: &Tensor, bits: u8, group: usize, iters: usize, workers: us
     out
 }
 
-fn qdq_group(g: &mut [f32], bits: u8, iters: usize) {
+/// The fitted affine grid of one group: either every element dequantizes
+/// to exactly the constant, or to `s·(q − z)` with `|s| > 0`.
+pub(crate) enum GroupFit {
+    Constant(f32),
+    Affine { s: f32, z: f32 },
+}
+
+/// Quantize one value onto the `[0, levels]` code grid.
+#[inline]
+pub(crate) fn quant_code(v: f32, s: f32, z: f32, levels: f32) -> f32 {
+    (v / s + z).round_ties_even().clamp(0.0, levels)
+}
+
+/// Run the alternating (s, z) refinement and return the final grid — the
+/// single source of truth shared by [`qdq`] and the packed storage path
+/// ([`quantize_packed`]), so the two can never drift apart numerically.
+pub(crate) fn fit_group(g: &[f32], bits: u8, iters: usize) -> GroupFit {
     let levels = ((1u32 << bits) - 1) as f32; // codes in [0, levels]
     let mut lo = f32::INFINITY;
     let mut hi = f32::NEG_INFINITY;
@@ -34,23 +50,16 @@ fn qdq_group(g: &mut [f32], bits: u8, iters: usize) {
     }
     if !(hi > lo) {
         // constant group: represent exactly with s=0 -> dq = lo
-        for v in g.iter_mut() {
-            *v = lo;
-        }
-        return;
+        return GroupFit::Constant(lo);
     }
     let mut s = (hi - lo) / levels;
     let mut z = -lo / s; // float zero-point: dq = s * (q - z)... using q - z form
-
-    let quant = |v: f32, s: f32, z: f32| -> f32 {
-        (v / s + z).round_ties_even().clamp(0.0, levels)
-    };
 
     let mut best_err = f64::INFINITY;
     let mut best: Option<(f32, f32)> = None;
     for _ in 0..iters.max(1) {
         // E-step: codes for current grid
-        let codes: Vec<f32> = g.iter().map(|&v| quant(v, s, z)).collect();
+        let codes: Vec<f32> = g.iter().map(|&v| quant_code(v, s, z, levels)).collect();
         // M-step: least-squares optimal (s, z') for fixed codes:
         //   dq_i = s * (q_i - z)  =>  linear regression of w on q.
         let n = g.len() as f64;
@@ -74,7 +83,7 @@ fn qdq_group(g: &mut [f32], bits: u8, iters: usize) {
         let err: f64 = g
             .iter()
             .map(|&v| {
-                let q = quant(v, s_new, z_new);
+                let q = quant_code(v, s_new, z_new, levels);
                 let d = v as f64 - s_new as f64 * (q as f64 - z_new as f64);
                 d * d
             })
@@ -90,10 +99,79 @@ fn qdq_group(g: &mut [f32], bits: u8, iters: usize) {
         z = z_new;
     }
     let (s, z) = best.unwrap_or((s, z));
-    for v in g.iter_mut() {
-        let q = quant(*v, s, z);
-        *v = s * (q - z);
+    GroupFit::Affine { s, z }
+}
+
+fn qdq_group(g: &mut [f32], bits: u8, iters: usize) {
+    match fit_group(g, bits, iters) {
+        GroupFit::Constant(c) => {
+            for v in g.iter_mut() {
+                *v = c;
+            }
+        }
+        GroupFit::Affine { s, z } => {
+            let levels = ((1u32 << bits) - 1) as f32;
+            for v in g.iter_mut() {
+                let q = quant_code(*v, s, z, levels);
+                *v = s * (q - z);
+            }
+        }
     }
+}
+
+/// Quantize to storage form: unsigned codes in `[0, 2^bits − 1]` plus one
+/// `(scale, zero)` pair per group.  `scale == 0` marks a constant group
+/// whose every element decodes to exactly `zero`.  Decoding reproduces
+/// [`qdq`] bit-for-bit.  The data is treated as a flat stream of
+/// `group`-sized chunks; a ragged final chunk becomes its own short group.
+pub fn quantize_packed(
+    w: &[f32],
+    bits: u8,
+    group: usize,
+    iters: usize,
+) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let n_groups = w.len().div_ceil(group.max(1));
+    let mut codes = Vec::with_capacity(w.len());
+    let mut scales = Vec::with_capacity(n_groups);
+    let mut zeros = Vec::with_capacity(n_groups);
+    for g in w.chunks(group.max(1)) {
+        match fit_group(g, bits, iters) {
+            GroupFit::Constant(c) => {
+                scales.push(0.0);
+                zeros.push(c);
+                codes.extend(std::iter::repeat(0).take(g.len()));
+            }
+            GroupFit::Affine { s, z } => {
+                scales.push(s);
+                zeros.push(z);
+                codes.extend(g.iter().map(|&v| quant_code(v, s, z, levels) as i32));
+            }
+        }
+    }
+    (codes, scales, zeros)
+}
+
+/// Decode one group's unsigned codes given its stored `(s, z)` pair.
+#[inline]
+pub fn decode_group(codes: &[i32], s: f32, z: f32, out: &mut [f32]) {
+    if s == 0.0 {
+        out.fill(z);
+        return;
+    }
+    for (o, &q) in out.iter_mut().zip(codes) {
+        *o = s * (q as f32 - z);
+    }
+}
+
+/// Dequantize storage form back to f32 (flat stream of groups).
+pub fn dequantize_packed(codes: &[i32], scales: &[f32], zeros: &[f32], group: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; codes.len()];
+    for (gi, chunk) in out.chunks_mut(group.max(1)).enumerate() {
+        let start = gi * group.max(1);
+        decode_group(&codes[start..start + chunk.len()], scales[gi], zeros[gi], chunk);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -154,6 +232,34 @@ mod tests {
         let y = qdq(&w, 4, 64, 10);
         let rel = err(&w, &y) / w.frob_norm();
         assert!(rel < 0.02, "{rel}");
+    }
+
+    #[test]
+    fn packed_roundtrip_matches_qdq() {
+        let mut rng = Rng::new(9);
+        let w = Tensor::randn(vec![8, 64], 0.05, &mut rng);
+        for (bits, group, iters) in [(4u8, 64usize, 20usize), (3, 32, 10), (8, 64, 1)] {
+            let want = qdq(&w, bits, group, iters);
+            let (codes, scales, zeros) = quantize_packed(w.data(), bits, group, iters);
+            let got = dequantize_packed(&codes, &scales, &zeros, group);
+            assert_eq!(got, want.data(), "bits={bits} group={group}");
+            let hi = (1i32 << bits) - 1;
+            assert!(codes.iter().all(|&c| (0..=hi).contains(&c)), "bits={bits}");
+        }
+        // constant groups store the exact value behind the s == 0 sentinel
+        let c = Tensor::full(vec![1, 64], 0.7);
+        let (codes, scales, zeros) = quantize_packed(c.data(), 4, 64, 5);
+        assert_eq!(scales, vec![0.0]);
+        assert_eq!(zeros, vec![0.7]);
+        assert_eq!(dequantize_packed(&codes, &scales, &zeros, 64), c.data());
+        // ragged tail becomes its own short group
+        let v: Vec<f32> = (0..70).map(|i| (i as f32 * 0.31).sin()).collect();
+        let (codes, scales, zeros) = quantize_packed(&v, 4, 32, 10);
+        assert_eq!(codes.len(), 70);
+        assert_eq!(scales.len(), 3);
+        let back = dequantize_packed(&codes, &scales, &zeros, 32);
+        assert_eq!(back.len(), 70);
+        assert!(back.iter().zip(&v).all(|(a, b)| (a - b).abs() < 0.2));
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! * [`fp4`] — E2M1 4-bit float with per-group absmax scale (the QLoRA FP4
 //!   family stand-in).
 //! * [`packing`] — bit packing, so checkpoint sizes reflect true W-bits.
+//! * [`store`] — [`PackedWeight`]: one storage enum over the three formats'
+//!   packed payloads (codes + side params), shared by the checkpoint
+//!   container and the execution kernels.
+//! * [`exec`] — fused quantized matmul `y = x·W_q + (x·A)·B` evaluated
+//!   straight from packed blocks (in-register dequantize per k-tile), plus
+//!   the dequantize-then-matmul reference it is bit-identical to.
 //!
 //! All quantize-dequantize kernels thread over contiguous runs of their
 //! independent blocks via [`par_groups`] — bit-identical for every worker
@@ -21,6 +27,10 @@ pub mod mxint;
 pub mod intq;
 pub mod fp4;
 pub mod packing;
+pub mod store;
+pub mod exec;
+
+pub use store::PackedWeight;
 
 use crate::tensor::Tensor;
 use crate::util::pool;

@@ -51,18 +51,20 @@ pub fn qdq_workers(w: &Tensor, bits: u8, block: usize, workers: usize) -> Tensor
     out
 }
 
-/// Quantize to integer codes + per-block exponents (storage form).
-pub fn quantize_packed(w: &Tensor, bits: u8, block: usize) -> (Vec<i32>, Vec<i8>) {
-    let last = *w.shape().last().unwrap();
-    assert_eq!(last % block, 0);
-    let mut codes = Vec::with_capacity(w.numel());
-    let mut exps = Vec::with_capacity(w.numel() / block);
+/// Quantize to integer codes + per-block exponents (storage form).  The
+/// data is treated as a flat stream of `block`-sized chunks; a ragged final
+/// chunk becomes its own short block.  Decoding reproduces [`qdq`]
+/// bit-for-bit.
+pub fn quantize_packed(w: &[f32], bits: u8, block: usize) -> (Vec<i32>, Vec<i8>) {
+    let block = block.max(1);
+    let mut codes = Vec::with_capacity(w.len());
+    let mut exps = Vec::with_capacity(w.len().div_ceil(block));
     let qmax = ((1i32 << (bits - 1)) - 1) as f32;
-    for group in w.data().chunks_exact(block) {
+    for group in w.chunks(block) {
         let amax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         if amax == 0.0 {
             exps.push(i8::MIN);
-            codes.extend(std::iter::repeat(0).take(block));
+            codes.extend(std::iter::repeat(0).take(group.len()));
             continue;
         }
         let e = floor_log2(amax);
@@ -75,17 +77,26 @@ pub fn quantize_packed(w: &Tensor, bits: u8, block: usize) -> (Vec<i32>, Vec<i8>
     (codes, exps)
 }
 
-/// Dequantize storage form back to f32.
+/// Decode one block's codes given its stored exponent (`i8::MIN` marks an
+/// all-zero block).
+#[inline]
+pub fn decode_group(codes: &[i32], e: i8, bits: u8, out: &mut [f32]) {
+    if e == i8::MIN {
+        out.fill(0.0);
+        return;
+    }
+    let scale = f32::powi(2.0, e as i32 - (bits as i32 - 2));
+    for (o, &q) in out.iter_mut().zip(codes) {
+        *o = q as f32 * scale;
+    }
+}
+
+/// Dequantize storage form back to f32 (flat stream of blocks).
 pub fn dequantize_packed(codes: &[i32], exps: &[i8], bits: u8, block: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(codes.len());
-    for (bi, chunk) in codes.chunks_exact(block).enumerate() {
-        let e = exps[bi];
-        if e == i8::MIN {
-            out.extend(std::iter::repeat(0.0).take(block));
-            continue;
-        }
-        let scale = f32::powi(2.0, e as i32 - (bits as i32 - 2));
-        out.extend(chunk.iter().map(|&q| q as f32 * scale));
+    let block = block.max(1);
+    let mut out = vec![0.0f32; codes.len()];
+    for (bi, chunk) in out.chunks_mut(block).enumerate() {
+        decode_group(&codes[bi * block..bi * block + chunk.len()], exps[bi], bits, chunk);
     }
     out
 }
@@ -178,7 +189,7 @@ mod tests {
         let t = Tensor::randn(vec![8, 64], 0.3, &mut rng);
         for (bits, block) in [(4u8, 32usize), (3, 32), (2, 16), (8, 32)] {
             let want = qdq(&t, bits, block);
-            let (codes, exps) = quantize_packed(&t, bits, block);
+            let (codes, exps) = quantize_packed(t.data(), bits, block);
             let got = dequantize_packed(&codes, &exps, bits, block);
             assert_eq!(got, want.data(), "bits={bits} block={block}");
             // codes fit in `bits`

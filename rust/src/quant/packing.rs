@@ -28,16 +28,16 @@ pub fn pack_bits(codes: &[i32], bits: u8) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` signed codes.
-pub fn unpack_bits(bytes: &[u8], bits: u8, n: usize) -> Result<Vec<i32>> {
+/// Shared bit-extraction loop: decode `out.len()` codes starting at code
+/// index `start`, sign-extending when `signed`.
+fn unpack_with(bytes: &[u8], bits: u8, start: usize, out: &mut [i32], signed: bool) -> Result<()> {
     ensure!((1..=16).contains(&bits));
-    let need = (n * bits as usize).div_ceil(8);
+    let need = ((start + out.len()) * bits as usize).div_ceil(8);
     ensure!(bytes.len() >= need, "packed buffer too short: {} < {}", bytes.len(), need);
     let mask = (1u32 << bits) - 1;
     let sign_bit = 1u32 << (bits - 1);
-    let mut out = Vec::with_capacity(n);
-    let mut bitpos = 0usize;
-    for _ in 0..n {
+    let mut bitpos = start * bits as usize;
+    for slot in out.iter_mut() {
         let byte = bitpos / 8;
         let off = bitpos % 8;
         let mut u = (bytes[byte] as u32) >> off;
@@ -50,11 +50,37 @@ pub fn unpack_bits(bytes: &[u8], bits: u8, n: usize) -> Result<Vec<i32>> {
         }
         u &= mask;
         // sign-extend
-        let v = if u & sign_bit != 0 { (u | !mask) as i32 } else { u as i32 };
-        out.push(v);
+        *slot = if signed && u & sign_bit != 0 { (u | !mask) as i32 } else { u as i32 };
         bitpos += bits as usize;
     }
+    Ok(())
+}
+
+/// Unpack `n` signed codes.
+pub fn unpack_bits(bytes: &[u8], bits: u8, n: usize) -> Result<Vec<i32>> {
+    let mut out = vec![0i32; n];
+    unpack_with(bytes, bits, 0, &mut out, true)?;
     Ok(out)
+}
+
+/// Unpack `n` unsigned codes (zero-extended; intq/fp4 storage codes).
+pub fn unpack_bits_unsigned(bytes: &[u8], bits: u8, n: usize) -> Result<Vec<i32>> {
+    let mut out = vec![0i32; n];
+    unpack_with(bytes, bits, 0, &mut out, false)?;
+    Ok(out)
+}
+
+/// Block-strided group decoder: unpack `out.len()` signed codes starting at
+/// code index `start`, into a caller-provided buffer.  This is how the
+/// fused execution kernels address one quantization group inside a packed
+/// tensor without unpacking (or allocating) the whole buffer.
+pub fn unpack_bits_at(bytes: &[u8], bits: u8, start: usize, out: &mut [i32]) -> Result<()> {
+    unpack_with(bytes, bits, start, out, true)
+}
+
+/// [`unpack_bits_at`] for unsigned codes (zero-extended).
+pub fn unpack_bits_at_unsigned(bytes: &[u8], bits: u8, start: usize, out: &mut [i32]) -> Result<()> {
+    unpack_with(bytes, bits, start, out, false)
 }
 
 #[cfg(test)]
@@ -107,5 +133,122 @@ mod tests {
         let packed = pack_bits(&[], 4);
         assert!(packed.is_empty());
         assert!(unpack_bits(&packed, 4, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn odd_widths_cross_byte_boundaries() {
+        // bits ∈ {3, 5, 7}: no code width divides 8, so every few codes
+        // straddle a byte boundary (spill > 0 in pack_bits)
+        let mut rng = Rng::new(21);
+        for bits in [3u8, 5, 7] {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            for n in [1usize, 7, 8, 9, 255, 256, 257] {
+                let codes: Vec<i32> =
+                    (0..n).map(|_| lo + rng.below((hi - lo + 1) as usize) as i32).collect();
+                let packed = pack_bits(&codes, bits);
+                assert_eq!(packed.len(), (n * bits as usize).div_ceil(8), "bits={bits} n={n}");
+                assert_eq!(unpack_bits(&packed, bits, n).unwrap(), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_codes_exercise_spill_gt_8() {
+        // spill = bits + off - 8 > 8 needs bits ≥ 9 (a code spanning three
+        // bytes); cover every width up to the supported maximum
+        let mut rng = Rng::new(22);
+        for bits in 9u8..=16 {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            let codes: Vec<i32> =
+                (0..500).map(|_| lo + rng.below((hi - lo + 1) as usize) as i32).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(unpack_bits(&packed, bits, codes.len()).unwrap(), codes, "bits={bits}");
+        }
+        // deterministic three-byte-span case: bits = 11, so the second code
+        // starts at off = 3 and spills 6, the fifth at off = 4 spills 7, and
+        // widths ≥ 10 with off = 7 hit spill > 8 within the 500-code sweep
+        let codes = vec![-1i32, -1024, 1023, 0, -1, 512, -513];
+        assert_eq!(unpack_bits(&pack_bits(&codes, 11), 11, 7).unwrap(), codes);
+    }
+
+    #[test]
+    fn roundtrip_property_random_widths_and_lengths() {
+        // property test: for random (bits, n, codes), unpack ∘ pack = id
+        // and the packed length is exactly ceil(n·bits/8)
+        let mut rng = Rng::new(23);
+        for _ in 0..200 {
+            let bits = 1 + rng.below(16) as u8;
+            let n = rng.below(97);
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            let codes: Vec<i32> =
+                (0..n).map(|_| lo + rng.below((hi - lo + 1) as usize) as i32).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(packed.len(), (n * bits as usize).div_ceil(8), "bits={bits} n={n}");
+            assert_eq!(unpack_bits(&packed, bits, n).unwrap(), codes, "bits={bits} n={n}");
+        }
+    }
+
+    #[test]
+    fn unsigned_roundtrip_and_signed_agreement() {
+        let mut rng = Rng::new(24);
+        for bits in [2u8, 3, 4, 5, 7, 8] {
+            let hi = (1u32 << bits) as usize;
+            let codes: Vec<i32> = (0..300).map(|_| rng.below(hi) as i32).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(unpack_bits_unsigned(&packed, bits, 300).unwrap(), codes, "bits={bits}");
+            // non-negative codes below the sign bit decode identically
+            let small: Vec<i32> = codes.iter().map(|&c| c % (1 << (bits - 1))).collect();
+            let sp = pack_bits(&small, bits);
+            assert_eq!(
+                unpack_bits(&sp, bits, 300).unwrap(),
+                unpack_bits_unsigned(&sp, bits, 300).unwrap(),
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn strided_group_decode_matches_full_unpack() {
+        // decoding any aligned or unaligned group window out of the stream
+        // must agree with slicing the full unpack
+        let mut rng = Rng::new(25);
+        for bits in [3u8, 4, 5, 8, 11] {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            let codes: Vec<i32> =
+                (0..256).map(|_| lo + rng.below((hi - lo + 1) as usize) as i32).collect();
+            let packed = pack_bits(&codes, bits);
+            let full = unpack_bits(&packed, bits, codes.len()).unwrap();
+            for (start, len) in [(0usize, 32usize), (32, 32), (13, 7), (96, 64), (250, 6)] {
+                let mut out = vec![0i32; len];
+                unpack_bits_at(&packed, bits, start, &mut out).unwrap();
+                assert_eq!(out, &full[start..start + len], "bits={bits} start={start}");
+            }
+        }
+        // unsigned variant, 4-bit fp4-style codes
+        let codes: Vec<i32> = (0..64).map(|i| (i % 16) as i32).collect();
+        let packed = pack_bits(&codes, 4);
+        let mut out = vec![0i32; 16];
+        unpack_bits_at_unsigned(&packed, 4, 32, &mut out).unwrap();
+        assert_eq!(out, &codes[32..48]);
+    }
+
+    #[test]
+    fn short_buffer_error_paths() {
+        let packed = pack_bits(&[1i32; 64], 5); // 40 bytes
+        assert!(unpack_bits(&packed, 5, 65).is_err());
+        assert!(unpack_bits_unsigned(&packed, 5, 65).is_err());
+        let mut out = vec![0i32; 8];
+        // start + len runs past the stream end
+        assert!(unpack_bits_at(&packed, 5, 60, &mut out).is_err());
+        assert!(unpack_bits_at_unsigned(&packed, 5, 60, &mut out).is_err());
+        // exactly at the end is fine
+        assert!(unpack_bits_at(&packed, 5, 56, &mut out).is_ok());
+        // bits out of range rejected
+        assert!(unpack_bits(&packed, 17, 1).is_err());
+        assert!(unpack_bits(&packed, 0, 1).is_err());
     }
 }

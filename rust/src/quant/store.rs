@@ -1,0 +1,216 @@
+//! Packed storage form of a quantized weight — one enum over the three
+//! format payloads (bit-packed codes + per-group side parameters), so the
+//! checkpoint container and the fused execution kernels ([`crate::quant::exec`])
+//! speak a single storage type instead of per-format tuples.
+//!
+//! The data is a flat stream of `group()`-sized chunks (a ragged final
+//! chunk is its own short group), matching the `quantize_packed` /
+//! `dequantize_packed` convention of the format modules.  Decoding
+//! reproduces each format's `qdq` bit-for-bit.
+
+use super::{fp4, intq, mxint, packing, QFormat};
+use anyhow::{ensure, Result};
+
+/// Bit-packed quantized weight payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PackedWeight {
+    /// MXINT: signed codes + one shared exponent per block (`i8::MIN` marks
+    /// an all-zero block).
+    Mxint { bits: u8, block: usize, packed: Vec<u8>, exps: Vec<i8> },
+    /// Affine INT: unsigned codes + one `(scale, zero)` pair per group
+    /// (`scale == 0` marks a constant group decoding to exactly `zero`).
+    IntAffine { bits: u8, group: usize, packed: Vec<u8>, scales: Vec<f32>, zeros: Vec<f32> },
+    /// E2M1 FP4: 4-bit sign|index codes + one absmax scale per group
+    /// (`scale == 0` marks an all-zero group with signs preserved).
+    Fp4 { group: usize, packed: Vec<u8>, scales: Vec<f32> },
+}
+
+impl PackedWeight {
+    /// Quantize a flat weight slice to storage form.  Returns `None` for
+    /// [`QFormat::None`] (identity formats stay dense).
+    pub fn quantize(w: &[f32], fmt: &QFormat) -> Option<PackedWeight> {
+        match *fmt {
+            QFormat::None => None,
+            QFormat::Mxint { bits, block } => {
+                let (codes, exps) = mxint::quantize_packed(w, bits, block);
+                let packed = packing::pack_bits(&codes, bits);
+                Some(PackedWeight::Mxint { bits, block, packed, exps })
+            }
+            QFormat::IntAffine { bits, group, refine_iters } => {
+                let (codes, scales, zeros) = intq::quantize_packed(w, bits, group, refine_iters);
+                let packed = packing::pack_bits(&codes, bits);
+                Some(PackedWeight::IntAffine { bits, group, packed, scales, zeros })
+            }
+            QFormat::Fp4 { group } => {
+                let (codes, scales) = fp4::quantize_packed(w, group);
+                let packed = packing::pack_bits(&codes, 4);
+                Some(PackedWeight::Fp4 { group, packed, scales })
+            }
+        }
+    }
+
+    /// Elements per quantization group.
+    pub fn group(&self) -> usize {
+        match self {
+            PackedWeight::Mxint { block, .. } => (*block).max(1),
+            PackedWeight::IntAffine { group, .. } => (*group).max(1),
+            PackedWeight::Fp4 { group, .. } => (*group).max(1),
+        }
+    }
+
+    /// Code width in bits.
+    pub fn bits(&self) -> u8 {
+        match self {
+            PackedWeight::Mxint { bits, .. } => *bits,
+            PackedWeight::IntAffine { bits, .. } => *bits,
+            PackedWeight::Fp4 { .. } => 4,
+        }
+    }
+
+    /// Check that the payload covers exactly `numel` elements — run once
+    /// after deserialization so the decode paths can assume well-formed
+    /// buffers.
+    pub fn validate(&self, numel: usize) -> Result<()> {
+        let n_groups = numel.div_ceil(self.group());
+        let need = (numel * self.bits() as usize).div_ceil(8);
+        match self {
+            PackedWeight::Mxint { packed, exps, .. } => {
+                ensure!(packed.len() >= need, "mxint payload too short: {} < {need}", packed.len());
+                ensure!(exps.len() == n_groups, "mxint exps {} != {n_groups}", exps.len());
+            }
+            PackedWeight::IntAffine { packed, scales, zeros, .. } => {
+                ensure!(packed.len() >= need, "intq payload too short: {} < {need}", packed.len());
+                ensure!(scales.len() == n_groups, "intq scales {} != {n_groups}", scales.len());
+                ensure!(zeros.len() == n_groups, "intq zeros {} != {n_groups}", zeros.len());
+            }
+            PackedWeight::Fp4 { packed, scales, .. } => {
+                ensure!(packed.len() >= need, "fp4 payload too short: {} < {need}", packed.len());
+                ensure!(scales.len() == n_groups, "fp4 scales {} != {n_groups}", scales.len());
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode quantization group `g` (elements `[g·group, g·group +
+    /// out.len())` of the flat stream) into `out`, using `scratch` (at
+    /// least `out.len()` slots) for the unpacked integer codes.  This is
+    /// the unit the fused kernels address — one group at a time, no
+    /// whole-tensor allocation.
+    pub fn decode_group_into(&self, g: usize, scratch: &mut [i32], out: &mut [f32]) -> Result<()> {
+        let start = g * self.group();
+        let codes = &mut scratch[..out.len()];
+        match self {
+            PackedWeight::Mxint { bits, packed, exps, .. } => {
+                packing::unpack_bits_at(packed, *bits, start, codes)?;
+                mxint::decode_group(codes, exps[g], *bits, out);
+            }
+            PackedWeight::IntAffine { bits, packed, scales, zeros, .. } => {
+                packing::unpack_bits_at_unsigned(packed, *bits, start, codes)?;
+                intq::decode_group(codes, scales[g], zeros[g], out);
+            }
+            PackedWeight::Fp4 { packed, scales, .. } => {
+                packing::unpack_bits_at_unsigned(packed, 4, start, codes)?;
+                fp4::decode_group(codes, scales[g], out);
+            }
+        }
+        Ok(())
+    }
+
+    /// Dequantize the full stream back to `numel` f32 elements.
+    pub fn dequantize(&self, numel: usize) -> Vec<f32> {
+        let group = self.group();
+        let mut out = vec![0.0f32; numel];
+        let mut scratch = vec![0i32; group];
+        for (g, chunk) in out.chunks_mut(group).enumerate() {
+            self.decode_group_into(g, &mut scratch, chunk).expect("packed weight too short");
+        }
+        out
+    }
+
+    /// Serialized payload size under the paper's memory accounting: packed
+    /// code bytes plus side parameters at their nominal width (8-bit block
+    /// exponent for mxint, f16 scale + grid zero-point totalling 16 bits
+    /// per group for intq, 8-bit scale for fp4 — matching
+    /// [`QFormat::avg_bits`]).  The container serializes intq/fp4 side
+    /// params as f32 for exactness; that container overhead is not what the
+    /// paper counts.
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            PackedWeight::Mxint { packed, exps, .. } => packed.len() + exps.len(),
+            PackedWeight::IntAffine { packed, scales, .. } => packed.len() + scales.len() * 2,
+            PackedWeight::Fp4 { packed, scales, .. } => packed.len() + scales.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn formats() -> Vec<QFormat> {
+        vec![
+            QFormat::Mxint { bits: 4, block: 32 },
+            QFormat::Mxint { bits: 3, block: 16 },
+            QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 },
+            QFormat::Fp4 { group: 64 },
+        ]
+    }
+
+    #[test]
+    fn dequantize_matches_qdq_bitwise() {
+        let mut rng = Rng::new(30);
+        let w = Tensor::randn(vec![8, 64], 0.1, &mut rng);
+        for fmt in formats() {
+            let pw = PackedWeight::quantize(w.data(), &fmt).unwrap();
+            pw.validate(w.numel()).unwrap();
+            let want = fmt.qdq(&w);
+            assert_eq!(pw.dequantize(w.numel()), want.data(), "{}", fmt.name());
+        }
+        assert!(PackedWeight::quantize(w.data(), &QFormat::None).is_none());
+    }
+
+    #[test]
+    fn group_decode_matches_full_dequantize() {
+        let mut rng = Rng::new(31);
+        // 300 elements: ragged final group for every format above
+        let w = rng.normal_vec(300, 0.2);
+        for fmt in formats() {
+            let pw = PackedWeight::quantize(&w, &fmt).unwrap();
+            pw.validate(w.len()).unwrap();
+            let full = pw.dequantize(w.len());
+            let g = pw.group();
+            let mut scratch = vec![0i32; g];
+            for (gi, want) in full.chunks(g).enumerate() {
+                let mut out = vec![0.0f32; want.len()];
+                pw.decode_group_into(gi, &mut scratch, &mut out).unwrap();
+                assert_eq!(out, want, "{} group {gi}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_truncation() {
+        let mut rng = Rng::new(32);
+        let w = rng.normal_vec(128, 0.1);
+        for fmt in formats() {
+            let pw = PackedWeight::quantize(&w, &fmt).unwrap();
+            assert!(pw.validate(w.len()).is_ok(), "{}", fmt.name());
+            // claiming more elements than packed must fail
+            assert!(pw.validate(w.len() * 2).is_err(), "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn payload_matches_avg_bits() {
+        let mut rng = Rng::new(33);
+        let n = 64 * 64;
+        let w = rng.normal_vec(n, 0.1);
+        for fmt in formats() {
+            let pw = PackedWeight::quantize(&w, &fmt).unwrap();
+            let bits = pw.payload_bytes() as f64 * 8.0 / n as f64;
+            assert!((bits - fmt.avg_bits()).abs() < 1e-9, "{}: {bits}", fmt.name());
+        }
+    }
+}

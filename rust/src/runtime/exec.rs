@@ -8,11 +8,15 @@ use super::artifact::ArtifactInfo;
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
+use std::rc::Rc;
 
-/// An input value for an artifact call.
+/// An input value for an artifact call.  f32 tensors are `Rc`-backed so
+/// callers that reuse the same parameters every step (the serve engine's
+/// full-context decode loop) pay a refcount bump per input, not a tensor
+/// copy.
 #[derive(Clone, Debug)]
 pub enum Value {
-    F32(Tensor),
+    F32(Rc<Tensor>),
     /// i32 data + shape (tokens, targets, labels).
     I32(Vec<i32>, Vec<usize>),
 }
@@ -46,6 +50,12 @@ impl Value {
 
 impl From<Tensor> for Value {
     fn from(t: Tensor) -> Value {
+        Value::F32(Rc::new(t))
+    }
+}
+
+impl From<Rc<Tensor>> for Value {
+    fn from(t: Rc<Tensor>) -> Value {
         Value::F32(t)
     }
 }
@@ -139,19 +149,30 @@ impl Exec {
 }
 
 /// Convenience: build the `Value` list `[tokens(, targets/labels), params...]`.
-pub fn lm_inputs(
+///
+/// Generic over the parameter element: `&[Tensor]` copies each tensor into
+/// its `Value` (one-shot callers), while `&[Rc<Tensor>]` only bumps
+/// refcounts — steady-state loops should wrap once via [`rc_params`] and
+/// pass the `Rc` slice so repeated calls do **zero** parameter copies.
+pub fn lm_inputs<P: Clone + Into<Value>>(
     tokens: &[i32],
     second: Option<(&[i32], &[usize])>,
     tok_shape: &[usize],
-    params: &[Tensor],
+    params: &[P],
 ) -> Vec<Value> {
     let mut v: Vec<Value> = Vec::with_capacity(params.len() + 2);
     v.push(Value::I32(tokens.to_vec(), tok_shape.to_vec()));
     if let Some((data, shape)) = second {
         v.push(Value::I32(data.to_vec(), shape.to_vec()));
     }
-    v.extend(params.iter().cloned().map(Value::F32));
+    v.extend(params.iter().cloned().map(Into::into));
     v
+}
+
+/// Wrap a dense parameter list for reuse across [`lm_inputs`] calls: one
+/// tensor copy here, then every call is refcount-only.
+pub fn rc_params(params: &[Tensor]) -> Vec<Rc<Tensor>> {
+    params.iter().cloned().map(Rc::new).collect()
 }
 
 #[cfg(test)]

@@ -1,16 +1,19 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
-//! the coordinator's hot path (the only place device compute happens;
-//! python is never invoked).
+//! Execution runtimes: the PJRT artifact route and the native CPU backend.
 //!
 //! * [`artifact`] — `manifest.json` schema + artifact registry with a
 //!   compile-once executable cache;
 //! * [`exec`] — typed execution: `Value` marshalling, shape validation
 //!   against the manifest, tuple-output decomposition;
-//! * [`client`] — lazily-initialized process-wide `PjRtClient` (CPU).
+//! * [`client`] — lazily-initialized process-wide `PjRtClient` (CPU);
+//! * [`native`] — pure-Rust forward ([`NativeModel`]) running quantized
+//!   linears fused straight from packed blocks (`--exec native` /
+//!   `QERA_EXEC=native` via [`ExecBackend`]) — no artifacts needed.
 
 pub mod artifact;
 pub mod client;
 pub mod exec;
+pub mod native;
 
 pub use artifact::{ArtifactInfo, IoSpec, Registry};
 pub use exec::{Exec, Value};
+pub use native::{ExecBackend, NativeModel};

@@ -1,0 +1,411 @@
+//! Native CPU execution backend — the transformer forward evaluated in
+//! Rust, with quantized linears running **straight from packed blocks** via
+//! the fused kernels ([`crate::quant::exec`]): `y = x·W_q + (x·A)·B` with
+//! in-register dequantize per k-tile, never materializing a dense f32
+//! weight.
+//!
+//! This is the `--exec native` / `QERA_EXEC=native` path selected through
+//! [`ExecBackend`]; the [`ExecBackend::Stub`] default keeps the PJRT
+//! artifact route (a stub in this image, real on boxes with a PJRT plugin).
+//! The math mirrors `python/compile/model.py` (`use_pallas=False` oracle):
+//! LayerNorm (ε = 1e-5), causal attention at `1/√hd`, tanh-approximate
+//! GELU, logits through the tied embedding.
+
+use crate::model::{ModelSpec, QWeight, QuantCheckpoint};
+use crate::quant::{exec, PackedWeight};
+use crate::solver::LowRank;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Which engine executes forward/eval/serve math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// PJRT artifacts via the `xla` vendor crate (stub fallback).
+    #[default]
+    Stub,
+    /// Pure-Rust fused quantized execution ([`NativeModel`]).
+    Native,
+}
+
+impl ExecBackend {
+    /// `stub` (aliases `xla`, `pjrt`) or `native` (aliases `cpu`, `fused`).
+    pub fn parse(s: &str) -> Result<ExecBackend> {
+        match s.trim().to_lowercase().as_str() {
+            "stub" | "xla" | "pjrt" => Ok(ExecBackend::Stub),
+            "native" | "cpu" | "fused" => Ok(ExecBackend::Native),
+            other => bail!("unknown exec backend '{other}' (stub | native)"),
+        }
+    }
+
+    /// `QERA_EXEC` env override; defaults to [`ExecBackend::Stub`].
+    pub fn from_env() -> ExecBackend {
+        match std::env::var("QERA_EXEC") {
+            Ok(s) => ExecBackend::parse(&s).unwrap_or_default(),
+            Err(_) => ExecBackend::Stub,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Stub => "stub",
+            ExecBackend::Native => "native",
+        }
+    }
+}
+
+/// One model parameter as the native engine holds it.
+enum NativeParam {
+    /// Dense f32 (embeddings, LayerNorms, unquantized linears).
+    Plain(Tensor),
+    /// Packed quantized linear `[k, n]` + optional low-rank correction,
+    /// evaluated fused — the packed payload is the *only* weight copy.
+    Linear { k: usize, n: usize, pw: PackedWeight, lr: Option<LowRank> },
+}
+
+/// The transformer with parameters in canonical layout order.
+pub struct NativeModel {
+    pub spec: ModelSpec,
+    params: Vec<NativeParam>,
+}
+
+fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> Tensor {
+    let (rows, d) = (x.rows(), x.cols());
+    let (gd, bd) = (g.data(), b.data());
+    let mut out = vec![0.0f32; rows * d];
+    for i in 0..rows {
+        let row = x.row(i);
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (j, o) in out[i * d..(i + 1) * d].iter_mut().enumerate() {
+            *o = (row[j] - mu) * inv * gd[j] + bd[j];
+        }
+    }
+    Tensor::new(vec![rows, d], out)
+}
+
+/// Tanh-approximate GELU (`jax.nn.gelu(..., approximate=True)`).
+fn gelu_tanh(v: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh())
+}
+
+/// Multi-head causal attention over `[bsz·s, heads·hd]` activations (head
+/// h occupies feature columns `[h·hd, (h+1)·hd)`), softmax at `scale`.
+fn causal_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bsz: usize,
+    s: usize,
+    heads: usize,
+    hd: usize,
+) -> Tensor {
+    let d = heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    let mut out = vec![0.0f32; bsz * s * d];
+    let mut scores = vec![0.0f32; s];
+    for b in 0..bsz {
+        for h in 0..heads {
+            let off = h * hd;
+            for i in 0..s {
+                let qat = (b * s + i) * d + off;
+                let qrow = &qd[qat..qat + hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for (j, sc) in scores[..=i].iter_mut().enumerate() {
+                    let kat = (b * s + j) * d + off;
+                    let mut dot = 0.0f32;
+                    for (a, bb) in qrow.iter().zip(&kd[kat..kat + hd]) {
+                        dot += a * bb;
+                    }
+                    *sc = dot * scale;
+                    maxv = maxv.max(*sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores[..=i].iter_mut() {
+                    *sc = (*sc - maxv).exp();
+                    denom += *sc;
+                }
+                let (o0, o1) = ((b * s + i) * d + off, (b * s + i) * d + off + hd);
+                for (j, &p) in scores[..=i].iter().enumerate() {
+                    let w = p / denom;
+                    let vat = (b * s + j) * d + off;
+                    for (o, &vv) in out[o0..o1].iter_mut().zip(&vd[vat..vat + hd]) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![bsz * s, d], out)
+}
+
+impl NativeModel {
+    /// Wrap a dense parameter list (canonical layout order).
+    pub fn from_dense(spec: ModelSpec, params: Vec<Tensor>) -> NativeModel {
+        assert_eq!(params.len(), spec.param_layout().len(), "param count mismatch");
+        NativeModel { spec, params: params.into_iter().map(NativeParam::Plain).collect() }
+    }
+
+    /// Build from a quantized checkpoint **without materializing** dense
+    /// weights for the packed sites — they execute fused from the payload.
+    /// (Unquantized / identity-format sites fall back to dense, with the
+    /// low-rank term merged in.)
+    pub fn from_quant(q: &QuantCheckpoint) -> NativeModel {
+        let layout = q.spec.param_layout();
+        let params = layout
+            .iter()
+            .zip(&q.dense)
+            .map(|((name, _), d)| match d {
+                Some(t) => NativeParam::Plain(t.clone()),
+                None => match &q.qweights[name] {
+                    QWeight::Packed { shape, pw } => NativeParam::Linear {
+                        k: shape[0],
+                        n: shape[1],
+                        pw: pw.clone(),
+                        lr: q.lowrank.get(name).cloned(),
+                    },
+                    QWeight::Dense(t) => NativeParam::Plain(match q.lowrank.get(name) {
+                        Some(lr) => lr.merged_with(t),
+                        None => t.clone(),
+                    }),
+                },
+            })
+            .collect();
+        NativeModel { spec: q.spec.clone(), params }
+    }
+
+    /// Total bytes held for quantized sites (packed payloads, not f32).
+    pub fn packed_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| match p {
+                NativeParam::Linear { pw, .. } => pw.payload_bytes(),
+                NativeParam::Plain(_) => 0,
+            })
+            .sum()
+    }
+
+    fn plain(&self, idx: usize) -> &Tensor {
+        match &self.params[idx] {
+            NativeParam::Plain(t) => t,
+            NativeParam::Linear { .. } => unreachable!("param {idx} is a packed linear"),
+        }
+    }
+
+    fn apply_linear(&self, idx: usize, x: &Tensor) -> Tensor {
+        match &self.params[idx] {
+            NativeParam::Plain(w) => x.matmul(w),
+            NativeParam::Linear { k, n, pw, lr } => {
+                exec::fused_matmul(x, pw, *k, *n, lr.as_ref().map(|l| (&l.a, &l.b)))
+            }
+        }
+    }
+
+    /// Trunk forward: tokens `[bsz, s]` (row-major) → final hidden
+    /// `[bsz·s, d]` after the last LayerNorm.
+    fn hidden(&self, tokens: &[i32], bsz: usize, s: usize) -> Tensor {
+        let spec = &self.spec;
+        assert_eq!(tokens.len(), bsz * s, "token count mismatch");
+        assert!(s <= spec.seq, "sequence {s} exceeds positional table {}", spec.seq);
+        let d = spec.d_model;
+        let (embed, pos) = (self.plain(0), self.plain(1));
+        let mut x = vec![0.0f32; bsz * s * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < spec.vocab, "token {t} out of vocab");
+            let (erow, prow) = (embed.row(t), pos.row(i % s));
+            for (o, (e, p)) in x[i * d..(i + 1) * d].iter_mut().zip(erow.iter().zip(prow)) {
+                *o = e + p;
+            }
+        }
+        let mut x = Tensor::new(vec![bsz * s, d], x);
+        for blk in 0..spec.n_layers {
+            let base = 2 + blk * 10;
+            let h_in = layernorm(&x, self.plain(base), self.plain(base + 1));
+            let q = self.apply_linear(base + 2, &h_in);
+            let k = self.apply_linear(base + 3, &h_in);
+            let v = self.apply_linear(base + 4, &h_in);
+            let ctx = causal_attention(&q, &k, &v, bsz, s, spec.n_heads, spec.head_dim());
+            x.add_assign(&self.apply_linear(base + 5, &ctx));
+            let m_in = layernorm(&x, self.plain(base + 6), self.plain(base + 7));
+            let u = self.apply_linear(base + 8, &m_in).map(gelu_tanh);
+            x.add_assign(&self.apply_linear(base + 9, &u));
+        }
+        let lnf = 2 + spec.n_layers * 10;
+        layernorm(&x, self.plain(lnf), self.plain(lnf + 1))
+    }
+
+    /// Logits `[bsz·s, vocab]` through the tied embedding.
+    pub fn logits(&self, tokens: &[i32], bsz: usize, s: usize) -> Tensor {
+        self.hidden(tokens, bsz, s).matmul_t(self.plain(0))
+    }
+
+    /// Per-token negative log-likelihood (`lm_nll` artifact equivalent).
+    pub fn nll(&self, tokens: &[i32], targets: &[i32], bsz: usize, s: usize) -> Vec<f32> {
+        assert_eq!(targets.len(), bsz * s, "target count mismatch");
+        let logits = self.logits(tokens, bsz, s);
+        targets
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let row = logits.row(i);
+                let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let logz = maxv + row.iter().map(|&x| (x - maxv).exp()).sum::<f32>().ln();
+                logz - row[t as usize]
+            })
+            .collect()
+    }
+
+    /// Final-position logits `[bsz, vocab]` (`lm_logits_last` equivalent) —
+    /// only the last hidden row per sequence hits the vocab projection.
+    pub fn logits_last(&self, tokens: &[i32], bsz: usize, s: usize) -> Tensor {
+        let hid = self.hidden(tokens, bsz, s);
+        let d = self.spec.d_model;
+        let mut last = vec![0.0f32; bsz * d];
+        for b in 0..bsz {
+            last[b * d..(b + 1) * d].copy_from_slice(hid.row(b * s + s - 1));
+        }
+        Tensor::new(vec![bsz, d], last).matmul_t(self.plain(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Checkpoint, LinearSite};
+    use crate::quant::QFormat;
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn dense_model(name: &str, seed: u64) -> NativeModel {
+        let spec = ModelSpec::builtin(name).unwrap();
+        let params = crate::model::init::init_params(&spec, &mut Rng::new(seed));
+        NativeModel::from_dense(spec, params)
+    }
+
+    fn tokens_for(spec: &ModelSpec, rng: &mut Rng) -> Vec<i32> {
+        (0..spec.batch * spec.seq).map(|_| rng.below(spec.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn backend_parse_and_env_default() {
+        assert_eq!(ExecBackend::parse("native").unwrap(), ExecBackend::Native);
+        assert_eq!(ExecBackend::parse("cpu").unwrap(), ExecBackend::Native);
+        assert_eq!(ExecBackend::parse("stub").unwrap(), ExecBackend::Stub);
+        assert_eq!(ExecBackend::parse("xla").unwrap(), ExecBackend::Stub);
+        assert!(ExecBackend::parse("tpu").is_err());
+        assert_eq!(ExecBackend::default().name(), "stub");
+        assert_eq!(ExecBackend::Native.name(), "native");
+    }
+
+    #[test]
+    fn forward_finite_deterministic_and_causal() {
+        let m = dense_model("micro", 3);
+        let spec = m.spec.clone();
+        let mut rng = Rng::new(4);
+        let tokens = tokens_for(&spec, &mut rng);
+        let (b, s, v) = (spec.batch, spec.seq, spec.vocab);
+        let out = m.logits(&tokens, b, s);
+        assert_eq!(out.shape(), &[b * s, v]);
+        assert!(out.data().iter().all(|x| x.is_finite()));
+        assert_eq!(out, m.logits(&tokens, b, s), "forward must be deterministic");
+
+        // causality: perturbing the last token of row 0 leaves earlier
+        // positions bit-identical and changes the last one
+        let mut tok2 = tokens.clone();
+        tok2[s - 1] = (tok2[s - 1] + 1) % v as i32;
+        let out2 = m.logits(&tok2, b, s);
+        assert_eq!(out.row(s - 2), out2.row(s - 2));
+        assert_ne!(out.row(s - 1), out2.row(s - 1));
+    }
+
+    #[test]
+    fn logits_last_matches_full_forward() {
+        let m = dense_model("micro", 5);
+        let spec = m.spec.clone();
+        let mut rng = Rng::new(6);
+        let tokens = tokens_for(&spec, &mut rng);
+        let (b, s) = (spec.batch, spec.seq);
+        let full = m.logits(&tokens, b, s);
+        let last = m.logits_last(&tokens, b, s);
+        assert_eq!(last.shape(), &[b, spec.vocab]);
+        for bi in 0..b {
+            assert_eq!(last.row(bi), full.row(bi * s + s - 1), "batch row {bi}");
+        }
+    }
+
+    #[test]
+    fn nll_is_logsumexp_minus_gold() {
+        let m = dense_model("micro", 7);
+        let spec = m.spec.clone();
+        let mut rng = Rng::new(8);
+        let tokens = tokens_for(&spec, &mut rng);
+        let targets = tokens_for(&spec, &mut rng);
+        let (b, s) = (spec.batch, spec.seq);
+        let nll = m.nll(&tokens, &targets, b, s);
+        assert_eq!(nll.len(), b * s);
+        // all positive-ish and finite; a uniform model sits near ln(vocab)
+        assert!(nll.iter().all(|x| x.is_finite() && *x > 0.0));
+        let mean = nll.iter().sum::<f32>() / nll.len() as f32;
+        assert!((mean - (spec.vocab as f32).ln()).abs() < 1.0, "{mean}");
+    }
+
+    fn quant_ckpt(fmt: QFormat, rank: usize, seed: u64) -> (Checkpoint, QuantCheckpoint) {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let mut rng = Rng::new(seed);
+        let params = crate::model::init::init_params(&spec, &mut rng);
+        let ckpt = Checkpoint::new(spec, params);
+        let mut solved = BTreeMap::new();
+        for site in ckpt.spec.linear_sites() {
+            let LinearSite { param_idx, shape, name, .. } = site;
+            let w = &ckpt.params[param_idx];
+            let lr = (rank > 0).then(|| LowRank {
+                a: Tensor::randn(vec![shape[0], rank], 0.02, &mut rng),
+                b: Tensor::randn(vec![rank, shape[1]], 0.02, &mut rng),
+            });
+            solved.insert(name, (fmt.qdq(w), lr));
+        }
+        let q = QuantCheckpoint::from_solved(&ckpt, fmt, &solved, Json::obj(vec![]));
+        (ckpt, q)
+    }
+
+    #[test]
+    fn quantized_forward_tracks_merged_dense() {
+        // packed-fused execution vs. dense execution of the materialized
+        // merged weights: same model up to f32 association in W~ + A·B
+        let mut rng = Rng::new(9);
+        for fmt in [
+            QFormat::Mxint { bits: 4, block: 32 },
+            QFormat::IntAffine { bits: 4, group: 32, refine_iters: 10 },
+            QFormat::Fp4 { group: 32 },
+        ] {
+            let (_, q) = quant_ckpt(fmt, 4, 10);
+            let native_q = NativeModel::from_quant(&q);
+            let native_d = NativeModel::from_dense(q.spec.clone(), q.materialize_merged());
+            assert!(native_q.packed_bytes() > 0, "{}", fmt.name());
+            let spec = native_q.spec.clone();
+            let tokens = tokens_for(&spec, &mut rng);
+            let (b, s) = (spec.batch, spec.seq);
+            let lq = native_q.logits(&tokens, b, s);
+            let ld = native_d.logits(&tokens, b, s);
+            let rel = lq.sub(&ld).frob_norm() / ld.frob_norm().max(1e-12);
+            assert!(rel < 1e-4, "{}: rel {rel}", fmt.name());
+            assert!(lq.data().iter().all(|x| x.is_finite()), "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn quantized_forward_reproducible() {
+        let (_, q) = quant_ckpt(QFormat::Mxint { bits: 4, block: 32 }, 4, 11);
+        let m = NativeModel::from_quant(&q);
+        let spec = m.spec.clone();
+        let mut rng = Rng::new(12);
+        let tokens = tokens_for(&spec, &mut rng);
+        let a = m.logits_last(&tokens, spec.batch, spec.seq);
+        let b = m.logits_last(&tokens, spec.batch, spec.seq);
+        assert_eq!(a, b);
+    }
+}

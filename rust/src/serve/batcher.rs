@@ -7,11 +7,22 @@
 //! Latency statistics (per-request queue / total samples with p50/p95
 //! accessors, not just means) feed the serving bench's tail gates.
 
-use crate::model::ModelSpec;
+use crate::model::{ModelSpec, QuantCheckpoint};
+use crate::runtime::ExecBackend;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Weights handed to the serving thread.
+pub enum ServeModel {
+    /// Dense parameter list in canonical order.
+    Dense(Vec<crate::tensor::Tensor>),
+    /// Quantized checkpoint; with [`ExecBackend::Native`] it serves fused
+    /// straight from the packed payload (the stub route materializes the
+    /// merged dense weights, since PJRT artifacts take f32 inputs).
+    Quant(Box<QuantCheckpoint>),
+}
 
 pub struct Request {
     pub prompt: Vec<i32>,
@@ -34,11 +45,13 @@ pub struct ServerConfig {
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
     pub seed: u64,
+    /// Execution backend; [`ExecBackend::Native`] serves without artifacts.
+    pub backend: ExecBackend,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_wait: Duration::from_millis(5), seed: 0 }
+        ServerConfig { max_wait: Duration::from_millis(5), seed: 0, backend: ExecBackend::Stub }
     }
 }
 
@@ -130,9 +143,21 @@ impl Server {
         params: Vec<crate::tensor::Tensor>,
         cfg: ServerConfig,
     ) -> Server {
+        Server::start_model(artifact_dir, spec, ServeModel::Dense(params), cfg)
+    }
+
+    /// [`Server::start`] generalized over [`ServeModel`] — quantized
+    /// checkpoints serve without dense materialization on the native
+    /// backend.
+    pub fn start_model(
+        artifact_dir: std::path::PathBuf,
+        spec: ModelSpec,
+        model: ServeModel,
+        cfg: ServerConfig,
+    ) -> Server {
         let (tx, rx) = mpsc::channel::<Msg>();
         let handle = std::thread::spawn(move || {
-            if let Err(e) = serve_loop(artifact_dir, spec, params, cfg, rx) {
+            if let Err(e) = serve_loop(artifact_dir, spec, model, cfg, rx) {
                 crate::warn_!("serve loop died: {e:#}");
             }
         });
@@ -172,12 +197,23 @@ impl Server {
 fn serve_loop(
     artifact_dir: std::path::PathBuf,
     spec: ModelSpec,
-    params: Vec<crate::tensor::Tensor>,
+    model: ServeModel,
     cfg: ServerConfig,
     rx: mpsc::Receiver<Msg>,
 ) -> Result<()> {
-    let reg = crate::runtime::Registry::open(artifact_dir)?;
-    let engine = super::engine::Engine::new(&reg, spec.clone(), params)?;
+    use super::engine::Engine;
+    let engine = match (cfg.backend, model) {
+        (ExecBackend::Stub, model) => {
+            let params = match model {
+                ServeModel::Dense(p) => p,
+                ServeModel::Quant(q) => q.materialize_merged(),
+            };
+            let reg = crate::runtime::Registry::open(artifact_dir)?;
+            Engine::new(&reg, spec.clone(), params)?
+        }
+        (ExecBackend::Native, ServeModel::Dense(p)) => Engine::new_native(spec.clone(), p)?,
+        (ExecBackend::Native, ServeModel::Quant(q)) => Engine::new_native_quant(&q),
+    };
     let mut rng = Rng::new(cfg.seed);
     let mut stats = ServerStats::default();
     let t0 = Instant::now();
@@ -289,6 +325,32 @@ mod tests {
     }
 
     #[test]
+    fn native_backend_serves_without_artifacts() {
+        // ExecBackend::Native never opens the registry, so serving works
+        // even when no artifacts were built — pass a bogus dir to prove it
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut Rng::new(7));
+        let server = Server::start(
+            PathBuf::from("/nonexistent-artifact-dir"),
+            spec,
+            params,
+            ServerConfig {
+                max_wait: Duration::from_millis(10),
+                seed: 3,
+                backend: crate::runtime::ExecBackend::Native,
+            },
+        );
+        let rxs: Vec<_> = (0..3).map(|i| server.submit(vec![1 + i as i32, 2], 4, 0.0)).collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        let stats = server.stop();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.tokens_generated, 12);
+    }
+
+    #[test]
     fn serves_batched_requests() {
         let Some(dir) = artifact_dir() else {
             eprintln!("skipped: artifacts not built");
@@ -300,7 +362,7 @@ mod tests {
             dir,
             spec,
             params,
-            ServerConfig { max_wait: Duration::from_millis(30), seed: 1 },
+            ServerConfig { max_wait: Duration::from_millis(30), seed: 1, ..Default::default() },
         );
         // submit a burst: should coalesce into batches
         let rxs: Vec<_> =

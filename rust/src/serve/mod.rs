@@ -3,11 +3,13 @@
 //! The paper's claim "QERA introduces no inference overhead — LQER,
 //! QERA-approx and QERA-exact all serve as `y = x(W~ + A_k B_k)`" is made
 //! concrete here: the engine serves any [`crate::coordinator::QuantizedModel`]
-//! through the same `lm_logits_last` artifact, and the latency bench
+//! through either backend — the `lm_logits_last` PJRT artifact, or the
+//! native fused path that evaluates `y = x·W_q + (x·A)·B` straight from
+//! packed blocks ([`crate::runtime::ExecBackend`]) — and the latency bench
 //! (`benches/hotpath.rs`) measures dense vs low-rank forward forms.
 
 pub mod engine;
 pub mod batcher;
 
-pub use batcher::{Server, ServerConfig, ServerStats};
+pub use batcher::{ServeModel, Server, ServerConfig, ServerStats};
 pub use engine::Engine;

@@ -10,9 +10,10 @@
 //! (and identical to the previous naive loops) — every consumer of these
 //! kernels inherits the speedup with unchanged numerics.  Today those are
 //! the low-rank merges (`LowRank::to_tensor` behind every quantized
-//! checkpoint materialization and the LoRA merged-weight path); the PJRT
-//! forward/eval/serve executables do their matmuls on device, but any
-//! future CPU fallback for them lands on these kernels too.  Nested
+//! checkpoint materialization and the LoRA merged-weight path) and the
+//! native execution backend ([`crate::runtime::NativeModel`]), whose
+//! forward/eval/serve matmuls — including the fused-from-packed path in
+//! `quant::exec` — all reduce to these kernels.  Nested
 //! parallelism is suppressed: a multiply running inside a pool worker
 //! stays single-threaded ([`pool::in_pool_worker`]).
 
@@ -20,15 +21,55 @@ use crate::util::pool;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
 
-/// k×j tile of `B`: 64 × 512 f32 ≈ 128 KB per tile.
-const BLOCK_K: usize = 64;
+/// k×j tile of `B`: 64 × 512 f32 ≈ 128 KB per tile.  `pub(crate)` so the
+/// fused quantized-execution kernel (`quant::exec`) decodes packed weights
+/// in exactly these k-row tiles and shares the accumulation order.
+pub(crate) const BLOCK_K: usize = 64;
 const BLOCK_J: usize = 512;
+
+/// One k-tile of the blocked kernel: `out[i0..i1, :] += A[i0..i1, k0..k1] ·
+/// btile` where `btile` holds only rows `k0..k1` of `B` ([`BLOCK_K`]-row
+/// slabs) and `out` holds only the panel rows.  Shared with the fused
+/// quantized kernel in `quant::exec`, which decodes each k-tile of a packed
+/// weight into a scratch slab and must accumulate in the *identical* order
+/// (including the `av == 0.0` skip: skipping vs adding a zero differs
+/// bitwise when the accumulator holds `-0.0`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mm_nn_ktile_f32(
+    a: &[f32],
+    btile: &[f32],
+    k: usize,
+    n: usize,
+    k0: usize,
+    k1: usize,
+    i0: usize,
+    i1: usize,
+    out: &mut [f32],
+) {
+    for j0 in (0..n).step_by(BLOCK_J) {
+        let j1 = (j0 + BLOCK_J).min(n);
+        for i in i0..i1 {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[(i - i0) * n + j0..(i - i0) * n + j1];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &btile[(kk - k0) * n + j0..(kk - k0) * n + j1];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
 
 /// Blocked kernel for one output-row panel: `out[i0..i1, :] += A[i0..i1, :] B`
 /// with `A` row-major and `out` holding only the panel rows.  Per output
 /// element the k-accumulation runs strictly ascending, so the result is
 /// independent of the panel split and of the tile sizes.
-fn mm_nn_panel_f32(
+pub(crate) fn mm_nn_panel_f32(
     a: &[f32],
     b: &[f32],
     k: usize,
@@ -39,23 +80,7 @@ fn mm_nn_panel_f32(
 ) {
     for k0 in (0..k).step_by(BLOCK_K) {
         let k1 = (k0 + BLOCK_K).min(k);
-        for j0 in (0..n).step_by(BLOCK_J) {
-            let j1 = (j0 + BLOCK_J).min(n);
-            for i in i0..i1 {
-                let arow = &a[i * k..(i + 1) * k];
-                let orow = &mut out[(i - i0) * n + j0..(i - i0) * n + j1];
-                for kk in k0..k1 {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n + j0..kk * n + j1];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
-            }
-        }
+        mm_nn_ktile_f32(a, &b[k0 * n..k1 * n], k, n, k0, k1, i0, i1, out);
     }
 }
 

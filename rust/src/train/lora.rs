@@ -105,7 +105,7 @@ impl LoraLmTrainer {
         for step in 0..steps {
             let (tokens, targets) = lm_batch_random(corpus, self.spec.batch, self.spec.seq, rng);
             let mut inputs = lm_inputs(&tokens, Some((&targets, &shape)), &shape, &self.init.base);
-            inputs.extend(self.init.lora.iter().cloned().map(Value::F32));
+            inputs.extend(self.init.lora.iter().cloned().map(Value::from));
             let out = exec.run(&inputs)?;
             let loss = out[0].data()[0] as f64;
             ensure!(loss.is_finite(), "lora-lm loss diverged at step {step}");
@@ -156,10 +156,10 @@ impl LoraClsTrainer {
             let mut inputs: Vec<Value> =
                 vec![Value::I32(b.tokens.clone(), vec![self.spec.batch, seq])];
             inputs.push(Value::I32(b.labels.clone(), vec![self.spec.batch]));
-            inputs.extend(self.init.base.iter().cloned().map(Value::F32));
-            inputs.extend(self.init.lora.iter().cloned().map(Value::F32));
-            inputs.push(Value::F32(self.head_w.clone()));
-            inputs.push(Value::F32(self.head_b.clone()));
+            inputs.extend(self.init.base.iter().cloned().map(Value::from));
+            inputs.extend(self.init.lora.iter().cloned().map(Value::from));
+            inputs.push(Value::from(self.head_w.clone()));
+            inputs.push(Value::from(self.head_b.clone()));
             let out = exec.run(&inputs)?;
             let loss = out[0].data()[0] as f64;
             ensure!(loss.is_finite(), "cls loss diverged");
@@ -233,9 +233,9 @@ impl FullClsTrainer {
             let mut inputs: Vec<Value> =
                 vec![Value::I32(b.tokens.clone(), vec![self.spec.batch, seq])];
             inputs.push(Value::I32(b.labels.clone(), vec![self.spec.batch]));
-            inputs.extend(self.params.iter().cloned().map(Value::F32));
-            inputs.push(Value::F32(self.head_w.clone()));
-            inputs.push(Value::F32(self.head_b.clone()));
+            inputs.extend(self.params.iter().cloned().map(Value::from));
+            inputs.push(Value::from(self.head_w.clone()));
+            inputs.push(Value::from(self.head_b.clone()));
             let out = exec.run(&inputs)?;
             let loss = out[0].data()[0] as f64;
             ensure!(loss.is_finite());

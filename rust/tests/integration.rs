@@ -408,6 +408,60 @@ fn cli_pretrain_quantize_eval() {
 }
 
 #[test]
+fn cli_native_eval_and_serve_without_artifacts() {
+    // the --exec native path needs no xla artifacts: build a quantized nano
+    // checkpoint in-process, then drive eval-ppl and serve through the CLI
+    let spec = ModelSpec::builtin("nano").unwrap();
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(21)));
+    let cfg = PipelineConfig::new(Method::WOnly, QFormat::Mxint { bits: 4, block: 32 }, 0);
+    let qm = quantize(&ckpt, &cfg, None).unwrap();
+
+    let dir = tmpdir();
+    let q_path = dir.join("native.qqkpt").to_string_lossy().to_string();
+    qm.ckpt.save(&q_path).unwrap();
+
+    let run = |args: &[&str]| {
+        let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        qera::cli::main_with_args(&argv)
+    };
+    // point --artifacts at a dir with no manifest: native must not open it
+    let bogus = dir.join("no-artifacts-here").to_string_lossy().to_string();
+    for _ in 0..2 {
+        // reproducible: identical output both runs (same corpus seed)
+        run(&[
+            "eval-ppl",
+            "--artifacts",
+            &bogus,
+            "--qckpt",
+            &q_path,
+            "--exec",
+            "native",
+            "--corpus-tokens",
+            "30000",
+            "--eval-batches",
+            "2",
+        ])
+        .unwrap();
+    }
+    run(&[
+        "serve",
+        "--artifacts",
+        &bogus,
+        "--qckpt",
+        &q_path,
+        "--exec",
+        "native",
+        "--prompts",
+        "3",
+        "--new-tokens",
+        "4",
+    ])
+    .unwrap();
+    // and the flag rejects unknown backends
+    assert!(run(&["eval-ppl", "--qckpt", &q_path, "--exec", "tpu"]).is_err());
+}
+
+#[test]
 fn serving_consistency_with_direct_eval() {
     // the batcher must produce exactly the greedy tokens the engine produces
     let Some(reg) = registry() else {
@@ -424,7 +478,11 @@ fn serving_consistency_with_direct_eval() {
         dir,
         spec,
         params,
-        qera::serve::ServerConfig { max_wait: std::time::Duration::from_millis(1), seed: 0 },
+        qera::serve::ServerConfig {
+            max_wait: std::time::Duration::from_millis(1),
+            seed: 0,
+            ..Default::default()
+        },
     );
     for (i, p) in prompts.iter().enumerate() {
         let rx = server.submit(p.clone(), 6, 0.0);

@@ -2,7 +2,7 @@
 //! committed `BENCH_baseline.json` and fail on a median regression.
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json 0.25
 //! ```
@@ -22,14 +22,15 @@
 //! Refreshing the baseline (run on the machine class CI uses, smoke mode):
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec
 //! cp BENCH_solver.json BENCH_baseline.json   # then commit it
 //! ```
 //!
 //! Gated groups (each table's last `p50` column is the shipped path):
 //! `svd`, `matmul`, `tensor_matmul`, `psd`, `solver`, `calib` (blocked
 //! threaded rxx fold), `qdq` (threaded quantizer kernels), `budget` (the
-//! mixed-precision planner's layer x cell profiling pass).
+//! mixed-precision planner's layer x cell profiling pass), `exec` (the
+//! fused-from-packed matmul behind the native serve/eval backend).
 
 use qera::util::json::Json;
 
@@ -96,7 +97,7 @@ fn main() {
         );
         println!(
             "refresh: QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul \
-             svd matmul solver calib qdq budget && cp {} {}",
+             svd matmul solver calib qdq budget exec && cp {} {}",
             args[0], args[1]
         );
         return;
