@@ -1,8 +1,9 @@
-//! Serving demo: a quantized model behind the dynamic batcher.
+//! Serving demo: a quantized model behind the supervised serving daemon.
 //!
-//! Quantizes the subject model with QERA-approx, starts the server thread,
-//! fires concurrent client bursts, and reports latency / throughput /
-//! batching efficiency — the "no inference overhead" deployment story.
+//! Quantizes the subject model with QERA-approx, starts the daemon, fires
+//! concurrent client bursts, hot-swaps to a second checkpoint mid-traffic,
+//! and reports latency / throughput / batching efficiency — the "no
+//! inference overhead" deployment story.
 //!
 //! ```bash
 //! cargo run --release --example serve
@@ -12,7 +13,7 @@ use qera::coordinator::{calibrate, quantize, PipelineConfig};
 use qera::data::{Corpus, Tokenizer};
 use qera::quant::QFormat;
 use qera::runtime::Registry;
-use qera::serve::{Server, ServerConfig};
+use qera::serve::{ServeModel, Server, ServerConfig};
 use qera::solver::Method;
 use qera::train::{pretrain, PretrainConfig};
 use std::time::{Duration, Instant};
@@ -40,41 +41,60 @@ fn main() -> anyhow::Result<()> {
         reg.dir.clone(),
         spec.clone(),
         qm.merged.clone(),
-        ServerConfig { max_wait: Duration::from_millis(10), seed: 7 },
+        ServerConfig {
+            max_wait: Duration::from_millis(10),
+            seed: 7,
+            deadline: Some(Duration::from_secs(300)),
+            ..Default::default()
+        },
     );
 
-    // three client bursts
+    // three client bursts; hot-swap to a higher-rank checkpoint after the
+    // first — in-flight requests finish on the old model, later bursts
+    // decode on the new one (watch model_version flip)
     let t0 = Instant::now();
     let mut latencies = Vec::new();
     for burst in 0..3 {
-        let rxs: Vec<_> = (0..6)
+        if burst == 1 {
+            let qm2 =
+                quantize(&ckpt, &PipelineConfig::new(Method::QeraApprox, fmt, 16), Some(&calib))?;
+            server.swap_model(spec.clone(), ServeModel::Dense(qm2.merged.clone()))?;
+            println!("hot-swapped to rank-16 checkpoint");
+        }
+        let handles: Vec<_> = (0..6)
             .map(|i| {
-                let prompt = vec![(burst * 6 + i + 1) as i32 % spec.vocab as i32, 5, 9];
+                let prompt = vec![((burst * 6 + i + 1) % spec.vocab) as i32, 5, 9];
                 server.submit(prompt, 16, 0.0)
             })
             .collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv_timeout(Duration::from_secs(300))?;
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h
+                .map_err(|e| anyhow::anyhow!("admission rejected: {e}"))?
+                .wait()
+                .response()?;
             latencies.push(resp.total_ms);
             if i == 0 {
                 println!(
-                    "burst {burst}: \"{}\" (batch={}, queue {:.1} ms, total {:.1} ms)",
+                    "burst {burst}: \"{}\" (batch={}, model v{}, queue {:.1} ms, total {:.1} ms)",
                     tok.decode(&resp.tokens[..resp.tokens.len().min(8)]),
                     resp.batch_size,
+                    resp.model_version,
                     resp.queue_ms,
                     resp.total_ms
                 );
             }
         }
     }
-    let stats = server.stop();
+    let stats = server.stop()?;
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     println!(
-        "\n{} requests in {:.2}s | {:.1} tok/s | mean batch {:.2} | p50 {:.0} ms, p95 {:.0} ms",
+        "\n{}/{} requests in {:.2}s | {:.1} tok/s | mean batch {:.2} | {} swap(s) | p50 {:.0} ms, p95 {:.0} ms",
         stats.requests,
+        stats.admitted,
         t0.elapsed().as_secs_f64(),
         stats.throughput_tok_s(),
         stats.mean_batch(),
+        stats.swaps,
         latencies[latencies.len() / 2],
         latencies[(latencies.len() - 1) * 95 / 100],
     );

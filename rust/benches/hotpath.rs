@@ -14,15 +14,18 @@
 //! `qdq` (quantizer kernels, serial vs pool-threaded block chunks),
 //! `budget` (the mixed-precision planner: layer × cell profiling +
 //! allocator sweeps), `exec` (fused-from-packed matmul vs
-//! dequantize-then-matmul — the native serve/eval hot path), `quant`
-//! (quantizer throughput), `stats` (calibration accumulation), and — when
-//! PJRT artifacts are built — `forward` / `serve`.
+//! dequantize-then-matmul — the native serve/eval hot path), `serve` (the
+//! supervised daemon end to end on the native backend: throughput + queue /
+//! total latency tails vs batching window), `quant` (quantizer throughput),
+//! `stats` (calibration accumulation), and — when PJRT artifacts are
+//! built — `forward`.
 //!
 //! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` / `calib` /
-//! `qdq` / `budget` / `exec` p50s additionally land in `BENCH_solver.json`
-//! (machine-readable, for the perf trajectory and the CI bench-regression
-//! gate).  Set `QERA_BENCH_SMOKE=1` to shrink shapes/iterations — the mode
-//! CI uses when diffing against `BENCH_baseline.json`.
+//! `qdq` / `budget` / `exec` / `serve` groups additionally land in
+//! `BENCH_solver.json` (machine-readable, for the perf trajectory and the
+//! CI bench-regression gate; `serve` is gated on its p95 tail columns too —
+//! the SLO gate).  Set `QERA_BENCH_SMOKE=1` to shrink shapes/iterations —
+//! the mode CI uses when diffing against `BENCH_baseline.json`.
 
 use qera::bench_util::{emit_json_report, f2, f3, f4, time_stats, Table};
 use qera::coordinator::{quantize, CalibResult, PipelineConfig};
@@ -617,42 +620,67 @@ fn bench_stats() {
     t.emit("hot_stats");
 }
 
-fn bench_serve(reg: &Registry) -> anyhow::Result<()> {
+fn bench_serve() -> anyhow::Result<Table> {
     use std::time::Duration;
-    let spec = reg.spec("nano")?.clone();
+    // native backend: artifact-free, so this group always lands in the JSON
+    // report and the CI tail gate (the SLO gate — p50 AND p95 columns)
+    let spec = ModelSpec::builtin("nano").expect("builtin spec");
     let mut rng = Rng::new(6);
     let params = qera::model::init::init_params(&spec, &mut rng);
+    let (n_req, n_tok) = if smoke() { (4usize, 4usize) } else { (16, 8) };
     let mut t = Table::new(
-        "serving throughput vs batching window",
-        &["max-wait ms", "requests", "tok/s", "mean batch", "queue p50/p95 ms", "total p50/p95 ms"],
+        "serving daemon: throughput + latency tails vs batching window (native backend)",
+        &[
+            "max-wait ms",
+            "admitted",
+            "tok/s",
+            "mean batch",
+            "queue p50 ms",
+            "queue p95 ms",
+            "total p50 ms",
+            "total p95 ms",
+            "shed",
+            "restarts",
+            "swaps",
+        ],
     );
     for wait_ms in [0u64, 10, 50] {
         let server = qera::serve::Server::start(
-            reg.dir.clone(),
+            std::path::PathBuf::from("bench-unused-artifacts"),
             spec.clone(),
             params.clone(),
             qera::serve::ServerConfig {
                 max_wait: Duration::from_millis(wait_ms),
                 seed: 1,
+                backend: qera::runtime::ExecBackend::Native,
                 ..Default::default()
             },
         );
-        let rxs: Vec<_> = (0..8).map(|i| server.submit(vec![i as i32 + 1, 2], 8, 0.0)).collect();
-        for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(300))?;
+        let handles: Vec<_> =
+            (0..n_req).map(|i| server.submit(vec![i as i32 + 1, 2], n_tok, 0.0)).collect();
+        for h in handles {
+            h.map_err(|e| anyhow::anyhow!("bench submit rejected: {e}"))?
+                .wait_timeout(Duration::from_secs(300))
+                .ok_or_else(|| anyhow::anyhow!("bench request still in flight after 300s"))?
+                .response()?;
         }
-        let stats = server.stop();
+        let stats = server.stop()?;
         t.row(vec![
             wait_ms.to_string(),
-            stats.requests.to_string(),
+            stats.admitted.to_string(),
             format!("{:.1}", stats.throughput_tok_s()),
             f2(stats.mean_batch()),
-            format!("{}/{}", f2(stats.queue_p50_ms()), f2(stats.queue_p95_ms())),
-            format!("{}/{}", f2(stats.total_p50_ms()), f2(stats.total_p95_ms())),
+            f2(stats.queue_p50_ms()),
+            f2(stats.queue_p95_ms()),
+            f2(stats.total_p50_ms()),
+            f2(stats.total_p95_ms()),
+            stats.shed.to_string(),
+            stats.engine_restarts.to_string(),
+            stats.swaps.to_string(),
         ]);
     }
     t.emit("hot_serve");
-    Ok(())
+    Ok(t)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -694,6 +722,9 @@ fn main() -> anyhow::Result<()> {
     if want("exec") {
         report.push(("exec", bench_exec()));
     }
+    if want("serve") {
+        report.push(("serve", bench_serve()?));
+    }
     if want("quant") {
         bench_quant();
     }
@@ -710,16 +741,9 @@ fn main() -> anyhow::Result<()> {
         emit_json_report("BENCH_solver.json", &refs);
     }
     // PJRT-backed groups only run when the artifacts are built
-    if want("forward") || want("serve") {
+    if want("forward") {
         match Registry::open_default() {
-            Ok(reg) => {
-                if want("forward") {
-                    bench_forward(&reg)?;
-                }
-                if want("serve") {
-                    bench_serve(&reg)?;
-                }
-            }
+            Ok(reg) => bench_forward(&reg)?,
             Err(e) => println!("[skip] PJRT benches (no artifacts): {e:#}"),
         }
     }

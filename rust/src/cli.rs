@@ -79,6 +79,9 @@ impl Args {
                 || k == "prompts"
                 || k == "new-tokens"
                 || k == "temperature"
+                || k == "queue-cap"
+                || k == "deadline-ms"
+                || k == "drain-ms"
             {
                 continue;
             }
@@ -151,9 +154,16 @@ common flags: --artifacts DIR --model NAME --method M --format F --rank K
                                    packed blocks, no artifacts needed
 
 serving (serve): --prompts N --new-tokens N --temperature T  synthetic
-              request burst against the dynamic batcher; with --qckpt and
+              request burst against the serving daemon; with --qckpt and
               --exec native the packed weights serve without dense
               materialization
+              --queue-cap N     admission queue bound (default 256); excess
+                                submissions are rejected, not buffered
+              --deadline-ms N   per-request deadline (0 = none, default);
+                                expired work is dropped between decode steps
+              --drain-ms N      graceful-drain budget on shutdown
+                                (default 5000); unfinished work is shed with
+                                a typed outcome
 
 budget planning (quantize): --budget-bits B  target avg bits/weight; profiles
               every layer x (format, rank) cell with the closed-form error
@@ -345,7 +355,7 @@ fn cmd_eval_ppl(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use crate::serve::{ServeModel, Server, ServerConfig};
+    use crate::serve::{Outcome, ServeModel, Server, ServerConfig};
     let cfg = args.to_config()?;
     let backend = exec_backend(args)?;
     let (spec, model) = if let Some(p) = args.get("qckpt") {
@@ -362,6 +372,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(v) => v.parse().context("--temperature must be a float")?,
         None => 0.0,
     };
+    let queue_cap = args.usize_or("queue-cap", 256)?;
+    let deadline_ms = args.usize_or("deadline-ms", 0)?;
+    let drain_ms = args.usize_or("drain-ms", 5000)?;
     println!(
         "serving {} ({} backend): {n_prompts} prompts x {new_tokens} tokens",
         spec.name,
@@ -371,35 +384,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
         artifact_dir(args),
         spec.clone(),
         model,
-        ServerConfig { seed: cfg.seed, backend, ..Default::default() },
+        ServerConfig {
+            seed: cfg.seed,
+            backend,
+            queue_cap,
+            deadline: (deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(deadline_ms as u64)),
+            drain: std::time::Duration::from_millis(drain_ms as u64),
+            ..Default::default()
+        },
     );
     let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0x5e17e);
-    let rxs: Vec<_> = (0..n_prompts)
-        .map(|_| {
+    let handles: Vec<_> = (0..n_prompts)
+        .map(|i| {
             let len = 1 + rng.below(spec.seq / 2);
             let prompt: Vec<i32> = (0..len).map(|_| rng.below(spec.vocab) as i32).collect();
-            server.submit(prompt, new_tokens, temperature)
+            (i, server.submit(prompt, new_tokens, temperature))
         })
         .collect();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().context("serve loop died before responding")?;
-        anyhow::ensure!(
-            resp.tokens.len() == new_tokens,
-            "prompt {i}: got {} tokens, wanted {new_tokens}",
-            resp.tokens.len()
-        );
-        println!(
-            "  prompt {i}: {} tokens (batch {}, queue {:.1} ms, total {:.1} ms)",
-            resp.tokens.len(),
-            resp.batch_size,
-            resp.queue_ms,
-            resp.total_ms
-        );
+    for (i, h) in handles {
+        let h = match h {
+            Ok(h) => h,
+            Err(e) => {
+                println!("  prompt {i}: rejected at admission ({e})");
+                continue;
+            }
+        };
+        match h.wait() {
+            Outcome::Done(resp) => {
+                anyhow::ensure!(
+                    resp.tokens.len() == new_tokens,
+                    "prompt {i}: got {} tokens, wanted {new_tokens}",
+                    resp.tokens.len()
+                );
+                println!(
+                    "  prompt {i}: {} tokens (batch {}, model v{}, queue {:.1} ms, total {:.1} ms)",
+                    resp.tokens.len(),
+                    resp.batch_size,
+                    resp.model_version,
+                    resp.queue_ms,
+                    resp.total_ms
+                );
+            }
+            Outcome::TimedOut { waited_ms } => {
+                println!("  prompt {i}: deadline expired after {waited_ms:.1} ms");
+            }
+            Outcome::Cancelled => println!("  prompt {i}: cancelled"),
+            Outcome::Shed(r) => println!("  prompt {i}: shed ({})", r.name()),
+            Outcome::Failed { error, attempts } => {
+                println!("  prompt {i}: failed after {attempts} attempt(s): {error}");
+            }
+        }
     }
-    let stats = server.stop();
+    let stats = server.stop()?;
     println!(
-        "served {} requests in {} batches: {:.1} tok/s, queue p50/p95 {:.1}/{:.1} ms, total p50/p95 {:.1}/{:.1} ms",
+        "served {}/{} admitted in {} batches: {:.1} tok/s, queue p50/p95 {:.1}/{:.1} ms, total p50/p95 {:.1}/{:.1} ms",
         stats.requests,
+        stats.admitted,
         stats.batches,
         stats.throughput_tok_s(),
         stats.queue_p50_ms(),
@@ -407,6 +448,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.total_p50_ms(),
         stats.total_p95_ms()
     );
+    if stats.rejected_at_gate + stats.shed + stats.timed_out + stats.cancelled + stats.errored > 0
+    {
+        println!(
+            "  degraded: {} gate-rejected, {} shed, {} timed out, {} cancelled, {} errored ({} retries, {} engine restarts)",
+            stats.rejected_at_gate,
+            stats.shed,
+            stats.timed_out,
+            stats.cancelled,
+            stats.errored,
+            stats.retries,
+            stats.engine_restarts
+        );
+    }
+    if let Some(strategy) = &stats.plan_strategy {
+        println!(
+            "  plan: {} @ {:.3} bits/weight ({} swaps)",
+            strategy,
+            stats.plan_bits.unwrap_or(f64::NAN),
+            stats.swaps
+        );
+    }
     Ok(())
 }
 

@@ -227,6 +227,18 @@ impl QuantCheckpoint {
         QuantCheckpoint { spec: ckpt.spec.clone(), dense, qweights, lowrank, meta }
     }
 
+    /// Budget-plan provenance recorded by the allocator at quantize time:
+    /// `(plan_bits, plan_strategy)` from `meta`, or `(None, None)` for
+    /// checkpoints not produced through a `BudgetPlan`.  Surfaced in serving
+    /// telemetry so operators can see which plan a hot-swapped model came
+    /// from.
+    pub fn plan_telemetry(&self) -> (Option<f64>, Option<String>) {
+        let bits = self.meta.get("plan_bits").and_then(Json::as_f64);
+        let strategy =
+            self.meta.get("plan_strategy").and_then(Json::as_str).map(|s| s.to_string());
+        (bits, strategy)
+    }
+
     /// Materialize merged dense params (`W~ + A B`) in canonical order —
     /// what the evaluator feeds to `lm_fwd`.
     pub fn materialize_merged(&self) -> Vec<Tensor> {

@@ -37,10 +37,16 @@ impl ExecBackend {
         }
     }
 
-    /// `QERA_EXEC` env override; defaults to [`ExecBackend::Stub`].
+    /// `QERA_EXEC` env override; defaults to [`ExecBackend::Stub`].  An
+    /// unparseable value warns and falls back instead of being silently
+    /// swallowed — a typo'd `QERA_EXEC=navite` should not quietly serve on
+    /// the stub path.
     pub fn from_env() -> ExecBackend {
         match std::env::var("QERA_EXEC") {
-            Ok(s) => ExecBackend::parse(&s).unwrap_or_default(),
+            Ok(s) => ExecBackend::parse(&s).unwrap_or_else(|e| {
+                crate::warn_!("ignoring QERA_EXEC: {e}");
+                ExecBackend::default()
+            }),
             Err(_) => ExecBackend::Stub,
         }
     }

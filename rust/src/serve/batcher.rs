@@ -1,17 +1,27 @@
-//! Request router + dynamic batcher (the vLLM-router-shaped piece).
+//! Request router + dynamic batcher (the vLLM-router-shaped piece), now a
+//! supervised daemon front-end.
 //!
-//! Clients submit prompts from any thread; a dedicated serving thread owns
-//! the PJRT handles (they are not `Send`), drains the queue into batches of
-//! up to `spec.batch` requests within a `max_wait` window, decodes
-//! step-locked batches, and completes each request on its response channel.
-//! Latency statistics (per-request queue / total samples with p50/p95
-//! accessors, not just means) feed the serving bench's tail gates.
+//! Clients submit prompts from any thread through a **bounded admission
+//! gate**; a dedicated serving thread owns the engine (PJRT handles are not
+//! `Send`), drains the queue into batches of up to `spec.batch` requests
+//! within a `max_wait` window, decodes step-locked batches with per-row
+//! temperatures, and completes each request with a typed
+//! [`Outcome`](super::daemon::Outcome) — success, timeout, cancellation,
+//! shed, or failure — so no reply channel ever dangles.  The daemon layer
+//! ([`super::daemon`]) adds retry-with-backoff, capped engine restarts,
+//! graceful drain, and hot model swap; [`ServerStats`] accounts for every
+//! admitted request and carries the serving plan's telemetry.
 
+use super::daemon::{
+    daemon_loop, EngineFactory, Msg, Outcome, PlanTelemetry, RetryPolicy, Shared, ShedReason,
+    SubmitError, Supervisor,
+};
+use super::engine::Engine;
 use crate::model::{ModelSpec, QuantCheckpoint};
 use crate::runtime::ExecBackend;
-use crate::util::rng::Rng;
-use anyhow::Result;
-use std::sync::mpsc;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Weights handed to the serving thread.
@@ -24,12 +34,30 @@ pub enum ServeModel {
     Quant(Box<QuantCheckpoint>),
 }
 
+impl ServeModel {
+    /// Plan provenance recorded by the budget allocator, if any — surfaced
+    /// in [`ServerStats`] so operators can see which plan is serving.
+    pub fn telemetry(&self) -> PlanTelemetry {
+        match self {
+            ServeModel::Dense(_) => PlanTelemetry::default(),
+            ServeModel::Quant(q) => {
+                let (plan_bits, plan_strategy) = q.plan_telemetry();
+                PlanTelemetry { plan_bits, plan_strategy }
+            }
+        }
+    }
+}
+
+/// One admitted generation request as the daemon sees it.
 pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub temperature: f32,
-    enqueued: Instant,
-    reply: mpsc::Sender<Response>,
+    /// Absolute completion deadline; rows past it are pruned between steps.
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) enqueued: Instant,
+    pub(crate) cancel: Arc<AtomicBool>,
+    pub(crate) reply: mpsc::Sender<Outcome>,
 }
 
 #[derive(Clone, Debug)]
@@ -38,6 +66,53 @@ pub struct Response {
     pub queue_ms: f64,
     pub total_ms: f64,
     pub batch_size: usize,
+    /// Increments on every hot swap: which model generation served this.
+    pub model_version: usize,
+}
+
+/// Per-request options for [`Server::submit_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestOpts {
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    /// Relative deadline; `None` falls back to `ServerConfig::deadline`.
+    pub deadline: Option<Duration>,
+}
+
+/// Client-side handle for one admitted request: await the typed outcome or
+/// cancel it.  Waiting never hangs — if the daemon ever dropped the reply
+/// channel (a bug, or a stop racing a submit), the wait maps to a
+/// [`Outcome::Failed`] instead of blocking forever.
+#[derive(Debug)]
+pub struct RequestHandle {
+    rx: mpsc::Receiver<Outcome>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RequestHandle {
+    /// Ask the daemon to drop this request at the next prune point.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    fn dropped() -> Outcome {
+        Outcome::Failed { error: "serve daemon dropped the reply channel".into(), attempts: 0 }
+    }
+
+    /// Block until the request reaches its terminal outcome.
+    pub fn wait(&self) -> Outcome {
+        self.rx.recv().unwrap_or_else(|_| Self::dropped())
+    }
+
+    /// Like [`RequestHandle::wait`] with a local patience bound; `None`
+    /// means the request is still in flight.
+    pub fn wait_timeout(&self, d: Duration) -> Option<Outcome> {
+        match self.rx.recv_timeout(d) {
+            Ok(o) => Some(o),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Some(Self::dropped()),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -47,17 +122,43 @@ pub struct ServerConfig {
     pub seed: u64,
     /// Execution backend; [`ExecBackend::Native`] serves without artifacts.
     pub backend: ExecBackend,
+    /// Bound on admitted-but-not-yet-batched requests; submissions beyond
+    /// it are rejected with [`ShedReason::QueueFull`].
+    pub queue_cap: usize,
+    /// Cap on requests decoded in one batch, on top of `spec.batch`.
+    pub inflight_cap: usize,
+    /// Default per-request deadline applied when a request carries none.
+    pub deadline: Option<Duration>,
+    /// Graceful-drain budget for [`Server::stop`]: queued work that cannot
+    /// finish within it is shed with [`ShedReason::Draining`].
+    pub drain: Duration,
+    pub retry: RetryPolicy,
+    /// Engine re-creations allowed after failures before the daemon
+    /// declares the engine dead (a hot swap resets the budget).
+    pub max_restarts: u32,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_wait: Duration::from_millis(5), seed: 0, backend: ExecBackend::Stub }
+        ServerConfig {
+            max_wait: Duration::from_millis(5),
+            seed: 0,
+            backend: ExecBackend::Stub,
+            queue_cap: 256,
+            inflight_cap: usize::MAX,
+            deadline: None,
+            drain: Duration::from_secs(5),
+            retry: RetryPolicy::default(),
+            max_restarts: 2,
+        }
     }
 }
 
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
+    /// Requests completed successfully.
     pub requests: usize,
+    /// Executed batch attempts (retries of a failed batch count again).
     pub batches: usize,
     pub tokens_generated: usize,
     pub wall_s: f64,
@@ -66,6 +167,27 @@ pub struct ServerStats {
     pub queue_ms: Vec<f64>,
     /// Per-request total latency samples (ms), in completion order.
     pub total_ms: Vec<f64>,
+    /// Requests accepted past the admission gate.
+    pub admitted: usize,
+    /// Submissions rejected at the gate (queue full / draining / dead).
+    pub rejected_at_gate: usize,
+    /// Admitted requests shed before completion (drain deadline, dead
+    /// engine).
+    pub shed: usize,
+    pub timed_out: usize,
+    pub cancelled: usize,
+    /// Admitted requests completed with a typed failure.
+    pub errored: usize,
+    /// Batch retry attempts taken after engine failures.
+    pub retries: usize,
+    /// Engines re-created by the supervisor after a failure.
+    pub engine_restarts: usize,
+    /// Successful hot model swaps.
+    pub swaps: usize,
+    /// Budget-plan telemetry of the currently-serving model (None when the
+    /// model was not produced by a `BudgetPlan`).
+    pub plan_bits: Option<f64>,
+    pub plan_strategy: Option<String>,
 }
 
 impl ServerStats {
@@ -83,6 +205,12 @@ impl ServerStats {
         } else {
             0.0
         }
+    }
+
+    /// Admitted requests that reached a terminal outcome, by kind — the
+    /// shutdown-ordering tests assert this sums to `admitted`.
+    pub fn accounted(&self) -> usize {
+        self.requests + self.shed + self.timed_out + self.cancelled + self.errored
     }
 
     /// Percentile over a sample set (same convention as `bench_util`:
@@ -123,19 +251,52 @@ impl ServerStats {
     }
 }
 
-enum Msg {
-    Req(Request),
-    Stop(mpsc::Sender<ServerStats>),
-}
-
-/// Handle for submitting requests; the engine runs on its own thread.
+/// Handle for submitting requests; the daemon runs on its own thread.
 pub struct Server {
     tx: mpsc::Sender<Msg>,
+    shared: Arc<Shared>,
+    default_deadline: Option<Duration>,
+    queue_cap: usize,
+    /// Context for [`Server::swap_model`]; `None` for custom-factory
+    /// servers (use [`Server::swap_factory`] there).
+    swap_ctx: Option<(std::path::PathBuf, ExecBackend)>,
     handle: Option<std::thread::JoinHandle<()>>,
+    /// Stats receiver parked by [`Server::begin_stop`], consumed by
+    /// [`Server::stop`].
+    pending_stats: Option<mpsc::Receiver<ServerStats>>,
+}
+
+/// Build the engine factory the supervisor (re)builds engines through.
+/// Stub-backend quant models materialize their merged weights once, here,
+/// on the caller's thread.
+fn make_factory(
+    artifact_dir: std::path::PathBuf,
+    spec: ModelSpec,
+    model: ServeModel,
+    backend: ExecBackend,
+) -> EngineFactory {
+    match (backend, model) {
+        (ExecBackend::Stub, model) => {
+            let params = match model {
+                ServeModel::Dense(p) => p,
+                ServeModel::Quant(q) => q.materialize_merged(),
+            };
+            Box::new(move || {
+                let reg = crate::runtime::Registry::open(&artifact_dir)?;
+                Ok(Box::new(Engine::new(&reg, spec.clone(), params.clone())?) as _)
+            })
+        }
+        (ExecBackend::Native, ServeModel::Dense(p)) => {
+            Box::new(move || Ok(Box::new(Engine::new_native(spec.clone(), p.clone())?) as _))
+        }
+        (ExecBackend::Native, ServeModel::Quant(q)) => {
+            Box::new(move || Ok(Box::new(Engine::new_native_quant(&q)) as _))
+        }
+    }
 }
 
 impl Server {
-    /// Start the serving thread.  `artifact_dir` and the model params are
+    /// Start the serving daemon.  `artifact_dir` and the model params are
     /// moved into the thread (PJRT handles are created there).
     pub fn start(
         artifact_dir: std::path::PathBuf,
@@ -155,144 +316,187 @@ impl Server {
         model: ServeModel,
         cfg: ServerConfig,
     ) -> Server {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::spawn(move || {
-            if let Err(e) = serve_loop(artifact_dir, spec, model, cfg, rx) {
-                crate::warn_!("serve loop died: {e:#}");
-            }
-        });
-        Server { tx, handle: Some(handle) }
+        let telemetry = model.telemetry();
+        let swap_ctx = Some((artifact_dir.clone(), cfg.backend));
+        let factory = make_factory(artifact_dir, spec, model, cfg.backend);
+        let mut s = Server::start_factory(factory, telemetry, cfg);
+        s.swap_ctx = swap_ctx;
+        s
     }
 
-    /// Submit a prompt; returns the receiver for the response.
+    /// Start the daemon over a custom engine factory — the fault-injection
+    /// and chaos-test entry point ([`super::daemon::BatchEngine`]).
+    pub fn start_custom<F>(cfg: ServerConfig, factory: F) -> Server
+    where
+        F: FnMut() -> Result<Box<dyn super::daemon::BatchEngine>> + Send + 'static,
+    {
+        Server::start_factory(Box::new(factory), PlanTelemetry::default(), cfg)
+    }
+
+    fn start_factory(
+        factory: EngineFactory,
+        telemetry: PlanTelemetry,
+        cfg: ServerConfig,
+    ) -> Server {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared = Arc::new(Shared::default());
+        let shared2 = shared.clone();
+        let default_deadline = cfg.deadline;
+        let queue_cap = cfg.queue_cap;
+        let max_restarts = cfg.max_restarts;
+        let handle = std::thread::spawn(move || {
+            let sup = Supervisor::new(factory, max_restarts);
+            daemon_loop(sup, cfg, telemetry, rx, shared2);
+        });
+        Server {
+            tx,
+            shared,
+            default_deadline,
+            queue_cap,
+            swap_ctx: None,
+            handle: Some(handle),
+            pending_stats: None,
+        }
+    }
+
+    /// Submit a prompt through the admission gate.  Load shedding is
+    /// explicit: a full queue, a draining server, or a dead engine rejects
+    /// synchronously instead of buffering unboundedly.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
         temperature: f32,
-    ) -> mpsc::Receiver<Response> {
-        let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Req(Request {
+    ) -> Result<RequestHandle, SubmitError> {
+        self.submit_with(
             prompt,
-            max_new_tokens,
-            temperature,
-            enqueued: Instant::now(),
+            RequestOpts { max_new_tokens, temperature, deadline: None },
+        )
+    }
+
+    /// [`Server::submit`] with per-request options (deadline override).
+    pub fn submit_with(
+        &self,
+        prompt: Vec<i32>,
+        opts: RequestOpts,
+    ) -> Result<RequestHandle, SubmitError> {
+        if self.shared.engine_dead.load(Ordering::Acquire) {
+            self.shared.gate_rejections.fetch_add(1, Ordering::AcqRel);
+            return Err(SubmitError::Rejected(ShedReason::EngineDead));
+        }
+        if self.shared.draining.load(Ordering::Acquire) {
+            self.shared.gate_rejections.fetch_add(1, Ordering::AcqRel);
+            return Err(SubmitError::Rejected(ShedReason::Draining));
+        }
+        let n = self.shared.waiting.fetch_add(1, Ordering::AcqRel);
+        if n >= self.queue_cap {
+            self.shared.waiting.fetch_sub(1, Ordering::AcqRel);
+            self.shared.gate_rejections.fetch_add(1, Ordering::AcqRel);
+            return Err(SubmitError::Rejected(ShedReason::QueueFull));
+        }
+        let now = Instant::now();
+        let rel = opts.deadline.or(self.default_deadline);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (reply, rx) = mpsc::channel();
+        let req = Request {
+            prompt,
+            max_new_tokens: opts.max_new_tokens,
+            temperature: opts.temperature,
+            deadline: rel.map(|d| now + d),
+            enqueued: now,
+            cancel: cancel.clone(),
             reply,
-        }));
-        rx
+        };
+        if self.tx.send(Msg::Req(req)).is_err() {
+            self.shared.waiting.fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::Dead);
+        }
+        Ok(RequestHandle { rx, cancel })
     }
 
-    /// Stop the server and collect statistics.
-    pub fn stop(mut self) -> ServerStats {
+    /// Hot-swap the serving model: the daemon builds the new engine and
+    /// replaces the old one atomically between batches — in-flight batches
+    /// finish on the old model, later requests decode on the new one, and
+    /// no admitted request is dropped.  Blocks until the swap is applied
+    /// (or rejected, in which case the old model keeps serving).
+    pub fn swap_model(&self, spec: ModelSpec, model: ServeModel) -> Result<()> {
+        let (dir, backend) = self
+            .swap_ctx
+            .clone()
+            .context("swap_model needs a Server::start/start_model server; use swap_factory")?;
+        let telemetry = model.telemetry();
+        let factory = make_factory(dir, spec, model, backend);
+        self.swap_inner(factory, telemetry)
+    }
+
+    /// [`Server::swap_model`] over a custom engine factory.
+    pub fn swap_factory<F>(&self, factory: F, telemetry: PlanTelemetry) -> Result<()>
+    where
+        F: FnMut() -> Result<Box<dyn super::daemon::BatchEngine>> + Send + 'static,
+    {
+        self.swap_inner(Box::new(factory), telemetry)
+    }
+
+    fn swap_inner(&self, factory: EngineFactory, telemetry: PlanTelemetry) -> Result<()> {
+        let (ack, ackrx) = mpsc::channel();
+        if self.tx.send(Msg::Swap { factory, telemetry, ack }).is_err() {
+            bail!("serve daemon is dead");
+        }
+        match ackrx.recv() {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => bail!("hot swap rejected: {e}"),
+            Err(_) => bail!("serve daemon died during swap"),
+        }
+    }
+
+    /// Stop the server: drain gracefully (finish or shed queued work within
+    /// `ServerConfig::drain`) and collect fully-accounted statistics.  A
+    /// panicked or dead serving thread surfaces as an error instead of
+    /// default stats masquerading as a clean run.
+    pub fn stop(mut self) -> Result<ServerStats> {
+        let srx = match self.pending_stats.take() {
+            Some(rx) => Some(rx),
+            None => {
+                let (stx, srx) = mpsc::channel();
+                self.tx.send(Msg::Stop(stx)).ok().map(|()| srx)
+            }
+        };
+        let stats = srx.and_then(|rx| rx.recv().ok());
+        let join = self.handle.take().expect("stop consumes the handle").join();
+        match (join, stats) {
+            (Err(_), _) => bail!("serve daemon thread panicked"),
+            (Ok(()), Some(mut s)) => {
+                // the gate can reject after the daemon snapshots its stats
+                // (e.g. between begin_stop and stop) — refresh from the
+                // live counter so rejections are never under-reported
+                s.rejected_at_gate = self.shared.gate_rejections.load(Ordering::Acquire);
+                Ok(s)
+            }
+            (Ok(()), None) => bail!("serve daemon exited without reporting stats"),
+        }
+    }
+
+    /// Enqueue the graceful-stop request without blocking or consuming the
+    /// server: the daemon finishes what the drain deadline allows, then
+    /// parks the final stats for a later [`Server::stop`] call.  Once the
+    /// daemon reaches the drain (observable via [`Server::is_draining`]),
+    /// new submissions are rejected at the gate with
+    /// [`ShedReason::Draining`].  Idempotent.
+    pub fn begin_stop(&mut self) {
+        if self.pending_stats.is_some() {
+            return;
+        }
         let (stx, srx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Stop(stx));
-        let stats = srx.recv().unwrap_or_default();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        if self.tx.send(Msg::Stop(stx)).is_ok() {
+            self.pending_stats = Some(srx);
         }
-        stats
     }
-}
 
-fn serve_loop(
-    artifact_dir: std::path::PathBuf,
-    spec: ModelSpec,
-    model: ServeModel,
-    cfg: ServerConfig,
-    rx: mpsc::Receiver<Msg>,
-) -> Result<()> {
-    use super::engine::Engine;
-    let engine = match (cfg.backend, model) {
-        (ExecBackend::Stub, model) => {
-            let params = match model {
-                ServeModel::Dense(p) => p,
-                ServeModel::Quant(q) => q.materialize_merged(),
-            };
-            let reg = crate::runtime::Registry::open(artifact_dir)?;
-            Engine::new(&reg, spec.clone(), params)?
-        }
-        (ExecBackend::Native, ServeModel::Dense(p)) => Engine::new_native(spec.clone(), p)?,
-        (ExecBackend::Native, ServeModel::Quant(q)) => Engine::new_native_quant(&q),
-    };
-    let mut rng = Rng::new(cfg.seed);
-    let mut stats = ServerStats::default();
-    let t0 = Instant::now();
-
-    'outer: loop {
-        // block for the first request
-        let first = match rx.recv() {
-            Ok(Msg::Req(r)) => r,
-            Ok(Msg::Stop(reply)) => {
-                stats.wall_s = t0.elapsed().as_secs_f64();
-                let _ = reply.send(stats.clone());
-                break 'outer;
-            }
-            Err(_) => break 'outer,
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        // fill the batch within the wait window
-        while batch.len() < spec.batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => batch.push(r),
-                Ok(Msg::Stop(reply)) => {
-                    // finish this batch first, then stop
-                    run_batch(&engine, &mut batch, &mut rng, &mut stats)?;
-                    stats.wall_s = t0.elapsed().as_secs_f64();
-                    let _ = reply.send(stats.clone());
-                    break 'outer;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        run_batch(&engine, &mut batch, &mut rng, &mut stats)?;
+    /// True once the daemon has begun draining; from then on every
+    /// submission is rejected at the admission gate.
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::Acquire)
     }
-    Ok(())
-}
-
-fn run_batch(
-    engine: &super::engine::Engine,
-    batch: &mut Vec<Request>,
-    rng: &mut Rng,
-    stats: &mut ServerStats,
-) -> Result<()> {
-    if batch.is_empty() {
-        return Ok(());
-    }
-    let bsize = batch.len();
-    let started = Instant::now();
-    let max_new = batch.iter().map(|r| r.max_new_tokens).max().unwrap();
-    let temperature = batch[0].temperature;
-    let mut contexts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-    let lens: Vec<usize> = contexts.iter().map(Vec::len).collect();
-    for step in 0..max_new {
-        let next = engine.step(&contexts, temperature, rng)?;
-        for (i, t) in next.into_iter().enumerate() {
-            if step < batch[i].max_new_tokens {
-                contexts[i].push(t);
-                stats.tokens_generated += 1;
-            }
-        }
-    }
-    for (i, req) in batch.drain(..).enumerate() {
-        let resp = Response {
-            tokens: contexts[i][lens[i]..].to_vec(),
-            queue_ms: (started - req.enqueued).as_secs_f64() * 1e3,
-            total_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
-            batch_size: bsize,
-        };
-        stats.queue_ms.push(resp.queue_ms);
-        stats.total_ms.push(resp.total_ms);
-        let _ = req.reply.send(resp);
-        stats.requests += 1;
-    }
-    stats.batches += 1;
-    Ok(())
 }
 
 #[cfg(test)]
@@ -329,7 +533,7 @@ mod tests {
         // ExecBackend::Native never opens the registry, so serving works
         // even when no artifacts were built — pass a bogus dir to prove it
         let spec = ModelSpec::builtin("micro").unwrap();
-        let params = init_params(&spec, &mut Rng::new(7));
+        let params = init_params(&spec, &mut crate::util::rng::Rng::new(7));
         let server = Server::start(
             PathBuf::from("/nonexistent-artifact-dir"),
             spec,
@@ -338,16 +542,125 @@ mod tests {
                 max_wait: Duration::from_millis(10),
                 seed: 3,
                 backend: crate::runtime::ExecBackend::Native,
+                ..Default::default()
             },
         );
-        let rxs: Vec<_> = (0..3).map(|i| server.submit(vec![1 + i as i32, 2], 4, 0.0)).collect();
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let handles: Vec<_> =
+            (0..3i32).map(|i| server.submit(vec![1 + i, 2], 4, 0.0).unwrap()).collect();
+        for h in handles {
+            let resp = h
+                .wait_timeout(Duration::from_secs(120))
+                .expect("completed in time")
+                .response()
+                .unwrap();
             assert_eq!(resp.tokens.len(), 4);
+            assert_eq!(resp.model_version, 0);
         }
-        let stats = server.stop();
+        let stats = server.stop().unwrap();
         assert_eq!(stats.requests, 3);
+        assert_eq!(stats.admitted, 3);
+        assert_eq!(stats.accounted(), 3);
         assert_eq!(stats.tokens_generated, 12);
+        assert_eq!(stats.swaps, 0);
+        assert!(stats.plan_strategy.is_none());
+    }
+
+    #[test]
+    fn per_request_temperature_is_not_batch_global() {
+        // regression: run_batch used to apply batch[0].temperature to the
+        // whole batch.  Submit a sampled-temperature request FIRST and a
+        // greedy one second; the greedy row must still match the direct
+        // greedy generation exactly.
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut crate::util::rng::Rng::new(11));
+        let engine = Engine::new_native(spec.clone(), params.clone()).unwrap();
+        let greedy_prompt = vec![2i32, 3, 5];
+        let direct = engine
+            .generate(&[greedy_prompt.clone()], 6, 0.0, &mut crate::util::rng::Rng::new(0))
+            .unwrap();
+
+        let server = Server::start(
+            PathBuf::from("/nonexistent"),
+            spec,
+            params,
+            ServerConfig {
+                max_wait: Duration::from_millis(200),
+                seed: 3,
+                backend: crate::runtime::ExecBackend::Native,
+                ..Default::default()
+            },
+        );
+        // sampled first (would poison the old batch-global temperature),
+        // greedy second; the wide max_wait coalesces them into one batch
+        let sampled = server.submit(vec![7i32, 1], 6, 0.9).unwrap();
+        let greedy = server.submit(greedy_prompt.clone(), 6, 0.0).unwrap();
+        let s = sampled.wait_timeout(Duration::from_secs(120)).unwrap().response().unwrap();
+        let g = greedy.wait_timeout(Duration::from_secs(120)).unwrap().response().unwrap();
+        assert_eq!(s.batch_size, 2, "requests did not coalesce");
+        assert_eq!(g.tokens, direct[0][greedy_prompt.len()..].to_vec());
+        server.stop().unwrap();
+    }
+
+    #[test]
+    fn cancellation_yields_typed_outcome() {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut crate::util::rng::Rng::new(5));
+        let server = Server::start(
+            PathBuf::from("/nonexistent"),
+            spec,
+            params,
+            ServerConfig {
+                max_wait: Duration::from_millis(50),
+                backend: crate::runtime::ExecBackend::Native,
+                ..Default::default()
+            },
+        );
+        // cancel before the batch window closes: the daemon prunes it at
+        // batch start and replies Cancelled
+        let h = server.submit(vec![1, 2], 4, 0.0).unwrap();
+        h.cancel();
+        match h.wait_timeout(Duration::from_secs(120)).expect("terminal outcome") {
+            Outcome::Cancelled => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        let stats = server.stop().unwrap();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.requests, 0);
+        assert_eq!(stats.accounted(), stats.admitted);
+    }
+
+    #[test]
+    fn expired_deadline_yields_timeout() {
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut crate::util::rng::Rng::new(6));
+        let server = Server::start(
+            PathBuf::from("/nonexistent"),
+            spec,
+            params,
+            ServerConfig {
+                max_wait: Duration::from_millis(30),
+                backend: crate::runtime::ExecBackend::Native,
+                ..Default::default()
+            },
+        );
+        // a deadline that is already unmeetable when the batch starts
+        let h = server
+            .submit_with(
+                vec![3, 4],
+                RequestOpts {
+                    max_new_tokens: 4,
+                    temperature: 0.0,
+                    deadline: Some(Duration::from_nanos(1)),
+                },
+            )
+            .unwrap();
+        match h.wait_timeout(Duration::from_secs(120)).expect("terminal outcome") {
+            Outcome::TimedOut { waited_ms } => assert!(waited_ms >= 0.0),
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        let stats = server.stop().unwrap();
+        assert_eq!(stats.timed_out, 1);
+        assert_eq!(stats.accounted(), stats.admitted);
     }
 
     #[test]
@@ -357,7 +670,7 @@ mod tests {
             return;
         };
         let spec = ModelSpec::builtin("nano").unwrap();
-        let params = init_params(&spec, &mut Rng::new(0));
+        let params = init_params(&spec, &mut crate::util::rng::Rng::new(0));
         let server = Server::start(
             dir,
             spec,
@@ -365,17 +678,21 @@ mod tests {
             ServerConfig { max_wait: Duration::from_millis(30), seed: 1, ..Default::default() },
         );
         // submit a burst: should coalesce into batches
-        let rxs: Vec<_> =
-            (0..6).map(|i| server.submit(vec![1 + i as i32, 2, 3], 4, 0.0)).collect();
+        let handles: Vec<_> =
+            (0..6i32).map(|i| server.submit(vec![1 + i, 2, 3], 4, 0.0).unwrap()).collect();
         let mut batched = 0;
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        for h in handles {
+            let resp = h
+                .wait_timeout(Duration::from_secs(120))
+                .expect("completed in time")
+                .response()
+                .unwrap();
             assert_eq!(resp.tokens.len(), 4);
             if resp.batch_size > 1 {
                 batched += 1;
             }
         }
-        let stats = server.stop();
+        let stats = server.stop().unwrap();
         assert_eq!(stats.requests, 6);
         assert!(stats.tokens_generated >= 24);
         // one latency sample per request, with coherent tails
@@ -394,9 +711,10 @@ mod tests {
             return;
         };
         let spec = ModelSpec::builtin("nano").unwrap();
-        let params = init_params(&spec, &mut Rng::new(2));
+        let params = init_params(&spec, &mut crate::util::rng::Rng::new(2));
         let server = Server::start(dir, spec, params, ServerConfig::default());
-        let stats = server.stop();
+        let stats = server.stop().unwrap();
         assert_eq!(stats.requests, 0);
+        assert_eq!(stats.admitted, 0);
     }
 }

@@ -1,0 +1,810 @@
+//! Supervised serving daemon: the failure-containment layer between the
+//! [`super::batcher::Server`] handle and the decode engine.
+//!
+//! The batcher of earlier revisions was a library loop: unbounded queue, no
+//! deadlines, and the first `Engine::step` error killed the serving thread
+//! with a `warn_!`, silently dropping every queued reply channel.  This
+//! module owns everything that makes `serve/` survive production traffic:
+//!
+//! * **admission control** — a bounded submission queue ([`Shared`]);
+//!   overload is answered with a typed rejection instead of buffering;
+//! * **typed outcomes** — every admitted request terminates in exactly one
+//!   [`Outcome`] on its reply channel; no client ever hangs forever;
+//! * **deadlines + cancellation** — expired or cancelled rows are pruned
+//!   before and between decode steps;
+//! * **retry with backoff** — a failed batch is retried under
+//!   [`RetryPolicy`] (exponential backoff, deterministic jitter from the
+//!   server seed) on an engine the [`Supervisor`] re-creates, with capped
+//!   restarts; exhausted budgets produce [`Outcome::Failed`] /
+//!   [`ShedReason::EngineDead`], never a dropped channel;
+//! * **graceful drain** — shutdown stops admitting, finishes or sheds
+//!   queued work within a drain deadline, and accounts for every request;
+//! * **hot swap** — a control message atomically replaces the engine
+//!   between batches; in-flight batches finish on the old model, and the
+//!   new model's plan telemetry lands in `ServerStats`.
+
+use super::batcher::{Request, Response, ServerConfig, ServerStats};
+use super::engine::Engine;
+use crate::model::ModelSpec;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Why the daemon refused (at the gate) or shed (after admission) a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded submission queue is at `queue_cap`.
+    QueueFull,
+    /// The server is draining (stop was requested) and admits nothing new.
+    Draining,
+    /// The engine exhausted its restart budget and no swap has revived it.
+    EngineDead,
+}
+
+impl ShedReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Draining => "draining",
+            ShedReason::EngineDead => "engine_dead",
+        }
+    }
+}
+
+/// Synchronous admission failure from `Server::submit` — load shedding is
+/// explicit and observable, never an unbounded buffer or a hung channel.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Rejected at the admission gate for the given reason.
+    Rejected(ShedReason),
+    /// The serving thread is gone (stopped or panicked).
+    Dead,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Rejected(r) => write!(f, "request rejected: {}", r.name()),
+            SubmitError::Dead => write!(f, "serve daemon is dead"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Terminal state of an admitted request.  The daemon guarantees every
+/// admitted request reaches exactly one `Outcome` on its reply channel.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// Generation completed.
+    Done(Response),
+    /// Admitted but shed before completion (drain deadline, dead engine).
+    Shed(ShedReason),
+    /// The request's deadline expired before or during decoding.
+    TimedOut { waited_ms: f64 },
+    /// The client cancelled via [`super::batcher::RequestHandle::cancel`].
+    Cancelled,
+    /// The batch kept failing after `attempts` tries; `error` is the last
+    /// engine error rendered with its full context chain.
+    Failed { error: String, attempts: u32 },
+}
+
+impl Outcome {
+    pub fn is_done(&self) -> bool {
+        matches!(self, Outcome::Done(_))
+    }
+
+    /// Unwrap the response, converting every non-success into an error.
+    pub fn response(self) -> Result<Response> {
+        match self {
+            Outcome::Done(r) => Ok(r),
+            other => anyhow::bail!("request did not complete: {other:?}"),
+        }
+    }
+}
+
+/// Exponential backoff with jitter drawn from the server's seeded RNG
+/// discipline, so retry timing is reproducible for a fixed seed.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries per batch after the initial attempt; 0 fails straight away.
+    pub max_retries: u32,
+    /// First backoff; attempt `n` sleeps `base * factor^n` (capped).
+    pub base: Duration,
+    pub factor: f64,
+    pub max: Duration,
+    /// Multiplicative jitter fraction in `[0, 1)`: the sleep is scaled by
+    /// a factor in `[1-jitter, 1+jitter)`.  0 disables jitter entirely.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 2,
+            base: Duration::from_millis(5),
+            factor: 2.0,
+            max: Duration::from_millis(200),
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (0-based).
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self.base.as_secs_f64() * self.factor.powi(attempt.min(30) as i32);
+        let capped = exp.min(self.max.as_secs_f64());
+        let scale = if self.jitter > 0.0 {
+            1.0 + self.jitter * (2.0 * rng.f64() - 1.0)
+        } else {
+            1.0
+        };
+        Duration::from_secs_f64((capped * scale).max(0.0))
+    }
+}
+
+/// Plan provenance surfaced in `ServerStats` — what the budget allocator
+/// recorded in the serving checkpoint's meta (PR-5 artifacts).
+#[derive(Clone, Debug, Default)]
+pub struct PlanTelemetry {
+    pub plan_bits: Option<f64>,
+    pub plan_strategy: Option<String>,
+}
+
+/// The decode surface the daemon drives.  [`Engine`] is the production
+/// implementation; tests inject faulty or gated engines through
+/// `Server::start_custom` to exercise the supervisor.
+pub trait BatchEngine {
+    fn spec(&self) -> &ModelSpec;
+    fn backend_name(&self) -> &'static str;
+    /// One decode step with a per-row temperature (`temperatures.len() ==
+    /// contexts.len()`); returns the next token per row.
+    fn step(&self, contexts: &[Vec<i32>], temperatures: &[f32], rng: &mut Rng) -> Result<Vec<i32>>;
+}
+
+impl BatchEngine for Engine {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        Engine::backend_name(self)
+    }
+
+    fn step(&self, contexts: &[Vec<i32>], temperatures: &[f32], rng: &mut Rng) -> Result<Vec<i32>> {
+        self.step_multi(contexts, temperatures, rng)
+    }
+}
+
+/// Fault-injection wrapper: fails `step` on the given global call indices
+/// (counted across batches and retries).  This is the chaos hook the
+/// regression tests use to prove the daemon survives engine failures.
+pub struct FaultyEngine {
+    inner: Box<dyn BatchEngine>,
+    fail_calls: Vec<usize>,
+    fail_all: bool,
+    calls: std::cell::Cell<usize>,
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Box<dyn BatchEngine>, fail_calls: Vec<usize>) -> FaultyEngine {
+        FaultyEngine { inner, fail_calls, fail_all: false, calls: std::cell::Cell::new(0) }
+    }
+
+    /// An engine whose every step fails — the permanent-outage case.
+    pub fn always_failing(inner: Box<dyn BatchEngine>) -> FaultyEngine {
+        FaultyEngine {
+            inner,
+            fail_calls: Vec::new(),
+            fail_all: true,
+            calls: std::cell::Cell::new(0),
+        }
+    }
+}
+
+impl BatchEngine for FaultyEngine {
+    fn spec(&self) -> &ModelSpec {
+        self.inner.spec()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn step(&self, contexts: &[Vec<i32>], temperatures: &[f32], rng: &mut Rng) -> Result<Vec<i32>> {
+        let n = self.calls.get();
+        self.calls.set(n + 1);
+        if self.fail_all || self.fail_calls.contains(&n) {
+            anyhow::bail!("injected engine fault at step call {n}");
+        }
+        self.inner.step(contexts, temperatures, rng)
+    }
+}
+
+/// Builds engines on the serving thread.  The closure itself must be
+/// `Send` (it crosses into the daemon thread, and again on hot swap); the
+/// engines it produces stay on-thread and need not be.
+pub type EngineFactory = Box<dyn FnMut() -> Result<Box<dyn BatchEngine>> + Send>;
+
+/// Admission-control state shared between client handles and the daemon.
+#[derive(Default)]
+pub(crate) struct Shared {
+    /// Admitted requests not yet pulled into a batch (bounded by queue_cap).
+    pub(crate) waiting: AtomicUsize,
+    /// Set at drain start: the gate rejects everything with `Draining`.
+    pub(crate) draining: AtomicBool,
+    /// Set when the engine restart budget is exhausted; a successful hot
+    /// swap clears it.
+    pub(crate) engine_dead: AtomicBool,
+    /// Requests rejected at the gate (never admitted), for stats.
+    pub(crate) gate_rejections: AtomicUsize,
+}
+
+/// Control-plane messages from the `Server` handle to the daemon thread.
+pub(crate) enum Msg {
+    Req(Request),
+    Swap {
+        factory: EngineFactory,
+        telemetry: PlanTelemetry,
+        ack: mpsc::Sender<std::result::Result<(), String>>,
+    },
+    Stop(mpsc::Sender<ServerStats>),
+}
+
+/// Owns the engine lifecycle: lazy (re)builds after step failures, a capped
+/// restart budget, and atomic factory replacement on hot swap.
+pub(crate) struct Supervisor {
+    factory: EngineFactory,
+    engine: Option<Box<dyn BatchEngine>>,
+    /// Step/build failures since the last successful swap.
+    fails: u32,
+    max_restarts: u32,
+}
+
+impl Supervisor {
+    pub(crate) fn new(factory: EngineFactory, max_restarts: u32) -> Supervisor {
+        Supervisor { factory, engine: None, fails: 0, max_restarts }
+    }
+
+    /// Restart budget exhausted and nothing serving.
+    fn dead(&self) -> bool {
+        self.engine.is_none() && self.fails > self.max_restarts
+    }
+
+    /// True when the next `ensure_built` would be a post-failure rebuild.
+    fn pending_restart(&self) -> bool {
+        self.engine.is_none() && self.fails > 0
+    }
+
+    fn ensure_built(&mut self) -> Result<()> {
+        if self.engine.is_some() {
+            return Ok(());
+        }
+        ensure!(
+            self.fails <= self.max_restarts,
+            "engine restart budget exhausted after {} failure(s)",
+            self.fails
+        );
+        match (self.factory)() {
+            Ok(e) => {
+                self.engine = Some(e);
+                Ok(())
+            }
+            Err(e) => {
+                self.fails += 1;
+                Err(e)
+            }
+        }
+    }
+
+    fn note_step_failure(&mut self) {
+        self.engine = None;
+        self.fails += 1;
+    }
+
+    /// Install a new model: build eagerly so a broken swap leaves the old
+    /// engine serving; success resets the restart budget.
+    fn swap(&mut self, mut factory: EngineFactory) -> Result<()> {
+        let engine = factory()?;
+        self.factory = factory;
+        self.engine = Some(engine);
+        self.fails = 0;
+        Ok(())
+    }
+
+    fn batch_cap(&mut self, cfg: &ServerConfig) -> usize {
+        let b = match self.ensure_built() {
+            Ok(()) => self.engine.as_ref().map(|e| e.spec().batch).unwrap_or(1),
+            Err(_) => 1,
+        };
+        b.min(cfg.inflight_cap).max(1)
+    }
+}
+
+fn finish(req: Request, outcome: Outcome, stats: &mut ServerStats) {
+    match &outcome {
+        Outcome::Done(_) => {}
+        Outcome::Shed(_) => stats.shed += 1,
+        Outcome::TimedOut { .. } => stats.timed_out += 1,
+        Outcome::Cancelled => stats.cancelled += 1,
+        Outcome::Failed { .. } => stats.errored += 1,
+    }
+    let _ = req.reply.send(outcome);
+}
+
+/// One generation slot of an executing batch.
+struct Slot {
+    req: Request,
+    ctx: Vec<i32>,
+    plen: usize,
+}
+
+fn complete_done(s: Slot, started: Instant, bsize: usize, version: usize, stats: &mut ServerStats) {
+    let resp = Response {
+        tokens: s.ctx[s.plen..].to_vec(),
+        queue_ms: started.duration_since(s.req.enqueued).as_secs_f64() * 1e3,
+        total_ms: s.req.enqueued.elapsed().as_secs_f64() * 1e3,
+        batch_size: bsize,
+        model_version: version,
+    };
+    stats.queue_ms.push(resp.queue_ms);
+    stats.total_ms.push(resp.total_ms);
+    stats.requests += 1;
+    stats.tokens_generated += resp.tokens.len();
+    let _ = s.req.reply.send(Outcome::Done(resp));
+}
+
+enum BatchRun {
+    Done,
+    /// The engine failed mid-batch; surviving requests come back for retry.
+    Failed { requests: Vec<Request>, error: anyhow::Error },
+}
+
+/// Decode one batch to completion.  Rows carry their own temperature, and
+/// expired/cancelled rows are pruned before and between decode steps (a
+/// retried batch restarts generation from the prompt — tokens only count
+/// at completion, so retries never double-count).
+fn run_batch(
+    engine: &dyn BatchEngine,
+    requests: Vec<Request>,
+    rng: &mut Rng,
+    stats: &mut ServerStats,
+    version: usize,
+) -> BatchRun {
+    let started = Instant::now();
+    let mut slots: Vec<Slot> = Vec::with_capacity(requests.len());
+    for req in requests {
+        if req.cancel.load(Ordering::Acquire) {
+            finish(req, Outcome::Cancelled, stats);
+        } else if req.deadline.is_some_and(|d| started >= d) {
+            let waited = started.duration_since(req.enqueued).as_secs_f64() * 1e3;
+            finish(req, Outcome::TimedOut { waited_ms: waited }, stats);
+        } else {
+            let ctx = req.prompt.clone();
+            slots.push(Slot { plen: ctx.len(), ctx, req });
+        }
+    }
+    // zero-token requests complete immediately without a decode step
+    let mut i = 0;
+    while i < slots.len() {
+        if slots[i].req.max_new_tokens == 0 {
+            let s = slots.remove(i);
+            complete_done(s, started, 1, version, stats);
+        } else {
+            i += 1;
+        }
+    }
+    if slots.is_empty() {
+        return BatchRun::Done;
+    }
+    let bsize = slots.len();
+    stats.batches += 1;
+    let max_new = slots.iter().map(|s| s.req.max_new_tokens).max().unwrap_or(0);
+    for _ in 0..max_new {
+        // prune rows that expired or were cancelled since the last step
+        let now = Instant::now();
+        let mut i = 0;
+        while i < slots.len() {
+            let gone = if slots[i].req.cancel.load(Ordering::Acquire) {
+                Some(Outcome::Cancelled)
+            } else if slots[i].req.deadline.is_some_and(|d| now >= d) {
+                let waited = now.duration_since(slots[i].req.enqueued).as_secs_f64() * 1e3;
+                Some(Outcome::TimedOut { waited_ms: waited })
+            } else {
+                None
+            };
+            match gone {
+                Some(out) => {
+                    let s = slots.remove(i);
+                    finish(s.req, out, stats);
+                }
+                None => i += 1,
+            }
+        }
+        if slots.is_empty() {
+            break;
+        }
+        let ctxs: Vec<Vec<i32>> = slots.iter().map(|s| s.ctx.clone()).collect();
+        let temps: Vec<f32> = slots.iter().map(|s| s.req.temperature).collect();
+        let next = match engine.step(&ctxs, &temps, rng) {
+            Ok(n) => n,
+            Err(error) => {
+                let requests = slots.into_iter().map(|s| s.req).collect();
+                return BatchRun::Failed { requests, error };
+            }
+        };
+        // append tokens; rows that reached their own budget complete now
+        let mut i = 0;
+        for t in next {
+            slots[i].ctx.push(t);
+            if slots[i].ctx.len() - slots[i].plen >= slots[i].req.max_new_tokens {
+                let s = slots.remove(i);
+                complete_done(s, started, bsize, version, stats);
+            } else {
+                i += 1;
+            }
+        }
+        if slots.is_empty() {
+            break;
+        }
+    }
+    // zero-token requests (max_new_tokens == 0) land here
+    for s in slots {
+        complete_done(s, started, bsize, version, stats);
+    }
+    BatchRun::Done
+}
+
+/// Run one batch under the supervisor: retry with backoff on engine
+/// failures, rebuilding the engine between attempts; exhausted budgets
+/// produce typed failures instead of killing the daemon.
+#[allow(clippy::too_many_arguments)]
+fn execute(
+    sup: &mut Supervisor,
+    batch: Vec<Request>,
+    cfg: &ServerConfig,
+    rng: &mut Rng,
+    backoff_rng: &mut Rng,
+    stats: &mut ServerStats,
+    shared: &Shared,
+    version: usize,
+) {
+    let mut requests = batch;
+    let mut attempts: u32 = 0;
+    loop {
+        let restarting = sup.pending_restart();
+        if let Err(e) = sup.ensure_built() {
+            if sup.dead() {
+                shared.engine_dead.store(true, Ordering::Release);
+                for r in requests {
+                    finish(r, Outcome::Shed(ShedReason::EngineDead), stats);
+                }
+                return;
+            }
+            attempts += 1;
+            if attempts > cfg.retry.max_retries {
+                let error = format!("{e:#}");
+                for r in requests {
+                    finish(r, Outcome::Failed { error: error.clone(), attempts }, stats);
+                }
+                return;
+            }
+            stats.retries += 1;
+            std::thread::sleep(cfg.retry.backoff(attempts - 1, backoff_rng));
+            continue;
+        }
+        if restarting {
+            stats.engine_restarts += 1;
+        }
+        let engine = sup.engine.as_deref().expect("ensure_built succeeded");
+        match run_batch(engine, requests, rng, stats, version) {
+            BatchRun::Done => return,
+            BatchRun::Failed { requests: back, error } => {
+                sup.note_step_failure();
+                attempts += 1;
+                if attempts > cfg.retry.max_retries {
+                    let error = format!("{error:#}");
+                    for r in back {
+                        finish(r, Outcome::Failed { error: error.clone(), attempts }, stats);
+                    }
+                    return;
+                }
+                stats.retries += 1;
+                std::thread::sleep(cfg.retry.backoff(attempts - 1, backoff_rng));
+                requests = back;
+            }
+        }
+    }
+}
+
+enum Flow {
+    Cont,
+    Stop(mpsc::Sender<ServerStats>),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_msg(
+    msg: Msg,
+    sup: &mut Supervisor,
+    stats: &mut ServerStats,
+    queue: &mut VecDeque<Request>,
+    shared: &Shared,
+    version: &mut usize,
+) -> Flow {
+    match msg {
+        Msg::Req(r) => {
+            stats.admitted += 1;
+            queue.push_back(r);
+            Flow::Cont
+        }
+        Msg::Swap { factory, telemetry, ack } => {
+            match sup.swap(factory) {
+                Ok(()) => {
+                    *version += 1;
+                    stats.swaps += 1;
+                    stats.plan_bits = telemetry.plan_bits;
+                    stats.plan_strategy = telemetry.plan_strategy;
+                    // a working swap revives a daemon whose engine died
+                    shared.engine_dead.store(false, Ordering::Release);
+                    let _ = ack.send(Ok(()));
+                }
+                Err(e) => {
+                    let _ = ack.send(Err(format!("{e:#}")));
+                }
+            }
+            Flow::Cont
+        }
+        Msg::Stop(ack) => Flow::Stop(ack),
+    }
+}
+
+fn pop_batch(
+    queue: &mut VecDeque<Request>,
+    shared: &Shared,
+    cap: usize,
+) -> Vec<Request> {
+    let take = queue.len().min(cap);
+    let mut batch = Vec::with_capacity(take);
+    for _ in 0..take {
+        let r = queue.pop_front().expect("len checked");
+        shared.waiting.fetch_sub(1, Ordering::AcqRel);
+        batch.push(r);
+    }
+    batch
+}
+
+/// Graceful drain: stop admitting, finish queued work within the drain
+/// deadline (per-request deadlines clamped to it), shed the rest, and
+/// report fully-accounted stats to the stopper.
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    sup: &mut Supervisor,
+    cfg: &ServerConfig,
+    queue: &mut VecDeque<Request>,
+    rx: &mpsc::Receiver<Msg>,
+    rng: &mut Rng,
+    backoff_rng: &mut Rng,
+    stats: &mut ServerStats,
+    shared: &Shared,
+    version: usize,
+    t0: Instant,
+    ack: mpsc::Sender<ServerStats>,
+) {
+    shared.draining.store(true, Ordering::Release);
+    let mut late_acks: Vec<mpsc::Sender<ServerStats>> = Vec::new();
+    // absorb the channel backlog that beat the draining flag
+    while let Ok(msg) = rx.try_recv() {
+        match msg {
+            Msg::Req(r) => {
+                stats.admitted += 1;
+                queue.push_back(r);
+            }
+            Msg::Swap { ack, .. } => {
+                let _ = ack.send(Err("server is draining".into()));
+            }
+            Msg::Stop(a) => late_acks.push(a),
+        }
+    }
+    let drain_deadline = Instant::now() + cfg.drain;
+    // every remaining request must finish by the drain deadline
+    for r in queue.iter_mut() {
+        r.deadline = Some(match r.deadline {
+            Some(d) => d.min(drain_deadline),
+            None => drain_deadline,
+        });
+    }
+    while !queue.is_empty() && Instant::now() < drain_deadline {
+        let cap = sup.batch_cap(cfg);
+        let batch = pop_batch(queue, shared, cap);
+        execute(sup, batch, cfg, rng, backoff_rng, stats, shared, version);
+    }
+    while let Some(r) = queue.pop_front() {
+        shared.waiting.fetch_sub(1, Ordering::AcqRel);
+        finish(r, Outcome::Shed(ShedReason::Draining), stats);
+    }
+    // a submit may have raced past the gate after the backlog sweep
+    while let Ok(msg) = rx.try_recv() {
+        match msg {
+            Msg::Req(r) => {
+                stats.admitted += 1;
+                shared.waiting.fetch_sub(1, Ordering::AcqRel);
+                finish(r, Outcome::Shed(ShedReason::Draining), stats);
+            }
+            Msg::Swap { ack, .. } => {
+                let _ = ack.send(Err("server is draining".into()));
+            }
+            Msg::Stop(a) => late_acks.push(a),
+        }
+    }
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    stats.rejected_at_gate = shared.gate_rejections.load(Ordering::Acquire);
+    for a in late_acks {
+        let _ = a.send(stats.clone());
+    }
+    let _ = ack.send(stats.clone());
+}
+
+/// The daemon thread body.  Never exits on an engine error: it either
+/// serves, degrades to typed failures, or drains and reports.
+pub(crate) fn daemon_loop(
+    mut sup: Supervisor,
+    cfg: ServerConfig,
+    telemetry: PlanTelemetry,
+    rx: mpsc::Receiver<Msg>,
+    shared: Arc<Shared>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut backoff_rng = Rng::new(cfg.seed ^ 0xb0ff_5eed);
+    let mut stats = ServerStats {
+        plan_bits: telemetry.plan_bits,
+        plan_strategy: telemetry.plan_strategy,
+        ..ServerStats::default()
+    };
+    let t0 = Instant::now();
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut version = 0usize;
+
+    loop {
+        // block until there is work (or a control message)
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(msg) => {
+                    if let Flow::Stop(ack) = handle_msg(
+                        msg, &mut sup, &mut stats, &mut queue, &shared, &mut version,
+                    ) {
+                        drain(
+                            &mut sup, &cfg, &mut queue, &rx, &mut rng, &mut backoff_rng,
+                            &mut stats, &shared, version, t0, ack,
+                        );
+                        return;
+                    }
+                }
+                Err(_) => {
+                    // every Server handle dropped without stop(): shed what
+                    // is queued so no reply channel dangles, then exit
+                    shared.draining.store(true, Ordering::Release);
+                    while let Some(r) = queue.pop_front() {
+                        shared.waiting.fetch_sub(1, Ordering::AcqRel);
+                        finish(r, Outcome::Shed(ShedReason::Draining), &mut stats);
+                    }
+                    return;
+                }
+            }
+            continue;
+        }
+        // fill the batch within the wait window
+        let wait_deadline = Instant::now() + cfg.max_wait;
+        let cap = sup.batch_cap(&cfg);
+        while queue.len() < cap {
+            let now = Instant::now();
+            if now >= wait_deadline {
+                break;
+            }
+            match rx.recv_timeout(wait_deadline - now) {
+                Ok(msg) => {
+                    if let Flow::Stop(ack) = handle_msg(
+                        msg, &mut sup, &mut stats, &mut queue, &shared, &mut version,
+                    ) {
+                        drain(
+                            &mut sup, &cfg, &mut queue, &rx, &mut rng, &mut backoff_rng,
+                            &mut stats, &shared, version, t0, ack,
+                        );
+                        return;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let batch = pop_batch(&mut queue, &shared, cap);
+        execute(
+            &mut sup, batch, &cfg, &mut rng, &mut backoff_rng, &mut stats, &shared, version,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_and_deterministic() {
+        let p = RetryPolicy {
+            max_retries: 5,
+            base: Duration::from_millis(10),
+            factor: 2.0,
+            max: Duration::from_millis(50),
+            jitter: 0.5,
+        };
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for attempt in 0..6 {
+            let da = p.backoff(attempt, &mut a);
+            let db = p.backoff(attempt, &mut b);
+            assert_eq!(da, db, "same seed, same jitter");
+            // cap (50ms) times max jitter factor (1.5)
+            assert!(da <= Duration::from_millis(75), "attempt {attempt}: {da:?}");
+        }
+        // jitter 0: exact exponential, capped
+        let p0 = RetryPolicy { jitter: 0.0, ..p };
+        let mut r = Rng::new(0);
+        assert_eq!(p0.backoff(0, &mut r), Duration::from_millis(10));
+        assert_eq!(p0.backoff(1, &mut r), Duration::from_millis(20));
+        assert_eq!(p0.backoff(4, &mut r), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn supervisor_caps_restarts_and_swap_resets() {
+        // a factory that always fails to build
+        let factory: EngineFactory = Box::new(|| anyhow::bail!("no engine"));
+        let mut sup = Supervisor::new(factory, 1);
+        assert!(sup.ensure_built().is_err()); // fails = 1
+        assert!(!sup.dead());
+        assert!(sup.ensure_built().is_err()); // fails = 2 > max_restarts
+        assert!(sup.dead());
+        // budget exhausted: ensure_built refuses without calling the factory
+        assert!(sup.ensure_built().is_err());
+        // a swap with a working factory revives it
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = crate::model::init::init_params(&spec, &mut Rng::new(3));
+        let good: EngineFactory = Box::new(move || {
+            Ok(Box::new(Engine::new_native(spec.clone(), params.clone())?) as Box<dyn BatchEngine>)
+        });
+        sup.swap(good).unwrap();
+        assert!(!sup.dead());
+        assert!(sup.ensure_built().is_ok());
+    }
+
+    #[test]
+    fn outcome_response_unwraps_only_done() {
+        let r = Response {
+            tokens: vec![1, 2],
+            queue_ms: 0.5,
+            total_ms: 1.0,
+            batch_size: 1,
+            model_version: 0,
+        };
+        assert_eq!(Outcome::Done(r).response().unwrap().tokens, vec![1, 2]);
+        assert!(Outcome::Cancelled.response().is_err());
+        assert!(Outcome::Shed(ShedReason::QueueFull).response().is_err());
+        assert!(Outcome::TimedOut { waited_ms: 3.0 }.response().is_err());
+        let f = Outcome::Failed { error: "x".into(), attempts: 2 };
+        assert!(!f.is_done());
+        assert!(f.response().is_err());
+    }
+
+    #[test]
+    fn shed_reason_names() {
+        assert_eq!(ShedReason::QueueFull.name(), "queue_full");
+        assert_eq!(
+            SubmitError::Rejected(ShedReason::Draining).to_string(),
+            "request rejected: draining"
+        );
+        assert_eq!(SubmitError::Dead.to_string(), "serve daemon is dead");
+    }
+}

@@ -69,8 +69,24 @@ impl Engine {
     /// One decode step for up to `batch` contexts; returns the next token
     /// per slot.  `temperature <= 0` = greedy.
     pub fn step(&self, contexts: &[Vec<i32>], temperature: f32, rng: &mut Rng) -> Result<Vec<i32>> {
+        let temps = vec![temperature; contexts.len()];
+        self.step_multi(contexts, &temps, rng)
+    }
+
+    /// One decode step with a per-row temperature — a mixed batch can hold
+    /// greedy and sampled requests side by side without one request's
+    /// sampling settings leaking onto its batch-mates.  Greedy rows consume
+    /// no RNG draws, so a greedy row's token stream is independent of who
+    /// it shares a batch with.
+    pub fn step_multi(
+        &self,
+        contexts: &[Vec<i32>],
+        temperatures: &[f32],
+        rng: &mut Rng,
+    ) -> Result<Vec<i32>> {
         let b = self.spec.batch;
         ensure!(!contexts.is_empty() && contexts.len() <= b, "bad batch size");
+        ensure!(temperatures.len() == contexts.len(), "one temperature per context required");
         let mut tokens = Vec::with_capacity(b * self.spec.seq);
         for i in 0..b {
             let ctx = &contexts[i.min(contexts.len() - 1)];
@@ -88,6 +104,7 @@ impl Engine {
         let mut next = Vec::with_capacity(contexts.len());
         for i in 0..contexts.len() {
             let row = &logits.data()[i * v..(i + 1) * v];
+            let temperature = temperatures[i];
             let tok = if temperature <= 0.0 {
                 let mut best = 0;
                 for j in 1..v {
@@ -169,6 +186,23 @@ mod tests {
         let out = engine.generate(&[vec![1, 2]], 10, 0.8, &mut Rng::new(5)).unwrap();
         assert_eq!(out[0].len(), 12);
         assert!(out[0].iter().all(|&t| (0..engine.spec.vocab as i32).contains(&t)));
+    }
+
+    #[test]
+    fn step_multi_isolates_greedy_rows_from_sampled_neighbors() {
+        // a greedy row must produce the same token whether its batch-mate
+        // samples or not — per-row temperature, and greedy rows consume no
+        // RNG state
+        let engine = native_engine("micro", 9);
+        let greedy_ctx = vec![vec![1i32, 2, 3]];
+        let solo = engine.step_multi(&greedy_ctx, &[0.0], &mut Rng::new(1)).unwrap();
+        let mixed_ctx = vec![vec![1i32, 2, 3], vec![5i32, 6]];
+        let mixed = engine.step_multi(&mixed_ctx, &[0.0, 1.2], &mut Rng::new(1)).unwrap();
+        assert_eq!(mixed[0], solo[0]);
+        let v = engine.spec.vocab as i32;
+        assert!((0..v).contains(&mixed[1]));
+        // temperature-count mismatch is a typed error, not a panic
+        assert!(engine.step_multi(&mixed_ctx, &[0.0], &mut Rng::new(1)).is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Serving runtime: batched generation over the quantized model.
+//! Serving runtime: a supervised daemon over batched generation.
 //!
 //! The paper's claim "QERA introduces no inference overhead — LQER,
 //! QERA-approx and QERA-exact all serve as `y = x(W~ + A_k B_k)`" is made
@@ -7,9 +7,28 @@
 //! native fused path that evaluates `y = x·W_q + (x·A)·B` straight from
 //! packed blocks ([`crate::runtime::ExecBackend`]) — and the latency bench
 //! (`benches/hotpath.rs`) measures dense vs low-rank forward forms.
+//!
+//! Layering:
+//!
+//! * [`engine`] — one decode step / batched generation, per-row
+//!   temperatures ([`Engine::step_multi`]).
+//! * [`daemon`] — the supervision layer: typed request [`Outcome`]s,
+//!   retry-with-backoff ([`RetryPolicy`]), capped engine restarts, graceful
+//!   drain, hot model swap, and the [`FaultyEngine`] chaos wrapper the
+//!   fault-injection tests use.
+//! * [`batcher`] — the client-facing [`Server`]: bounded admission gate
+//!   ([`Server::submit`] returns `Result`), per-request deadlines and
+//!   cancellation via [`RequestHandle`], [`Server::swap_model`], and
+//!   fully-accounted [`ServerStats`].
 
-pub mod engine;
 pub mod batcher;
+pub mod daemon;
+pub mod engine;
 
-pub use batcher::{ServeModel, Server, ServerConfig, ServerStats};
+pub use batcher::{
+    RequestHandle, RequestOpts, ServeModel, Server, ServerConfig, ServerStats,
+};
+pub use daemon::{
+    BatchEngine, FaultyEngine, Outcome, PlanTelemetry, RetryPolicy, ShedReason, SubmitError,
+};
 pub use engine::Engine;

@@ -485,11 +485,15 @@ fn serving_consistency_with_direct_eval() {
         },
     );
     for (i, p) in prompts.iter().enumerate() {
-        let rx = server.submit(p.clone(), 6, 0.0);
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        let h = server.submit(p.clone(), 6, 0.0).unwrap();
+        let resp = h
+            .wait_timeout(std::time::Duration::from_secs(120))
+            .expect("terminal outcome")
+            .response()
+            .unwrap();
         assert_eq!(resp.tokens, direct[i][p.len()..].to_vec(), "prompt {i}");
     }
-    server.stop();
+    server.stop().unwrap();
 }
 
 #[test]
@@ -517,6 +521,412 @@ fn lora_init_respects_method_semantics() {
     )
     .unwrap();
     assert!(err_e < err_q, "qera init {err_e} !< qlora init {err_q}");
+}
+
+// ---------------------------------------------------------------- daemon
+
+/// Test engine whose `step` signals `started` then blocks until the test
+/// feeds a token through `gate` — the deterministic handle the admission /
+/// drain tests use to freeze the daemon at a known point.
+struct GatedEngine {
+    inner: qera::serve::Engine,
+    started: std::sync::mpsc::Sender<()>,
+    gate: std::sync::Arc<std::sync::Mutex<std::sync::mpsc::Receiver<()>>>,
+}
+
+impl qera::serve::BatchEngine for GatedEngine {
+    fn spec(&self) -> &ModelSpec {
+        &self.inner.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn step(
+        &self,
+        contexts: &[Vec<i32>],
+        temperatures: &[f32],
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<i32>> {
+        let _ = self.started.send(());
+        let _ = self.gate.lock().unwrap().recv();
+        self.inner.step_multi(contexts, temperatures, rng)
+    }
+}
+
+/// A gated-engine server plus the test-side handles: `started` fires once
+/// per decode step, `gate` releases one blocked step per token sent.
+#[allow(clippy::type_complexity)]
+fn gated_server(
+    cfg: qera::serve::ServerConfig,
+) -> (qera::serve::Server, std::sync::mpsc::Receiver<()>, std::sync::mpsc::Sender<()>) {
+    let spec = ModelSpec::builtin("micro").unwrap();
+    let params = init_params(&spec, &mut Rng::new(40));
+    let (started_tx, started_rx) = std::sync::mpsc::channel();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+    let gate = std::sync::Arc::new(std::sync::Mutex::new(gate_rx));
+    let server = qera::serve::Server::start_custom(cfg, move || {
+        let inner = qera::serve::Engine::new_native(spec.clone(), params.clone())?;
+        Ok(Box::new(GatedEngine {
+            inner,
+            started: started_tx.clone(),
+            gate: gate.clone(),
+        }) as Box<dyn qera::serve::BatchEngine>)
+    });
+    (server, started_rx, gate_tx)
+}
+
+#[test]
+fn daemon_survives_engine_step_fault() {
+    // regression for the silent-loss bug: an engine-step error used to kill
+    // the serve loop and drop every queued reply channel.  Inject a fault on
+    // the first step: the supervisor must rebuild the engine, retry the
+    // batch, and complete every request — no client hangs, nothing is lost.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let spec = ModelSpec::builtin("micro").unwrap();
+    let params = init_params(&spec, &mut Rng::new(31));
+    let builds = std::sync::Arc::new(AtomicUsize::new(0));
+    let b = builds.clone();
+    let cfg = qera::serve::ServerConfig {
+        max_wait: std::time::Duration::from_millis(30),
+        retry: qera::serve::RetryPolicy {
+            base: std::time::Duration::from_millis(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = qera::serve::Server::start_custom(cfg, move || {
+        let n = b.fetch_add(1, Ordering::SeqCst);
+        let engine = qera::serve::Engine::new_native(spec.clone(), params.clone())?;
+        Ok(if n == 0 {
+            // first engine dies on its first step; rebuilds are clean
+            Box::new(qera::serve::FaultyEngine::new(Box::new(engine), vec![0]))
+                as Box<dyn qera::serve::BatchEngine>
+        } else {
+            Box::new(engine)
+        })
+    });
+    let handles: Vec<_> =
+        (0..3i32).map(|i| server.submit(vec![i + 1, 2], 4, 0.0).unwrap()).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h
+            .wait_timeout(std::time::Duration::from_secs(120))
+            .expect("no client may hang on an engine fault")
+            .response()
+            .unwrap_or_else(|e| panic!("request {i} not completed: {e}"));
+        assert_eq!(resp.tokens.len(), 4, "request {i}");
+    }
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.accounted(), stats.admitted);
+    assert!(stats.retries >= 1, "fault must surface as a retry");
+    assert!(stats.engine_restarts >= 1, "supervisor must rebuild the engine");
+    assert!(builds.load(Ordering::SeqCst) >= 2);
+}
+
+#[test]
+fn permanent_engine_outage_degrades_to_typed_failures_and_swap_revives() {
+    // every step fails: retries exhaust into Outcome::Failed, the restart
+    // budget exhausts into EngineDead shedding + gate rejection — and a hot
+    // swap to a working engine resurrects the daemon.
+    let spec = ModelSpec::builtin("micro").unwrap();
+    let params = init_params(&spec, &mut Rng::new(32));
+    let (spec_f, params_f) = (spec.clone(), params.clone());
+    let cfg = qera::serve::ServerConfig {
+        max_wait: std::time::Duration::from_millis(5),
+        retry: qera::serve::RetryPolicy {
+            max_retries: 1,
+            base: std::time::Duration::from_millis(1),
+            ..Default::default()
+        },
+        max_restarts: 1,
+        ..Default::default()
+    };
+    let server = qera::serve::Server::start_custom(cfg, move || {
+        let engine = qera::serve::Engine::new_native(spec_f.clone(), params_f.clone())?;
+        Ok(Box::new(qera::serve::FaultyEngine::always_failing(Box::new(engine)))
+            as Box<dyn qera::serve::BatchEngine>)
+    });
+    // first request: typed failure after 1 + max_retries attempts
+    let h1 = server.submit(vec![1, 2], 3, 0.0).unwrap();
+    match h1.wait_timeout(std::time::Duration::from_secs(120)).expect("terminal outcome") {
+        qera::serve::Outcome::Failed { error, attempts } => {
+            assert_eq!(attempts, 2);
+            assert!(error.contains("injected engine fault"), "{error}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    // second request: the restart budget is spent -> shed as EngineDead
+    let h2 = server.submit(vec![3, 4], 3, 0.0).unwrap();
+    match h2.wait_timeout(std::time::Duration::from_secs(120)).expect("terminal outcome") {
+        qera::serve::Outcome::Shed(qera::serve::ShedReason::EngineDead) => {}
+        other => panic!("expected Shed(EngineDead), got {other:?}"),
+    }
+    // gate now rejects synchronously: the dead daemon is observable
+    match server.submit(vec![5, 6], 3, 0.0) {
+        Err(qera::serve::SubmitError::Rejected(qera::serve::ShedReason::EngineDead)) => {}
+        other => panic!("expected EngineDead rejection, got {other:?}"),
+    }
+    // hot swap to a working engine revives serving
+    let (spec_g, params_g) = (spec.clone(), params.clone());
+    server
+        .swap_factory(
+            move || {
+                Ok(Box::new(qera::serve::Engine::new_native(
+                    spec_g.clone(),
+                    params_g.clone(),
+                )?) as Box<dyn qera::serve::BatchEngine>)
+            },
+            qera::serve::PlanTelemetry::default(),
+        )
+        .unwrap();
+    let h4 = server.submit(vec![7, 8], 3, 0.0).unwrap();
+    let resp = h4
+        .wait_timeout(std::time::Duration::from_secs(120))
+        .expect("terminal outcome")
+        .response()
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 3);
+    assert_eq!(resp.model_version, 1);
+
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.admitted, 3); // h1, h2, h4 (h3 was gate-rejected)
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.errored, 1);
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.rejected_at_gate, 1);
+    assert_eq!(stats.swaps, 1);
+    assert!(stats.engine_restarts >= 1);
+    assert_eq!(stats.accounted(), stats.admitted, "every admitted request accounted");
+}
+
+#[test]
+fn hot_swap_to_budget_plan_under_load() {
+    // ISSUE acceptance: swap a BudgetPlan checkpoint in under concurrent
+    // load — zero dropped in-flight requests, and post-swap ServerStats
+    // surface the new plan's telemetry.
+    let spec = ModelSpec::builtin("micro").unwrap();
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(33)));
+
+    // model A: plain w-only quant (no plan telemetry)
+    let qa = quantize(
+        &ckpt,
+        &PipelineConfig::new(Method::WOnly, QFormat::Mxint { bits: 4, block: 32 }, 0),
+        None,
+    )
+    .unwrap();
+    // model B: greedy BudgetPlan execution (carries plan_bits/plan_strategy)
+    let calib = CalibResult::synthetic(&spec, 64, 34);
+    let base = PipelineConfig::new(Method::QeraApprox, QFormat::Mxint { bits: 4, block: 32 }, 4);
+    let prof = profile(&ckpt, &calib, &base, &CandidateGrid::default_ptq()).unwrap();
+    let plan = allocate(&prof, 4.0, AllocStrategy::Greedy).unwrap();
+    let planned_bits = plan.achieved_bits;
+    let qb = quantize(&ckpt, &base.with_plan(plan), Some(&calib)).unwrap();
+    let (meta_bits, meta_strategy) = qb.ckpt.plan_telemetry();
+    assert_eq!(meta_strategy.as_deref(), Some("greedy"));
+    assert!(meta_bits.is_some());
+
+    let server = qera::serve::Server::start_model(
+        PathBuf::from("/nonexistent-artifacts"),
+        spec.clone(),
+        qera::serve::ServeModel::Quant(Box::new(qa.ckpt)),
+        qera::serve::ServerConfig {
+            max_wait: std::time::Duration::from_millis(20),
+            backend: qera::runtime::ExecBackend::Native,
+            ..Default::default()
+        },
+    );
+    let wait = |h: Result<qera::serve::RequestHandle, qera::serve::SubmitError>| {
+        h.unwrap()
+            .wait_timeout(std::time::Duration::from_secs(120))
+            .expect("terminal outcome")
+            .response()
+            .expect("completed")
+    };
+    // wave 1 on the old model
+    let w1: Vec<_> = (0..2i32).map(|i| server.submit(vec![i + 1, 2], 3, 0.0)).collect();
+    for h in w1 {
+        assert_eq!(wait(h).model_version, 0);
+    }
+    // wave 2 in flight while the swap lands: whichever engine serves it,
+    // every request completes — zero dropped
+    let w2: Vec<_> = (0..2i32).map(|i| server.submit(vec![i + 3, 1], 3, 0.0)).collect();
+    server
+        .swap_model(spec.clone(), qera::serve::ServeModel::Quant(Box::new(qb.ckpt)))
+        .unwrap();
+    for h in w2 {
+        assert_eq!(wait(h).tokens.len(), 3);
+    }
+    // wave 3 decodes on the new model
+    let w3: Vec<_> = (0..2i32).map(|i| server.submit(vec![i + 5, 3], 3, 0.0)).collect();
+    for h in w3 {
+        assert_eq!(wait(h).model_version, 1);
+    }
+
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.requests, 6, "zero dropped requests across the swap");
+    assert_eq!(stats.shed + stats.timed_out + stats.cancelled + stats.errored, 0);
+    assert_eq!(stats.swaps, 1);
+    assert_eq!(stats.plan_strategy.as_deref(), Some("greedy"));
+    let bits = stats.plan_bits.expect("plan bits surfaced in telemetry");
+    assert!((bits - planned_bits).abs() < 1e-9);
+    assert_eq!(stats.accounted(), stats.admitted);
+}
+
+#[test]
+fn bounded_queue_rejects_deterministically() {
+    // seed-free determinism by construction: the gate counts waiting
+    // requests, and the gated engine freezes the daemon mid-batch so the
+    // queue depth at each submit is exact, not racy.
+    let (server, started, gate) = gated_server(qera::serve::ServerConfig {
+        max_wait: std::time::Duration::from_millis(0),
+        queue_cap: 2,
+        inflight_cap: 1,
+        ..Default::default()
+    });
+    // A is popped into a batch (leaves the queue), then blocks in step
+    let ha = server.submit(vec![1, 2], 1, 0.0).unwrap();
+    started.recv().unwrap();
+    // B and C fill the queue to its cap
+    let hb = server.submit(vec![3, 4], 1, 0.0).unwrap();
+    let hc = server.submit(vec![5, 6], 1, 0.0).unwrap();
+    // D must be rejected synchronously
+    match server.submit(vec![7, 8], 1, 0.0) {
+        Err(qera::serve::SubmitError::Rejected(qera::serve::ShedReason::QueueFull)) => {}
+        other => panic!("expected QueueFull rejection, got {other:?}"),
+    }
+    // release one step per request; all three admitted requests complete
+    for _ in 0..3 {
+        gate.send(()).unwrap();
+    }
+    for h in [ha, hb, hc] {
+        h.wait_timeout(std::time::Duration::from_secs(120))
+            .expect("terminal outcome")
+            .response()
+            .unwrap();
+    }
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.rejected_at_gate, 1);
+    assert_eq!(stats.accounted(), stats.admitted);
+}
+
+#[test]
+fn drain_sheds_queued_work_past_the_deadline() {
+    // shutdown ordering, zero drain budget: the in-flight batch completes,
+    // everything still queued when the drain deadline passes is shed with a
+    // typed Draining outcome, and the stats account for every admitted
+    // request — nothing is silently dropped.
+    let (mut server, started, gate) = gated_server(qera::serve::ServerConfig {
+        max_wait: std::time::Duration::from_millis(0),
+        drain: std::time::Duration::from_millis(0),
+        ..Default::default()
+    });
+    let ha = server.submit(vec![1, 2], 1, 0.0).unwrap();
+    started.recv().unwrap(); // A is mid-batch, daemon frozen on the gate
+    server.begin_stop(); // Stop is now queued ahead of anything later
+    // B and C still pass the admission gate (the draining flag is only set
+    // once the daemon reaches the Stop message) and land in the channel
+    // behind it — the drain's backlog sweep is what must account for them
+    let hb = server.submit(vec![3, 4], 1, 0.0).unwrap();
+    let hc = server.submit(vec![5, 6], 1, 0.0).unwrap();
+    gate.send(()).unwrap(); // release A
+    let a = ha
+        .wait_timeout(std::time::Duration::from_secs(120))
+        .expect("terminal outcome")
+        .response()
+        .unwrap();
+    assert_eq!(a.tokens.len(), 1, "in-flight work survives the drain");
+    for (name, h) in [("B", hb), ("C", hc)] {
+        match h.wait_timeout(std::time::Duration::from_secs(120)).expect("terminal outcome") {
+            qera::serve::Outcome::Shed(qera::serve::ShedReason::Draining) => {}
+            other => panic!("expected {name} shed as Draining, got {other:?}"),
+        }
+    }
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.shed, 2);
+    assert_eq!(stats.accounted(), stats.admitted, "counts sum to submissions");
+}
+
+#[test]
+fn drain_completes_backlog_and_rejects_late_submissions() {
+    // shutdown ordering with a generous drain budget: work queued ahead of
+    // the stop is finished, and once the daemon is draining, new
+    // submissions are rejected synchronously at the gate.
+    let (mut server, started, gate) = gated_server(qera::serve::ServerConfig {
+        max_wait: std::time::Duration::from_millis(0),
+        inflight_cap: 1,
+        drain: std::time::Duration::from_secs(30),
+        ..Default::default()
+    });
+    let ha = server.submit(vec![1, 2], 1, 0.0).unwrap();
+    started.recv().unwrap(); // A mid-batch, daemon frozen
+    let hb = server.submit(vec![3, 4], 1, 0.0).unwrap(); // queued ahead of stop
+    server.begin_stop();
+    gate.send(()).unwrap(); // release A
+    started.recv().unwrap(); // B's batch began (inflight_cap=1 keeps it solo)
+    gate.send(()).unwrap(); // release B
+    for (name, h) in [("A", ha), ("B", hb)] {
+        let resp = h
+            .wait_timeout(std::time::Duration::from_secs(120))
+            .expect("terminal outcome")
+            .response()
+            .unwrap_or_else(|e| panic!("{name} must complete before shutdown: {e}"));
+        assert_eq!(resp.tokens.len(), 1, "{name}");
+    }
+    // the daemon now reaches the Stop message and flips the draining flag;
+    // from that point submissions are rejected at the gate
+    while !server.is_draining() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    match server.submit(vec![5, 6], 1, 0.0) {
+        Err(qera::serve::SubmitError::Rejected(qera::serve::ShedReason::Draining)) => {}
+        other => panic!("expected Draining rejection, got {other:?}"),
+    }
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.admitted, 2);
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.rejected_at_gate, 1);
+    assert_eq!(stats.accounted(), stats.admitted, "counts sum to submissions");
+}
+
+#[test]
+fn stub_backend_shutdown_accounting() {
+    // satellite: shutdown accounting must hold on the artifact/stub backend
+    // too, not just native
+    let Some(reg) = registry() else {
+        return;
+    };
+    let spec = reg.spec("nano").unwrap().clone();
+    let params = init_params(&spec, &mut Rng::new(41));
+    let server = qera::serve::Server::start(
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        spec,
+        params,
+        qera::serve::ServerConfig {
+            max_wait: std::time::Duration::from_millis(10),
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> =
+        (0..4i32).map(|i| server.submit(vec![i + 1, 3], 4, 0.0).unwrap()).collect();
+    for h in handles {
+        h.wait_timeout(std::time::Duration::from_secs(120))
+            .expect("terminal outcome")
+            .response()
+            .unwrap();
+    }
+    let stats = server.stop().unwrap();
+    assert_eq!(stats.admitted, 4);
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.accounted(), stats.admitted);
+    assert_eq!(stats.rejected_at_gate, 0);
 }
 
 #[test]

@@ -1,54 +1,57 @@
 //! Bench-regression gate: diff a fresh `BENCH_solver.json` against the
-//! committed `BENCH_baseline.json` and fail on a median regression.
+//! committed `BENCH_baseline.json` and fail on median or tail regressions.
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json 0.25
 //! ```
 //!
-//! For every bench group present in both files, the gate takes the median
-//! over rows of the group's LAST `p50` column — the optimized/shipped
-//! path (every hotpath table orders baseline columns first) — and fails
-//! (exit 1) when the fresh median exceeds the baseline by more than the
-//! threshold (default +25%).  Groups absent from the baseline are
-//! reported but do not fail, and a smoke-vs-full `_mode` mismatch skips
-//! the gate entirely (the two profiles bench different shapes), so the
-//! gate degrades gracefully while a baseline is being (re)established.
-//! The reverse direction is strict: a baseline group missing from the
-//! fresh report counts as a failure (lost coverage, e.g. a narrowed
-//! bench filter), so the gate cannot be silenced by dropping a group.
+//! For every bench group present in both files the gate compares, per
+//! metric, the median over rows and fails (exit 1) when fresh exceeds the
+//! baseline by more than the threshold (default +25%).  Gated metrics:
+//!
+//! * the group's LAST `p50` column — the optimized/shipped path (every
+//!   hotpath table orders baseline columns first);
+//! * EVERY `p95` column — the serving SLO tails (`serve` reports queue and
+//!   total p95 separately; a daemon change that leaves medians flat but
+//!   fattens the tails fails here).
+//!
+//! Metrics are matched between fresh and baseline by header name, so a
+//! baseline that predates a new column simply does not gate it yet (the
+//! refresh picks it up).  Groups absent from the baseline are reported but
+//! do not fail, and a smoke-vs-full `_mode` mismatch skips the gate
+//! entirely (the two profiles bench different shapes), so the gate
+//! degrades gracefully while a baseline is being (re)established.  The
+//! reverse direction is strict: a baseline group missing from the fresh
+//! report counts as a failure (lost coverage, e.g. a narrowed bench
+//! filter), so the gate cannot be silenced by dropping a group.
 //!
 //! Refreshing the baseline (run on the machine class CI uses, smoke mode):
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve
 //! cp BENCH_solver.json BENCH_baseline.json   # then commit it
 //! ```
 //!
-//! Gated groups (each table's last `p50` column is the shipped path):
-//! `svd`, `matmul`, `tensor_matmul`, `psd`, `solver`, `calib` (blocked
-//! threaded rxx fold), `qdq` (threaded quantizer kernels), `budget` (the
-//! mixed-precision planner's layer x cell profiling pass), `exec` (the
-//! fused-from-packed matmul behind the native serve/eval backend).
+//! Gated groups: `svd`, `matmul`, `tensor_matmul`, `psd`, `solver`,
+//! `calib` (blocked threaded rxx fold), `qdq` (threaded quantizer
+//! kernels), `budget` (the mixed-precision planner's layer x cell
+//! profiling pass), `exec` (the fused-from-packed matmul behind the
+//! native serve/eval backend), `serve` (the supervised daemon end to end —
+//! p50 AND p95 queue/total tails).
 
 use qera::util::json::Json;
 
-/// Median over rows of a bench table's shipped-path timing column.
-///
-/// Every hotpath table orders its `p50` columns baseline-first (naive /
-/// exact / thin / serial) and optimized-path last (auto / randomized /
-/// lowrank / the single solver total), so the gate watches only the LAST
-/// `p50` column — pooling in the baseline columns would let a regression
-/// in the shipped kernel hide behind the (slower, stable) reference.
-fn group_median(table: &Json) -> Option<f64> {
-    let headers = table.get("headers")?.as_arr()?;
-    let col = headers
-        .iter()
-        .enumerate()
-        .filter(|(_, h)| h.as_str().map(|s| s.contains("p50")).unwrap_or(false))
-        .map(|(i, _)| i)
-        .next_back()?;
+/// One gated metric of a bench group: the column's header name and the
+/// median of its numeric cells over the group's rows.
+struct Metric {
+    label: String,
+    median: f64,
+}
+
+/// Median of the numeric cells in column `col` over a table's rows.
+fn col_median(table: &Json, col: usize) -> Option<f64> {
     let mut vals: Vec<f64> = Vec::new();
     for row in table.get("rows")?.as_arr()? {
         let cells = row.as_arr()?;
@@ -67,10 +70,142 @@ fn group_median(table: &Json) -> Option<f64> {
     Some(vals[vals.len() / 2])
 }
 
+/// The gated metrics of a bench table:
+///
+/// * the LAST `p50` column — every hotpath table orders its `p50` columns
+///   baseline-first (naive / exact / thin / serial) and optimized-path
+///   last, so the gate watches the shipped kernel; pooling in the baseline
+///   columns would let a regression hide behind the (slower, stable)
+///   reference;
+/// * every `p95` column — tail-latency SLOs (the `serve` group).
+fn group_metrics(table: &Json) -> Vec<Metric> {
+    let Some(headers) = table.get("headers").and_then(Json::as_arr) else {
+        return Vec::new();
+    };
+    let mut cols: Vec<usize> = Vec::new();
+    if let Some(p50) = headers
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.as_str().map(|s| s.contains("p50")).unwrap_or(false))
+        .map(|(i, _)| i)
+        .next_back()
+    {
+        cols.push(p50);
+    }
+    for (i, h) in headers.iter().enumerate() {
+        if h.as_str().map(|s| s.contains("p95")).unwrap_or(false) {
+            cols.push(i);
+        }
+    }
+    cols.into_iter()
+        .filter_map(|c| {
+            let label = headers[c].as_str()?.to_string();
+            Some(Metric { label, median: col_median(table, c)? })
+        })
+        .collect()
+}
+
 /// Bench profile recorded by the hotpath bench (`_mode` table): smoke and
 /// full mode run different shape sets, so their medians are not comparable.
 fn report_mode(j: &Json) -> Option<&str> {
     j.get("_mode")?.get("rows")?.as_arr()?.first()?.as_arr()?.first()?.as_str()
+}
+
+/// Outcome of gating a fresh report against a baseline.
+struct Gate {
+    /// Human-readable verdict lines, one per metric/group event.
+    lines: Vec<String>,
+    /// Metrics compared against a baseline value.
+    compared: usize,
+    /// Regressions + lost-coverage failures.
+    failures: usize,
+    /// Smoke-vs-full mismatch: nothing comparable, gate skipped.
+    mode_mismatch: bool,
+}
+
+/// The pure gate (unit-tested with doctored reports): compare every gated
+/// metric of every shared group, flag >threshold regressions and baseline
+/// groups missing from the fresh report.
+fn gate(fresh: &Json, base: &Json, max_regress: f64) -> Option<Gate> {
+    let (fresh_obj, base_obj) = (fresh.as_obj()?, base.as_obj()?);
+    let mut g = Gate { lines: Vec::new(), compared: 0, failures: 0, mode_mismatch: false };
+
+    if let (Some(f), Some(b)) = (report_mode(fresh), report_mode(base)) {
+        if f != b {
+            g.lines.push(format!(
+                "bench-mode mismatch (fresh={f}, baseline={b}) — medians are not \
+                 comparable; refresh the baseline in the same mode. Gate skipped."
+            ));
+            g.mode_mismatch = true;
+            return Some(g);
+        }
+    }
+
+    for (group, table) in fresh_obj {
+        if group.starts_with('_') {
+            continue; // metadata keys (the `_mode` table)
+        }
+        let f_metrics = group_metrics(table);
+        if f_metrics.is_empty() {
+            g.lines.push(format!("  {group:<14} no p50/p95 data in fresh report — skipped"));
+            continue;
+        }
+        match base_obj.get(group) {
+            Some(b_table) => {
+                let b_metrics = group_metrics(b_table);
+                for fm in &f_metrics {
+                    // matched by header name: a brand-new column gates only
+                    // after the next baseline refresh
+                    let Some(bm) = b_metrics.iter().find(|m| m.label == fm.label) else {
+                        g.lines.push(format!(
+                            "  {group:<14} [{}] fresh {:.3} — column not in baseline \
+                             (refresh to start gating)",
+                            fm.label, fm.median
+                        ));
+                        continue;
+                    };
+                    g.compared += 1;
+                    let ratio = fm.median / bm.median.max(f64::MIN_POSITIVE);
+                    let verdict = if ratio > 1.0 + max_regress {
+                        g.failures += 1;
+                        "REGRESSION"
+                    } else {
+                        "ok"
+                    };
+                    g.lines.push(format!(
+                        "  {group:<14} [{}] baseline {:.3} -> fresh {:.3} ({:+.1}%)  {verdict}",
+                        fm.label,
+                        bm.median,
+                        fm.median,
+                        (ratio - 1.0) * 100.0
+                    ));
+                }
+            }
+            None => {
+                g.lines.push(format!(
+                    "  {group:<14} fresh {:.3} — no committed baseline (refresh to start \
+                     gating)",
+                    f_metrics[0].median
+                ));
+            }
+        }
+    }
+    // a baseline group absent from the fresh report means lost coverage
+    // (renamed group, narrowed ci.yml bench filter, group crashed before
+    // emitting) — fail loudly instead of gating on the survivors only
+    for (group, table) in base_obj {
+        if group.starts_with('_') || group_metrics(table).is_empty() {
+            continue;
+        }
+        if !fresh_obj.contains_key(group) {
+            g.failures += 1;
+            g.lines.push(format!(
+                "  {group:<14} in baseline but missing from fresh report (bench filter \
+                 changed?)  REGRESSION"
+            ));
+        }
+    }
+    Some(g)
 }
 
 fn load(path: &str) -> Option<Json> {
@@ -97,82 +232,131 @@ fn main() {
         );
         println!(
             "refresh: QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul \
-             svd matmul solver calib qdq budget exec && cp {} {}",
+             svd matmul solver calib qdq budget exec serve && cp {} {}",
             args[0], args[1]
         );
         return;
     };
-    let (Some(fresh_obj), Some(base_obj)) = (fresh.as_obj(), base.as_obj()) else {
+    let Some(g) = gate(&fresh, &base, max_regress) else {
         eprintln!("check_bench: reports must be JSON objects of bench tables");
         std::process::exit(2);
     };
-
-    if let (Some(f), Some(b)) = (report_mode(&fresh), report_mode(&base)) {
-        if f != b {
-            println!(
-                "check_bench: bench-mode mismatch (fresh={f}, baseline={b}) — medians are \
-                 not comparable; refresh the baseline in the same mode. Gate skipped."
-            );
-            return;
-        }
+    for line in &g.lines {
+        println!("{line}");
     }
-
-    let mut failures = 0usize;
-    let mut compared = 0usize;
-    for (group, table) in fresh_obj {
-        if group.starts_with('_') {
-            continue; // metadata keys in hand-edited baselines
-        }
-        let Some(f_med) = group_median(table) else {
-            println!("  {group:<14} no p50 data in fresh report — skipped");
-            continue;
-        };
-        match base_obj.get(group).and_then(group_median) {
-            Some(b_med) => {
-                compared += 1;
-                let ratio = f_med / b_med.max(f64::MIN_POSITIVE);
-                let verdict = if ratio > 1.0 + max_regress {
-                    failures += 1;
-                    "REGRESSION"
-                } else {
-                    "ok"
-                };
-                println!(
-                    "  {group:<14} baseline {b_med:.3} ms -> fresh {f_med:.3} ms \
-                     ({:+.1}%)  {verdict}",
-                    (ratio - 1.0) * 100.0
-                );
-            }
-            None => {
-                println!(
-                    "  {group:<14} fresh {f_med:.3} ms — no committed baseline \
-                     (refresh to start gating)"
-                );
-            }
-        }
+    if g.mode_mismatch {
+        return;
     }
-    // a baseline group absent from the fresh report means lost coverage
-    // (renamed group, narrowed ci.yml bench filter, group crashed before
-    // emitting) — fail loudly instead of gating on the survivors only
-    for (group, table) in base_obj {
-        if group.starts_with('_') || group_median(table).is_none() {
-            continue;
-        }
-        if !fresh_obj.contains_key(group) {
-            failures += 1;
-            println!(
-                "  {group:<14} in baseline but missing from fresh report \
-                 (bench filter changed?)  REGRESSION"
-            );
-        }
-    }
-    if failures > 0 {
+    if g.failures > 0 {
         eprintln!(
-            "check_bench: {failures} group(s) regressed more than {:.0}% over the baseline \
-             (or lost coverage)",
+            "check_bench: {} metric(s) regressed more than {:.0}% over the baseline (or \
+             lost coverage)",
+            g.failures,
             max_regress * 100.0
         );
         std::process::exit(1);
     }
-    println!("check_bench: {compared} group(s) within +{:.0}% of baseline", max_regress * 100.0);
+    println!(
+        "check_bench: {} metric(s) within +{:.0}% of baseline",
+        g.compared,
+        max_regress * 100.0
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A one-group report in the `emit_json_report` shape, with a `serve`
+    /// table carrying distinct p50 and p95 columns.
+    fn serve_report(q50: &str, q95: &str, t50: &str, t95: &str) -> Json {
+        Json::parse(&format!(
+            r#"{{"serve": {{"headers": ["max-wait ms", "tok/s", "queue p50 ms",
+                "queue p95 ms", "total p50 ms", "total p95 ms"],
+               "rows": [["0", "900.0", "{q50}", "{q95}", "{t50}", "{t95}"]]}},
+               "_mode": {{"headers": ["mode"], "rows": [["smoke"]]}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn p95_tail_regression_fails_even_with_flat_medians() {
+        let base = serve_report("1.0", "2.0", "3.0", "4.0");
+        // medians identical, total p95 fattened 2x — the SLO gate must fire
+        let fresh = serve_report("1.0", "2.0", "3.0", "8.0");
+        let g = gate(&fresh, &base, 0.25).unwrap();
+        assert_eq!(g.failures, 1, "{:?}", g.lines);
+        // last-p50 ("total p50 ms") + both p95 columns are gated
+        assert_eq!(g.compared, 3);
+        assert!(g.lines.iter().any(|l| l.contains("[total p95 ms]") && l.contains("REGRESSION")));
+        // within-threshold tails pass
+        let ok = serve_report("1.2", "2.4", "3.5", "4.9");
+        let g2 = gate(&ok, &base, 0.25).unwrap();
+        assert_eq!(g2.failures, 0, "{:?}", g2.lines);
+        assert_eq!(g2.compared, 3);
+    }
+
+    #[test]
+    fn last_p50_regression_fails_and_queue_p50_is_not_gated() {
+        let base = serve_report("1.0", "2.0", "3.0", "4.0");
+        // queue p50 (not the last p50 column) regresses 10x: not gated
+        let queue_only = serve_report("10.0", "2.0", "3.0", "4.0");
+        let g = gate(&queue_only, &base, 0.25).unwrap();
+        assert_eq!(g.failures, 0, "{:?}", g.lines);
+        // total p50 (the last p50 column) regresses: gated
+        let total = serve_report("1.0", "2.0", "30.0", "4.0");
+        let g2 = gate(&total, &base, 0.25).unwrap();
+        assert_eq!(g2.failures, 1, "{:?}", g2.lines);
+        assert!(g2.lines.iter().any(|l| l.contains("[total p50 ms]") && l.contains("REGRESSION")));
+    }
+
+    #[test]
+    fn missing_group_and_new_column_behavior() {
+        let base = serve_report("1.0", "2.0", "3.0", "4.0");
+        // fresh report lost the serve group entirely -> coverage failure
+        let empty = Json::parse(
+            r#"{"_mode": {"headers": ["mode"], "rows": [["smoke"]]}}"#,
+        )
+        .unwrap();
+        let g = gate(&empty, &base, 0.25).unwrap();
+        assert_eq!(g.failures, 1, "{:?}", g.lines);
+        // a fresh column the baseline predates is reported, not gated
+        let base_old = Json::parse(
+            r#"{"serve": {"headers": ["total p50 ms"], "rows": [["3.0"]]},
+                "_mode": {"headers": ["mode"], "rows": [["smoke"]]}}"#,
+        )
+        .unwrap();
+        let fresh = serve_report("1.0", "2.0", "3.0", "400.0");
+        let g2 = gate(&fresh, &base_old, 0.25).unwrap();
+        assert_eq!(g2.failures, 0, "{:?}", g2.lines);
+        assert_eq!(g2.compared, 1); // only total p50 matched by name
+    }
+
+    #[test]
+    fn mode_mismatch_skips_gate() {
+        let base = serve_report("1.0", "2.0", "3.0", "4.0");
+        let fresh = Json::parse(
+            r#"{"serve": {"headers": ["total p50 ms", "total p95 ms"],
+                "rows": [["300.0", "400.0"]]},
+                "_mode": {"headers": ["mode"], "rows": [["full"]]}}"#,
+        )
+        .unwrap();
+        let g = gate(&fresh, &base, 0.25).unwrap();
+        assert!(g.mode_mismatch);
+        assert_eq!(g.failures, 0);
+        assert_eq!(g.compared, 0);
+    }
+
+    #[test]
+    fn median_is_over_rows_and_ignores_non_numeric() {
+        let t = Json::parse(
+            r#"{"headers": ["name", "p50 ms"],
+                "rows": [["a", "1.0"], ["b", "3.0"], ["c", "2.0"], ["d", "n/a"]]}"#,
+        )
+        .unwrap();
+        let m = group_metrics(&t);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].label, "p50 ms");
+        assert_eq!(m[0].median, 2.0);
+    }
 }
