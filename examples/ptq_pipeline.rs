@@ -26,7 +26,6 @@ use qera::budget::{allocate, profile, AllocStrategy, BudgetPlan, CandidateGrid};
 use qera::coordinator::{calibrate, quantize, PipelineConfig};
 use qera::data::Corpus;
 use qera::eval::{perplexity, win_rate};
-use qera::model::QuantCheckpoint;
 use qera::quant::QFormat;
 use qera::runtime::Registry;
 use qera::solver::{Method, PsdBackend, SvdBackend};
@@ -78,6 +77,13 @@ fn main() -> anyhow::Result<()> {
             &PipelineConfig::new(Method::WOnly, fmt, 0).with_svd(svd).with_psd(psd),
             Some(&calib),
         )?;
+        // sharded manifest round-trip: record-identical bytes per layer,
+        // plus per-shard sha256 verification on the parallel reload
+        let manifest = wonly
+            .ckpt
+            .save_sharded(format!("results/{}-wonly.manifest.json", spec.name), 1)?;
+        let back = qera::model::open(&manifest)?.into_quant()?;
+        assert_eq!(back.materialize_merged(), wonly.merged, "sharded round-trip");
         for method in Method::ptq_grid() {
             let r = if method == Method::WOnly { 0 } else { rank };
             let qm = quantize(
@@ -100,7 +106,7 @@ fn main() -> anyhow::Result<()> {
                 method.name().replace(':', "_")
             );
             qm.ckpt.save(&path)?;
-            let back = QuantCheckpoint::load(&path)?;
+            let back = qera::model::open(&path)?.into_quant()?;
             assert_eq!(back.materialize_merged(), qm.merged, "checkpoint round-trip");
             table.row(vec![
                 method.name(),

@@ -16,12 +16,13 @@
 //! allocator sweeps), `exec` (fused-from-packed matmul vs
 //! dequantize-then-matmul — the native serve/eval hot path), `serve` (the
 //! supervised daemon end to end on the native backend: throughput + queue /
-//! total latency tails vs batching window), `quant` (quantizer throughput),
-//! `stats` (calibration accumulation), and — when PJRT artifacts are
-//! built — `forward`.
+//! total latency tails vs batching window), `ckpt` (checkpoint I/O:
+//! sharded-manifest write and sha256-verified parallel reload vs the
+//! monolithic path), `quant` (quantizer throughput), `stats` (calibration
+//! accumulation), and — when PJRT artifacts are built — `forward`.
 //!
 //! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` / `calib` /
-//! `qdq` / `budget` / `exec` / `serve` groups additionally land in
+//! `qdq` / `budget` / `exec` / `serve` / `ckpt` groups additionally land in
 //! `BENCH_solver.json` (machine-readable, for the perf trajectory and the
 //! CI bench-regression gate; `serve` is gated on its p95 tail columns too —
 //! the SLO gate).  Set `QERA_BENCH_SMOKE=1` to shrink shapes/iterations —
@@ -575,6 +576,61 @@ fn bench_exec() -> Table {
     t
 }
 
+/// Checkpoint I/O: the sharded-manifest path (streamed shard writes with
+/// per-shard sha256, then the parallel verified reload behind
+/// `model::open`) against the monolithic single-file load.  The verified
+/// sharded load is the shipped serve / eval cold-start path (last p50 —
+/// the CI gate watches it).
+fn bench_ckpt() -> Table {
+    let mut t = Table::new(
+        "ckpt: monolithic vs sharded manifest I/O (ms)",
+        &["m", "shard write p50", "mono load p50", "sharded verified load p50"],
+    );
+    let dir = std::env::temp_dir().join("qera_bench_ckpt");
+    std::fs::create_dir_all(&dir).expect("bench tmpdir");
+    let ms: &[usize] = if smoke() { &[256] } else { &[256, 1024] };
+    for &m in ms {
+        let spec = ModelSpec {
+            name: format!("bench{m}"),
+            vocab: 256,
+            d_model: m,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 2 * m,
+            seq: 32,
+            batch: 2,
+            n_classes: 2,
+        };
+        let mut rng = Rng::new(m as u64);
+        let params = qera::model::init::init_params(&spec, &mut rng);
+        let ckpt = qera::model::Checkpoint::new(spec, params);
+        let mono = dir.join(format!("bench{m}.qkpt"));
+        let manifest = dir.join(format!("bench{m}.manifest.json"));
+        ckpt.save(&mono).expect("monolithic save");
+        let iters = if smoke() || m >= 1024 { 3 } else { 5 };
+        let write = time_stats(1, iters, || {
+            std::hint::black_box(ckpt.save_sharded(&manifest, 1).expect("shard write"));
+        });
+        let mono_load = time_stats(1, iters, || {
+            let back = qera::model::open(&mono).and_then(|r| r.into_dense());
+            std::hint::black_box(back.expect("monolithic load"));
+        });
+        let shard_load = time_stats(1, iters, || {
+            let back = qera::model::open(&manifest).and_then(|r| r.into_dense());
+            std::hint::black_box(back.expect("sharded verified load"));
+        });
+        t.row(vec![
+            m.to_string(),
+            f3(write.p50_ms),
+            f3(mono_load.p50_ms),
+            f3(shard_load.p50_ms),
+        ]);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    t.emit("hot_ckpt");
+    t
+}
+
 fn bench_quant() {
     let mut rng = Rng::new(4);
     let w = Tensor::randn(vec![512, 512], 0.02, &mut rng);
@@ -724,6 +780,9 @@ fn main() -> anyhow::Result<()> {
     }
     if want("serve") {
         report.push(("serve", bench_serve()?));
+    }
+    if want("ckpt") {
+        report.push(("ckpt", bench_ckpt()));
     }
     if want("quant") {
         bench_quant();

@@ -12,9 +12,11 @@
 
 use crate::budget::{self, BudgetPlan};
 use crate::config::ExperimentConfig;
-use crate::coordinator::{calibrate, quantize, PipelineConfig};
+use crate::coordinator::{
+    calibrate, calibrate_native, quantize, quantize_streaming, CalibResult, PipelineConfig,
+};
 use crate::data::corpus::Corpus;
-use crate::model::Checkpoint;
+use crate::model::{Checkpoint, ModelSpec};
 use crate::runtime::{ExecBackend, NativeModel, Registry};
 use crate::solver::Method;
 use crate::train::{pretrain, PretrainConfig};
@@ -82,6 +84,7 @@ impl Args {
                 || k == "queue-cap"
                 || k == "deadline-ms"
                 || k == "drain-ms"
+                || k == "shard-layers"
             {
                 continue;
             }
@@ -103,6 +106,39 @@ fn exec_backend(args: &Args) -> Result<ExecBackend> {
     match args.get("exec") {
         Some(s) => ExecBackend::parse(s),
         None => Ok(ExecBackend::from_env()),
+    }
+}
+
+/// Model spec lookup honoring the backend: the stub route reads the PJRT
+/// manifest; native falls back to the builtin table so commands work with
+/// no artifacts at all.
+fn spec_for(args: &Args, model: &str) -> Result<ModelSpec> {
+    match exec_backend(args)? {
+        ExecBackend::Native => ModelSpec::builtin(model)
+            .with_context(|| format!("unknown builtin model '{model}'")),
+        ExecBackend::Stub => Ok(registry(args)?.spec(model)?.clone()),
+    }
+}
+
+/// Calibrate on the selected backend: native computes the taps in Rust
+/// ([`calibrate_native`], artifact-free), stub streams them through the
+/// `lm_fwd_taps` PJRT artifact.
+fn calibrate_on(
+    args: &Args,
+    spec: &ModelSpec,
+    params: &[crate::tensor::Tensor],
+    corpus: &Corpus,
+    batches: usize,
+    track_rxx: bool,
+) -> Result<CalibResult> {
+    match exec_backend(args)? {
+        ExecBackend::Native => {
+            let model = NativeModel::from_dense(spec.clone(), params.to_vec());
+            calibrate_native(&model, corpus, batches, track_rxx)
+        }
+        ExecBackend::Stub => {
+            calibrate(&registry(args)?, spec, params, corpus, batches, track_rxx)
+        }
     }
 }
 
@@ -151,7 +187,20 @@ common flags: --artifacts DIR --model NAME --method M --format F --rank K
               --exec stub|native   execution backend (or QERA_EXEC env);
                                    native runs the pure-Rust fused path:
                                    quantized linears evaluate straight from
-                                   packed blocks, no artifacts needed
+                                   packed blocks, no artifacts needed —
+                                   honored uniformly by quantize (calibration
+                                   taps), eval-ppl, serve, assumption, e2e
+
+checkpoints: every --ckpt/--qckpt flag accepts a monolithic .qkpt/.qqkpt
+              file or a sharded .manifest.json; the format is sniffed, and
+              sharded sources load their shards in parallel with per-shard
+              sha256 verification
+              --shard-layers N  (quantize) write a sharded checkpoint —
+                                manifest + one shard per N transformer
+                                layers — through the streaming pipeline:
+                                load shard -> solve -> pack -> write ->
+                                drop, so peak memory is bounded by a few
+                                layer groups regardless of model depth
 
 serving (serve): --prompts N --new-tokens N --temperature T  synthetic
               request burst against the serving daemon; with --qckpt and
@@ -222,10 +271,11 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 
 fn cmd_quantize(args: &Args) -> Result<()> {
     let cfg = args.to_config()?;
-    let reg = registry(args)?;
     let ckpt_path = args.get("ckpt").context("--ckpt required")?;
-    let ckpt = Checkpoint::load(ckpt_path)?;
-    let corpus = Corpus::generate(ckpt.spec.vocab, cfg.corpus_tokens, cfg.seed);
+    let shard_layers = args.usize_or("shard-layers", 0)?;
+    let reader = crate::model::open(ckpt_path)?;
+    let spec = reader.spec().clone();
+    let corpus = Corpus::generate(spec.vocab, cfg.corpus_tokens, cfg.seed);
 
     // --plan-in executes a saved plan; --budget-bits profiles + allocates
     // a fresh one (optionally saved via --plan-out)
@@ -235,11 +285,19 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     };
     let method = plan_in.as_ref().map(|p| p.method).unwrap_or(cfg.method);
     let budgeting = plan_in.is_none() && cfg.budget_bits.is_some();
+    // calibration, budget profiling, and the in-memory pipeline all need
+    // the full dense weights; the pure streaming path never loads them
+    let ckpt = if method.needs_stats() || budgeting || shard_layers == 0 {
+        Some(reader.into_dense()?)
+    } else {
+        None
+    };
     let calib = if method.needs_stats() || budgeting {
-        Some(calibrate(
-            &reg,
-            &ckpt.spec,
-            &ckpt.params,
+        let c = ckpt.as_ref().expect("calibration loads the dense weights");
+        Some(calibrate_on(
+            args,
+            &c.spec,
+            &c.params,
             &corpus,
             cfg.calib_batches,
             method.needs_rxx() || budgeting,
@@ -254,7 +312,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         (Some(p), _) => Some(p),
         (None, Some(bits)) => {
             let prof = budget::profile(
-                &ckpt,
+                ckpt.as_ref().expect("budget profiling loads the dense weights"),
                 calib.as_ref().expect("budget profiling calibrates"),
                 &base,
                 &budget::CandidateGrid::default_ptq(),
@@ -284,10 +342,31 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         Some(p) => base.with_plan(p),
         None => base,
     };
+    if shard_layers > 0 {
+        let out = args.get_or(
+            "out",
+            &format!("{}/{}-{}.manifest.json", cfg.out_dir, spec.name, method.name()),
+        );
+        if let Some(dir) = std::path::Path::new(&out).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let sum = quantize_streaming(ckpt_path, &pcfg, calib.as_ref(), &out, shard_layers)?;
+        println!(
+            "quantized {} sites into {} shard(s): payload {:.2} MB, solver {:.1} ms, peak live {:.2} MB -> {}",
+            sum.diags.len(),
+            sum.n_shards,
+            sum.payload_bytes as f64 / 1e6,
+            sum.solve_ms_total,
+            sum.peak_live_bytes as f64 / 1e6,
+            sum.manifest.display(),
+        );
+        return Ok(());
+    }
+    let ckpt = ckpt.expect("in-memory pipeline keeps the dense checkpoint");
     let qm = quantize(&ckpt, &pcfg, calib.as_ref())?;
     let out = args.get_or(
         "out",
-        &format!("{}/{}-{}.qqkpt", cfg.out_dir, ckpt.spec.name, method.name()),
+        &format!("{}/{}-{}.qqkpt", cfg.out_dir, spec.name, method.name()),
     );
     if let Some(dir) = std::path::Path::new(&out).parent() {
         std::fs::create_dir_all(dir)?;
@@ -325,11 +404,10 @@ fn cmd_eval_ppl(args: &Args) -> Result<()> {
     // checkpoint evaluates fused straight from its packed payload
     if backend == ExecBackend::Native {
         let model = if let Some(p) = args.get("qckpt") {
-            let q = crate::model::QuantCheckpoint::load(p)?;
-            NativeModel::from_quant(&q)
+            NativeModel::open_quant(p)?
         } else {
             let p = args.get("ckpt").context("--ckpt or --qckpt required")?;
-            let c = Checkpoint::load(p)?;
+            let c = crate::model::open(p)?.into_dense()?;
             NativeModel::from_dense(c.spec.clone(), c.params)
         };
         let corpus = Corpus::generate(model.spec.vocab, cfg.corpus_tokens, cfg.seed);
@@ -340,11 +418,11 @@ fn cmd_eval_ppl(args: &Args) -> Result<()> {
     }
     let reg = registry(args)?;
     let (spec, params) = if let Some(p) = args.get("qckpt") {
-        let q = crate::model::QuantCheckpoint::load(p)?;
+        let q = crate::model::open(p)?.into_quant()?;
         (q.spec.clone(), q.materialize_merged())
     } else {
         let p = args.get("ckpt").context("--ckpt or --qckpt required")?;
-        let c = Checkpoint::load(p)?;
+        let c = crate::model::open(p)?.into_dense()?;
         (c.spec.clone(), c.params)
     };
     let corpus = Corpus::generate(spec.vocab, cfg.corpus_tokens, cfg.seed);
@@ -358,14 +436,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use crate::serve::{Outcome, ServeModel, Server, ServerConfig};
     let cfg = args.to_config()?;
     let backend = exec_backend(args)?;
-    let (spec, model) = if let Some(p) = args.get("qckpt") {
-        let q = crate::model::QuantCheckpoint::load(p)?;
-        (q.spec.clone(), ServeModel::Quant(Box::new(q)))
-    } else {
-        let p = args.get("ckpt").context("--ckpt or --qckpt required")?;
-        let c = Checkpoint::load(p)?;
-        (c.spec.clone(), ServeModel::Dense(c.params))
-    };
+    // ServeModel::open sniffs dense vs quantized and monolithic vs sharded,
+    // so --ckpt and --qckpt both take any checkpoint source
+    let path = args
+        .get("qckpt")
+        .or_else(|| args.get("ckpt"))
+        .context("--ckpt or --qckpt required")?;
+    let (spec, model) = ServeModel::open(path)?;
     let n_prompts = args.usize_or("prompts", 8)?;
     let new_tokens = args.usize_or("new-tokens", 16)?;
     let temperature: f32 = match args.get("temperature") {
@@ -474,20 +551,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_assumption(args: &Args) -> Result<()> {
     let cfg = args.to_config()?;
-    let reg = registry(args)?;
     let ckpt = match args.get("ckpt") {
-        Some(p) => Checkpoint::load(p)?,
+        Some(p) => crate::model::open(p)?.into_dense()?,
         None => {
             // untrained fallback so the command works standalone
-            let spec = reg.spec(&cfg.model)?.clone();
+            let spec = spec_for(args, &cfg.model)?;
             let params =
                 crate::model::init::init_params(&spec, &mut crate::util::rng::Rng::new(cfg.seed));
             Checkpoint::new(spec, params)
         }
     };
     let corpus = Corpus::generate(ckpt.spec.vocab, cfg.corpus_tokens, cfg.seed);
-    let calib =
-        calibrate(&reg, &ckpt.spec, &ckpt.params, &corpus, cfg.calib_batches, true)?;
+    let calib = calibrate_on(args, &ckpt.spec, &ckpt.params, &corpus, cfg.calib_batches, true)?;
     println!("Assumption 1 diagnostic per site (frobenius mass / per-element):");
     for (name, frob, elem) in calib.offdiag_report() {
         let bar = "#".repeat((elem * 60.0).min(60.0) as usize);
@@ -498,6 +573,9 @@ fn cmd_assumption(args: &Args) -> Result<()> {
 
 fn cmd_e2e(args: &Args) -> Result<()> {
     let cfg = args.to_config()?;
+    if exec_backend(args)? == ExecBackend::Native {
+        return cmd_e2e_native(args, &cfg);
+    }
     let reg = registry(args)?;
     let spec = reg.spec(&cfg.model)?.clone();
     println!("== e2e: {} ({:.2}M params) ==", spec.name, spec.n_params() as f64 / 1e6);
@@ -544,5 +622,61 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         ]);
     }
     table.emit(&format!("e2e_{}", spec.name));
+    Ok(())
+}
+
+/// `e2e` on the native backend — no PJRT artifacts anywhere.  Pretraining
+/// needs the gradient artifacts, so the native run starts from `--ckpt`
+/// when given (a previously pretrained model, monolithic or sharded) or a
+/// deterministic init, then covers calibrate -> quantize (all methods) ->
+/// eval entirely in Rust.
+fn cmd_e2e_native(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let ckpt = match args.get("ckpt") {
+        Some(p) => crate::model::open(p)?.into_dense()?,
+        None => {
+            let spec = spec_for(args, &cfg.model)?;
+            let params =
+                crate::model::init::init_params(&spec, &mut crate::util::rng::Rng::new(cfg.seed));
+            Checkpoint::new(spec, params)
+        }
+    };
+    let spec = ckpt.spec.clone();
+    println!(
+        "== e2e: {} ({:.2}M params, native exec) ==",
+        spec.name,
+        spec.n_params() as f64 / 1e6
+    );
+    let corpus = Corpus::generate(spec.vocab, cfg.corpus_tokens, cfg.seed);
+    let (train, val) = corpus.split(0.1);
+    let base_model = NativeModel::from_dense(spec.clone(), ckpt.params.clone());
+    let base_ppl = crate::eval::perplexity_native(&base_model, &val, cfg.eval_batches)?;
+    println!("base: val ppl {base_ppl:.3} (no pretraining on the native path)");
+
+    let calib = calibrate_native(&base_model, &train, cfg.calib_batches, true)?;
+    let mut table = crate::bench_util::Table::new(
+        &format!("e2e {} {} rank {} (native)", spec.name, cfg.format.name(), cfg.rank),
+        &["method", "ppl", "delta-vs-bf16", "weight-err", "solver-ms"],
+    );
+    table.row(vec!["bf16".into(), format!("{base_ppl:.3}"), "0".into(), "0".into(), "0".into()]);
+    for method in Method::ptq_grid() {
+        let qm = quantize(
+            &ckpt,
+            &PipelineConfig::new(method, cfg.format, cfg.rank)
+                .with_svd(cfg.svd)
+                .with_psd(cfg.psd),
+            Some(&calib),
+        )?;
+        let qmodel = NativeModel::from_quant(&qm.ckpt);
+        let ppl = crate::eval::perplexity_native(&qmodel, &val, cfg.eval_batches)?;
+        let werr: f64 = qm.diags.iter().map(|d| d.weight_error).sum();
+        table.row(vec![
+            method.name(),
+            format!("{ppl:.3}"),
+            format!("{:+.3}", ppl - base_ppl),
+            format!("{werr:.3}"),
+            format!("{:.0}", qm.solve_ms_total),
+        ]);
+    }
+    table.emit(&format!("e2e_{}_native", spec.name));
     Ok(())
 }

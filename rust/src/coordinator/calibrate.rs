@@ -20,7 +20,7 @@ use crate::data::batch::lm_batches;
 use crate::model::ModelSpec;
 use crate::runtime::{
     exec::{lm_inputs, rc_params},
-    Registry,
+    NativeModel, Registry,
 };
 use crate::stats::{offdiag_element_ratio_of, offdiag_ratio_of, CalibStats};
 use crate::tensor::Tensor;
@@ -165,6 +165,47 @@ pub fn calibrate(
     Ok(CalibResult { spec: spec.clone(), stats, n_sequences })
 }
 
+/// Run calibration on the **native** backend — no PJRT artifacts required.
+/// Identical streaming structure to [`calibrate`] (same batching, same
+/// per-batch [`fold_taps`], same f64 accumulation), but the taps come from
+/// [`NativeModel::forward_taps`], so any dense checkpoint can calibrate on
+/// a plain CPU box.  Statistics are bit-identical across worker counts.
+pub fn calibrate_native(
+    model: &NativeModel,
+    corpus: &Corpus,
+    max_batches: usize,
+    track_rxx: bool,
+) -> Result<CalibResult> {
+    ensure!(max_batches > 0, "need at least one calibration batch");
+    let spec = &model.spec;
+    let mut stats: Vec<CalibStats> = (0..spec.n_layers)
+        .flat_map(|_| {
+            crate::model::TAP_SITES
+                .iter()
+                .map(|&tap| CalibStats::new(spec.tap_dim(tap), track_rxx))
+        })
+        .collect();
+
+    let mut n_sequences = 0usize;
+    for (bi, (tokens, _targets)) in lm_batches(corpus, spec.batch, spec.seq).enumerate() {
+        if bi >= max_batches {
+            break;
+        }
+        let taps = model.forward_taps(&tokens, spec.batch, spec.seq);
+        ensure!(taps.len() == spec.n_taps(), "tap count mismatch");
+        fold_taps(&mut stats, &taps, 0);
+        n_sequences += spec.batch;
+    }
+    ensure!(n_sequences > 0, "corpus too small for a single calibration batch");
+    crate::info!(
+        "calibrated {} sites over {} sequences on the native backend (rxx={})",
+        stats.len(),
+        n_sequences,
+        track_rxx
+    );
+    Ok(CalibResult { spec: spec.clone(), stats, n_sequences })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +311,33 @@ mod tests {
         // deterministic
         let again = CalibResult::synthetic(&spec, 96, 3);
         assert_eq!(res.stats[0].sum_sq, again.stats[0].sum_sq);
+    }
+
+    #[test]
+    fn native_calibration_satisfies_artifact_invariants() {
+        // no artifacts needed: the native backend computes taps in Rust,
+        // and the results must satisfy everything the PJRT path does
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut Rng::new(5));
+        let model = crate::runtime::NativeModel::from_dense(spec.clone(), params);
+        let corpus = Corpus::generate(spec.vocab, 256, 7);
+        let res = calibrate_native(&model, &corpus, 2, true).unwrap();
+        assert_eq!(res.stats.len(), spec.n_taps());
+        assert_eq!(res.n_sequences, 2 * spec.batch);
+        for (i, st) in res.stats.iter().enumerate() {
+            assert!(st.count > 0, "site {i}");
+            // every E[x²] strictly positive (Remark 2)
+            assert!(st.mean_sq().iter().all(|&v| v > 0.0), "site {i}");
+            assert!(st.rxx_mean().unwrap().is_symmetric(1e-6), "site {i}");
+        }
+        // q/k/v share the attn_in tap stats
+        let sites = spec.linear_sites();
+        assert!(std::ptr::eq(res.for_site(&sites[0]), res.for_site(&sites[1])));
+        // offdiag report covers all sites, and the run is deterministic
+        assert_eq!(res.offdiag_report().len(), spec.n_taps());
+        let again = calibrate_native(&model, &corpus, 2, true).unwrap();
+        assert_eq!(res.stats[0].sum_sq, again.stats[0].sum_sq);
+        assert!(calibrate_native(&model, &corpus, 0, true).is_err());
     }
 
     #[test]

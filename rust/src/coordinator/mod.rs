@@ -8,6 +8,8 @@
 
 pub mod calibrate;
 pub mod pipeline;
+pub mod stream;
 
-pub use calibrate::{calibrate, fold_taps, CalibResult};
+pub use calibrate::{calibrate, calibrate_native, fold_taps, CalibResult};
 pub use pipeline::{quantize, PipelineConfig, QuantizedModel};
+pub use stream::{quantize_streaming, StreamSummary};

@@ -6,7 +6,7 @@
 
 use super::calibrate::CalibResult;
 use crate::budget::BudgetPlan;
-use crate::model::{Checkpoint, QuantCheckpoint};
+use crate::model::{Checkpoint, LinearSite, ModelSpec, QuantCheckpoint};
 use crate::quant::QFormat;
 use crate::solver::{self, Method, PsdBackend, SvdBackend};
 use crate::tensor::Tensor;
@@ -115,19 +115,23 @@ impl QuantizedModel {
     }
 }
 
-/// Quantize every linear layer of `ckpt`.
-///
-/// `calib` may be `None` for methods that don't need statistics.  With a
-/// budget plan attached (`PipelineConfig::with_plan`), each layer solves
-/// at its planned `(format, rank)` under the plan's method (rank-0 cells
-/// run as plain `w-only`) and packs at its own format.
-pub fn quantize(
-    ckpt: &Checkpoint,
+/// Method + backends after budget-plan and calibration resolution —
+/// everything `quantize` and the streaming pipeline share per run.
+pub(crate) struct Resolved {
+    pub method: Method,
+    pub svd: SvdBackend,
+    pub psd: PsdBackend,
+}
+
+/// Validate plan coverage / calibration compatibility and resolve the
+/// effective method and backends.  Shared by the in-memory and streaming
+/// pipelines so both fail with identical messages and solve identically.
+pub(crate) fn resolve(
     cfg: &PipelineConfig,
+    spec: &ModelSpec,
+    sites: &[LinearSite],
     calib: Option<&CalibResult>,
-) -> Result<QuantizedModel> {
-    let spec = &ckpt.spec;
-    let sites = spec.linear_sites();
+) -> Result<Resolved> {
     if let Some(plan) = &cfg.plan {
         ensure!(
             plan.model == spec.name,
@@ -135,7 +139,7 @@ pub fn quantize(
             plan.model,
             spec.name
         );
-        for site in &sites {
+        for site in sites {
             ensure!(plan.cell(&site.name).is_some(), "budget plan missing layer '{}'", site.name);
         }
     }
@@ -154,6 +158,97 @@ pub fn quantize(
             "calibration spec does not match checkpoint"
         );
     }
+    Ok(Resolved { method, svd, psd })
+}
+
+/// Effective `(format, rank)` for one site under `cfg` (plan cell if a
+/// plan is attached, the global pair otherwise).
+pub(crate) fn site_plan(cfg: &PipelineConfig, name: &str) -> (QFormat, usize) {
+    match &cfg.plan {
+        Some(p) => {
+            let c = p.cell(name).unwrap();
+            (c.fmt, c.rank)
+        }
+        None => (cfg.fmt, cfg.rank),
+    }
+}
+
+/// Solve one site.  `i` is the site's GLOBAL index in
+/// `spec.linear_sites()` order — the per-site seed derives from it, so the
+/// streaming pipeline must pass the same index the in-memory one would for
+/// bit-identical results.
+pub(crate) fn solve_site(
+    cfg: &PipelineConfig,
+    rp: &Resolved,
+    site: &LinearSite,
+    i: usize,
+    w: &Tensor,
+    calib: Option<&CalibResult>,
+) -> Result<solver::SolveOutput> {
+    let stats = calib.map(|c| c.for_site(site));
+    let (fmt, rank) = site_plan(cfg, &site.name);
+    let solve_method =
+        if cfg.plan.is_some() && rank == 0 { Method::WOnly } else { rp.method };
+    solver::solve_with(
+        solve_method,
+        w,
+        fmt,
+        rank,
+        stats,
+        cfg.seed ^ (i as u64) << 8,
+        rp.svd,
+        rp.psd,
+    )
+}
+
+/// Checkpoint meta recorded by both pipelines (exact key order matters for
+/// byte-identical manifests/containers across the two paths).
+pub(crate) fn build_meta(cfg: &PipelineConfig, rp: &Resolved) -> Json {
+    // with a plan, format/rank vary per layer — the per-layer cells live in
+    // the plan artifact, so the meta says "per-layer" instead of recording
+    // the ignored global pair
+    let mut meta_pairs = vec![
+        ("method", Json::str(rp.method.name())),
+        (
+            "format",
+            match &cfg.plan {
+                Some(_) => Json::str("per-layer"),
+                None => Json::str(cfg.fmt.name()),
+            },
+        ),
+        (
+            "rank",
+            match &cfg.plan {
+                Some(_) => Json::Null,
+                None => Json::Num(cfg.rank as f64),
+            },
+        ),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("svd", Json::str(rp.svd.name())),
+        ("psd", Json::str(rp.psd.name())),
+    ];
+    if let Some(p) = &cfg.plan {
+        meta_pairs.push(("plan_strategy", Json::str(p.strategy.name())));
+        meta_pairs.push(("budget_bits", Json::Num(p.budget_bits)));
+        meta_pairs.push(("plan_bits", Json::Num(p.achieved_bits)));
+    }
+    Json::obj(meta_pairs)
+}
+
+/// Quantize every linear layer of `ckpt`.
+///
+/// `calib` may be `None` for methods that don't need statistics.  With a
+/// budget plan attached (`PipelineConfig::with_plan`), each layer solves
+/// at its planned `(format, rank)` under the plan's method (rank-0 cells
+/// run as plain `w-only`) and packs at its own format.
+pub fn quantize(
+    ckpt: &Checkpoint,
+    cfg: &PipelineConfig,
+    calib: Option<&CalibResult>,
+) -> Result<QuantizedModel> {
+    let spec = &ckpt.spec;
+    let sites = spec.linear_sites();
+    let rp = resolve(cfg, spec, &sites, calib)?;
     let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
 
     let t0 = std::time::Instant::now();
@@ -161,26 +256,7 @@ pub fn quantize(
         pool::parallel_map(sites.len(), workers, |i| {
             let site = &sites[i];
             let w = &ckpt.params[site.param_idx];
-            let stats = calib.map(|c| c.for_site(site));
-            let (fmt, rank) = match &cfg.plan {
-                Some(p) => {
-                    let c = p.cell(&site.name).unwrap();
-                    (c.fmt, c.rank)
-                }
-                None => (cfg.fmt, cfg.rank),
-            };
-            let solve_method =
-                if cfg.plan.is_some() && rank == 0 { Method::WOnly } else { method };
-            let out = solver::solve_with(
-                solve_method,
-                w,
-                fmt,
-                rank,
-                stats,
-                cfg.seed ^ (i as u64) << 8,
-                svd,
-                psd,
-            )?;
+            let out = solve_site(cfg, &rp, site, i, w, calib)?;
             Ok((site.name.clone(), out))
         });
 
@@ -199,54 +275,16 @@ pub fn quantize(
         solved.insert(name, (out.w_dq, out.lowrank));
     }
 
-    // with a plan, format/rank vary per layer — the per-layer cells live in
-    // the plan artifact, so the meta says "per-layer" instead of recording
-    // the ignored global pair
-    let mut meta_pairs = vec![
-        ("method", Json::str(method.name())),
-        (
-            "format",
-            match &cfg.plan {
-                Some(_) => Json::str("per-layer"),
-                None => Json::str(cfg.fmt.name()),
-            },
-        ),
-        (
-            "rank",
-            match &cfg.plan {
-                Some(_) => Json::Null,
-                None => Json::Num(cfg.rank as f64),
-            },
-        ),
-        ("seed", Json::Num(cfg.seed as f64)),
-        ("svd", Json::str(svd.name())),
-        ("psd", Json::str(psd.name())),
-    ];
-    if let Some(p) = &cfg.plan {
-        meta_pairs.push(("plan_strategy", Json::str(p.strategy.name())));
-        meta_pairs.push(("budget_bits", Json::Num(p.budget_bits)));
-        meta_pairs.push(("plan_bits", Json::Num(p.achieved_bits)));
-    }
-    let meta = Json::obj(meta_pairs);
-    let fmts: BTreeMap<String, QFormat> = sites
-        .iter()
-        .map(|s| {
-            let fmt = cfg
-                .plan
-                .as_ref()
-                .and_then(|p| p.cell(&s.name))
-                .map(|c| c.fmt)
-                .unwrap_or(cfg.fmt);
-            (s.name.clone(), fmt)
-        })
-        .collect();
+    let meta = build_meta(cfg, &rp);
+    let fmts: BTreeMap<String, QFormat> =
+        sites.iter().map(|s| (s.name.clone(), site_plan(cfg, &s.name).0)).collect();
     let qckpt = QuantCheckpoint::from_solved_per_site(ckpt, &fmts, &solved, meta);
     let merged = qckpt.materialize_merged();
     match &cfg.plan {
         Some(p) => crate::info!(
             "quantized {} layers ({}, {} plan, {:.3} bits/weight) in {:.2}s wall / {:.2}s solver",
             sites.len(),
-            method.name(),
+            rp.method.name(),
             p.strategy.name(),
             p.achieved_bits,
             t0.elapsed().as_secs_f64(),
@@ -255,7 +293,7 @@ pub fn quantize(
         None => crate::info!(
             "quantized {} layers ({}, {}, rank {}) in {:.2}s wall / {:.2}s solver",
             sites.len(),
-            method.name(),
+            rp.method.name(),
             cfg.fmt.name(),
             cfg.rank,
             t0.elapsed().as_secs_f64(),

@@ -1,0 +1,403 @@
+//! Bounded-memory streaming quantization: load layer shard → solve → pack
+//! → write shard → drop.
+//!
+//! [`quantize_streaming`] never materializes the model.  A prefetch thread
+//! reads one parameter group ahead (through [`crate::model::ckpt::open`],
+//! so both monolithic and sharded sources stream), the main thread runs
+//! the per-layer solves on the worker pool, and a writer thread emits
+//! finished shards with integrity hashes — three stages overlapped through
+//! capacity-1 channels, so peak live tensor memory is a small constant
+//! number of layer groups regardless of model depth.
+//!
+//! Bit-identity with the in-memory path is a hard invariant: the same
+//! `resolve`/`solve_site`/`build_meta` plumbing runs with the same GLOBAL
+//! site indices (the per-site solver seed derives from them), so a
+//! streamed checkpoint round-trips identically to
+//! `coordinator::quantize` + `save_sharded`.
+//!
+//! Peak memory is tracked by a per-run [`LiveSet`] (an atomic live-bytes
+//! counter with RAII guards) and reported in
+//! [`StreamSummary::peak_live_bytes`]; the integration suite asserts it
+//! stays flat as the layer count grows.
+
+use super::calibrate::CalibResult;
+use super::pipeline::{self, LayerDiag, PipelineConfig};
+use crate::model::ckpt::{open, CkptReader, QWeight};
+use crate::model::shard::{param_groups, CkptKind, ShardParam, ShardWriter};
+use crate::quant::PackedWeight;
+use crate::solver::{self, SolveOutput};
+use crate::tensor::Tensor;
+use crate::util::pool;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Result of a streaming quantization run.
+#[derive(Debug)]
+pub struct StreamSummary {
+    /// Path of the written manifest.
+    pub manifest: PathBuf,
+    /// Number of shards written.
+    pub n_shards: usize,
+    /// Per-layer diagnostics in global site order (same order as
+    /// `QuantizedModel::diags`).
+    pub diags: Vec<LayerDiag>,
+    /// Total solver wall time (sequential sum, as the paper reports).
+    pub solve_ms_total: f64,
+    /// Serialized weight payload across all shards.
+    pub payload_bytes: usize,
+    /// High-water mark of live tensor bytes across all pipeline stages —
+    /// bounded by a constant number of layer groups, not the model.
+    pub peak_live_bytes: usize,
+}
+
+/// Per-run live-bytes accounting: `add` bumps the counter and returns a
+/// guard that decrements on drop, so every pipeline stage's working set is
+/// tracked for exactly as long as it is actually held.
+struct LiveSet {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl LiveSet {
+    fn new() -> Arc<LiveSet> {
+        Arc::new(LiveSet { current: AtomicUsize::new(0), peak: AtomicUsize::new(0) })
+    }
+
+    fn add(self: &Arc<LiveSet>, bytes: usize) -> LiveGuard {
+        let cur = self.current.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.peak.fetch_max(cur, Ordering::SeqCst);
+        LiveGuard { set: Arc::clone(self), bytes }
+    }
+
+    fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+struct LiveGuard {
+    set: Arc<LiveSet>,
+    bytes: usize,
+}
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.set.current.fetch_sub(self.bytes, Ordering::SeqCst);
+    }
+}
+
+/// Read one parameter group's dense tensors, registering their bytes with
+/// the live-set for as long as the returned guard lives.
+fn load_group(
+    reader: &CkptReader,
+    names: &[String],
+    live: &Arc<LiveSet>,
+) -> Result<(Vec<(String, Tensor)>, LiveGuard)> {
+    let params = reader.read_params(names)?;
+    let mut tensors = Vec::with_capacity(names.len());
+    let mut bytes = 0usize;
+    for (name, p) in names.iter().zip(params) {
+        let ShardParam::Dense(t) = p else {
+            bail!("quantized entry '{name}' in streaming quantization source");
+        };
+        bytes += t.numel() * 4;
+        tensors.push((name.clone(), t));
+    }
+    Ok((tensors, live.add(bytes)))
+}
+
+/// Quantize `src` (monolithic `QKPT1` or a sharded dense manifest) into a
+/// sharded quantized checkpoint at `out_manifest`, holding only a bounded
+/// number of layer groups in memory: shard reads, per-layer solves, and
+/// shard writes overlap on three stages.
+///
+/// `shard_layers` sets both the output sharding and the streaming
+/// granularity (transformer blocks per group; `0` is treated as `1`).
+/// The result is bit-identical to `coordinator::quantize` followed by
+/// `QuantCheckpoint::save_sharded` with the same config.
+pub fn quantize_streaming(
+    src: impl AsRef<Path>,
+    cfg: &PipelineConfig,
+    calib: Option<&CalibResult>,
+    out_manifest: impl AsRef<Path>,
+    shard_layers: usize,
+) -> Result<StreamSummary> {
+    let t0 = std::time::Instant::now();
+    let reader = open(src.as_ref())?;
+    ensure!(
+        reader.kind() == CkptKind::Dense,
+        "streaming quantization needs a dense source checkpoint, got a quantized one"
+    );
+    let spec = reader.spec().clone();
+    let sites = spec.linear_sites();
+    let rp = pipeline::resolve(cfg, &spec, &sites, calib)?;
+    let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
+    // param name -> global site index: the solver seed derives from the
+    // global index, which keeps streamed solves bit-identical to in-memory
+    let site_index: BTreeMap<&str, usize> =
+        sites.iter().enumerate().map(|(i, s)| (s.name.as_str(), i)).collect();
+
+    let layout = spec.param_layout();
+    let groups = param_groups(&spec, shard_layers);
+    let group_names: Vec<Vec<String>> = groups
+        .iter()
+        .map(|g| g.iter().map(|&i| layout[i].0.clone()).collect())
+        .collect();
+    let n_groups = groups.len();
+
+    let meta = pipeline::build_meta(cfg, &rp);
+    let writer =
+        ShardWriter::create(out_manifest.as_ref(), CkptKind::Quant, spec.clone(), meta)?;
+
+    let live = LiveSet::new();
+
+    // stage 1: prefetch reads one group ahead of the solver
+    type InMsg = Result<(Vec<(String, Tensor)>, LiveGuard)>;
+    let (tx_in, rx_in) = mpsc::sync_channel::<InMsg>(1);
+    let live_in = Arc::clone(&live);
+    let prefetch = std::thread::spawn(move || {
+        for names in &group_names {
+            let res = load_group(&reader, names, &live_in);
+            let failed = res.is_err();
+            if tx_in.send(res).is_err() || failed {
+                return;
+            }
+        }
+    });
+
+    // stage 3: writer streams finished shards out while the next solves run
+    type OutMsg = (Vec<(String, ShardParam)>, LiveGuard);
+    let (tx_out, rx_out) = mpsc::sync_channel::<OutMsg>(1);
+    let writer_handle = std::thread::spawn(move || -> Result<ShardWriter> {
+        let mut w = writer;
+        for (entries, guard) in rx_out {
+            w.write_shard(entries)?;
+            drop(guard);
+        }
+        Ok(w)
+    });
+
+    // stage 2 (this thread): solve each group's sites on the pool, pack,
+    // and hand the shard to the writer
+    let mut diags = Vec::with_capacity(sites.len());
+    let mut solve_ms_total = 0.0f64;
+    let mut payload_bytes = 0usize;
+    let mut err: Option<anyhow::Error> = None;
+    for msg in rx_in.iter() {
+        let (tensors, in_guard) = match msg {
+            Ok(v) => v,
+            Err(e) => {
+                err = Some(e);
+                break;
+            }
+        };
+        // (position in group, global site index) for the group's linears
+        let group_sites: Vec<(usize, usize)> = tensors
+            .iter()
+            .enumerate()
+            .filter_map(|(k, (name, _))| site_index.get(name.as_str()).map(|&si| (k, si)))
+            .collect();
+        let results: Vec<Result<SolveOutput>> =
+            pool::parallel_map(group_sites.len(), workers, |j| {
+                let (k, si) = group_sites[j];
+                pipeline::solve_site(cfg, &rp, &sites[si], si, &tensors[k].1, calib)
+            });
+        let mut outs: BTreeMap<usize, SolveOutput> = BTreeMap::new();
+        let mut group_err = None;
+        for (&(k, si), res) in group_sites.iter().zip(results) {
+            match res {
+                Ok(out) => {
+                    diags.push(LayerDiag {
+                        name: sites[si].name.clone(),
+                        weight_error: solver::weight_error(&tensors[k].1, &out),
+                        wall_ms: out.wall_ms,
+                    });
+                    solve_ms_total += out.wall_ms;
+                    outs.insert(k, out);
+                }
+                Err(e) => {
+                    group_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = group_err {
+            err = Some(e);
+            break;
+        }
+        let mut entries = Vec::with_capacity(tensors.len());
+        let mut group_payload = 0usize;
+        for (k, (name, w)) in tensors.into_iter().enumerate() {
+            let p = match outs.remove(&k) {
+                Some(out) => {
+                    // pack from the ORIGINAL weight, exactly like
+                    // `from_solved_per_site`; identity formats fall back to
+                    // the dense dequantized solve
+                    let (fmt, _) = pipeline::site_plan(cfg, &name);
+                    let qw = match PackedWeight::quantize(w.data(), &fmt) {
+                        Some(pw) => QWeight::Packed { shape: w.shape().to_vec(), pw },
+                        None => QWeight::Dense(out.w_dq),
+                    };
+                    ShardParam::Quant { qw, lr: out.lowrank }
+                }
+                None => ShardParam::Dense(w),
+            };
+            group_payload += p.payload_bytes();
+            entries.push((name, p));
+        }
+        payload_bytes += group_payload;
+        let out_guard = live.add(group_payload);
+        drop(in_guard); // source tensors are packed or moved into entries
+        if tx_out.send((entries, out_guard)).is_err() {
+            // writer bailed; its error surfaces at join below
+            break;
+        }
+    }
+    drop(rx_in); // unblocks the prefetcher if it is mid-send
+    drop(tx_out); // closes the writer's queue
+
+    prefetch.join().map_err(|_| anyhow!("prefetch thread panicked"))?;
+    let writer_res =
+        writer_handle.join().map_err(|_| anyhow!("shard writer thread panicked"))?;
+    if let Some(e) = err {
+        return Err(e);
+    }
+    let writer = writer_res?;
+    // the manifest is written last: a failed run leaves no loadable output
+    let manifest = writer.finish()?;
+
+    crate::info!(
+        "stream-quantized {} layers into {} shards ({:.1} KiB peak live) in {:.2}s wall / {:.2}s solver",
+        sites.len(),
+        n_groups,
+        live.peak() as f64 / 1024.0,
+        t0.elapsed().as_secs_f64(),
+        solve_ms_total / 1e3,
+    );
+
+    Ok(StreamSummary {
+        manifest,
+        n_shards: n_groups,
+        diags,
+        solve_ms_total,
+        payload_bytes,
+        peak_live_bytes: live.peak(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::quantize;
+    use crate::model::init::init_params;
+    use crate::model::{Checkpoint, ModelSpec, QuantCheckpoint};
+    use crate::quant::QFormat;
+    use crate::solver::Method;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("qera_stream_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn nano_ckpt(seed: u64) -> Checkpoint {
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let params = init_params(&spec, &mut Rng::new(seed));
+        Checkpoint::new(spec, params)
+    }
+
+    fn fmt() -> QFormat {
+        QFormat::Mxint { bits: 4, block: 32 }
+    }
+
+    fn assert_same_model(a: &QuantCheckpoint, b: &QuantCheckpoint) {
+        assert_eq!(a.spec, b.spec);
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(a.lowrank.len(), b.lowrank.len());
+        assert_eq!(a.materialize_merged(), b.materialize_merged());
+        assert_eq!(a.payload_bytes(), b.payload_bytes());
+    }
+
+    #[test]
+    fn streamed_matches_in_memory_bit_for_bit() {
+        let dir = tmpdir("match");
+        let ckpt = nano_ckpt(21);
+        let src = dir.join("src.qkpt");
+        ckpt.save(&src).unwrap();
+        let cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4);
+
+        let qm = quantize(&ckpt, &cfg, None).unwrap();
+        let sum =
+            quantize_streaming(&src, &cfg, None, dir.join("out.manifest.json"), 1).unwrap();
+        let streamed = QuantCheckpoint::load(&sum.manifest).unwrap();
+        assert_same_model(&qm.ckpt, &streamed);
+
+        // diagnostics line up with the in-memory run, site for site
+        assert_eq!(sum.diags.len(), qm.diags.len());
+        for (a, b) in sum.diags.iter().zip(&qm.diags) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.weight_error, b.weight_error, "{}", a.name);
+        }
+        assert_eq!(sum.payload_bytes, qm.ckpt.payload_bytes());
+        assert!(sum.peak_live_bytes > 0);
+    }
+
+    #[test]
+    fn streams_from_sharded_sources_too() {
+        let dir = tmpdir("sharded_src");
+        let ckpt = nano_ckpt(22);
+        let src = ckpt.save_sharded(dir.join("src.manifest.json"), 2).unwrap();
+        let cfg = PipelineConfig::new(Method::WOnly, fmt(), 0);
+
+        let qm = quantize(&ckpt, &cfg, None).unwrap();
+        let sum =
+            quantize_streaming(&src, &cfg, None, dir.join("out.manifest.json"), 1).unwrap();
+        assert_same_model(&qm.ckpt, &QuantCheckpoint::load(&sum.manifest).unwrap());
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let dir = tmpdir("workers");
+        let ckpt = nano_ckpt(23);
+        let src = dir.join("src.qkpt");
+        ckpt.save(&src).unwrap();
+        let mut cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4);
+
+        cfg.workers = 1;
+        let serial =
+            quantize_streaming(&src, &cfg, None, dir.join("serial.manifest.json"), 1).unwrap();
+        cfg.workers = 4;
+        let parallel =
+            quantize_streaming(&src, &cfg, None, dir.join("par.manifest.json"), 1).unwrap();
+        assert_same_model(
+            &QuantCheckpoint::load(&serial.manifest).unwrap(),
+            &QuantCheckpoint::load(&parallel.manifest).unwrap(),
+        );
+    }
+
+    #[test]
+    fn failed_runs_leave_no_manifest() {
+        let dir = tmpdir("no_partial");
+        let ckpt = nano_ckpt(24);
+        let src = dir.join("src.qkpt");
+        ckpt.save(&src).unwrap();
+        // qera-approx without calibration fails in resolve()…
+        let out = dir.join("out.manifest.json");
+        let err = quantize_streaming(
+            &src,
+            &PipelineConfig::new(Method::QeraApprox, fmt(), 4),
+            None,
+            &out,
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("calibration"), "{err}");
+        // …and no manifest appears (shards without a manifest are inert)
+        assert!(!out.exists());
+    }
+}

@@ -54,7 +54,7 @@ pub fn corpus_for(spec: &ModelSpec) -> (Corpus, Corpus) {
 pub fn subject_model(reg: &Registry, spec: &ModelSpec, scale: Scale) -> Result<Checkpoint> {
     let steps = scale.pretrain_steps(spec);
     let path = format!("results/{}-s{}.qkpt", spec.name, steps);
-    if let Ok(ckpt) = Checkpoint::load(&path) {
+    if let Ok(ckpt) = crate::model::open(&path).and_then(|r| r.into_dense()) {
         if ckpt.spec == *spec {
             crate::info!("subject model cache hit: {path}");
             return Ok(ckpt);

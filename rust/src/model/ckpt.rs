@@ -1,4 +1,6 @@
-//! Checkpoint formats.
+//! Checkpoint formats and the unified reader entry point.
+//!
+//! Three on-disk layouts, one `open()`:
 //!
 //! * [`Checkpoint`] — dense f32 (`QKPT1`): the pretrained subject models and
 //!   fine-tuned outputs.
@@ -8,17 +10,31 @@
 //!   pairs stored f32.  The native execution backend runs straight from
 //!   the packed payloads; dense materialization remains for the stub/LoRA
 //!   paths.
+//! * Sharded — a JSON manifest plus integrity-hashed shard files (see
+//!   [`super::shard`]), for models that should never be materialized
+//!   whole.
+//!
+//! [`open`] sniffs the format from the first bytes and returns a
+//! [`CkptReader`] that can load the whole model, one shard, or one named
+//! parameter at a time.  `Checkpoint::load` / `QuantCheckpoint::load`
+//! remain as thin compat wrappers over `open()`.
+//!
+//! All three layouts share the same per-parameter record encodings (the
+//! `write_*_record` helpers below), so sharded round-trips are
+//! bit-identical to monolithic ones.
 
+use super::shard::{param_groups, CkptKind, ShardParam, ShardSet, ShardWriter};
 use super::spec::ModelSpec;
 use crate::quant::{PackedWeight, QFormat};
 use crate::solver::LowRank;
 use crate::tensor::Tensor;
 use crate::util::fsio::*;
 use crate::util::json::Json;
-use anyhow::{bail, ensure, Context, Result};
+use crate::util::pool;
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const DENSE_MAGIC: &[u8; 5] = b"QKPT1";
 const QUANT_MAGIC: &[u8; 5] = b"QQKP1";
@@ -31,7 +47,7 @@ pub struct Checkpoint {
     pub meta: Json,
 }
 
-fn spec_json(spec: &ModelSpec) -> Json {
+pub(crate) fn spec_json(spec: &ModelSpec) -> Json {
     Json::obj(vec![
         ("name", Json::str(spec.name.clone())),
         ("vocab", Json::Num(spec.vocab as f64)),
@@ -45,7 +61,7 @@ fn spec_json(spec: &ModelSpec) -> Json {
     ])
 }
 
-fn spec_from_json(j: &Json) -> Result<ModelSpec> {
+pub(crate) fn spec_from_json(j: &Json) -> Result<ModelSpec> {
     Ok(ModelSpec {
         name: j.req_str("name")?.to_string(),
         vocab: j.req_usize("vocab")?,
@@ -57,6 +73,182 @@ fn spec_from_json(j: &Json) -> Result<ModelSpec> {
         batch: j.req_usize("batch")?,
         n_classes: j.req_usize("n_classes")?,
     })
+}
+
+fn write_shape(w: &mut impl Write, shape: &[usize]) -> Result<()> {
+    write_u32(w, shape.len() as u32)?;
+    for &d in shape {
+        write_u64(w, d as u64)?;
+    }
+    Ok(())
+}
+
+fn read_shape(r: &mut impl Read) -> Result<Vec<usize>> {
+    let ndim = read_u32(r)? as usize;
+    ensure!(ndim <= 8, "tensor rank too large: {ndim}");
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(read_u64(r)? as usize);
+    }
+    Ok(dims)
+}
+
+// ------------------------------------------------------------------------
+// Shared per-parameter record encodings.  Monolithic containers and shard
+// files both serialize through these, which is what makes sharded and
+// monolithic round-trips bit-identical.
+
+/// Dense record: name + shape + f32 payload (the `QKPT1` body encoding).
+pub(crate) fn write_dense_record(w: &mut impl Write, name: &str, t: &Tensor) -> Result<()> {
+    write_str(w, name)?;
+    write_shape(w, t.shape())?;
+    write_f32s(w, t.data())?;
+    Ok(())
+}
+
+/// Read one dense record, validating name and shape against the layout.
+pub(crate) fn read_dense_record(r: &mut impl Read, name: &str, shape: &[usize]) -> Result<Tensor> {
+    let got = read_str(r)?;
+    ensure!(got == name, "param order mismatch: {got} != {name}");
+    let dims = read_shape(r)?;
+    ensure!(dims == shape, "shape mismatch for {name}");
+    Ok(Tensor::new(dims, read_f32s(r)?))
+}
+
+/// Tagged quantized-checkpoint record (the `QQKP1` body encoding): exactly
+/// one of `dense` (tag 0) or `qw` (tags 1/3/4 packed, tag 2 dense
+/// fallback) must be set.
+pub(crate) fn write_quant_record(
+    w: &mut impl Write,
+    name: &str,
+    dense: Option<&Tensor>,
+    qw: Option<&QWeight>,
+) -> Result<()> {
+    match (dense, qw) {
+        (Some(t), None) => {
+            write_u32(w, 0)?; // dense tag
+            write_str(w, name)?;
+            write_shape(w, t.shape())?;
+            write_f32s(w, t.data())?;
+        }
+        (None, Some(QWeight::Packed { shape, pw })) => match pw {
+            PackedWeight::Mxint { bits, block, packed, exps } => {
+                write_u32(w, 1)?; // mxint tag
+                write_str(w, name)?;
+                write_u32(w, *bits as u32)?;
+                write_u32(w, *block as u32)?;
+                write_shape(w, shape)?;
+                write_bytes(w, packed)?;
+                let eb: Vec<u8> = exps.iter().map(|&e| e as u8).collect();
+                write_bytes(w, &eb)?;
+            }
+            PackedWeight::IntAffine { bits, group, packed, scales, zeros } => {
+                write_u32(w, 3)?; // affine-int tag
+                write_str(w, name)?;
+                write_u32(w, *bits as u32)?;
+                write_u32(w, *group as u32)?;
+                write_shape(w, shape)?;
+                write_bytes(w, packed)?;
+                write_f32s(w, scales)?;
+                write_f32s(w, zeros)?;
+            }
+            PackedWeight::Fp4 { group, packed, scales } => {
+                write_u32(w, 4)?; // fp4 tag
+                write_str(w, name)?;
+                write_u32(w, *group as u32)?;
+                write_shape(w, shape)?;
+                write_bytes(w, packed)?;
+                write_f32s(w, scales)?;
+            }
+        },
+        (None, Some(QWeight::Dense(t))) => {
+            write_u32(w, 2)?; // quantized-dense tag
+            write_str(w, name)?;
+            write_shape(w, t.shape())?;
+            write_f32s(w, t.data())?;
+        }
+        _ => bail!("exactly one of dense/qweight must be set for {name}"),
+    }
+    Ok(())
+}
+
+/// Read one tagged record; returns `(Some(t), None)` for an unquantized
+/// dense entry or `(None, Some(qw))` for a quantized one.  Validates name,
+/// shape, and packed payload sizes.
+pub(crate) fn read_quant_record(
+    r: &mut impl Read,
+    name: &str,
+    shape: &[usize],
+) -> Result<(Option<Tensor>, Option<QWeight>)> {
+    let tag = read_u32(r)?;
+    let got = read_str(r)?;
+    ensure!(got == name, "param order mismatch: {got} vs {name}");
+    match tag {
+        0 | 2 => {
+            let dims = read_shape(r)?;
+            ensure!(dims == shape, "shape mismatch for {name}");
+            let t = Tensor::new(dims, read_f32s(r)?);
+            if tag == 0 {
+                Ok((Some(t), None))
+            } else {
+                Ok((None, Some(QWeight::Dense(t))))
+            }
+        }
+        1 | 3 | 4 => {
+            let (pw, dims) = match tag {
+                1 => {
+                    let bits = read_u32(r)? as u8;
+                    let block = read_u32(r)? as usize;
+                    let dims = read_shape(r)?;
+                    let packed = read_bytes(r)?;
+                    let exps: Vec<i8> = read_bytes(r)?.iter().map(|&b| b as i8).collect();
+                    (PackedWeight::Mxint { bits, block, packed, exps }, dims)
+                }
+                3 => {
+                    let bits = read_u32(r)? as u8;
+                    let group = read_u32(r)? as usize;
+                    let dims = read_shape(r)?;
+                    let packed = read_bytes(r)?;
+                    let scales = read_f32s(r)?;
+                    let zeros = read_f32s(r)?;
+                    (PackedWeight::IntAffine { bits, group, packed, scales, zeros }, dims)
+                }
+                _ => {
+                    let group = read_u32(r)? as usize;
+                    let dims = read_shape(r)?;
+                    let packed = read_bytes(r)?;
+                    let scales = read_f32s(r)?;
+                    (PackedWeight::Fp4 { group, packed, scales }, dims)
+                }
+            };
+            ensure!(dims == shape, "shape mismatch for {name}");
+            pw.validate(dims.iter().product())
+                .with_context(|| format!("packed payload for {name}"))?;
+            Ok((None, Some(QWeight::Packed { shape: dims, pw })))
+        }
+        t => bail!("unknown param tag {t}"),
+    }
+}
+
+/// Low-rank pair body: `m, k, n` dims + f32 `A` + f32 `B` (name is stored
+/// by the caller — inline in shard records, in the trailing section of the
+/// monolithic container).
+pub(crate) fn write_lowrank_record(w: &mut impl Write, lr: &LowRank) -> Result<()> {
+    write_u64(w, lr.a.rows() as u64)?;
+    write_u64(w, lr.a.cols() as u64)?;
+    write_u64(w, lr.b.cols() as u64)?;
+    write_f32s(w, lr.a.data())?;
+    write_f32s(w, lr.b.data())?;
+    Ok(())
+}
+
+pub(crate) fn read_lowrank_record(r: &mut impl Read) -> Result<LowRank> {
+    let m = read_u64(r)? as usize;
+    let k = read_u64(r)? as usize;
+    let n = read_u64(r)? as usize;
+    let a = Tensor::new(vec![m, k], read_f32s(r)?);
+    let b = Tensor::new(vec![k, n], read_f32s(r)?);
+    Ok(LowRank { a, b })
 }
 
 impl Checkpoint {
@@ -74,42 +266,42 @@ impl Checkpoint {
         write_str(&mut w, &self.meta.dump())?;
         write_u32(&mut w, self.params.len() as u32)?;
         for (p, (name, _)) in self.params.iter().zip(self.spec.param_layout()) {
-            write_str(&mut w, &name)?;
-            write_u32(&mut w, p.shape().len() as u32)?;
-            for &d in p.shape() {
-                write_u64(&mut w, d as u64)?;
-            }
-            write_f32s(&mut w, p.data())?;
+            write_dense_record(&mut w, &name, p)?;
         }
         w.flush()?;
         Ok(())
     }
 
-    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let f = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {}", path.as_ref().display()))?;
-        let mut r = BufReader::new(f);
-        let mut magic = [0u8; 5];
-        r.read_exact(&mut magic)?;
-        ensure!(&magic == DENSE_MAGIC, "not a dense qera checkpoint");
-        let spec = spec_from_json(&Json::parse(&read_str(&mut r)?)?)?;
-        let meta = Json::parse(&read_str(&mut r)?)?;
-        let n = read_u32(&mut r)? as usize;
-        let layout = spec.param_layout();
-        ensure!(n == layout.len(), "param count mismatch");
-        let mut params = Vec::with_capacity(n);
-        for (name, shape) in &layout {
-            let got = read_str(&mut r)?;
-            ensure!(&got == name, "param order mismatch: {got} != {name}");
-            let ndim = read_u32(&mut r)? as usize;
-            let mut dims = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                dims.push(read_u64(&mut r)? as usize);
-            }
-            ensure!(&dims == shape, "shape mismatch for {name}");
-            params.push(Tensor::new(dims, read_f32s(&mut r)?));
+    /// Save as a sharded checkpoint (`shard_layers` transformer blocks per
+    /// shard) next to the manifest at `manifest_path`.  Returns the
+    /// manifest path.  This is the in-memory compat path; the streaming
+    /// quantization pipeline writes shards without ever holding the model.
+    pub fn save_sharded(
+        &self,
+        manifest_path: impl AsRef<Path>,
+        shard_layers: usize,
+    ) -> Result<PathBuf> {
+        let layout = self.spec.param_layout();
+        let mut w = ShardWriter::create(
+            manifest_path,
+            CkptKind::Dense,
+            self.spec.clone(),
+            self.meta.clone(),
+        )?;
+        for group in param_groups(&self.spec, shard_layers) {
+            let entries = group
+                .iter()
+                .map(|&i| (layout[i].0.clone(), ShardParam::Dense(self.params[i].clone())))
+                .collect();
+            w.write_shard(entries)?;
         }
-        Ok(Checkpoint { spec, params, meta })
+        w.finish()
+    }
+
+    /// Compat wrapper: `open(path)?.into_dense()`.  Loads monolithic
+    /// `QKPT1` files and sharded manifests alike.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        open(path)?.into_dense()
     }
 
     /// Parameter by name.
@@ -117,6 +309,24 @@ impl Checkpoint {
         let idx = self.spec.param_layout().iter().position(|(n, _)| n == name)?;
         Some(&self.params[idx])
     }
+}
+
+fn load_dense_monolithic(path: &Path) -> Result<Checkpoint> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 5];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == DENSE_MAGIC, "not a dense qera checkpoint");
+    let spec = spec_from_json(&Json::parse(&read_str(&mut r)?)?)?;
+    let meta = Json::parse(&read_str(&mut r)?)?;
+    let n = read_u32(&mut r)? as usize;
+    let layout = spec.param_layout();
+    ensure!(n == layout.len(), "param count mismatch");
+    let mut params = Vec::with_capacity(n);
+    for (name, shape) in &layout {
+        params.push(read_dense_record(&mut r, name, shape)?);
+    }
+    Ok(Checkpoint { spec, params, meta })
 }
 
 /// Storage of one quantized weight.
@@ -147,24 +357,6 @@ impl QWeight {
             QWeight::Packed { pw, .. } => pw.payload_bytes(),
         }
     }
-}
-
-fn write_shape(w: &mut impl Write, shape: &[usize]) -> Result<()> {
-    write_u32(w, shape.len() as u32)?;
-    for &d in shape {
-        write_u64(w, d as u64)?;
-    }
-    Ok(())
-}
-
-fn read_shape(r: &mut impl Read) -> Result<Vec<usize>> {
-    let ndim = read_u32(r)? as usize;
-    ensure!(ndim <= 8, "tensor rank too large: {ndim}");
-    let mut dims = Vec::with_capacity(ndim);
-    for _ in 0..ndim {
-        dims.push(read_u64(r)? as usize);
-    }
-    Ok(dims)
 }
 
 /// Quantized checkpoint: quantized linears (+ low-rank terms) over a dense
@@ -291,144 +483,337 @@ impl QuantCheckpoint {
         let layout = self.spec.param_layout();
         for ((name, _), d) in layout.iter().zip(&self.dense) {
             match d {
-                Some(t) => {
-                    write_u32(&mut w, 0)?; // dense tag
-                    write_str(&mut w, name)?;
-                    write_shape(&mut w, t.shape())?;
-                    write_f32s(&mut w, t.data())?;
-                }
-                None => match &self.qweights[name] {
-                    QWeight::Packed { shape, pw } => match pw {
-                        PackedWeight::Mxint { bits, block, packed, exps } => {
-                            write_u32(&mut w, 1)?; // mxint tag
-                            write_str(&mut w, name)?;
-                            write_u32(&mut w, *bits as u32)?;
-                            write_u32(&mut w, *block as u32)?;
-                            write_shape(&mut w, shape)?;
-                            write_bytes(&mut w, packed)?;
-                            let eb: Vec<u8> = exps.iter().map(|&e| e as u8).collect();
-                            write_bytes(&mut w, &eb)?;
-                        }
-                        PackedWeight::IntAffine { bits, group, packed, scales, zeros } => {
-                            write_u32(&mut w, 3)?; // affine-int tag
-                            write_str(&mut w, name)?;
-                            write_u32(&mut w, *bits as u32)?;
-                            write_u32(&mut w, *group as u32)?;
-                            write_shape(&mut w, shape)?;
-                            write_bytes(&mut w, packed)?;
-                            write_f32s(&mut w, scales)?;
-                            write_f32s(&mut w, zeros)?;
-                        }
-                        PackedWeight::Fp4 { group, packed, scales } => {
-                            write_u32(&mut w, 4)?; // fp4 tag
-                            write_str(&mut w, name)?;
-                            write_u32(&mut w, *group as u32)?;
-                            write_shape(&mut w, shape)?;
-                            write_bytes(&mut w, packed)?;
-                            write_f32s(&mut w, scales)?;
-                        }
-                    },
-                    QWeight::Dense(t) => {
-                        write_u32(&mut w, 2)?; // quantized-dense tag
-                        write_str(&mut w, name)?;
-                        write_shape(&mut w, t.shape())?;
-                        write_f32s(&mut w, t.data())?;
-                    }
-                },
+                Some(t) => write_quant_record(&mut w, name, Some(t), None)?,
+                None => write_quant_record(&mut w, name, None, Some(&self.qweights[name]))?,
             }
         }
         // low-rank section
         write_u32(&mut w, self.lowrank.len() as u32)?;
         for (name, lr) in &self.lowrank {
             write_str(&mut w, name)?;
-            write_u64(&mut w, lr.a.rows() as u64)?;
-            write_u64(&mut w, lr.a.cols() as u64)?;
-            write_u64(&mut w, lr.b.cols() as u64)?;
-            write_f32s(&mut w, lr.a.data())?;
-            write_f32s(&mut w, lr.b.data())?;
+            write_lowrank_record(&mut w, lr)?;
         }
         w.flush()?;
         Ok(())
     }
 
-    pub fn load(path: impl AsRef<Path>) -> Result<QuantCheckpoint> {
-        let f = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {}", path.as_ref().display()))?;
-        let mut r = BufReader::new(f);
-        let mut magic = [0u8; 5];
-        r.read_exact(&mut magic)?;
-        ensure!(&magic == QUANT_MAGIC, "not a quantized qera checkpoint");
-        let spec = spec_from_json(&Json::parse(&read_str(&mut r)?)?)?;
-        let meta = Json::parse(&read_str(&mut r)?)?;
-        let layout = spec.param_layout();
-        let mut dense = Vec::with_capacity(layout.len());
-        let mut qweights = BTreeMap::new();
-        for (name, shape) in &layout {
-            let tag = read_u32(&mut r)?;
-            let got = read_str(&mut r)?;
-            ensure!(&got == name, "param order mismatch: {got} vs {name}");
-            match tag {
-                0 | 2 => {
-                    let dims = read_shape(&mut r)?;
-                    ensure!(&dims == shape, "shape mismatch for {name}");
-                    let t = Tensor::new(dims, read_f32s(&mut r)?);
-                    if tag == 0 {
-                        dense.push(Some(t));
-                    } else {
-                        dense.push(None);
-                        qweights.insert(name.clone(), QWeight::Dense(t));
-                    }
-                }
-                1 | 3 | 4 => {
-                    let (pw, dims) = match tag {
-                        1 => {
-                            let bits = read_u32(&mut r)? as u8;
-                            let block = read_u32(&mut r)? as usize;
-                            let dims = read_shape(&mut r)?;
-                            let packed = read_bytes(&mut r)?;
-                            let exps: Vec<i8> =
-                                read_bytes(&mut r)?.iter().map(|&b| b as i8).collect();
-                            (PackedWeight::Mxint { bits, block, packed, exps }, dims)
-                        }
-                        3 => {
-                            let bits = read_u32(&mut r)? as u8;
-                            let group = read_u32(&mut r)? as usize;
-                            let dims = read_shape(&mut r)?;
-                            let packed = read_bytes(&mut r)?;
-                            let scales = read_f32s(&mut r)?;
-                            let zeros = read_f32s(&mut r)?;
-                            (PackedWeight::IntAffine { bits, group, packed, scales, zeros }, dims)
-                        }
-                        _ => {
-                            let group = read_u32(&mut r)? as usize;
-                            let dims = read_shape(&mut r)?;
-                            let packed = read_bytes(&mut r)?;
-                            let scales = read_f32s(&mut r)?;
-                            (PackedWeight::Fp4 { group, packed, scales }, dims)
-                        }
+    /// Save as a sharded checkpoint; see [`Checkpoint::save_sharded`].
+    pub fn save_sharded(
+        &self,
+        manifest_path: impl AsRef<Path>,
+        shard_layers: usize,
+    ) -> Result<PathBuf> {
+        let layout = self.spec.param_layout();
+        let mut w = ShardWriter::create(
+            manifest_path,
+            CkptKind::Quant,
+            self.spec.clone(),
+            self.meta.clone(),
+        )?;
+        for group in param_groups(&self.spec, shard_layers) {
+            let entries = group
+                .iter()
+                .map(|&i| {
+                    let name = layout[i].0.clone();
+                    let p = match &self.dense[i] {
+                        Some(t) => ShardParam::Dense(t.clone()),
+                        None => ShardParam::Quant {
+                            qw: self.qweights[&name].clone(),
+                            lr: self.lowrank.get(&name).cloned(),
+                        },
                     };
-                    ensure!(&dims == shape, "shape mismatch for {name}");
-                    pw.validate(dims.iter().product())
-                        .with_context(|| format!("packed payload for {name}"))?;
-                    dense.push(None);
-                    qweights.insert(name.clone(), QWeight::Packed { shape: dims, pw });
-                }
-                t => bail!("unknown param tag {t}"),
+                    (name, p)
+                })
+                .collect();
+            w.write_shard(entries)?;
+        }
+        w.finish()
+    }
+
+    /// Compat wrapper: `open(path)?.into_quant()`.  Loads monolithic
+    /// `QQKP1` files and sharded manifests alike.
+    pub fn load(path: impl AsRef<Path>) -> Result<QuantCheckpoint> {
+        open(path)?.into_quant()
+    }
+}
+
+fn load_quant_monolithic(path: &Path) -> Result<QuantCheckpoint> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 5];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == QUANT_MAGIC, "not a quantized qera checkpoint");
+    let spec = spec_from_json(&Json::parse(&read_str(&mut r)?)?)?;
+    let meta = Json::parse(&read_str(&mut r)?)?;
+    let layout = spec.param_layout();
+    let mut dense = Vec::with_capacity(layout.len());
+    let mut qweights = BTreeMap::new();
+    for (name, shape) in &layout {
+        match read_quant_record(&mut r, name, shape)? {
+            (Some(t), None) => dense.push(Some(t)),
+            (None, Some(qw)) => {
+                dense.push(None);
+                qweights.insert(name.clone(), qw);
+            }
+            _ => bail!("malformed record for {name}"),
+        }
+    }
+    let n_lr = read_u32(&mut r)? as usize;
+    let mut lowrank = BTreeMap::new();
+    for _ in 0..n_lr {
+        let name = read_str(&mut r)?;
+        lowrank.insert(name, read_lowrank_record(&mut r)?);
+    }
+    Ok(QuantCheckpoint { spec, dense, qweights, lowrank, meta })
+}
+
+// ------------------------------------------------------------------------
+// Unified reader.
+
+/// Where a [`CkptReader`] gets its data.
+enum Source {
+    DenseMono(Checkpoint),
+    QuantMono(Box<QuantCheckpoint>),
+    Sharded(ShardSet),
+}
+
+/// Versioned checkpoint reader behind [`open`]: one API over monolithic
+/// dense, monolithic quantized, and sharded checkpoints.  Monolithic
+/// sources are held in memory (they were read whole to sniff anyway);
+/// sharded sources load and sha256-verify shards on demand, so callers can
+/// stream one layer group at a time.
+pub struct CkptReader {
+    source: Source,
+}
+
+/// Open any checkpoint — monolithic `QKPT1`/`QQKP1` or a sharded manifest
+/// — sniffing the format from the leading bytes.
+pub fn open(path: impl AsRef<Path>) -> Result<CkptReader> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut head = Vec::new();
+    f.take(5).read_to_end(&mut head)?;
+    let source = if head.as_slice() == DENSE_MAGIC {
+        Source::DenseMono(load_dense_monolithic(path)?)
+    } else if head.as_slice() == QUANT_MAGIC {
+        Source::QuantMono(Box::new(load_quant_monolithic(path)?))
+    } else if head.iter().find(|b| !b.is_ascii_whitespace()) == Some(&b'{') {
+        Source::Sharded(ShardSet::open_manifest(path)?)
+    } else {
+        bail!("unrecognized checkpoint format: {}", path.display());
+    };
+    Ok(CkptReader { source })
+}
+
+impl CkptReader {
+    pub fn kind(&self) -> CkptKind {
+        match &self.source {
+            Source::DenseMono(_) => CkptKind::Dense,
+            Source::QuantMono(_) => CkptKind::Quant,
+            Source::Sharded(s) => s.kind(),
+        }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        match &self.source {
+            Source::DenseMono(c) => &c.spec,
+            Source::QuantMono(q) => &q.spec,
+            Source::Sharded(s) => s.spec(),
+        }
+    }
+
+    pub fn meta(&self) -> &Json {
+        match &self.source {
+            Source::DenseMono(c) => &c.meta,
+            Source::QuantMono(q) => &q.meta,
+            Source::Sharded(s) => s.meta(),
+        }
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.source, Source::Sharded(_))
+    }
+
+    /// Number of independently loadable units (1 for monolithic files).
+    pub fn n_shards(&self) -> usize {
+        match &self.source {
+            Source::Sharded(s) => s.n_shards(),
+            _ => 1,
+        }
+    }
+
+    /// Load one shard's parameters (verified for sharded sources).  A
+    /// monolithic file is a single shard holding the whole model.
+    pub fn read_shard(&self, idx: usize) -> Result<Vec<(String, ShardParam)>> {
+        match &self.source {
+            Source::Sharded(s) => Ok(s.load_shard(idx)?),
+            _ => {
+                ensure!(idx == 0, "monolithic checkpoint has a single shard");
+                let names: Vec<String> =
+                    self.spec().param_layout().into_iter().map(|(n, _)| n).collect();
+                let params = self.read_params(&names)?;
+                Ok(names.into_iter().zip(params).collect())
             }
         }
-        let n_lr = read_u32(&mut r)? as usize;
-        let mut lowrank = BTreeMap::new();
-        for _ in 0..n_lr {
-            let name = read_str(&mut r)?;
-            let m = read_u64(&mut r)? as usize;
-            let k = read_u64(&mut r)? as usize;
-            let n = read_u64(&mut r)? as usize;
-            let a = Tensor::new(vec![m, k], read_f32s(&mut r)?);
-            let b = Tensor::new(vec![k, n], read_f32s(&mut r)?);
-            lowrank.insert(name, LowRank { a, b });
-        }
-        Ok(QuantCheckpoint { spec, dense, qweights, lowrank, meta })
     }
+
+    /// Load named parameters, in the order given.  Sharded sources read
+    /// (and verify) each backing shard at most once per call, so callers
+    /// that group requests by layer keep peak memory at one group.
+    pub fn read_params(&self, names: &[String]) -> Result<Vec<ShardParam>> {
+        match &self.source {
+            Source::DenseMono(c) => {
+                let layout = c.spec.param_layout();
+                let index: BTreeMap<&str, usize> =
+                    layout.iter().enumerate().map(|(i, (n, _))| (n.as_str(), i)).collect();
+                names
+                    .iter()
+                    .map(|name| {
+                        let &i = index
+                            .get(name.as_str())
+                            .ok_or_else(|| anyhow!("unknown param '{name}'"))?;
+                        Ok(ShardParam::Dense(c.params[i].clone()))
+                    })
+                    .collect()
+            }
+            Source::QuantMono(q) => {
+                let layout = q.spec.param_layout();
+                let index: BTreeMap<&str, usize> =
+                    layout.iter().enumerate().map(|(i, (n, _))| (n.as_str(), i)).collect();
+                names
+                    .iter()
+                    .map(|name| {
+                        let &i = index
+                            .get(name.as_str())
+                            .ok_or_else(|| anyhow!("unknown param '{name}'"))?;
+                        Ok(match &q.dense[i] {
+                            Some(t) => ShardParam::Dense(t.clone()),
+                            None => ShardParam::Quant {
+                                qw: q.qweights[name].clone(),
+                                lr: q.lowrank.get(name).cloned(),
+                            },
+                        })
+                    })
+                    .collect()
+            }
+            Source::Sharded(set) => {
+                let mut cache: BTreeMap<usize, BTreeMap<String, ShardParam>> = BTreeMap::new();
+                let mut out = Vec::with_capacity(names.len());
+                for name in names {
+                    let si = set
+                        .shard_of(name)
+                        .ok_or_else(|| anyhow!("unknown param '{name}'"))?;
+                    if !cache.contains_key(&si) {
+                        cache.insert(si, set.load_shard(si)?.into_iter().collect());
+                    }
+                    let p = cache
+                        .get_mut(&si)
+                        .unwrap()
+                        .remove(name)
+                        .ok_or_else(|| anyhow!("param '{name}' requested twice"))?;
+                    out.push(p);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Load a single named parameter.
+    pub fn read_param(&self, name: &str) -> Result<ShardParam> {
+        let mut v = self.read_params(&[name.to_string()])?;
+        Ok(v.pop().unwrap())
+    }
+
+    /// Materialize the whole checkpoint as dense.  Sharded sources load
+    /// shards in parallel on the pool, each sha256-verified; any shard
+    /// failure fails the whole load.
+    pub fn into_dense(self) -> Result<Checkpoint> {
+        match self.source {
+            Source::DenseMono(c) => Ok(c),
+            Source::QuantMono(_) => {
+                bail!("expected a dense checkpoint, found a quantized one")
+            }
+            Source::Sharded(set) => {
+                ensure!(
+                    set.kind() == CkptKind::Dense,
+                    "expected a dense checkpoint, found a quantized one"
+                );
+                let loaded = load_shards_parallel(&set)?;
+                let layout = set.spec().param_layout();
+                let index: BTreeMap<&str, usize> =
+                    layout.iter().enumerate().map(|(i, (n, _))| (n.as_str(), i)).collect();
+                let mut params: Vec<Option<Tensor>> = vec![None; layout.len()];
+                for shard in loaded {
+                    for (name, p) in shard {
+                        let ShardParam::Dense(t) = p else {
+                            bail!("quantized entry '{name}' in a dense checkpoint");
+                        };
+                        params[index[name.as_str()]] = Some(t);
+                    }
+                }
+                let params =
+                    params.into_iter().map(|p| p.expect("coverage checked at open")).collect();
+                Ok(Checkpoint { spec: set.spec().clone(), params, meta: set.meta().clone() })
+            }
+        }
+    }
+
+    /// Materialize the whole checkpoint as quantized.  Sharded sources
+    /// load shards in parallel with sha256 verification.
+    pub fn into_quant(self) -> Result<QuantCheckpoint> {
+        match self.source {
+            Source::QuantMono(q) => Ok(*q),
+            Source::DenseMono(_) => {
+                bail!("expected a quantized checkpoint, found a dense one")
+            }
+            Source::Sharded(set) => {
+                ensure!(
+                    set.kind() == CkptKind::Quant,
+                    "expected a quantized checkpoint, found a dense one"
+                );
+                let loaded = load_shards_parallel(&set)?;
+                let layout = set.spec().param_layout();
+                let index: BTreeMap<&str, usize> =
+                    layout.iter().enumerate().map(|(i, (n, _))| (n.as_str(), i)).collect();
+                let mut dense: Vec<Option<Tensor>> = vec![None; layout.len()];
+                let mut covered = vec![false; layout.len()];
+                let mut qweights = BTreeMap::new();
+                let mut lowrank = BTreeMap::new();
+                for shard in loaded {
+                    for (name, p) in shard {
+                        let i = index[name.as_str()];
+                        covered[i] = true;
+                        match p {
+                            ShardParam::Dense(t) => dense[i] = Some(t),
+                            ShardParam::Quant { qw, lr } => {
+                                qweights.insert(name.clone(), qw);
+                                if let Some(lr) = lr {
+                                    lowrank.insert(name, lr);
+                                }
+                            }
+                        }
+                    }
+                }
+                ensure!(covered.iter().all(|&c| c), "incomplete sharded checkpoint");
+                Ok(QuantCheckpoint {
+                    spec: set.spec().clone(),
+                    dense,
+                    qweights,
+                    lowrank,
+                    meta: set.meta().clone(),
+                })
+            }
+        }
+    }
+}
+
+/// Load every shard of `set` in parallel on the pool; each load verifies
+/// size + sha256 before decoding, and any failure fails the whole load.
+fn load_shards_parallel(set: &ShardSet) -> Result<Vec<Vec<(String, ShardParam)>>> {
+    let n = set.n_shards();
+    let workers = pool::default_workers().min(n.max(1));
+    let results = pool::parallel_map(n, workers, |i| set.load_shard(i));
+    results.into_iter().collect::<Result<Vec<_>, _>>().map_err(Into::into)
 }
 
 #[cfg(test)]
@@ -443,10 +828,42 @@ mod tests {
         dir.join(name)
     }
 
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qera_ckpt_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     fn nano_ckpt(seed: u64) -> Checkpoint {
         let spec = ModelSpec::builtin("nano").unwrap();
         let params = init_params(&spec, &mut Rng::new(seed));
         Checkpoint::new(spec, params)
+    }
+
+    fn mixed_quant(seed: u64) -> (Checkpoint, QuantCheckpoint) {
+        // all three packed formats + low-rank terms in one checkpoint
+        let ckpt = nano_ckpt(seed);
+        let fmts_cycle = [
+            QFormat::Mxint { bits: 4, block: 32 },
+            QFormat::IntAffine { bits: 4, group: 64, refine_iters: 20 },
+            QFormat::Fp4 { group: 64 },
+        ];
+        let mut solved = BTreeMap::new();
+        let mut fmts = BTreeMap::new();
+        let mut rng = Rng::new(seed ^ 0xabc);
+        for (i, site) in ckpt.spec.linear_sites().iter().enumerate() {
+            let fmt = fmts_cycle[i % fmts_cycle.len()];
+            let w = &ckpt.params[site.param_idx];
+            let lr = (i % 2 == 0).then(|| LowRank {
+                a: Tensor::randn(vec![site.shape[0], 3], 0.02, &mut rng),
+                b: Tensor::randn(vec![3, site.shape[1]], 0.02, &mut rng),
+            });
+            solved.insert(site.name.clone(), (fmt.qdq(w), lr));
+            fmts.insert(site.name.clone(), fmt);
+        }
+        let q = QuantCheckpoint::from_solved_per_site(&ckpt, &fmts, &solved, Json::obj(vec![]));
+        (ckpt, q)
     }
 
     #[test]
@@ -623,5 +1040,125 @@ mod tests {
         std::fs::write(&path, b"NOPE!xxxxxxxx").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         assert!(QuantCheckpoint::load(&path).is_err());
+        assert!(open(&path).is_err());
+    }
+
+    #[test]
+    fn sharded_dense_roundtrip_matches_monolithic() {
+        let dir = tmpdir("shard_dense");
+        let ckpt = nano_ckpt(11);
+        let mono = dir.join("m.qkpt");
+        ckpt.save(&mono).unwrap();
+        let manifest = ckpt.save_sharded(dir.join("m.manifest.json"), 2).unwrap();
+
+        let via_mono = Checkpoint::load(&mono).unwrap();
+        let via_shards = Checkpoint::load(&manifest).unwrap();
+        assert_eq!(via_mono.spec, via_shards.spec);
+        assert_eq!(via_mono.params, via_shards.params);
+
+        let r = open(&manifest).unwrap();
+        assert!(r.is_sharded());
+        assert_eq!(r.kind(), CkptKind::Dense);
+        assert!(r.n_shards() > 1);
+    }
+
+    #[test]
+    fn sharded_quant_roundtrip_all_formats() {
+        // all three packed formats + low-rank: sharded load must be
+        // bit-identical to the monolithic one
+        let dir = tmpdir("shard_quant");
+        let (_, q) = mixed_quant(12);
+        let mono = dir.join("q.qqkp");
+        q.save(&mono).unwrap();
+        let manifest = q.save_sharded(dir.join("q.manifest.json"), 1).unwrap();
+
+        let via_mono = QuantCheckpoint::load(&mono).unwrap();
+        let via_shards = QuantCheckpoint::load(&manifest).unwrap();
+        assert_eq!(via_mono.spec, via_shards.spec);
+        assert_eq!(via_mono.dense, via_shards.dense);
+        assert_eq!(via_mono.lowrank.len(), via_shards.lowrank.len());
+        assert_eq!(via_mono.materialize_merged(), via_shards.materialize_merged());
+        assert_eq!(via_mono.payload_bytes(), via_shards.payload_bytes());
+    }
+
+    #[test]
+    fn open_reads_single_params_from_any_source() {
+        let dir = tmpdir("read_param");
+        let (ckpt, q) = mixed_quant(13);
+        let mono_d = dir.join("d.qkpt");
+        ckpt.save(&mono_d).unwrap();
+        let manifest = q.save_sharded(dir.join("q.manifest.json"), 1).unwrap();
+
+        // dense monolithic: one named tensor without loading order context
+        let r = open(&mono_d).unwrap();
+        match r.read_param("blk0.wq").unwrap() {
+            ShardParam::Dense(t) => assert_eq!(&t, ckpt.param("blk0.wq").unwrap()),
+            _ => panic!("dense expected"),
+        }
+
+        // sharded quant: a packed site with its low-rank term
+        let r = open(&manifest).unwrap();
+        match r.read_param("blk0.wq").unwrap() {
+            ShardParam::Quant { qw, lr } => {
+                assert_eq!(qw.dequantize(), q.qweights["blk0.wq"].dequantize());
+                assert_eq!(lr.is_some(), q.lowrank.contains_key("blk0.wq"));
+            }
+            _ => panic!("quant expected"),
+        }
+
+        // kind mismatches are typed failures, not partial loads
+        assert!(open(&mono_d).unwrap().into_quant().is_err());
+        assert!(open(&manifest).unwrap().into_dense().is_err());
+        assert!(r.read_param("blk9.nope").is_err());
+    }
+
+    #[test]
+    fn pre_shard_fixture_still_loads() {
+        // Hand-built QKPT1 bytes (no writer involvement): guards the
+        // monolithic container layout against accidental format drift now
+        // that save/load go through the shared record helpers.
+        let spec = ModelSpec {
+            name: "fixture".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 1,
+            d_ff: 8,
+            seq: 4,
+            batch: 1,
+            n_classes: 2,
+        };
+        let layout = spec.param_layout();
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"QKPT1");
+        let spec_str = "{\"batch\":1,\"d_ff\":8,\"d_model\":4,\"n_classes\":2,\
+                        \"n_heads\":1,\"n_layers\":1,\"name\":\"fixture\",\
+                        \"seq\":4,\"vocab\":8}";
+        write_str(&mut buf, spec_str).unwrap();
+        write_str(&mut buf, "{\"epoch\":3}").unwrap();
+        write_u32(&mut buf, layout.len() as u32).unwrap();
+        let mut want = Vec::new();
+        for (name, shape) in &layout {
+            let numel: usize = shape.iter().product();
+            let data: Vec<f32> = (0..numel).map(|j| j as f32 * 0.5 - 1.0).collect();
+            write_str(&mut buf, name).unwrap();
+            write_u32(&mut buf, shape.len() as u32).unwrap();
+            for &d in shape {
+                write_u64(&mut buf, d as u64).unwrap();
+            }
+            write_f32s(&mut buf, &data).unwrap();
+            want.push(Tensor::new(shape.clone(), data));
+        }
+        let path = tmpfile("fixture_v0.qkpt");
+        std::fs::write(&path, &buf).unwrap();
+
+        let back = open(&path).unwrap();
+        assert!(!back.is_sharded());
+        assert_eq!(back.meta().req_usize("epoch").unwrap(), 3);
+        let back = back.into_dense().unwrap();
+        assert_eq!(back.spec, spec);
+        assert_eq!(back.params, want);
+        // and the compat wrapper sees the same bytes
+        assert_eq!(Checkpoint::load(&path).unwrap().params, want);
     }
 }

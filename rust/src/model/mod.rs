@@ -9,6 +9,8 @@
 pub mod spec;
 pub mod ckpt;
 pub mod init;
+pub mod shard;
 
-pub use ckpt::{Checkpoint, QWeight, QuantCheckpoint};
+pub use ckpt::{open, Checkpoint, CkptReader, QWeight, QuantCheckpoint};
+pub use shard::{CkptKind, ShardError, ShardParam, ShardSet, ShardWriter};
 pub use spec::{LinearSite, ModelSpec, TAP_SITES};

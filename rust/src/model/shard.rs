@@ -1,0 +1,647 @@
+//! Sharded checkpoint storage: a JSON manifest + integrity-hashed shard
+//! files.
+//!
+//! The monolithic `QKPT1`/`QQKP1` containers assume the whole model fits
+//! in RAM; at the paper's flagship scale (4-bit Llama-3.1-70B) neither the
+//! quantization pipeline nor serving can afford that.  A sharded
+//! checkpoint is a directory of shard files — each holding the parameters
+//! of a few transformer blocks — described by a manifest:
+//!
+//! ```json
+//! {
+//!   "format": "qera-ckpt-manifest",
+//!   "version": 1,
+//!   "kind": "quant",
+//!   "spec": { "name": "nano", ... },
+//!   "meta": { "method": "qera-exact", ... },
+//!   "shards": [
+//!     { "file": "nano.shard-000.bin", "bytes": 16520,
+//!       "sha256": "9f2c…", "params": ["embed", "pos_embed"] },
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! Every shard records its byte size and sha256, so readers verify
+//! integrity before deserializing, shards load independently (and
+//! therefore in parallel), and a partial or corrupted transfer fails with
+//! a typed [`ShardError`] instead of a partially-loaded model.  Shard
+//! payloads reuse the exact per-parameter record encodings of the
+//! monolithic containers, so a sharded round-trip is bit-identical to a
+//! monolithic one.
+//!
+//! [`ShardWriter`] streams shards out one group at a time (peak memory =
+//! one shard, not one model); [`ShardSet`] is the verified reader behind
+//! [`super::ckpt::open`].
+
+use super::ckpt::{
+    read_dense_record, read_lowrank_record, read_quant_record, spec_from_json, spec_json,
+    write_dense_record, write_lowrank_record, write_quant_record, QWeight,
+};
+use super::spec::ModelSpec;
+use crate::solver::LowRank;
+use crate::tensor::Tensor;
+use crate::util::fsio::{read_u32, write_atomic, write_u32};
+use crate::util::json::Json;
+use crate::util::sha256;
+use anyhow::{bail, ensure, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Manifest `format` discriminator.
+pub const MANIFEST_FORMAT: &str = "qera-ckpt-manifest";
+/// Current manifest + shard container version.
+pub const MANIFEST_VERSION: u32 = 1;
+/// Magic prefix of every shard file.
+const SHARD_MAGIC: &[u8; 5] = b"QSHD1";
+
+/// What a checkpoint holds: dense f32 params or quantized weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptKind {
+    Dense,
+    Quant,
+}
+
+impl CkptKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CkptKind::Dense => "dense",
+            CkptKind::Quant => "quant",
+        }
+    }
+
+    fn parse(s: &str) -> Option<CkptKind> {
+        match s {
+            "dense" => Some(CkptKind::Dense),
+            "quant" => Some(CkptKind::Quant),
+            _ => None,
+        }
+    }
+
+    fn code(&self) -> u32 {
+        match self {
+            CkptKind::Dense => 0,
+            CkptKind::Quant => 1,
+        }
+    }
+}
+
+/// One parameter's payload inside a shard.
+#[derive(Clone, Debug)]
+pub enum ShardParam {
+    /// Dense f32 tensor — every entry of a dense checkpoint, and the
+    /// unquantized entries (embeddings, LayerNorms) of a quantized one.
+    Dense(Tensor),
+    /// Quantized weight plus its optional low-rank correction.
+    Quant { qw: QWeight, lr: Option<LowRank> },
+}
+
+impl ShardParam {
+    /// Serialized weight payload under the paper's memory accounting
+    /// (mirrors `QuantCheckpoint::payload_bytes` per entry).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            ShardParam::Dense(t) => t.numel() * 4,
+            ShardParam::Quant { qw, lr } => {
+                qw.payload_bytes() + lr.as_ref().map(|l| l.n_params() * 4).unwrap_or(0)
+            }
+        }
+    }
+
+    /// Approximate live f32 bytes this entry holds in memory.
+    pub fn live_bytes(&self) -> usize {
+        self.payload_bytes()
+    }
+}
+
+/// Typed failure modes of sharded checkpoint I/O.  Every load either
+/// returns a fully-verified result or one of these — never a partial
+/// model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardError {
+    /// Manifest references a shard file that cannot be read.
+    MissingShard { file: String, reason: String },
+    /// Shard file size differs from the manifest's `bytes`.
+    Truncated { file: String, expect: u64, got: u64 },
+    /// Shard content hash differs from the manifest's `sha256`.
+    ShaMismatch { file: String, expect: String, got: String },
+    /// Two manifest entries name the same shard file.
+    DuplicateShard { file: String },
+    /// A parameter appears in more than one shard.
+    DuplicateParam { name: String },
+    /// A parameter of the model spec is covered by no shard.
+    MissingParam { name: String },
+    /// Manifest is not valid (json, schema, version, or unknown params).
+    BadManifest { reason: String },
+    /// Shard bytes hash correctly but do not decode (wrong magic/version/
+    /// kind, malformed records, trailing bytes).
+    BadShard { file: String, reason: String },
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::MissingShard { file, reason } => {
+                write!(f, "missing shard file '{file}': {reason}")
+            }
+            ShardError::Truncated { file, expect, got } => {
+                write!(f, "shard '{file}' truncated: {got} bytes on disk, manifest says {expect}")
+            }
+            ShardError::ShaMismatch { file, expect, got } => {
+                write!(
+                    f,
+                    "sha256 mismatch for shard '{file}': computed {got}, manifest says {expect}"
+                )
+            }
+            ShardError::DuplicateShard { file } => {
+                write!(f, "duplicate shard file '{file}' in manifest")
+            }
+            ShardError::DuplicateParam { name } => {
+                write!(f, "param '{name}' appears in more than one shard")
+            }
+            ShardError::MissingParam { name } => {
+                write!(f, "param '{name}' missing from every shard in the manifest")
+            }
+            ShardError::BadManifest { reason } => {
+                write!(f, "invalid checkpoint manifest: {reason}")
+            }
+            ShardError::BadShard { file, reason } => {
+                write!(f, "invalid shard '{file}': {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// One manifest entry: a shard file with its integrity data and the
+/// parameters it contains.
+#[derive(Clone, Debug)]
+pub struct ShardInfo {
+    pub file: String,
+    pub bytes: u64,
+    pub sha256: String,
+    pub params: Vec<String>,
+}
+
+/// Group the canonical parameter layout into shard-sized index groups:
+/// `[embed, pos_embed]`, then `shard_layers` transformer blocks per group,
+/// then `[lnf_g, lnf_b]`.  `shard_layers == 0` is treated as 1.
+pub fn param_groups(spec: &ModelSpec, shard_layers: usize) -> Vec<Vec<usize>> {
+    let per = shard_layers.max(1);
+    let mut groups = vec![vec![0usize, 1]];
+    let mut b = 0;
+    while b < spec.n_layers {
+        let hi = (b + per).min(spec.n_layers);
+        groups.push((2 + b * 10..2 + hi * 10).collect());
+        b = hi;
+    }
+    let tail = 2 + spec.n_layers * 10;
+    groups.push(vec![tail, tail + 1]);
+    groups
+}
+
+/// Streaming shard writer: serialize one parameter group at a time, hash
+/// it while writing, then emit the manifest on [`ShardWriter::finish`].
+/// Peak memory is one shard's worth of serialized bytes, never the model.
+///
+/// The manifest is written last and atomically, so a crashed or failed
+/// write never leaves a loadable-but-incomplete checkpoint behind.
+pub struct ShardWriter {
+    manifest_path: PathBuf,
+    dir: PathBuf,
+    /// Shard file name prefix (the manifest's stem, `.manifest` stripped).
+    prefix: String,
+    kind: CkptKind,
+    spec: ModelSpec,
+    meta: Json,
+    layout: BTreeMap<String, Vec<usize>>,
+    shards: Vec<ShardInfo>,
+    written: BTreeSet<String>,
+}
+
+impl ShardWriter {
+    /// Start a sharded checkpoint at `manifest_path` (shard files are
+    /// created next to it, named `<prefix>.shard-NNN.bin`).
+    pub fn create(
+        manifest_path: impl AsRef<Path>,
+        kind: CkptKind,
+        spec: ModelSpec,
+        meta: Json,
+    ) -> Result<ShardWriter> {
+        let manifest_path = manifest_path.as_ref().to_path_buf();
+        let dir = manifest_path.parent().map(Path::to_path_buf).unwrap_or_else(|| ".".into());
+        std::fs::create_dir_all(&dir)?;
+        let stem =
+            manifest_path.file_stem().and_then(|s| s.to_str()).unwrap_or("ckpt").to_string();
+        let prefix = stem.strip_suffix(".manifest").unwrap_or(&stem).to_string();
+        let layout = spec.param_layout().into_iter().collect();
+        Ok(ShardWriter {
+            manifest_path,
+            dir,
+            prefix,
+            kind,
+            spec,
+            meta,
+            layout,
+            shards: Vec::new(),
+            written: BTreeSet::new(),
+        })
+    }
+
+    /// Serialize `entries` as the next shard, hashing while writing.
+    /// Every entry must name a parameter of the spec, exactly once across
+    /// the whole checkpoint, with a layout-matching shape.
+    pub fn write_shard(&mut self, entries: Vec<(String, ShardParam)>) -> Result<()> {
+        ensure!(!entries.is_empty(), "empty shard");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(SHARD_MAGIC);
+        write_u32(&mut buf, MANIFEST_VERSION)?;
+        write_u32(&mut buf, self.kind.code())?;
+        write_u32(&mut buf, entries.len() as u32)?;
+        let mut names = Vec::with_capacity(entries.len());
+        for (name, param) in &entries {
+            let Some(shape) = self.layout.get(name) else {
+                bail!("shard entry '{name}' is not a parameter of model '{}'", self.spec.name);
+            };
+            if !self.written.insert(name.clone()) {
+                return Err(ShardError::DuplicateParam { name: name.clone() }.into());
+            }
+            match (self.kind, param) {
+                (CkptKind::Dense, ShardParam::Dense(t)) => {
+                    ensure!(t.shape() == &shape[..], "shape mismatch for {name}");
+                    write_dense_record(&mut buf, name, t)?;
+                }
+                (CkptKind::Dense, ShardParam::Quant { .. }) => {
+                    bail!("quantized entry '{name}' in a dense checkpoint shard");
+                }
+                (CkptKind::Quant, ShardParam::Dense(t)) => {
+                    ensure!(t.shape() == &shape[..], "shape mismatch for {name}");
+                    write_quant_record(&mut buf, name, Some(t), None)?;
+                    write_u32(&mut buf, 0)?; // no low-rank
+                }
+                (CkptKind::Quant, ShardParam::Quant { qw, lr }) => {
+                    write_quant_record(&mut buf, name, None, Some(qw))?;
+                    match lr {
+                        Some(lr) => {
+                            write_u32(&mut buf, 1)?;
+                            write_lowrank_record(&mut buf, lr)?;
+                        }
+                        None => write_u32(&mut buf, 0)?,
+                    }
+                }
+            }
+            names.push(name.clone());
+        }
+        let file = format!("{}.shard-{:03}.bin", self.prefix, self.shards.len());
+        let sha = sha256::hex_digest(&buf);
+        write_atomic(self.dir.join(&file), &buf)?;
+        self.shards.push(ShardInfo { file, bytes: buf.len() as u64, sha256: sha, params: names });
+        Ok(())
+    }
+
+    /// Check full parameter coverage and atomically write the manifest.
+    /// Returns the manifest path.
+    pub fn finish(self) -> Result<PathBuf> {
+        for name in self.layout.keys() {
+            if !self.written.contains(name) {
+                return Err(ShardError::MissingParam { name: name.clone() }.into());
+            }
+        }
+        let shards = Json::Arr(
+            self.shards
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("file", Json::str(s.file.clone())),
+                        ("bytes", Json::Num(s.bytes as f64)),
+                        ("sha256", Json::str(s.sha256.clone())),
+                        ("params", Json::Arr(s.params.iter().map(Json::str).collect())),
+                    ])
+                })
+                .collect(),
+        );
+        let manifest = Json::obj(vec![
+            ("format", Json::str(MANIFEST_FORMAT)),
+            ("version", Json::Num(MANIFEST_VERSION as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("spec", spec_json(&self.spec)),
+            ("meta", self.meta.clone()),
+            ("shards", shards),
+        ]);
+        write_atomic(&self.manifest_path, manifest.dump_pretty().as_bytes())?;
+        Ok(self.manifest_path)
+    }
+}
+
+/// A parsed, schema-validated sharded checkpoint: the typed low-level
+/// reader behind `ckpt::open`.  Construction validates the manifest
+/// (version, kind, spec, shard uniqueness, exact parameter coverage);
+/// [`ShardSet::load_shard`] verifies size + sha256 before decoding.
+pub struct ShardSet {
+    dir: PathBuf,
+    pub(crate) kind: CkptKind,
+    pub(crate) spec: ModelSpec,
+    pub(crate) meta: Json,
+    shards: Vec<ShardInfo>,
+    layout: BTreeMap<String, Vec<usize>>,
+    /// Parameter name → index of the shard containing it.
+    by_param: BTreeMap<String, usize>,
+}
+
+fn bad(reason: impl Into<String>) -> ShardError {
+    ShardError::BadManifest { reason: reason.into() }
+}
+
+impl ShardSet {
+    /// Parse and validate a manifest file.
+    pub fn open_manifest(path: &Path) -> Result<ShardSet, ShardError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| bad(format!("reading {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| bad(format!("{e:?}")))?;
+        Self::from_json(path, &j)
+    }
+
+    fn from_json(path: &Path, j: &Json) -> Result<ShardSet, ShardError> {
+        let fmt = j.req_str("format").map_err(|e| bad(format!("{e:#}")))?;
+        if fmt != MANIFEST_FORMAT {
+            return Err(bad(format!("unknown format '{fmt}'")));
+        }
+        let version = j.req_usize("version").map_err(|e| bad(format!("{e:#}")))? as u32;
+        if version != MANIFEST_VERSION {
+            return Err(bad(format!(
+                "unsupported manifest version {version} (this build reads {MANIFEST_VERSION})"
+            )));
+        }
+        let kind_s = j.req_str("kind").map_err(|e| bad(format!("{e:#}")))?;
+        let kind = CkptKind::parse(kind_s).ok_or_else(|| bad(format!("unknown kind '{kind_s}'")))?;
+        let spec = spec_from_json(j.get("spec").ok_or_else(|| bad("missing 'spec'"))?)
+            .map_err(|e| bad(format!("{e:#}")))?;
+        let meta = j.get("meta").cloned().unwrap_or_else(|| Json::obj(vec![]));
+        let layout: BTreeMap<String, Vec<usize>> = spec.param_layout().into_iter().collect();
+
+        let mut shards = Vec::new();
+        let mut files = BTreeSet::new();
+        let mut by_param = BTreeMap::new();
+        for entry in j.req_arr("shards").map_err(|e| bad(format!("{e:#}")))? {
+            let file = entry.req_str("file").map_err(|e| bad(format!("{e:#}")))?.to_string();
+            let bytes = entry.req_f64("bytes").map_err(|e| bad(format!("{e:#}")))? as u64;
+            let sha256 = entry.req_str("sha256").map_err(|e| bad(format!("{e:#}")))?.to_string();
+            if !files.insert(file.clone()) {
+                return Err(ShardError::DuplicateShard { file });
+            }
+            let mut params = Vec::new();
+            for p in entry.req_arr("params").map_err(|e| bad(format!("{e:#}")))? {
+                let name = p.as_str().ok_or_else(|| bad("non-string param name"))?.to_string();
+                if !layout.contains_key(&name) {
+                    return Err(bad(format!(
+                        "shard '{file}' lists unknown param '{name}' for model '{}'",
+                        spec.name
+                    )));
+                }
+                if by_param.insert(name.clone(), shards.len()).is_some() {
+                    return Err(ShardError::DuplicateParam { name });
+                }
+                params.push(name);
+            }
+            shards.push(ShardInfo { file, bytes, sha256, params });
+        }
+        for name in layout.keys() {
+            if !by_param.contains_key(name) {
+                return Err(ShardError::MissingParam { name: name.clone() });
+            }
+        }
+        let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(|| ".".into());
+        Ok(ShardSet { dir, kind, spec, meta, shards, layout, by_param })
+    }
+
+    pub fn kind(&self) -> CkptKind {
+        self.kind
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, idx: usize) -> &ShardInfo {
+        &self.shards[idx]
+    }
+
+    /// Index of the shard holding `name` (validated total at open time).
+    pub fn shard_of(&self, name: &str) -> Option<usize> {
+        self.by_param.get(name).copied()
+    }
+
+    /// Read, verify (size + sha256), and decode one shard.  Fails with a
+    /// typed [`ShardError`] before any partial result escapes.
+    pub fn load_shard(&self, idx: usize) -> Result<Vec<(String, ShardParam)>, ShardError> {
+        let info = &self.shards[idx];
+        let path = self.dir.join(&info.file);
+        let bytes = std::fs::read(&path).map_err(|e| ShardError::MissingShard {
+            file: info.file.clone(),
+            reason: e.to_string(),
+        })?;
+        if bytes.len() as u64 != info.bytes {
+            return Err(ShardError::Truncated {
+                file: info.file.clone(),
+                expect: info.bytes,
+                got: bytes.len() as u64,
+            });
+        }
+        let got = sha256::hex_digest(&bytes);
+        if got != info.sha256 {
+            return Err(ShardError::ShaMismatch {
+                file: info.file.clone(),
+                expect: info.sha256.clone(),
+                got,
+            });
+        }
+        self.decode_shard(info, &bytes)
+            .map_err(|e| ShardError::BadShard { file: info.file.clone(), reason: format!("{e:#}") })
+    }
+
+    fn decode_shard(&self, info: &ShardInfo, bytes: &[u8]) -> Result<Vec<(String, ShardParam)>> {
+        ensure!(bytes.len() >= 5 && &bytes[..5] == SHARD_MAGIC, "bad shard magic");
+        let mut r = &bytes[5..];
+        let version = read_u32(&mut r)?;
+        ensure!(version == MANIFEST_VERSION, "unsupported shard version {version}");
+        let kind_code = read_u32(&mut r)?;
+        ensure!(kind_code == self.kind.code(), "shard kind does not match manifest");
+        let n = read_u32(&mut r)? as usize;
+        ensure!(
+            n == info.params.len(),
+            "entry count {} != manifest params {}",
+            n,
+            info.params.len()
+        );
+        let mut out = Vec::with_capacity(n);
+        for name in &info.params {
+            let shape = &self.layout[name];
+            let param = match self.kind {
+                CkptKind::Dense => ShardParam::Dense(read_dense_record(&mut r, name, shape)?),
+                CkptKind::Quant => {
+                    let (dense, qw) = read_quant_record(&mut r, name, shape)?;
+                    let has_lr = read_u32(&mut r)?;
+                    let lr = match has_lr {
+                        0 => None,
+                        1 => Some(read_lowrank_record(&mut r)?),
+                        v => bail!("bad low-rank flag {v} for {name}"),
+                    };
+                    match (dense, qw) {
+                        (Some(t), None) => {
+                            ensure!(lr.is_none(), "low-rank on unquantized param {name}");
+                            ShardParam::Dense(t)
+                        }
+                        (None, Some(qw)) => ShardParam::Quant { qw, lr },
+                        _ => bail!("malformed record for {name}"),
+                    }
+                }
+            };
+            out.push((name.clone(), param));
+        }
+        ensure!(r.is_empty(), "{} trailing bytes after the last record", r.len());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ckpt::{open, Checkpoint};
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("qera_shard_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn nano_ckpt(seed: u64) -> Checkpoint {
+        let spec = ModelSpec::builtin("nano").unwrap();
+        let params = init_params(&spec, &mut Rng::new(seed));
+        Checkpoint::new(spec, params)
+    }
+
+    #[test]
+    fn param_groups_cover_layout_exactly_once() {
+        let spec = ModelSpec::builtin("nano").unwrap();
+        for per in [0usize, 1, 2, 5] {
+            let groups = param_groups(&spec, per);
+            let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            let want: Vec<usize> = (0..spec.param_layout().len()).collect();
+            assert_eq!(seen, want, "shard_layers={per}");
+        }
+        // one block per shard: head + n_layers + tail groups
+        assert_eq!(param_groups(&spec, 1).len(), spec.n_layers + 2);
+    }
+
+    #[test]
+    fn manifest_validation_catches_schema_abuse() {
+        let dir = tmpdir("schema");
+        let ckpt = nano_ckpt(1);
+        let manifest = dir.join("m.manifest.json");
+        ckpt.save_sharded(&manifest, 1).unwrap();
+        let text = std::fs::read_to_string(&manifest).unwrap();
+
+        // duplicate shard file entries
+        let j = Json::parse(&text).unwrap();
+        let mut obj = j.as_obj().unwrap().clone();
+        let mut shards = obj["shards"].as_arr().unwrap().to_vec();
+        shards.push(shards[0].clone());
+        obj.insert("shards".into(), Json::Arr(shards));
+        let err = ShardSet::from_json(&manifest, &Json::Obj(obj)).unwrap_err();
+        assert!(matches!(err, ShardError::DuplicateShard { .. }), "{err}");
+
+        // a shard dropped from the manifest -> params uncovered
+        let j = Json::parse(&text).unwrap();
+        let mut obj = j.as_obj().unwrap().clone();
+        let shards = obj["shards"].as_arr().unwrap()[1..].to_vec();
+        obj.insert("shards".into(), Json::Arr(shards));
+        let err = ShardSet::from_json(&manifest, &Json::Obj(obj)).unwrap_err();
+        assert!(matches!(err, ShardError::MissingParam { .. }), "{err}");
+
+        // future version refused
+        let j = Json::parse(&text).unwrap();
+        let mut obj = j.as_obj().unwrap().clone();
+        obj.insert("version".into(), Json::Num(99.0));
+        let err = ShardSet::from_json(&manifest, &Json::Obj(obj)).unwrap_err();
+        assert!(matches!(err, ShardError::BadManifest { .. }), "{err}");
+    }
+
+    #[test]
+    fn writer_rejects_duplicates_and_incomplete_coverage() {
+        let dir = tmpdir("writer");
+        let ckpt = nano_ckpt(2);
+        let spec = ckpt.spec.clone();
+        let mut w = ShardWriter::create(
+            dir.join("w.manifest.json"),
+            CkptKind::Dense,
+            spec,
+            Json::obj(vec![]),
+        )
+        .unwrap();
+        w.write_shard(vec![("embed".into(), ShardParam::Dense(ckpt.params[0].clone()))]).unwrap();
+        // duplicate param
+        let err = w
+            .write_shard(vec![("embed".into(), ShardParam::Dense(ckpt.params[0].clone()))])
+            .unwrap_err();
+        assert!(err.to_string().contains("more than one shard"), "{err}");
+        // unknown param
+        let err = w
+            .write_shard(vec![("nope".into(), ShardParam::Dense(ckpt.params[0].clone()))])
+            .unwrap_err();
+        assert!(err.to_string().contains("not a parameter"), "{err}");
+        // incomplete coverage at finish
+        let err = w.finish().unwrap_err();
+        assert!(err.to_string().contains("missing from every shard"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_shards_fail_typed_never_partial() {
+        let dir = tmpdir("corrupt");
+        let ckpt = nano_ckpt(3);
+        let manifest = dir.join("c.manifest.json");
+        ckpt.save_sharded(&manifest, 1).unwrap();
+        let set = ShardSet::open_manifest(&manifest).unwrap();
+        assert_eq!(set.n_shards(), ckpt.spec.n_layers + 2);
+        let victim = dir.join(&set.shard(1).file);
+        let orig = std::fs::read(&victim).unwrap();
+
+        // sha256 mismatch: flip one payload byte, keep the length
+        let mut flipped = orig.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&victim, &flipped).unwrap();
+        let err = set.load_shard(1).unwrap_err();
+        assert!(matches!(err, ShardError::ShaMismatch { .. }), "{err}");
+        assert!(open(&manifest).unwrap().into_dense().is_err(), "full load must fail too");
+
+        // truncated shard
+        std::fs::write(&victim, &orig[..orig.len() - 7]).unwrap();
+        let err = set.load_shard(1).unwrap_err();
+        assert!(matches!(err, ShardError::Truncated { .. }), "{err}");
+
+        // missing shard file
+        std::fs::remove_file(&victim).unwrap();
+        let err = set.load_shard(1).unwrap_err();
+        assert!(matches!(err, ShardError::MissingShard { .. }), "{err}");
+        assert!(open(&manifest).unwrap().into_dense().is_err());
+
+        // restore -> loads again
+        std::fs::write(&victim, &orig).unwrap();
+        assert_eq!(set.load_shard(1).unwrap().len(), 10);
+        assert_eq!(open(&manifest).unwrap().into_dense().unwrap().params, ckpt.params);
+    }
+}

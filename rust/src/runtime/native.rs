@@ -182,6 +182,14 @@ impl NativeModel {
         NativeModel { spec: q.spec.clone(), params }
     }
 
+    /// Load a quantized checkpoint from disk — monolithic `.qkpt` or a
+    /// sharded manifest, sniffed by [`crate::model::open`] — and build the
+    /// fused-execution model.  Sharded sources load their shards in
+    /// parallel on the worker pool with per-shard sha256 verification.
+    pub fn open_quant(path: impl AsRef<std::path::Path>) -> Result<NativeModel> {
+        Ok(NativeModel::from_quant(&crate::model::open(path)?.into_quant()?))
+    }
+
     /// Total bytes held for quantized sites (packed payloads, not f32).
     pub fn packed_bytes(&self) -> usize {
         self.params
@@ -209,9 +217,18 @@ impl NativeModel {
         }
     }
 
-    /// Trunk forward: tokens `[bsz, s]` (row-major) → final hidden
-    /// `[bsz·s, d]` after the last LayerNorm.
-    fn hidden(&self, tokens: &[i32], bsz: usize, s: usize) -> Tensor {
+    /// Trunk forward shared by [`Self::hidden`] and [`Self::forward_taps`]:
+    /// tokens `[bsz, s]` (row-major) → final hidden `[bsz·s, d]` after the
+    /// last LayerNorm.  With `taps`, every linear-input activation is moved
+    /// out per block in `(block, tap)` order — the native equivalent of the
+    /// `lm_fwd_taps` artifact's `outputs[1..]`.
+    fn trunk(
+        &self,
+        tokens: &[i32],
+        bsz: usize,
+        s: usize,
+        mut taps: Option<&mut Vec<Tensor>>,
+    ) -> Tensor {
         let spec = &self.spec;
         assert_eq!(tokens.len(), bsz * s, "token count mismatch");
         assert!(s <= spec.seq, "sequence {s} exceeds positional table {}", spec.seq);
@@ -238,9 +255,32 @@ impl NativeModel {
             let m_in = layernorm(&x, self.plain(base + 6), self.plain(base + 7));
             let u = self.apply_linear(base + 8, &m_in).map(gelu_tanh);
             x.add_assign(&self.apply_linear(base + 9, &u));
+            if let Some(out) = taps.as_deref_mut() {
+                // attn_in / o_in / mlp_in / mlp_mid — matches TAP_SITES and
+                // therefore `spec.tap_index(blk, tap)` addressing
+                out.extend([h_in, ctx, m_in, u]);
+            }
         }
         let lnf = 2 + spec.n_layers * 10;
         layernorm(&x, self.plain(lnf), self.plain(lnf + 1))
+    }
+
+    /// Trunk forward: tokens `[bsz, s]` (row-major) → final hidden
+    /// `[bsz·s, d]` after the last LayerNorm.
+    fn hidden(&self, tokens: &[i32], bsz: usize, s: usize) -> Tensor {
+        self.trunk(tokens, bsz, s, None)
+    }
+
+    /// Quantizable-linear input activations for one batch, indexed by
+    /// `spec.tap_index(block, tap)`: per block `attn_in` (ln1 output feeding
+    /// q/k/v), `o_in` (attention context feeding `wo`), `mlp_in` (ln2 output
+    /// feeding `w_up`), `mlp_mid` (post-GELU feeding `w_down`).  Each is
+    /// `[bsz·s, tap_dim]` — what [`crate::coordinator::calibrate_native`]
+    /// folds into per-site statistics without any PJRT artifact.
+    pub fn forward_taps(&self, tokens: &[i32], bsz: usize, s: usize) -> Vec<Tensor> {
+        let mut taps = Vec::with_capacity(self.spec.n_taps());
+        self.trunk(tokens, bsz, s, Some(&mut taps));
+        taps
     }
 
     /// Logits `[bsz·s, vocab]` through the tied embedding.
@@ -357,6 +397,28 @@ mod tests {
         assert!(nll.iter().all(|x| x.is_finite() && *x > 0.0));
         let mean = nll.iter().sum::<f32>() / nll.len() as f32;
         assert!((mean - (spec.vocab as f32).ln()).abs() < 1.0, "{mean}");
+    }
+
+    #[test]
+    fn forward_taps_cover_every_site_with_correct_dims() {
+        let m = dense_model("micro", 13);
+        let spec = m.spec.clone();
+        let mut rng = Rng::new(14);
+        let tokens = tokens_for(&spec, &mut rng);
+        let (b, s) = (spec.batch, spec.seq);
+        let taps = m.forward_taps(&tokens, b, s);
+        assert_eq!(taps.len(), spec.n_taps());
+        for blk in 0..spec.n_layers {
+            for &tap in crate::model::TAP_SITES.iter() {
+                let t = &taps[spec.tap_index(blk, tap)];
+                assert_eq!(t.shape(), &[b * s, spec.tap_dim(tap)], "blk{blk}.{tap}");
+                assert!(t.data().iter().all(|x| x.is_finite()), "blk{blk}.{tap}");
+            }
+        }
+        // same trunk as logits(): deterministic, and collecting taps must
+        // not perturb the forward itself
+        assert_eq!(taps, m.forward_taps(&tokens, b, s));
+        assert_eq!(m.logits(&tokens, b, s), m.logits(&tokens, b, s));
     }
 
     fn quant_ckpt(fmt: QFormat, rank: usize, seed: u64) -> (Checkpoint, QuantCheckpoint) {

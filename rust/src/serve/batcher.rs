@@ -17,7 +17,7 @@ use super::daemon::{
     SubmitError, Supervisor,
 };
 use super::engine::Engine;
-use crate::model::{ModelSpec, QuantCheckpoint};
+use crate::model::{CkptKind, ModelSpec, QuantCheckpoint};
 use crate::runtime::ExecBackend;
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -35,6 +35,27 @@ pub enum ServeModel {
 }
 
 impl ServeModel {
+    /// Open a checkpoint for serving — dense or quantized, monolithic or a
+    /// sharded manifest, sniffed by [`crate::model::open`] — returning the
+    /// spec alongside the wrapped weights.  Sharded sources load their
+    /// shards in parallel on the worker pool with per-shard sha256
+    /// verification; a corrupt or truncated shard fails here, before the
+    /// daemon thread ever starts (and, on the [`Server::swap_model`] path,
+    /// before the old model stops serving).
+    pub fn open(path: impl AsRef<std::path::Path>) -> Result<(ModelSpec, ServeModel)> {
+        let reader = crate::model::open(path)?;
+        match reader.kind() {
+            CkptKind::Dense => {
+                let c = reader.into_dense()?;
+                Ok((c.spec.clone(), ServeModel::Dense(c.params)))
+            }
+            CkptKind::Quant => {
+                let q = reader.into_quant()?;
+                Ok((q.spec.clone(), ServeModel::Quant(Box::new(q))))
+            }
+        }
+    }
+
     /// Plan provenance recorded by the budget allocator, if any — surfaced
     /// in [`ServerStats`] so operators can see which plan is serving.
     pub fn telemetry(&self) -> PlanTelemetry {
@@ -563,6 +584,38 @@ mod tests {
         assert_eq!(stats.tokens_generated, 12);
         assert_eq!(stats.swaps, 0);
         assert!(stats.plan_strategy.is_none());
+    }
+
+    #[test]
+    fn serve_model_opens_sharded_checkpoints() {
+        // ServeModel::open sniffs the source; a sharded dense manifest must
+        // serve on the native backend exactly like in-memory params
+        let dir = std::env::temp_dir().join("qera_serve_open_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = ModelSpec::builtin("micro").unwrap();
+        let params = init_params(&spec, &mut crate::util::rng::Rng::new(9));
+        let ckpt = crate::model::Checkpoint::new(spec.clone(), params);
+        let manifest = ckpt.save_sharded(dir.join("micro.manifest.json"), 1).unwrap();
+        let (spec2, model) = ServeModel::open(&manifest).unwrap();
+        assert_eq!(spec2.name, spec.name);
+        assert!(matches!(model, ServeModel::Dense(_)));
+        let server = Server::start_model(
+            PathBuf::from("/nonexistent"),
+            spec2,
+            model,
+            ServerConfig {
+                max_wait: Duration::from_millis(10),
+                backend: crate::runtime::ExecBackend::Native,
+                ..Default::default()
+            },
+        );
+        let h = server.submit(vec![1, 2, 3], 4, 0.0).unwrap();
+        let resp = h.wait_timeout(Duration::from_secs(120)).unwrap().response().unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        server.stop().unwrap();
+        // a missing manifest (or unrecognized file) fails up front
+        assert!(ServeModel::open(dir.join("nope.manifest.json")).is_err());
     }
 
     #[test]

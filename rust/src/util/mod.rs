@@ -6,3 +6,4 @@ pub mod json;
 pub mod pool;
 pub mod logging;
 pub mod fsio;
+pub mod sha256;

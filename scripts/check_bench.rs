@@ -2,7 +2,7 @@
 //! committed `BENCH_baseline.json` and fail on median or tail regressions.
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve ckpt
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json 0.25
 //! ```
@@ -30,7 +30,7 @@
 //! Refreshing the baseline (run on the machine class CI uses, smoke mode):
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve ckpt
 //! cp BENCH_solver.json BENCH_baseline.json   # then commit it
 //! ```
 //!
@@ -39,7 +39,8 @@
 //! kernels), `budget` (the mixed-precision planner's layer x cell
 //! profiling pass), `exec` (the fused-from-packed matmul behind the
 //! native serve/eval backend), `serve` (the supervised daemon end to end —
-//! p50 AND p95 queue/total tails).
+//! p50 AND p95 queue/total tails), `ckpt` (sharded-manifest checkpoint
+//! I/O — the sha256-verified parallel reload is the gated column).
 
 use qera::util::json::Json;
 
@@ -232,7 +233,7 @@ fn main() {
         );
         println!(
             "refresh: QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul \
-             svd matmul solver calib qdq budget exec serve && cp {} {}",
+             svd matmul solver calib qdq budget exec serve ckpt && cp {} {}",
             args[0], args[1]
         );
         return;
