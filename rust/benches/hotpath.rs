@@ -578,13 +578,20 @@ fn bench_exec() -> Table {
 
 /// Checkpoint I/O: the sharded-manifest path (streamed shard writes with
 /// per-shard sha256, then the parallel verified reload behind
-/// `model::open`) against the monolithic single-file load.  The verified
-/// sharded load is the shipped serve / eval cold-start path (last p50 —
-/// the CI gate watches it).
+/// `model::open`) against the monolithic single-file load, plus the
+/// resume-journal scan a crashed `--resume` run pays before any solving
+/// starts.  The verified sharded load is the shipped serve / eval
+/// cold-start path (last p50 — the CI gate watches it, and every "resume
+/// scan" p95).
 fn bench_ckpt() -> Table {
+    use qera::model::shard::param_groups;
+    use qera::model::{CkptKind, ShardParam, ShardWriter};
+    use qera::util::fsio::StdIo;
+    use qera::util::retry::RetryPolicy;
+    use std::sync::Arc;
     let mut t = Table::new(
         "ckpt: monolithic vs sharded manifest I/O (ms)",
-        &["m", "shard write p50", "mono load p50", "sharded verified load p50"],
+        &["m", "shard write p50", "mono load p50", "resume scan p50", "sharded verified load p50"],
     );
     let dir = std::env::temp_dir().join("qera_bench_ckpt");
     std::fs::create_dir_all(&dir).expect("bench tmpdir");
@@ -615,6 +622,36 @@ fn bench_ckpt() -> Table {
             let back = qera::model::open(&mono).and_then(|r| r.into_dense());
             std::hint::black_box(back.expect("monolithic load"));
         });
+        // a crashed streaming run: every shard written and journaled, the
+        // manifest never landed — resume() re-reads the journal and
+        // re-verifies each shard's size + sha256 on disk
+        let jman = dir.join(format!("bench{m}-crash.manifest.json"));
+        {
+            let layout = ckpt.spec.param_layout();
+            let mut w =
+                ShardWriter::create(&jman, CkptKind::Dense, ckpt.spec.clone(), ckpt.meta.clone())
+                    .expect("journaled writer");
+            for group in param_groups(&ckpt.spec, 1) {
+                let entries = group
+                    .iter()
+                    .map(|&i| (layout[i].0.clone(), ShardParam::Dense(ckpt.params[i].clone())))
+                    .collect();
+                w.write_shard(entries).expect("journaled shard write");
+            }
+            // no finish(): the journal stays behind, as after a crash
+        }
+        let resume_scan = time_stats(1, iters, || {
+            let (_, verified) = ShardWriter::resume(
+                &jman,
+                CkptKind::Dense,
+                ckpt.spec.clone(),
+                ckpt.meta.clone(),
+                Arc::new(StdIo),
+                RetryPolicy::io_default(),
+            )
+            .expect("resume scan");
+            std::hint::black_box(verified.len());
+        });
         let shard_load = time_stats(1, iters, || {
             let back = qera::model::open(&manifest).and_then(|r| r.into_dense());
             std::hint::black_box(back.expect("sharded verified load"));
@@ -623,6 +660,7 @@ fn bench_ckpt() -> Table {
             m.to_string(),
             f3(write.p50_ms),
             f3(mono_load.p50_ms),
+            f3(resume_scan.p50_ms),
             f3(shard_load.p50_ms),
         ]);
     }

@@ -13,7 +13,8 @@
 use crate::budget::{self, BudgetPlan};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
-    calibrate, calibrate_native, quantize, quantize_streaming, CalibResult, PipelineConfig,
+    calibrate, calibrate_native, quantize, quantize_streaming_with, CalibResult, PipelineConfig,
+    StreamOptions,
 };
 use crate::data::corpus::Corpus;
 use crate::model::{Checkpoint, ModelSpec};
@@ -63,6 +64,15 @@ impl Args {
         }
     }
 
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key} must be true/false, got '{v}'"),
+            None => Ok(default),
+        }
+    }
+
     /// Fold recognized keys into an [`ExperimentConfig`].
     pub fn to_config(&self) -> Result<ExperimentConfig> {
         let mut cfg = match self.get("config") {
@@ -85,6 +95,7 @@ impl Args {
                 || k == "deadline-ms"
                 || k == "drain-ms"
                 || k == "shard-layers"
+                || k == "resume"
             {
                 continue;
             }
@@ -201,6 +212,18 @@ checkpoints: every --ckpt/--qckpt flag accepts a monolithic .qkpt/.qqkpt
                                 load shard -> solve -> pack -> write ->
                                 drop, so peak memory is bounded by a few
                                 layer groups regardless of model depth
+              --resume true     (quantize, with --shard-layers) continue a
+                                crashed streaming run: shards recorded in
+                                the <out>.journal sidecar are re-verified
+                                by sha256 and skipped, and the finished
+                                manifest is bit-identical to an uncrashed
+                                run; refuses to resume over a journal
+                                written under a different config
+              QERA_FAULTS env   deterministic I/O fault injection for
+                                crash-recovery testing, e.g.
+                                'seed=7,enospc@w:shard-002' — entries are
+                                kind@op:substr[:count] with kinds
+                                torn|flip|enospc|transient|perm
 
 serving (serve): --prompts N --new-tokens N --temperature T  synthetic
               request burst against the serving daemon; with --qckpt and
@@ -273,6 +296,11 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let cfg = args.to_config()?;
     let ckpt_path = args.get("ckpt").context("--ckpt required")?;
     let shard_layers = args.usize_or("shard-layers", 0)?;
+    let resume = args.bool_or("resume", false)?;
+    anyhow::ensure!(
+        shard_layers > 0 || !resume,
+        "--resume only applies to sharded streaming runs; pass --shard-layers N"
+    );
     let reader = crate::model::open(ckpt_path)?;
     let spec = reader.spec().clone();
     let corpus = Corpus::generate(spec.vocab, cfg.corpus_tokens, cfg.seed);
@@ -350,7 +378,9 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         if let Some(dir) = std::path::Path::new(&out).parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let sum = quantize_streaming(ckpt_path, &pcfg, calib.as_ref(), &out, shard_layers)?;
+        let opts = StreamOptions { resume, ..Default::default() };
+        let sum =
+            quantize_streaming_with(ckpt_path, &pcfg, calib.as_ref(), &out, shard_layers, &opts)?;
         println!(
             "quantized {} sites into {} shard(s): payload {:.2} MB, solver {:.1} ms, peak live {:.2} MB -> {}",
             sum.diags.len(),
@@ -360,6 +390,12 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             sum.peak_live_bytes as f64 / 1e6,
             sum.manifest.display(),
         );
+        if sum.shards_skipped_resume + sum.io_retries + sum.faults_injected > 0 {
+            println!(
+                "  recovery: {} shard(s) reused from the resume journal, {} I/O retries, {} faults injected",
+                sum.shards_skipped_resume, sum.io_retries, sum.faults_injected,
+            );
+        }
         return Ok(());
     }
     let ckpt = ckpt.expect("in-memory pipeline keeps the dense checkpoint");

@@ -12,4 +12,4 @@ pub mod stream;
 
 pub use calibrate::{calibrate, calibrate_native, fold_taps, CalibResult};
 pub use pipeline::{quantize, PipelineConfig, QuantizedModel};
-pub use stream::{quantize_streaming, StreamSummary};
+pub use stream::{quantize_streaming, quantize_streaming_with, StreamOptions, StreamSummary};

@@ -173,10 +173,19 @@ pub(crate) fn site_plan(cfg: &PipelineConfig, name: &str) -> (QFormat, usize) {
     }
 }
 
+/// Per-site solver seed, derived from the run seed and the site's GLOBAL
+/// index in `spec.linear_sites()` order.  The resume journal records
+/// global site-index ranges per shard precisely so a resumed streaming
+/// run re-derives these exact seeds for the sites it re-solves — any
+/// change here breaks crash-resume bit-identity with old journals.
+pub(crate) fn site_seed(seed: u64, i: usize) -> u64 {
+    seed ^ (i as u64) << 8
+}
+
 /// Solve one site.  `i` is the site's GLOBAL index in
-/// `spec.linear_sites()` order — the per-site seed derives from it, so the
-/// streaming pipeline must pass the same index the in-memory one would for
-/// bit-identical results.
+/// `spec.linear_sites()` order — the per-site seed derives from it (see
+/// [`site_seed`]), so the streaming pipeline must pass the same index the
+/// in-memory one would for bit-identical results.
 pub(crate) fn solve_site(
     cfg: &PipelineConfig,
     rp: &Resolved,
@@ -195,7 +204,7 @@ pub(crate) fn solve_site(
         fmt,
         rank,
         stats,
-        cfg.seed ^ (i as u64) << 8,
+        site_seed(cfg.seed, i),
         rp.svd,
         rp.psd,
     )

@@ -22,35 +22,68 @@
 
 use super::calibrate::CalibResult;
 use super::pipeline::{self, LayerDiag, PipelineConfig};
-use crate::model::ckpt::{open, CkptReader, QWeight};
+use crate::model::ckpt::{open_with, CkptReader, QWeight};
 use crate::model::shard::{param_groups, CkptKind, ShardParam, ShardWriter};
 use crate::quant::PackedWeight;
 use crate::solver::{self, SolveOutput};
 use crate::tensor::Tensor;
+use crate::util::fault;
+use crate::util::fsio::CkptIo;
 use crate::util::pool;
+use crate::util::retry::RetryPolicy;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
+/// Knobs for a streaming quantization run beyond the pipeline config.
+#[derive(Clone)]
+pub struct StreamOptions {
+    /// Resume a crashed run from the resume journal next to the output
+    /// manifest: journaled shards are re-verified (size + sha256) and
+    /// their solves skipped; the run continues after the verified prefix
+    /// and produces a manifest bit-identical to an uncrashed one.
+    pub resume: bool,
+    /// Retry policy for checkpoint reads and shard/journal writes.
+    pub retry: RetryPolicy,
+    /// Explicit I/O layer (tests inject faults here); `None` uses the
+    /// ambient `QERA_FAULTS`-aware layer.
+    pub io: Option<Arc<dyn CkptIo>>,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        StreamOptions { resume: false, retry: RetryPolicy::io_default(), io: None }
+    }
+}
+
 /// Result of a streaming quantization run.
 #[derive(Debug)]
 pub struct StreamSummary {
     /// Path of the written manifest.
     pub manifest: PathBuf,
-    /// Number of shards written.
+    /// Number of shards in the finished checkpoint (including any
+    /// resume-verified ones).
     pub n_shards: usize,
-    /// Per-layer diagnostics in global site order (same order as
-    /// `QuantizedModel::diags`).
+    /// Per-layer diagnostics in global site order for the sites solved in
+    /// THIS run — resume-skipped shards' sites were solved (and their
+    /// diagnostics reported) by the crashed run.
     pub diags: Vec<LayerDiag>,
-    /// Total solver wall time (sequential sum, as the paper reports).
+    /// Total solver wall time of this run (sequential sum, as the paper
+    /// reports); excludes resume-skipped solves.
     pub solve_ms_total: f64,
-    /// Serialized weight payload across all shards.
+    /// Serialized weight payload across the shards written by this run.
     pub payload_bytes: usize,
     /// High-water mark of live tensor bytes across all pipeline stages —
     /// bounded by a constant number of layer groups, not the model.
     pub peak_live_bytes: usize,
+    /// Journaled shards verified on disk and skipped by `--resume`.
+    pub shards_skipped_resume: usize,
+    /// I/O retries taken (source reads + shard/journal/manifest writes).
+    pub io_retries: usize,
+    /// Faults the I/O layer injected (0 outside chaos runs).
+    pub faults_injected: usize,
 }
 
 /// Per-run live-bytes accounting: `add` bumps the counter and returns a
@@ -124,8 +157,25 @@ pub fn quantize_streaming(
     out_manifest: impl AsRef<Path>,
     shard_layers: usize,
 ) -> Result<StreamSummary> {
+    quantize_streaming_with(src, cfg, calib, out_manifest, shard_layers, &StreamOptions::default())
+}
+
+/// [`quantize_streaming`] with explicit [`StreamOptions`]: crash resume,
+/// retry policy, and an injectable I/O layer.
+pub fn quantize_streaming_with(
+    src: impl AsRef<Path>,
+    cfg: &PipelineConfig,
+    calib: Option<&CalibResult>,
+    out_manifest: impl AsRef<Path>,
+    shard_layers: usize,
+    opts: &StreamOptions,
+) -> Result<StreamSummary> {
     let t0 = std::time::Instant::now();
-    let reader = open(src.as_ref())?;
+    let io = match &opts.io {
+        Some(io) => Arc::clone(io),
+        None => fault::io_from_env()?,
+    };
+    let reader = open_with(src.as_ref(), Arc::clone(&io), opts.retry)?;
     ensure!(
         reader.kind() == CkptKind::Dense,
         "streaming quantization needs a dense source checkpoint, got a quantized one"
@@ -136,6 +186,7 @@ pub fn quantize_streaming(
     let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
     // param name -> global site index: the solver seed derives from the
     // global index, which keeps streamed solves bit-identical to in-memory
+    // AND lets a resumed run re-derive the exact seeds of skipped sites
     let site_index: BTreeMap<&str, usize> =
         sites.iter().enumerate().map(|(i, s)| (s.name.as_str(), i)).collect();
 
@@ -146,34 +197,97 @@ pub fn quantize_streaming(
         .map(|g| g.iter().map(|&i| layout[i].0.clone()).collect())
         .collect();
     let n_groups = groups.len();
+    // global site-index range each group covers, journaled with its shard
+    let group_ranges: Vec<(usize, usize)> = group_names
+        .iter()
+        .map(|names| {
+            let mut lo = usize::MAX;
+            let mut hi = 0usize;
+            for n in names {
+                if let Some(&si) = site_index.get(n.as_str()) {
+                    lo = lo.min(si);
+                    hi = hi.max(si + 1);
+                }
+            }
+            if lo == usize::MAX {
+                (0, 0)
+            } else {
+                (lo, hi)
+            }
+        })
+        .collect();
 
     let meta = pipeline::build_meta(cfg, &rp);
-    let writer =
-        ShardWriter::create(out_manifest.as_ref(), CkptKind::Quant, spec.clone(), meta)?;
+    let (writer, verified) = if opts.resume {
+        ShardWriter::resume(
+            out_manifest.as_ref(),
+            CkptKind::Quant,
+            spec.clone(),
+            meta,
+            Arc::clone(&io),
+            opts.retry,
+        )?
+    } else {
+        let w = ShardWriter::create_with(
+            out_manifest.as_ref(),
+            CkptKind::Quant,
+            spec.clone(),
+            meta,
+            Arc::clone(&io),
+            opts.retry,
+        )?;
+        (w, Vec::new())
+    };
+    let journal_path = writer.journal_path().to_path_buf();
+    ensure!(
+        verified.len() <= n_groups,
+        "resume journal lists {} shards but this run produces {n_groups}; delete {} to start \
+         fresh",
+        verified.len(),
+        journal_path.display()
+    );
+    for (i, (info, range)) in verified.iter().enumerate() {
+        ensure!(
+            info.params == group_names[i] && *range == group_ranges[i],
+            "resume journal shard {i} does not match this run's layer grouping (was it written \
+             with a different --shard-layers?); delete {} to start fresh",
+            journal_path.display()
+        );
+    }
+    let skip = verified.len();
+    if skip > 0 {
+        crate::info!(
+            "resume: {skip} of {n_groups} journaled shard(s) verified on disk; their solves are \
+             skipped"
+        );
+    }
 
     let live = LiveSet::new();
 
-    // stage 1: prefetch reads one group ahead of the solver
+    // stage 1: prefetch reads one group ahead of the solver, starting
+    // after the resume-verified prefix; returns the reader so its retry
+    // count survives the thread
     type InMsg = Result<(Vec<(String, Tensor)>, LiveGuard)>;
     let (tx_in, rx_in) = mpsc::sync_channel::<InMsg>(1);
     let live_in = Arc::clone(&live);
-    let prefetch = std::thread::spawn(move || {
-        for names in &group_names {
+    let prefetch = std::thread::spawn(move || -> CkptReader {
+        for names in &group_names[skip..] {
             let res = load_group(&reader, names, &live_in);
             let failed = res.is_err();
             if tx_in.send(res).is_err() || failed {
-                return;
+                return reader;
             }
         }
+        reader
     });
 
     // stage 3: writer streams finished shards out while the next solves run
-    type OutMsg = (Vec<(String, ShardParam)>, LiveGuard);
+    type OutMsg = (Vec<(String, ShardParam)>, (usize, usize), LiveGuard);
     let (tx_out, rx_out) = mpsc::sync_channel::<OutMsg>(1);
     let writer_handle = std::thread::spawn(move || -> Result<ShardWriter> {
         let mut w = writer;
-        for (entries, guard) in rx_out {
-            w.write_shard(entries)?;
+        for (entries, range, guard) in rx_out {
+            w.write_shard_ranged(entries, range)?;
             drop(guard);
         }
         Ok(w)
@@ -185,7 +299,7 @@ pub fn quantize_streaming(
     let mut solve_ms_total = 0.0f64;
     let mut payload_bytes = 0usize;
     let mut err: Option<anyhow::Error> = None;
-    for msg in rx_in.iter() {
+    for (gi, msg) in (skip..).zip(rx_in.iter()) {
         let (tensors, in_guard) = match msg {
             Ok(v) => v,
             Err(e) => {
@@ -250,7 +364,7 @@ pub fn quantize_streaming(
         payload_bytes += group_payload;
         let out_guard = live.add(group_payload);
         drop(in_guard); // source tensors are packed or moved into entries
-        if tx_out.send((entries, out_guard)).is_err() {
+        if tx_out.send((entries, group_ranges[gi], out_guard)).is_err() {
             // writer bailed; its error surfaces at join below
             break;
         }
@@ -258,15 +372,18 @@ pub fn quantize_streaming(
     drop(rx_in); // unblocks the prefetcher if it is mid-send
     drop(tx_out); // closes the writer's queue
 
-    prefetch.join().map_err(|_| anyhow!("prefetch thread panicked"))?;
+    let reader = prefetch.join().map_err(|_| anyhow!("prefetch thread panicked"))?;
     let writer_res =
         writer_handle.join().map_err(|_| anyhow!("shard writer thread panicked"))?;
     if let Some(e) = err {
         return Err(e);
     }
     let writer = writer_res?;
-    // the manifest is written last: a failed run leaves no loadable output
+    let io_retries = reader.io_retries() + writer.io_retries();
+    // the manifest is written last: a failed run leaves no loadable
+    // output, and the resume journal keeps every completed shard reusable
     let manifest = writer.finish()?;
+    let faults_injected = io.faults_injected();
 
     crate::info!(
         "stream-quantized {} layers into {} shards ({:.1} KiB peak live) in {:.2}s wall / {:.2}s solver",
@@ -284,6 +401,9 @@ pub fn quantize_streaming(
         solve_ms_total,
         payload_bytes,
         peak_live_bytes: live.peak(),
+        shards_skipped_resume: skip,
+        io_retries,
+        faults_injected,
     })
 }
 
@@ -399,5 +519,132 @@ mod tests {
         assert!(err.to_string().contains("calibration"), "{err}");
         // …and no manifest appears (shards without a manifest are inert)
         assert!(!out.exists());
+    }
+
+    #[test]
+    fn crashed_run_resumes_bit_identically() {
+        use crate::util::fault::{FaultKind, FaultOp, FaultSpec, FaultyIo};
+
+        let dir = tmpdir("resume");
+        let ckpt = nano_ckpt(25);
+        let src = dir.join("src.qkpt");
+        ckpt.save(&src).unwrap();
+        let cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4);
+
+        let base = dir.join("base.manifest.json");
+        quantize_streaming(&src, &cfg, None, &base, 1).unwrap();
+        let base_bytes = std::fs::read(&base).unwrap();
+
+        // crash the write of shard 002 (disk full => fail fast)
+        let out = dir.join("out.manifest.json");
+        let faulty = StreamOptions {
+            io: Some(Arc::new(FaultyIo::std(
+                vec![FaultSpec::new(FaultKind::Enospc, FaultOp::Write, "out.shard-002")],
+                7,
+            ))),
+            ..Default::default()
+        };
+        let err = quantize_streaming_with(&src, &cfg, None, &out, 1, &faulty).unwrap_err();
+        assert!(format!("{err:#}").contains("no space"), "{err:#}");
+        assert!(!out.exists(), "failed run must not leave a manifest");
+        let journal = dir.join("out.manifest.json.journal");
+        assert!(journal.exists(), "crash leaves the journal for resume");
+
+        // resume: the two completed shards are verified and skipped, and
+        // the finished manifest is bit-identical to the uncrashed run
+        let resume = StreamOptions { resume: true, ..Default::default() };
+        let sum = quantize_streaming_with(&src, &cfg, None, &out, 1, &resume).unwrap();
+        assert_eq!(sum.shards_skipped_resume, 2);
+        assert!(!journal.exists(), "finish removes the journal");
+        let out_bytes = std::fs::read(&out).unwrap();
+        // manifests name different files (base.* vs out.*) but must agree
+        // shard-for-shard on bytes and sha256 once prefixes are aligned
+        assert_eq!(
+            String::from_utf8(out_bytes).unwrap().replace("out.shard", "base.shard"),
+            String::from_utf8(base_bytes).unwrap(),
+        );
+        for i in 0..sum.n_shards {
+            assert_eq!(
+                std::fs::read(dir.join(format!("out.shard-{i:03}.bin"))).unwrap(),
+                std::fs::read(dir.join(format!("base.shard-{i:03}.bin"))).unwrap(),
+                "shard {i}"
+            );
+        }
+
+        // a second resume with everything finished starts fresh (journal
+        // gone) and still converges to the same bytes
+        let sum2 = quantize_streaming_with(&src, &cfg, None, &out, 1, &resume).unwrap();
+        assert_eq!(sum2.shards_skipped_resume, 0);
+    }
+
+    #[test]
+    fn resume_refuses_a_journal_from_another_config() {
+        use crate::util::fault::{FaultKind, FaultOp, FaultSpec, FaultyIo};
+
+        let dir = tmpdir("resume_mismatch");
+        let ckpt = nano_ckpt(26);
+        let src = dir.join("src.qkpt");
+        ckpt.save(&src).unwrap();
+        let out = dir.join("out.manifest.json");
+
+        let faulty = StreamOptions {
+            io: Some(Arc::new(FaultyIo::std(
+                vec![FaultSpec::new(FaultKind::Enospc, FaultOp::Write, "out.shard-002")],
+                7,
+            ))),
+            ..Default::default()
+        };
+        let cfg4 = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4);
+        quantize_streaming_with(&src, &cfg4, None, &out, 1, &faulty).unwrap_err();
+
+        // same spec, different quantization config -> refuse the journal
+        let cfg2 =
+            PipelineConfig::new(Method::ZeroQuantV2, QFormat::Mxint { bits: 2, block: 32 }, 4);
+        let resume = StreamOptions { resume: true, ..Default::default() };
+        let err = quantize_streaming_with(&src, &cfg2, None, &out, 1, &resume).unwrap_err();
+        assert!(err.to_string().contains("different quantization config"), "{err:#}");
+
+        // matching config resumes cleanly
+        let sum = quantize_streaming_with(&src, &cfg4, None, &out, 1, &resume).unwrap();
+        assert_eq!(sum.shards_skipped_resume, 2);
+    }
+
+    #[test]
+    fn transient_faults_ride_out_and_are_counted() {
+        use crate::util::fault::{FaultKind, FaultOp, FaultSpec, FaultyIo};
+
+        let dir = tmpdir("transient");
+        let ckpt = nano_ckpt(27);
+        let src = dir.join("src.qkpt");
+        ckpt.save(&src).unwrap();
+        let cfg = PipelineConfig::new(Method::WOnly, fmt(), 0);
+
+        let base = dir.join("base.manifest.json");
+        quantize_streaming(&src, &cfg, None, &base, 2).unwrap();
+
+        // a transient source read + a silently corrupted shard write, both
+        // survivable; the run must succeed and report the recovery work
+        let out = dir.join("out.manifest.json");
+        let opts = StreamOptions {
+            io: Some(Arc::new(FaultyIo::std(
+                vec![
+                    FaultSpec::new(FaultKind::Transient, FaultOp::Read, "src.qkpt"),
+                    FaultSpec::new(FaultKind::Flip, FaultOp::Write, "out.shard-001"),
+                ],
+                13,
+            ))),
+            ..Default::default()
+        };
+        let sum = quantize_streaming_with(&src, &cfg, None, &out, 2, &opts).unwrap();
+        assert!(sum.io_retries >= 2, "retries: {}", sum.io_retries);
+        assert_eq!(sum.faults_injected, 2);
+        assert_eq!(sum.shards_skipped_resume, 0);
+        for i in 0..sum.n_shards {
+            assert_eq!(
+                std::fs::read(dir.join(format!("out.shard-{i:03}.bin"))).unwrap(),
+                std::fs::read(dir.join(format!("base.shard-{i:03}.bin"))).unwrap(),
+                "shard {i}"
+            );
+        }
     }
 }

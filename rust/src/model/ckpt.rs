@@ -28,13 +28,17 @@ use super::spec::ModelSpec;
 use crate::quant::{PackedWeight, QFormat};
 use crate::solver::LowRank;
 use crate::tensor::Tensor;
+use crate::util::fault;
 use crate::util::fsio::*;
 use crate::util::json::Json;
 use crate::util::pool;
+use crate::util::retry::{self, RetryPolicy};
+use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const DENSE_MAGIC: &[u8; 5] = b"QKPT1";
 const QUANT_MAGIC: &[u8; 5] = b"QQKP1";
@@ -311,9 +315,8 @@ impl Checkpoint {
     }
 }
 
-fn load_dense_monolithic(path: &Path) -> Result<Checkpoint> {
-    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let mut r = BufReader::new(f);
+fn load_dense_monolithic(bytes: &[u8]) -> Result<Checkpoint> {
+    let mut r = bytes;
     let mut magic = [0u8; 5];
     r.read_exact(&mut magic)?;
     ensure!(&magic == DENSE_MAGIC, "not a dense qera checkpoint");
@@ -537,9 +540,8 @@ impl QuantCheckpoint {
     }
 }
 
-fn load_quant_monolithic(path: &Path) -> Result<QuantCheckpoint> {
-    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let mut r = BufReader::new(f);
+fn load_quant_monolithic(bytes: &[u8]) -> Result<QuantCheckpoint> {
+    let mut r = bytes;
     let mut magic = [0u8; 5];
     r.read_exact(&mut magic)?;
     ensure!(&magic == QUANT_MAGIC, "not a quantized qera checkpoint");
@@ -584,25 +586,36 @@ enum Source {
 /// stream one layer group at a time.
 pub struct CkptReader {
     source: Source,
+    /// I/O retries taken while reading/sniffing the file at open time.
+    open_retries: usize,
 }
 
 /// Open any checkpoint — monolithic `QKPT1`/`QQKP1` or a sharded manifest
-/// — sniffing the format from the leading bytes.
+/// — sniffing the format from the leading bytes, on the ambient I/O layer
+/// (`QERA_FAULTS`-aware) with default retries.
 pub fn open(path: impl AsRef<Path>) -> Result<CkptReader> {
-    let path = path.as_ref();
-    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let mut head = Vec::new();
-    f.take(5).read_to_end(&mut head)?;
-    let source = if head.as_slice() == DENSE_MAGIC {
-        Source::DenseMono(load_dense_monolithic(path)?)
-    } else if head.as_slice() == QUANT_MAGIC {
-        Source::QuantMono(Box::new(load_quant_monolithic(path)?))
+    let io = fault::io_from_env()?;
+    open_with(path.as_ref(), io, RetryPolicy::io_default())
+}
+
+/// [`open`] with an explicit I/O layer and retry policy, threaded through
+/// to shard loads for sharded sources.  Transient read faults retry with
+/// backoff; permanent failures surface typed.
+pub fn open_with(path: &Path, io: Arc<dyn CkptIo>, retry: RetryPolicy) -> Result<CkptReader> {
+    let mut rng = Rng::new(0x0cea_0bea);
+    let (res, tries) = retry::retry_io(&retry, &mut rng, || io.read(path));
+    let bytes = res.with_context(|| format!("opening {}", path.display()))?;
+    let head = bytes.get(..5).unwrap_or(&bytes[..]);
+    let source = if head == DENSE_MAGIC {
+        Source::DenseMono(load_dense_monolithic(&bytes)?)
+    } else if head == QUANT_MAGIC {
+        Source::QuantMono(Box::new(load_quant_monolithic(&bytes)?))
     } else if head.iter().find(|b| !b.is_ascii_whitespace()) == Some(&b'{') {
-        Source::Sharded(ShardSet::open_manifest(path)?)
+        Source::Sharded(ShardSet::open_manifest_with(path, io, retry)?)
     } else {
         bail!("unrecognized checkpoint format: {}", path.display());
     };
-    Ok(CkptReader { source })
+    Ok(CkptReader { source, open_retries: tries as usize })
 }
 
 impl CkptReader {
@@ -632,6 +645,24 @@ impl CkptReader {
 
     pub fn is_sharded(&self) -> bool {
         matches!(self.source, Source::Sharded(_))
+    }
+
+    /// Total I/O retries taken so far: the open-time read plus every
+    /// shard load of a sharded source.
+    pub fn io_retries(&self) -> usize {
+        self.open_retries
+            + match &self.source {
+                Source::Sharded(s) => s.io_retries(),
+                _ => 0,
+            }
+    }
+
+    /// Faults the I/O layer injected so far (0 outside chaos runs).
+    pub fn faults_injected(&self) -> usize {
+        match &self.source {
+            Source::Sharded(s) => s.faults_injected(),
+            _ => 0,
+        }
     }
 
     /// Number of independently loadable units (1 for monolithic files).

@@ -33,6 +33,19 @@
 //! [`ShardWriter`] streams shards out one group at a time (peak memory =
 //! one shard, not one model); [`ShardSet`] is the verified reader behind
 //! [`super::ckpt::open`].
+//!
+//! Crash safety: beside the manifest (written last), the writer keeps a
+//! **resume journal** (`<manifest>.journal`) — rewritten atomically and
+//! fsynced after every completed shard, one record per shard with its
+//! file, size, sha256, parameter list, and global solver site-index
+//! range.  A crashed run resumes via [`ShardWriter::resume`], which
+//! re-verifies each journaled shard on disk and skips the verified
+//! prefix; the journal is deleted when [`ShardWriter::finish`] lands the
+//! manifest.  All file traffic goes through a [`CkptIo`], so tests and
+//! `QERA_FAULTS` chaos runs inject torn writes, bit flips, ENOSPC, and
+//! transient read errors deterministically; transient faults retry under
+//! a [`RetryPolicy`], permanent corruption fails fast with a typed
+//! [`ShardError`].
 
 use super::ckpt::{
     read_dense_record, read_lowrank_record, read_quant_record, spec_from_json, spec_json,
@@ -41,16 +54,23 @@ use super::ckpt::{
 use super::spec::ModelSpec;
 use crate::solver::LowRank;
 use crate::tensor::Tensor;
-use crate::util::fsio::{read_u32, write_atomic, write_u32};
+use crate::util::fault;
+use crate::util::fsio::{read_u32, write_u32, CkptIo, StdIo};
 use crate::util::json::Json;
+use crate::util::retry::{self, RetryPolicy};
+use crate::util::rng::Rng;
 use crate::util::sha256;
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Manifest `format` discriminator.
 pub const MANIFEST_FORMAT: &str = "qera-ckpt-manifest";
+/// Resume journal `format` discriminator.
+pub const JOURNAL_FORMAT: &str = "qera-resume-journal";
 /// Current manifest + shard container version.
 pub const MANIFEST_VERSION: u32 = 1;
 /// Magic prefix of every shard file.
@@ -207,9 +227,15 @@ pub fn param_groups(spec: &ModelSpec, shard_layers: usize) -> Vec<Vec<usize>> {
 /// Peak memory is one shard's worth of serialized bytes, never the model.
 ///
 /// The manifest is written last and atomically, so a crashed or failed
-/// write never leaves a loadable-but-incomplete checkpoint behind.
+/// write never leaves a loadable-but-incomplete checkpoint behind; the
+/// resume journal makes the completed shards of such a run recoverable
+/// (see [`ShardWriter::resume`]).  Every shard write is fsynced, renamed
+/// into place, dir-fsynced, and read back to verify its sha256 — a
+/// silently corrupted write is caught immediately and rewritten, never
+/// discovered hours later at load time.
 pub struct ShardWriter {
     manifest_path: PathBuf,
+    journal_path: PathBuf,
     dir: PathBuf,
     /// Shard file name prefix (the manifest's stem, `.manifest` stripped).
     prefix: String,
@@ -218,19 +244,43 @@ pub struct ShardWriter {
     meta: Json,
     layout: BTreeMap<String, Vec<usize>>,
     shards: Vec<ShardInfo>,
+    /// Global solver site-index range per shard (half-open; `(0, 0)` for
+    /// shards holding no solver sites).
+    site_ranges: Vec<(usize, usize)>,
     written: BTreeSet<String>,
+    io: Arc<dyn CkptIo>,
+    retry: RetryPolicy,
+    backoff_rng: Rng,
+    io_retries: usize,
 }
 
 impl ShardWriter {
     /// Start a sharded checkpoint at `manifest_path` (shard files are
-    /// created next to it, named `<prefix>.shard-NNN.bin`).
+    /// created next to it, named `<prefix>.shard-NNN.bin`), on the
+    /// ambient I/O layer (`QERA_FAULTS`-aware) with default retries.
     pub fn create(
         manifest_path: impl AsRef<Path>,
         kind: CkptKind,
         spec: ModelSpec,
         meta: Json,
     ) -> Result<ShardWriter> {
+        let io = fault::io_from_env()?;
+        Self::create_with(manifest_path, kind, spec, meta, io, RetryPolicy::io_default())
+    }
+
+    /// [`ShardWriter::create`] with an explicit I/O layer and retry policy.
+    pub fn create_with(
+        manifest_path: impl AsRef<Path>,
+        kind: CkptKind,
+        spec: ModelSpec,
+        meta: Json,
+        io: Arc<dyn CkptIo>,
+        retry: RetryPolicy,
+    ) -> Result<ShardWriter> {
         let manifest_path = manifest_path.as_ref().to_path_buf();
+        let mut journal_name = manifest_path.as_os_str().to_os_string();
+        journal_name.push(".journal");
+        let journal_path = PathBuf::from(journal_name);
         let dir = manifest_path.parent().map(Path::to_path_buf).unwrap_or_else(|| ".".into());
         std::fs::create_dir_all(&dir)?;
         let stem =
@@ -239,6 +289,7 @@ impl ShardWriter {
         let layout = spec.param_layout().into_iter().collect();
         Ok(ShardWriter {
             manifest_path,
+            journal_path,
             dir,
             prefix,
             kind,
@@ -246,15 +297,162 @@ impl ShardWriter {
             meta,
             layout,
             shards: Vec::new(),
+            site_ranges: Vec::new(),
             written: BTreeSet::new(),
+            io,
+            retry,
+            backoff_rng: Rng::new(0xb0ff_5eed_ca7e),
+            io_retries: 0,
         })
+    }
+
+    /// Resume a crashed run: open the resume journal next to
+    /// `manifest_path`, re-verify each journaled shard on disk in order
+    /// (size + sha256, stopping at the first failure), and return a
+    /// writer that continues after the verified prefix, plus the verified
+    /// records (shard info + global site range each).
+    ///
+    /// A missing journal (fresh run, or a crash before the first shard
+    /// completed) resumes from nothing.  A journal whose kind, spec, or
+    /// meta differs from this run is refused: its shards were produced
+    /// under different settings, and silently requantizing over them
+    /// would mask the mismatch.
+    pub fn resume(
+        manifest_path: impl AsRef<Path>,
+        kind: CkptKind,
+        spec: ModelSpec,
+        meta: Json,
+        io: Arc<dyn CkptIo>,
+        retry: RetryPolicy,
+    ) -> Result<(ShardWriter, Vec<(ShardInfo, (usize, usize))>)> {
+        let mut w = Self::create_with(manifest_path, kind, spec, meta, io, retry)?;
+        let verified = w.scan_journal()?;
+        Ok((w, verified))
+    }
+
+    fn scan_journal(&mut self) -> Result<Vec<(ShardInfo, (usize, usize))>> {
+        let io = Arc::clone(&self.io);
+        let journal_path = self.journal_path.clone();
+        let (res, tries) =
+            retry::retry_io(&self.retry, &mut self.backoff_rng, || io.read(&journal_path));
+        self.io_retries += tries as usize;
+        let bytes = match res {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading resume journal {}", journal_path.display()))
+            }
+        };
+        let text = String::from_utf8(bytes).context("resume journal is not utf-8")?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing resume journal: {e:?}"))?;
+        ensure!(
+            j.req_str("format")? == JOURNAL_FORMAT,
+            "not a qera resume journal: {}",
+            journal_path.display()
+        );
+        let version = j.req_usize("version")? as u32;
+        ensure!(version == MANIFEST_VERSION, "unsupported resume journal version {version}");
+        let jkind = j.req_str("kind")?;
+        ensure!(
+            jkind == self.kind.name(),
+            "resume journal kind '{jkind}' does not match this run ('{}')",
+            self.kind.name()
+        );
+        let jspec = j.get("spec").ok_or_else(|| anyhow!("resume journal missing 'spec'"))?;
+        ensure!(
+            jspec.dump() == spec_json(&self.spec).dump(),
+            "resume journal model spec does not match this run"
+        );
+        let jmeta = j.get("meta").cloned().unwrap_or_else(|| Json::obj(vec![]));
+        ensure!(
+            jmeta.dump() == self.meta.dump(),
+            "resume journal was written under a different quantization config; refusing to \
+             resume over its shards (delete {} to start fresh)",
+            journal_path.display()
+        );
+
+        let mut verified = Vec::new();
+        for (i, entry) in j.req_arr("shards")?.iter().enumerate() {
+            let file = entry.req_str("file")?.to_string();
+            let expect_file = format!("{}.shard-{:03}.bin", self.prefix, i);
+            ensure!(
+                file == expect_file,
+                "resume journal shard {i} is '{file}', expected '{expect_file}'"
+            );
+            let bytes_expect = entry.req_f64("bytes")? as u64;
+            let sha = entry.req_str("sha256")?.to_string();
+            let site_lo = entry.req_usize("site_lo")?;
+            let site_hi = entry.req_usize("site_hi")?;
+            let mut params = Vec::new();
+            for p in entry.req_arr("params")? {
+                let name = p
+                    .as_str()
+                    .ok_or_else(|| anyhow!("non-string param name in resume journal"))?
+                    .to_string();
+                ensure!(
+                    self.layout.contains_key(&name),
+                    "resume journal shard '{file}' lists unknown param '{name}'"
+                );
+                params.push(name);
+            }
+            // re-verify the shard's bytes on disk; the first shard that
+            // fails (or cannot be read) truncates the trusted prefix and
+            // gets rewritten by the resumed run
+            let path = self.dir.join(&file);
+            let io = Arc::clone(&self.io);
+            let (res, tries) =
+                retry::retry_io(&self.retry, &mut self.backoff_rng, || io.read(&path));
+            self.io_retries += tries as usize;
+            let on_disk = match res {
+                Ok(b) => b,
+                Err(_) => break,
+            };
+            if on_disk.len() as u64 != bytes_expect || sha256::hex_digest(&on_disk) != sha {
+                break;
+            }
+            for name in &params {
+                if !self.written.insert(name.clone()) {
+                    return Err(ShardError::DuplicateParam { name: name.clone() }.into());
+                }
+            }
+            let info = ShardInfo { file, bytes: bytes_expect, sha256: sha, params };
+            self.shards.push(info.clone());
+            self.site_ranges.push((site_lo, site_hi));
+            verified.push((info, (site_lo, site_hi)));
+        }
+        Ok(verified)
     }
 
     /// Serialize `entries` as the next shard, hashing while writing.
     /// Every entry must name a parameter of the spec, exactly once across
     /// the whole checkpoint, with a layout-matching shape.
     pub fn write_shard(&mut self, entries: Vec<(String, ShardParam)>) -> Result<()> {
+        self.write_shard_ranged(entries, (0, 0))
+    }
+
+    /// [`ShardWriter::write_shard`], additionally journaling the global
+    /// solver site-index range `sites` (half-open) this shard covers —
+    /// what lets a resumed streaming run re-derive per-site solver seeds.
+    pub fn write_shard_ranged(
+        &mut self,
+        entries: Vec<(String, ShardParam)>,
+        sites: (usize, usize),
+    ) -> Result<()> {
         ensure!(!entries.is_empty(), "empty shard");
+        // validate every name before serializing or committing any state:
+        // a failed write must leave the writer consistent and retryable
+        let mut fresh: BTreeSet<&str> = BTreeSet::new();
+        for (name, _) in &entries {
+            ensure!(
+                self.layout.contains_key(name),
+                "shard entry '{name}' is not a parameter of model '{}'",
+                self.spec.name
+            );
+            if self.written.contains(name) || !fresh.insert(name) {
+                return Err(ShardError::DuplicateParam { name: name.clone() }.into());
+            }
+        }
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(SHARD_MAGIC);
         write_u32(&mut buf, MANIFEST_VERSION)?;
@@ -262,12 +460,7 @@ impl ShardWriter {
         write_u32(&mut buf, entries.len() as u32)?;
         let mut names = Vec::with_capacity(entries.len());
         for (name, param) in &entries {
-            let Some(shape) = self.layout.get(name) else {
-                bail!("shard entry '{name}' is not a parameter of model '{}'", self.spec.name);
-            };
-            if !self.written.insert(name.clone()) {
-                return Err(ShardError::DuplicateParam { name: name.clone() }.into());
-            }
+            let shape = &self.layout[name];
             match (self.kind, param) {
                 (CkptKind::Dense, ShardParam::Dense(t)) => {
                     ensure!(t.shape() == &shape[..], "shape mismatch for {name}");
@@ -296,14 +489,126 @@ impl ShardWriter {
         }
         let file = format!("{}.shard-{:03}.bin", self.prefix, self.shards.len());
         let sha = sha256::hex_digest(&buf);
-        write_atomic(self.dir.join(&file), &buf)?;
+        let path = self.dir.join(&file);
+        self.write_verified(&path, &buf, &sha)?;
+        // the shard is durably on disk and verified: commit writer state,
+        // then journal it so a crash from here on can skip this shard
+        for name in &names {
+            self.written.insert(name.clone());
+        }
         self.shards.push(ShardInfo { file, bytes: buf.len() as u64, sha256: sha, params: names });
+        self.site_ranges.push(sites);
+        self.write_journal()
+    }
+
+    /// One atomic durable write attempt: fsynced tmp file, rename,
+    /// parent-dir fsync, then a read-back sha256 check.  A mismatch comes
+    /// back as `InvalidData` so the caller can treat silent write
+    /// corruption as retryable (a rewrite fixes it).
+    fn write_once(&self, path: &Path, buf: &[u8], sha: &str) -> std::io::Result<()> {
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        self.io.write(&tmp, buf)?;
+        self.io.rename(&tmp, path)?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                self.io.sync_dir(dir)?;
+            }
+        }
+        let got = self.io.read(path)?;
+        if got.len() != buf.len() || sha256::hex_digest(&got) != sha {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("read-back verification failed for {}", path.display()),
+            ));
+        }
         Ok(())
     }
 
-    /// Check full parameter coverage and atomically write the manifest.
-    /// Returns the manifest path.
-    pub fn finish(self) -> Result<PathBuf> {
+    /// Write-and-verify under the retry policy: transient I/O errors and
+    /// read-back mismatches back off and rewrite; permanent errors
+    /// (ENOSPC, permissions) fail fast — retrying cannot fix them and the
+    /// resume journal already protects everything written so far.
+    fn write_verified(&mut self, path: &Path, buf: &[u8], sha: &str) -> Result<()> {
+        let mut attempt = 0u32;
+        loop {
+            match self.write_once(path, buf, sha) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    let retryable = retry::is_transient(e.kind())
+                        || e.kind() == std::io::ErrorKind::InvalidData;
+                    if retryable && attempt < self.retry.max_retries {
+                        let pause = self.retry.backoff(attempt, &mut self.backoff_rng);
+                        std::thread::sleep(pause);
+                        attempt += 1;
+                        self.io_retries += 1;
+                    } else {
+                        return Err(e).with_context(|| format!("writing {}", path.display()));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rewrite the resume journal to record every completed shard.
+    /// Atomic + fsynced after each shard, so a crash at any point loses
+    /// at most the shard that was in flight.
+    fn write_journal(&mut self) -> Result<()> {
+        let shards = Json::Arr(
+            self.shards
+                .iter()
+                .zip(&self.site_ranges)
+                .map(|(s, &(lo, hi))| {
+                    Json::obj(vec![
+                        ("file", Json::str(s.file.clone())),
+                        ("bytes", Json::Num(s.bytes as f64)),
+                        ("sha256", Json::str(s.sha256.clone())),
+                        ("params", Json::Arr(s.params.iter().map(Json::str).collect())),
+                        ("site_lo", Json::Num(lo as f64)),
+                        ("site_hi", Json::Num(hi as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let j = Json::obj(vec![
+            ("format", Json::str(JOURNAL_FORMAT)),
+            ("version", Json::Num(MANIFEST_VERSION as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("spec", spec_json(&self.spec)),
+            ("meta", self.meta.clone()),
+            ("shards", shards),
+        ]);
+        let buf = j.dump_pretty().into_bytes();
+        let sha = sha256::hex_digest(&buf);
+        let path = self.journal_path.clone();
+        self.write_verified(&path, &buf, &sha)
+    }
+
+    /// I/O retries taken so far (shard writes, journal writes, resume
+    /// scans).
+    pub fn io_retries(&self) -> usize {
+        self.io_retries
+    }
+
+    /// Faults the underlying I/O layer injected (0 outside chaos runs).
+    pub fn faults_injected(&self) -> usize {
+        self.io.faults_injected()
+    }
+
+    /// Shards written or resume-verified so far.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Path of the resume journal kept beside the manifest.
+    pub fn journal_path(&self) -> &Path {
+        &self.journal_path
+    }
+
+    /// Check full parameter coverage, atomically write the manifest, and
+    /// delete the resume journal.  Returns the manifest path.
+    pub fn finish(mut self) -> Result<PathBuf> {
         for name in self.layout.keys() {
             if !self.written.contains(name) {
                 return Err(ShardError::MissingParam { name: name.clone() }.into());
@@ -330,7 +635,19 @@ impl ShardWriter {
             ("meta", self.meta.clone()),
             ("shards", shards),
         ]);
-        write_atomic(&self.manifest_path, manifest.dump_pretty().as_bytes())?;
+        let buf = manifest.dump_pretty().into_bytes();
+        let sha = sha256::hex_digest(&buf);
+        let path = self.manifest_path.clone();
+        self.write_verified(&path, &buf, &sha)?;
+        match self.io.remove_file(&self.journal_path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("removing resume journal {}", self.journal_path.display())
+                })
+            }
+        }
         Ok(self.manifest_path)
     }
 }
@@ -338,7 +655,9 @@ impl ShardWriter {
 /// A parsed, schema-validated sharded checkpoint: the typed low-level
 /// reader behind `ckpt::open`.  Construction validates the manifest
 /// (version, kind, spec, shard uniqueness, exact parameter coverage);
-/// [`ShardSet::load_shard`] verifies size + sha256 before decoding.
+/// [`ShardSet::load_shard`] verifies size + sha256 before decoding, and
+/// rides out transient read faults under the set's [`RetryPolicy`] —
+/// permanent corruption still fails fast with its typed [`ShardError`].
 pub struct ShardSet {
     dir: PathBuf,
     pub(crate) kind: CkptKind,
@@ -348,6 +667,11 @@ pub struct ShardSet {
     layout: BTreeMap<String, Vec<usize>>,
     /// Parameter name → index of the shard containing it.
     by_param: BTreeMap<String, usize>,
+    io: Arc<dyn CkptIo>,
+    retry: RetryPolicy,
+    /// Backoff jitter source, shared across the parallel shard loaders.
+    rng: Mutex<Rng>,
+    retries: AtomicUsize,
 }
 
 fn bad(reason: impl Into<String>) -> ShardError {
@@ -355,12 +679,30 @@ fn bad(reason: impl Into<String>) -> ShardError {
 }
 
 impl ShardSet {
-    /// Parse and validate a manifest file.
+    /// Parse and validate a manifest file on the ambient I/O layer
+    /// (`QERA_FAULTS`-aware) with default retries.
     pub fn open_manifest(path: &Path) -> Result<ShardSet, ShardError> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| bad(format!("reading {}: {e}", path.display())))?;
+        let io = fault::io_from_env().map_err(|e| bad(format!("{e:#}")))?;
+        Self::open_manifest_with(path, io, RetryPolicy::io_default())
+    }
+
+    /// [`ShardSet::open_manifest`] with an explicit I/O layer and retry
+    /// policy (threaded through to every shard load).
+    pub fn open_manifest_with(
+        path: &Path,
+        io: Arc<dyn CkptIo>,
+        retry: RetryPolicy,
+    ) -> Result<ShardSet, ShardError> {
+        let mut rng = Rng::new(0x5ead_0f_5e7);
+        let (res, _) = retry::retry_io(&retry, &mut rng, || io.read(path));
+        let bytes = res.map_err(|e| bad(format!("reading {}: {e}", path.display())))?;
+        let text =
+            String::from_utf8(bytes).map_err(|_| bad("manifest is not valid utf-8".to_string()))?;
         let j = Json::parse(&text).map_err(|e| bad(format!("{e:?}")))?;
-        Self::from_json(path, &j)
+        let mut set = Self::from_json(path, &j)?;
+        set.io = io;
+        set.retry = retry;
+        Ok(set)
     }
 
     fn from_json(path: &Path, j: &Json) -> Result<ShardSet, ShardError> {
@@ -413,7 +755,19 @@ impl ShardSet {
             }
         }
         let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(|| ".".into());
-        Ok(ShardSet { dir, kind, spec, meta, shards, layout, by_param })
+        Ok(ShardSet {
+            dir,
+            kind,
+            spec,
+            meta,
+            shards,
+            layout,
+            by_param,
+            io: Arc::new(StdIo),
+            retry: RetryPolicy::io_default(),
+            rng: Mutex::new(Rng::new(0x10ad_ba0f)),
+            retries: AtomicUsize::new(0),
+        })
     }
 
     pub fn kind(&self) -> CkptKind {
@@ -441,12 +795,39 @@ impl ShardSet {
         self.by_param.get(name).copied()
     }
 
+    /// I/O retries taken across all shard loads so far.
+    pub fn io_retries(&self) -> usize {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Faults the underlying I/O layer injected (0 outside chaos runs).
+    pub fn faults_injected(&self) -> usize {
+        self.io.faults_injected()
+    }
+
     /// Read, verify (size + sha256), and decode one shard.  Fails with a
-    /// typed [`ShardError`] before any partial result escapes.
+    /// typed [`ShardError`] before any partial result escapes; transient
+    /// read errors retry with backoff first.
     pub fn load_shard(&self, idx: usize) -> Result<Vec<(String, ShardParam)>, ShardError> {
         let info = &self.shards[idx];
         let path = self.dir.join(&info.file);
-        let bytes = std::fs::read(&path).map_err(|e| ShardError::MissingShard {
+        let mut attempt = 0u32;
+        let read = loop {
+            match self.io.read(&path) {
+                Ok(b) => break Ok(b),
+                Err(e) if retry::is_transient(e.kind()) && attempt < self.retry.max_retries => {
+                    let pause = {
+                        let mut rng = self.rng.lock().unwrap();
+                        self.retry.backoff(attempt, &mut rng)
+                    };
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(pause);
+                    attempt += 1;
+                }
+                Err(e) => break Err(e),
+            }
+        };
+        let bytes = read.map_err(|e| ShardError::MissingShard {
             file: info.file.clone(),
             reason: e.to_string(),
         })?;
@@ -518,7 +899,9 @@ mod tests {
     use super::*;
     use crate::model::ckpt::{open, Checkpoint};
     use crate::model::init::init_params;
+    use crate::util::fault::{FaultKind, FaultOp, FaultSpec, FaultyIo};
     use crate::util::rng::Rng;
+    use std::time::Duration;
 
     fn tmpdir(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join("qera_shard_tests").join(name);
@@ -531,6 +914,25 @@ mod tests {
         let spec = ModelSpec::builtin("nano").unwrap();
         let params = init_params(&spec, &mut Rng::new(seed));
         Checkpoint::new(spec, params)
+    }
+
+    /// The checkpoint's params grouped for sharding, as `write_shard`
+    /// entry lists.
+    fn dense_groups(ckpt: &Checkpoint, shard_layers: usize) -> Vec<Vec<(String, ShardParam)>> {
+        let layout = ckpt.spec.param_layout();
+        param_groups(&ckpt.spec, shard_layers)
+            .into_iter()
+            .map(|g| {
+                g.into_iter()
+                    .map(|i| (layout[i].0.clone(), ShardParam::Dense(ckpt.params[i].clone())))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// io_default with near-zero sleeps so fault tests stay fast.
+    fn fast_retry() -> RetryPolicy {
+        RetryPolicy { base: Duration::from_micros(10), ..RetryPolicy::io_default() }
     }
 
     #[test]
@@ -643,5 +1045,301 @@ mod tests {
         std::fs::write(&victim, &orig).unwrap();
         assert_eq!(set.load_shard(1).unwrap().len(), 10);
         assert_eq!(open(&manifest).unwrap().into_dense().unwrap().params, ckpt.params);
+    }
+
+    #[test]
+    fn journal_written_after_each_shard_and_removed_by_finish() {
+        let ckpt = nano_ckpt(4);
+        let groups = dense_groups(&ckpt, 2);
+        let dir = tmpdir("journal");
+        let manifest = dir.join("j.manifest.json");
+        let mut w = ShardWriter::create(
+            &manifest,
+            CkptKind::Dense,
+            ckpt.spec.clone(),
+            Json::obj(vec![]),
+        )
+        .unwrap();
+        let journal = dir.join("j.manifest.json.journal");
+        assert_eq!(w.journal_path(), journal.as_path());
+        for (i, g) in groups.iter().enumerate() {
+            w.write_shard_ranged(g.clone(), (i * 3, i * 3 + 3)).unwrap();
+            let j = Json::parse(&std::fs::read_to_string(&journal).unwrap()).unwrap();
+            assert_eq!(j.req_str("format").unwrap(), JOURNAL_FORMAT);
+            let shards = j.req_arr("shards").unwrap();
+            assert_eq!(shards.len(), i + 1, "journal records every completed shard");
+            assert_eq!(shards[i].req_usize("site_lo").unwrap(), i * 3);
+            assert_eq!(shards[i].req_usize("site_hi").unwrap(), i * 3 + 3);
+            assert_eq!(shards[i].req_str("file").unwrap(), format!("j.shard-{i:03}.bin"));
+        }
+        assert!(!manifest.exists(), "manifest must land only at finish");
+        w.finish().unwrap();
+        assert!(manifest.exists());
+        assert!(!journal.exists(), "finish removes the journal");
+    }
+
+    #[test]
+    fn resume_skips_verified_prefix_and_finishes_bit_identically() {
+        let ckpt = nano_ckpt(5);
+        let spec = ckpt.spec.clone();
+        let groups = dense_groups(&ckpt, 1);
+        let meta = Json::obj(vec![("method", Json::str("test"))]);
+
+        // uncrashed baseline
+        let base_dir = tmpdir("resume-base");
+        let base_manifest = base_dir.join("r.manifest.json");
+        let mut w =
+            ShardWriter::create(&base_manifest, CkptKind::Dense, spec.clone(), meta.clone())
+                .unwrap();
+        for g in &groups {
+            w.write_shard(g.clone()).unwrap();
+        }
+        w.finish().unwrap();
+
+        for k in [1usize, groups.len() / 2, groups.len() - 1] {
+            let dir = tmpdir(&format!("resume-{k}"));
+            let manifest = dir.join("r.manifest.json");
+            let mut w =
+                ShardWriter::create(&manifest, CkptKind::Dense, spec.clone(), meta.clone())
+                    .unwrap();
+            for g in &groups[..k] {
+                w.write_shard(g.clone()).unwrap();
+            }
+            drop(w); // crash: no finish, journal left behind
+            assert!(!manifest.exists());
+
+            let (mut w, verified) = ShardWriter::resume(
+                &manifest,
+                CkptKind::Dense,
+                spec.clone(),
+                meta.clone(),
+                Arc::new(StdIo),
+                RetryPolicy::io_default(),
+            )
+            .unwrap();
+            assert_eq!(verified.len(), k, "crash after {k} shards");
+            assert_eq!(w.n_shards(), k);
+            for g in &groups[k..] {
+                w.write_shard(g.clone()).unwrap();
+            }
+            let out = w.finish().unwrap();
+            assert_eq!(
+                std::fs::read(&out).unwrap(),
+                std::fs::read(&base_manifest).unwrap(),
+                "resumed manifest differs from uncrashed baseline (crash at {k})"
+            );
+            for i in 0..groups.len() {
+                let f = format!("r.shard-{i:03}.bin");
+                assert_eq!(
+                    std::fs::read(dir.join(&f)).unwrap(),
+                    std::fs::read(base_dir.join(&f)).unwrap(),
+                    "{f} differs (crash at {k})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resume_reverifies_and_truncates_at_first_bad_shard() {
+        let ckpt = nano_ckpt(6);
+        let spec = ckpt.spec.clone();
+        let groups = dense_groups(&ckpt, 1);
+        let dir = tmpdir("resume-reverify");
+        let manifest = dir.join("v.manifest.json");
+        let mut w =
+            ShardWriter::create(&manifest, CkptKind::Dense, spec.clone(), Json::obj(vec![]))
+                .unwrap();
+        for g in &groups[..3] {
+            w.write_shard(g.clone()).unwrap();
+        }
+        drop(w);
+        // rot shard 1 on disk: the journal still lists it, but the resume
+        // scan must distrust it and everything after it
+        let victim = dir.join("v.shard-001.bin");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[10] ^= 0x40;
+        std::fs::write(&victim, &bytes).unwrap();
+        let (_, verified) = ShardWriter::resume(
+            &manifest,
+            CkptKind::Dense,
+            spec,
+            Json::obj(vec![]),
+            Arc::new(StdIo),
+            RetryPolicy::io_default(),
+        )
+        .unwrap();
+        assert_eq!(verified.len(), 1, "only the prefix before the rotted shard survives");
+        assert_eq!(verified[0].0.file, "v.shard-000.bin");
+    }
+
+    #[test]
+    fn resume_refuses_config_mismatch() {
+        let ckpt = nano_ckpt(7);
+        let groups = dense_groups(&ckpt, 1);
+        let dir = tmpdir("resume-mismatch");
+        let manifest = dir.join("m.manifest.json");
+        let meta_a = Json::obj(vec![("bits", Json::Num(4.0))]);
+        let mut w =
+            ShardWriter::create(&manifest, CkptKind::Dense, ckpt.spec.clone(), meta_a.clone())
+                .unwrap();
+        w.write_shard(groups[0].clone()).unwrap();
+        drop(w);
+
+        let err = ShardWriter::resume(
+            &manifest,
+            CkptKind::Dense,
+            ckpt.spec.clone(),
+            Json::obj(vec![("bits", Json::Num(3.0))]),
+            Arc::new(StdIo),
+            RetryPolicy::io_default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("different quantization config"), "{err:#}");
+
+        // the matching config still resumes
+        let (_, verified) = ShardWriter::resume(
+            &manifest,
+            CkptKind::Dense,
+            ckpt.spec.clone(),
+            meta_a,
+            Arc::new(StdIo),
+            RetryPolicy::io_default(),
+        )
+        .unwrap();
+        assert_eq!(verified.len(), 1);
+    }
+
+    #[test]
+    fn write_faults_retry_or_fail_fast() {
+        let ckpt = nano_ckpt(8);
+        let groups = dense_groups(&ckpt, 1);
+        let spec = ckpt.spec.clone();
+
+        // transient write fault: retried, then the shard lands
+        let dir = tmpdir("wfault-transient");
+        let io = Arc::new(FaultyIo::std(
+            vec![FaultSpec::new(FaultKind::Transient, FaultOp::Write, "shard-000")],
+            1,
+        ));
+        let mut w = ShardWriter::create_with(
+            dir.join("t.manifest.json"),
+            CkptKind::Dense,
+            spec.clone(),
+            Json::obj(vec![]),
+            io,
+            fast_retry(),
+        )
+        .unwrap();
+        w.write_shard(groups[0].clone()).unwrap();
+        assert!(w.io_retries() >= 1, "transient write fault must cost a retry");
+        assert_eq!(w.faults_injected(), 1);
+
+        // silently flipped write: the read-back sha check catches it and
+        // the rewrite lands clean bytes
+        let dir = tmpdir("wfault-flip");
+        let io = Arc::new(FaultyIo::std(
+            vec![FaultSpec::new(FaultKind::Flip, FaultOp::Write, "shard-000")],
+            9,
+        ));
+        let mut w = ShardWriter::create_with(
+            dir.join("f.manifest.json"),
+            CkptKind::Dense,
+            spec.clone(),
+            Json::obj(vec![]),
+            io,
+            fast_retry(),
+        )
+        .unwrap();
+        w.write_shard(groups[0].clone()).unwrap();
+        assert!(w.io_retries() >= 1, "silent corruption must be caught at write time");
+        let on_disk = std::fs::read(dir.join("f.shard-000.bin")).unwrap();
+        let journal =
+            Json::parse(&std::fs::read_to_string(dir.join("f.manifest.json.journal")).unwrap())
+                .unwrap();
+        let rec = &journal.req_arr("shards").unwrap()[0];
+        assert_eq!(sha256::hex_digest(&on_disk), rec.req_str("sha256").unwrap());
+
+        // disk full: permanent, fails fast without burning the budget
+        let dir = tmpdir("wfault-enospc");
+        let io = Arc::new(FaultyIo::std(
+            vec![FaultSpec::new(FaultKind::Enospc, FaultOp::Write, "shard-000")],
+            0,
+        ));
+        let mut w = ShardWriter::create_with(
+            dir.join("e.manifest.json"),
+            CkptKind::Dense,
+            spec,
+            Json::obj(vec![]),
+            io,
+            fast_retry(),
+        )
+        .unwrap();
+        let err = w.write_shard(groups[0].clone()).unwrap_err();
+        assert!(format!("{err:#}").contains("no space"), "{err:#}");
+        assert_eq!(w.io_retries(), 0, "enospc must not be retried");
+    }
+
+    #[test]
+    fn read_faults_map_to_typed_errors_and_transients_retry() {
+        let dir = tmpdir("rfault");
+        let ckpt = nano_ckpt(9);
+        let manifest = dir.join("c.manifest.json");
+        ckpt.save_sharded(&manifest, 1).unwrap();
+
+        let open_faulty = |script: &str| {
+            let io = Arc::new(FaultyIo::from_script(script, Box::new(StdIo)).unwrap());
+            ShardSet::open_manifest_with(&manifest, io, fast_retry()).unwrap()
+        };
+
+        let err = open_faulty("flip@r:shard-001").load_shard(1).unwrap_err();
+        assert!(matches!(err, ShardError::ShaMismatch { .. }), "{err}");
+
+        let err = open_faulty("torn@r:shard-001").load_shard(1).unwrap_err();
+        assert!(matches!(err, ShardError::Truncated { .. }), "{err}");
+
+        let err = open_faulty("perm@r:shard-001").load_shard(1).unwrap_err();
+        assert!(matches!(err, ShardError::MissingShard { .. }), "{err}");
+
+        // transient read faults ride out under the retry policy
+        let set = open_faulty("transient@r:shard-001:2");
+        assert_eq!(set.load_shard(1).unwrap().len(), 10);
+        assert_eq!(set.io_retries(), 2);
+        assert_eq!(set.faults_injected(), 2);
+
+        // a permanently unreadable manifest is BadManifest
+        let io = Arc::new(FaultyIo::from_script("perm@r:manifest", Box::new(StdIo)).unwrap());
+        let err = ShardSet::open_manifest_with(&manifest, io, fast_retry()).unwrap_err();
+        assert!(matches!(err, ShardError::BadManifest { .. }), "{err}");
+
+        // a transient manifest read recovers
+        let io = Arc::new(FaultyIo::from_script("transient@r:manifest", Box::new(StdIo)).unwrap());
+        let set = ShardSet::open_manifest_with(&manifest, io, fast_retry()).unwrap();
+        assert_eq!(set.n_shards(), ckpt.spec.n_layers + 2);
+    }
+
+    #[test]
+    fn bad_shard_bytes_fail_typed_after_hash_verification() {
+        let dir = tmpdir("badshard");
+        let ckpt = nano_ckpt(10);
+        let manifest = dir.join("b.manifest.json");
+        ckpt.save_sharded(&manifest, 1).unwrap();
+        let set = ShardSet::open_manifest(&manifest).unwrap();
+        let victim = dir.join(&set.shard(1).file);
+        // valid-by-hash, invalid-by-content: corrupt the shard magic, then
+        // patch the manifest so size and sha256 both verify
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&victim, &bytes).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&manifest).unwrap()).unwrap();
+        let mut obj = j.as_obj().unwrap().clone();
+        let mut shards = obj["shards"].as_arr().unwrap().to_vec();
+        let mut entry = shards[1].as_obj().unwrap().clone();
+        entry.insert("sha256".into(), Json::str(sha256::hex_digest(&bytes)));
+        shards[1] = Json::Obj(entry);
+        obj.insert("shards".into(), Json::Arr(shards));
+        std::fs::write(&manifest, Json::Obj(obj).dump_pretty()).unwrap();
+        let set = ShardSet::open_manifest(&manifest).unwrap();
+        let err = set.load_shard(1).unwrap_err();
+        assert!(matches!(err, ShardError::BadShard { .. }), "{err}");
     }
 }

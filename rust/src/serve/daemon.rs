@@ -107,46 +107,11 @@ impl Outcome {
     }
 }
 
-/// Exponential backoff with jitter drawn from the server's seeded RNG
-/// discipline, so retry timing is reproducible for a fixed seed.
-#[derive(Clone, Copy, Debug)]
-pub struct RetryPolicy {
-    /// Retries per batch after the initial attempt; 0 fails straight away.
-    pub max_retries: u32,
-    /// First backoff; attempt `n` sleeps `base * factor^n` (capped).
-    pub base: Duration,
-    pub factor: f64,
-    pub max: Duration,
-    /// Multiplicative jitter fraction in `[0, 1)`: the sleep is scaled by
-    /// a factor in `[1-jitter, 1+jitter)`.  0 disables jitter entirely.
-    pub jitter: f64,
-}
-
-impl Default for RetryPolicy {
-    fn default() -> Self {
-        RetryPolicy {
-            max_retries: 2,
-            base: Duration::from_millis(5),
-            factor: 2.0,
-            max: Duration::from_millis(200),
-            jitter: 0.5,
-        }
-    }
-}
-
-impl RetryPolicy {
-    /// Backoff before retry `attempt` (0-based).
-    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
-        let exp = self.base.as_secs_f64() * self.factor.powi(attempt.min(30) as i32);
-        let capped = exp.min(self.max.as_secs_f64());
-        let scale = if self.jitter > 0.0 {
-            1.0 + self.jitter * (2.0 * rng.f64() - 1.0)
-        } else {
-            1.0
-        };
-        Duration::from_secs_f64((capped * scale).max(0.0))
-    }
-}
+/// Retry/backoff policy for failed batches.  Extracted verbatim to
+/// `util::retry` (the storage layer shares it now); re-exported here so
+/// daemon callers and the serving API are unchanged, and its backoff
+/// sequence stays pinned by `backoff_is_capped_and_deterministic` below.
+pub use crate::util::retry::RetryPolicy;
 
 /// Plan provenance surfaced in `ServerStats` — what the budget allocator
 /// recorded in the serving checkpoint's meta (PR-5 artifacts).

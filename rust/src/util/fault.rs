@@ -1,0 +1,363 @@
+//! Deterministic storage fault injection behind the [`CkptIo`] seam.
+//!
+//! [`FaultyIo`] wraps a real [`CkptIo`] and fires scripted faults: each
+//! arm of the script names a fault kind, the operation it intercepts
+//! (read or write), a path substring to match, and how many matching
+//! operations it fires on.  Randomness (which bit flips, where a torn
+//! write tears) comes from a seeded [`Rng`], so a failing chaos run
+//! replays exactly from its script string.
+//!
+//! Script syntax (the `QERA_FAULTS` env var uses the same form):
+//!
+//! ```text
+//! seed=7,flip@w:shard-002,transient@r:shard-001:2,enospc@w:manifest
+//! ```
+//!
+//! comma-separated entries, each `kind@op:substr[:count]` (count defaults
+//! to 1; `op` is `r` or `w`; `substr` must not contain `:` or `,`), plus
+//! an optional `seed=N`.  Kinds:
+//!
+//! * `torn`  — write: a strict prefix lands on disk, then the write
+//!   errors (a crash mid-write); read: a strict prefix is returned.
+//! * `flip`  — one seeded bit is flipped; writes still report success
+//!   (silent corruption — only content verification catches it).
+//! * `enospc` — write fails with no bytes written, permanently
+//!   (disk full; retrying is pointless, callers must fail fast).
+//! * `transient` — the operation fails with an `Interrupted` error the
+//!   retry layer is allowed to ride out.
+//! * `perm`  — the operation fails permanently (`NotFound` on read).
+
+use crate::util::fsio::{CkptIo, StdIo};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::io;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Torn,
+    Flip,
+    Enospc,
+    Transient,
+    Perm,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Torn => "torn",
+            FaultKind::Flip => "flip",
+            FaultKind::Enospc => "enospc",
+            FaultKind::Transient => "transient",
+            FaultKind::Perm => "perm",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "torn" => Some(FaultKind::Torn),
+            "flip" => Some(FaultKind::Flip),
+            "enospc" => Some(FaultKind::Enospc),
+            "transient" => Some(FaultKind::Transient),
+            "perm" => Some(FaultKind::Perm),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    Read,
+    Write,
+}
+
+/// One arm of a fault script.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub op: FaultOp,
+    /// Fires on operations whose path contains this substring.
+    pub substr: String,
+    /// How many matching operations fire this arm (then it is spent).
+    pub count: usize,
+}
+
+impl FaultSpec {
+    pub fn new(kind: FaultKind, op: FaultOp, substr: impl Into<String>) -> FaultSpec {
+        FaultSpec { kind, op, substr: substr.into(), count: 1 }
+    }
+}
+
+/// Parse a fault script (see the module docs for the grammar).  Returns
+/// the seed (default 0) and the arms in script order — the FIRST matching
+/// arm with budget left fires on each operation.
+pub fn parse_script(s: &str) -> Result<(u64, Vec<FaultSpec>)> {
+    let mut seed = 0u64;
+    let mut specs = Vec::new();
+    for raw in s.split(',') {
+        let entry = raw.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        if let Some(v) = entry.strip_prefix("seed=") {
+            seed = v.parse().with_context(|| format!("bad fault seed '{v}'"))?;
+            continue;
+        }
+        let (kind_s, rest) = entry
+            .split_once('@')
+            .with_context(|| format!("fault '{entry}': expected kind@op:substr[:count]"))?;
+        let kind = FaultKind::parse(kind_s)
+            .with_context(|| format!("unknown fault kind '{kind_s}' in '{entry}'"))?;
+        let mut parts = rest.splitn(3, ':');
+        let op = match parts.next().unwrap_or("") {
+            "r" => FaultOp::Read,
+            "w" => FaultOp::Write,
+            other => bail!("fault '{entry}': op must be r or w, got '{other}'"),
+        };
+        let substr =
+            parts.next().with_context(|| format!("fault '{entry}': missing path substring"))?;
+        ensure!(!substr.is_empty(), "fault '{entry}': empty path substring");
+        let count = match parts.next() {
+            Some(c) => c.parse().with_context(|| format!("bad fault count '{c}' in '{entry}'"))?,
+            None => 1,
+        };
+        ensure!(count > 0, "fault '{entry}': count must be positive");
+        ensure!(
+            !(kind == FaultKind::Enospc && op == FaultOp::Read),
+            "fault '{entry}': enospc applies to writes"
+        );
+        specs.push(FaultSpec { kind, op, substr: substr.to_string(), count });
+    }
+    Ok((seed, specs))
+}
+
+struct FaultState {
+    arms: Vec<(FaultSpec, usize)>,
+    rng: Rng,
+    injected: usize,
+}
+
+/// A [`CkptIo`] that fires scripted deterministic faults, delegating
+/// everything else to the wrapped implementation.
+pub struct FaultyIo {
+    inner: Box<dyn CkptIo>,
+    state: Mutex<FaultState>,
+}
+
+impl FaultyIo {
+    pub fn new(specs: Vec<FaultSpec>, seed: u64, inner: Box<dyn CkptIo>) -> FaultyIo {
+        let arms = specs.into_iter().map(|s| (s.clone(), s.count)).collect();
+        FaultyIo { inner, state: Mutex::new(FaultState { arms, rng: Rng::new(seed), injected: 0 }) }
+    }
+
+    /// Faults over real `std::fs` I/O.
+    pub fn std(specs: Vec<FaultSpec>, seed: u64) -> FaultyIo {
+        FaultyIo::new(specs, seed, Box::new(StdIo))
+    }
+
+    pub fn from_script(script: &str, inner: Box<dyn CkptIo>) -> Result<FaultyIo> {
+        let (seed, specs) = parse_script(script)?;
+        Ok(FaultyIo::new(specs, seed, inner))
+    }
+
+    /// Arm lookup: first scripted fault with budget left that matches this
+    /// operation + path.  Returns the kind and a deterministic RNG draw
+    /// for the fault's randomness (bit index, tear point).
+    fn fire(&self, op: FaultOp, path: &Path) -> Option<(FaultKind, u64)> {
+        let mut st = self.state.lock().unwrap();
+        let p = path.to_string_lossy().into_owned();
+        let idx = st
+            .arms
+            .iter()
+            .position(|(spec, left)| *left > 0 && spec.op == op && p.contains(&spec.substr))?;
+        st.arms[idx].1 -= 1;
+        let kind = st.arms[idx].0.kind;
+        st.injected += 1;
+        let draw = st.rng.next_u64();
+        Some((kind, draw))
+    }
+}
+
+/// Flip one bit chosen by `draw` (no-op on empty buffers).
+fn flip_bit(bytes: &mut [u8], draw: u64) {
+    if bytes.is_empty() {
+        return;
+    }
+    let bit = (draw as usize) % (bytes.len() * 8);
+    bytes[bit / 8] ^= 1 << (bit % 8);
+}
+
+/// Length of the strict prefix a torn operation keeps (possibly 0).
+fn torn_len(len: usize, draw: u64) -> usize {
+    if len == 0 {
+        0
+    } else {
+        (draw as usize) % len
+    }
+}
+
+impl CkptIo for FaultyIo {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        match self.fire(FaultOp::Read, path) {
+            Some((FaultKind::Transient, _)) => Err(io::Error::new(
+                io::ErrorKind::Interrupted,
+                format!("injected transient read fault: {}", path.display()),
+            )),
+            Some((FaultKind::Perm | FaultKind::Enospc, _)) => Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("injected permanent read fault: {}", path.display()),
+            )),
+            Some((FaultKind::Flip, draw)) => {
+                let mut bytes = self.inner.read(path)?;
+                flip_bit(&mut bytes, draw);
+                Ok(bytes)
+            }
+            Some((FaultKind::Torn, draw)) => {
+                let bytes = self.inner.read(path)?;
+                Ok(bytes[..torn_len(bytes.len(), draw)].to_vec())
+            }
+            None => self.inner.read(path),
+        }
+    }
+
+    fn write(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        match self.fire(FaultOp::Write, path) {
+            Some((FaultKind::Enospc, _)) => {
+                Err(io::Error::other("injected fault: no space left on device"))
+            }
+            Some((FaultKind::Transient, _)) => Err(io::Error::new(
+                io::ErrorKind::Interrupted,
+                format!("injected transient write fault: {}", path.display()),
+            )),
+            Some((FaultKind::Perm, _)) => Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                format!("injected permanent write fault: {}", path.display()),
+            )),
+            Some((FaultKind::Torn, draw)) => {
+                let keep = torn_len(bytes.len(), draw);
+                self.inner.write(path, &bytes[..keep])?;
+                Err(io::Error::other(format!(
+                    "injected torn write after {keep} of {} bytes",
+                    bytes.len()
+                )))
+            }
+            // a flipped write REPORTS success: only content verification
+            // (sha256 read-back) can catch it
+            Some((FaultKind::Flip, draw)) => {
+                let mut corrupt = bytes.to_vec();
+                flip_bit(&mut corrupt, draw);
+                self.inner.write(path, &corrupt)
+            }
+            None => self.inner.write(path, bytes),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.inner.rename(from, to)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        self.inner.sync_dir(dir)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        self.inner.remove_file(path)
+    }
+
+    fn faults_injected(&self) -> usize {
+        self.state.lock().unwrap().injected
+    }
+}
+
+/// The ambient [`CkptIo`]: a [`FaultyIo`] scripted by the `QERA_FAULTS`
+/// env var when set (chaos runs against the real CLI), plain [`StdIo`]
+/// otherwise.
+pub fn io_from_env() -> Result<Arc<dyn CkptIo>> {
+    match std::env::var("QERA_FAULTS") {
+        Ok(s) if !s.trim().is_empty() => {
+            let (seed, specs) = parse_script(&s).context("parsing QERA_FAULTS")?;
+            crate::info!("QERA_FAULTS active: {} fault arm(s), seed {}", specs.len(), seed);
+            Ok(Arc::new(FaultyIo::new(specs, seed, Box::new(StdIo))))
+        }
+        _ => Ok(Arc::new(StdIo)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("qera_fault_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn script_parses_and_rejects_garbage() {
+        let (seed, specs) =
+            parse_script("seed=7, flip@w:shard-002, transient@r:shard-001:2").unwrap();
+        assert_eq!(seed, 7);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].kind, FaultKind::Flip);
+        assert_eq!(specs[0].op, FaultOp::Write);
+        assert_eq!(specs[0].substr, "shard-002");
+        assert_eq!(specs[0].count, 1);
+        assert_eq!(specs[1].kind, FaultKind::Transient);
+        assert_eq!(specs[1].count, 2);
+
+        assert!(parse_script("bitrot@r:x").is_err(), "unknown kind");
+        assert!(parse_script("flip@x:y").is_err(), "bad op");
+        assert!(parse_script("flip@r:").is_err(), "empty substring");
+        assert!(parse_script("flip@r:x:zero").is_err(), "bad count");
+        assert!(parse_script("enospc@r:x").is_err(), "enospc is write-only");
+        assert!(parse_script("seed=nope").is_err(), "bad seed");
+        assert_eq!(parse_script("").unwrap().1.len(), 0);
+    }
+
+    #[test]
+    fn faults_are_deterministic_and_budgeted() {
+        let path = tmpfile("det.bin");
+        std::fs::write(&path, vec![0u8; 256]).unwrap();
+        let read_corrupt = |seed: u64| {
+            let io =
+                FaultyIo::std(vec![FaultSpec::new(FaultKind::Flip, FaultOp::Read, "det")], seed);
+            io.read(&path).unwrap()
+        };
+        // same seed, same flipped bit; the arm spends after one shot
+        assert_eq!(read_corrupt(3), read_corrupt(3));
+        let io = FaultyIo::std(vec![FaultSpec::new(FaultKind::Flip, FaultOp::Read, "det")], 3);
+        let first = io.read(&path).unwrap();
+        assert_ne!(first, vec![0u8; 256], "one bit must differ");
+        assert_eq!(io.read(&path).unwrap(), vec![0u8; 256], "arm budget spent");
+        assert_eq!(io.faults_injected(), 1);
+    }
+
+    #[test]
+    fn torn_write_leaves_a_strict_prefix() {
+        let path = tmpfile("torn.bin");
+        let io = FaultyIo::std(vec![FaultSpec::new(FaultKind::Torn, FaultOp::Write, "torn")], 11);
+        let payload = vec![7u8; 100];
+        let err = io.write(&path, &payload).unwrap_err();
+        assert!(err.to_string().contains("torn write"), "{err}");
+        let on_disk = std::fs::read(&path).unwrap();
+        assert!(on_disk.len() < payload.len(), "strict prefix, got {}", on_disk.len());
+        assert_eq!(on_disk, payload[..on_disk.len()]);
+        // a clean retry through the same io succeeds (budget spent)
+        io.write(&path, &payload).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), payload);
+    }
+
+    #[test]
+    fn substring_scoping_leaves_other_paths_alone() {
+        let hit = tmpfile("scoped-hit.bin");
+        let miss = tmpfile("scoped-miss.bin");
+        let io =
+            FaultyIo::std(vec![FaultSpec::new(FaultKind::Perm, FaultOp::Write, "scoped-hit")], 0);
+        assert!(io.write(&hit, b"x").is_err());
+        io.write(&miss, b"x").unwrap();
+        assert_eq!(io.faults_injected(), 1);
+    }
+}

@@ -1,8 +1,17 @@
-//! Binary file I/O helpers (little-endian) for checkpoints and caches.
+//! Binary file I/O helpers (little-endian) for checkpoints and caches,
+//! plus the [`CkptIo`] seam the sharded-checkpoint stack does all its file
+//! I/O through.
+//!
+//! `CkptIo` exists so storage faults are injectable: production code runs
+//! on [`StdIo`] (real `std::fs`, with fsync discipline), tests and
+//! `QERA_FAULTS` chaos runs swap in `util::fault::FaultyIo` to script
+//! torn writes, bit flips, ENOSPC, and transient read errors
+//! deterministically — the `FaultyEngine` pattern from `serve/daemon.rs`
+//! applied to storage.
 
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 pub fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -81,16 +90,83 @@ pub fn read_to_string(path: impl AsRef<Path>) -> Result<String> {
         .with_context(|| format!("reading {}", path.as_ref().display()))
 }
 
-/// Atomic-ish write: write to `.tmp` then rename.
-pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
-    let path = path.as_ref();
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+/// The file-I/O surface of the sharded checkpoint stack.  Every byte the
+/// shard writer/reader and the resume journal move goes through one of
+/// these methods, so a single injected implementation can fault any of
+/// them deterministically.
+pub trait CkptIo: Send + Sync {
+    /// Read a whole file.
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>>;
+    /// Create/overwrite a file with `bytes` and fsync it before returning.
+    fn write(&self, path: &Path, bytes: &[u8]) -> std::io::Result<()>;
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()>;
+    /// Fsync a directory, making completed renames inside it durable.
+    fn sync_dir(&self, dir: &Path) -> std::io::Result<()>;
+    fn remove_file(&self, path: &Path) -> std::io::Result<()>;
+    /// Faults this implementation has injected so far (0 for real I/O).
+    fn faults_injected(&self) -> usize {
+        0
     }
-    let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, bytes)?;
-    std::fs::rename(&tmp, path)?;
+}
+
+/// The production [`CkptIo`]: `std::fs` with write-then-fsync.
+pub struct StdIo;
+
+impl CkptIo for StdIo {
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn write(&self, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> std::io::Result<()> {
+        // On unix a directory opens read-only and fsyncs like a file; this
+        // is what makes a freshly renamed entry survive power loss.
+        std::fs::File::open(dir)?.sync_all()
+    }
+
+    fn remove_file(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::remove_file(path)
+    }
+}
+
+/// Durable atomic write through a [`CkptIo`]: write `<path>.tmp` (fsynced),
+/// rename over `path`, then fsync the parent directory so the rename
+/// itself survives a crash.  The `.tmp` suffix is appended to the full
+/// file name (not swapped for the extension), so siblings like
+/// `x.manifest.json` and `x.manifest.json.journal` never collide on the
+/// same temp file.
+pub fn write_atomic_with(io: &dyn CkptIo, path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    io.write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    io.rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            io.sync_dir(dir).with_context(|| format!("syncing dir {}", dir.display()))?;
+        }
+    }
     Ok(())
+}
+
+/// Atomic durable write on the real filesystem: see [`write_atomic_with`].
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    write_atomic_with(&StdIo, path.as_ref(), bytes)
 }
 
 #[cfg(test)]

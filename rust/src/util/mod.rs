@@ -6,4 +6,6 @@ pub mod json;
 pub mod pool;
 pub mod logging;
 pub mod fsio;
+pub mod fault;
+pub mod retry;
 pub mod sha256;

@@ -1,0 +1,186 @@
+//! Shared retry/backoff policy: exponential backoff with deterministic
+//! seeded jitter.
+//!
+//! Grown out of `serve/daemon.rs` (PR 7), where it paced engine-step
+//! retries under the supervisor; the storage layer (`model/shard.rs`,
+//! `coordinator/stream.rs`) now uses the same policy to ride out transient
+//! I/O faults, so retry timing everywhere is reproducible for a fixed
+//! seed.  The daemon re-exports [`RetryPolicy`] unchanged — the extraction
+//! is behavior-neutral and its backoff sequence is pinned by unit tests on
+//! both sides.
+
+use crate::util::rng::Rng;
+use std::io;
+use std::time::Duration;
+
+/// Exponential backoff with jitter drawn from the caller's seeded RNG
+/// discipline, so retry timing is reproducible for a fixed seed.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries per operation after the initial attempt; 0 fails straight
+    /// away.
+    pub max_retries: u32,
+    /// First backoff; attempt `n` sleeps `base * factor^n` (capped).
+    pub base: Duration,
+    pub factor: f64,
+    pub max: Duration,
+    /// Multiplicative jitter fraction in `[0, 1)`: the sleep is scaled by
+    /// a factor in `[1-jitter, 1+jitter)`.  0 disables jitter entirely.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 2,
+            base: Duration::from_millis(5),
+            factor: 2.0,
+            max: Duration::from_millis(200),
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (0-based).
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self.base.as_secs_f64() * self.factor.powi(attempt.min(30) as i32);
+        let capped = exp.min(self.max.as_secs_f64());
+        let scale = if self.jitter > 0.0 {
+            1.0 + self.jitter * (2.0 * rng.f64() - 1.0)
+        } else {
+            1.0
+        };
+        Duration::from_secs_f64((capped * scale).max(0.0))
+    }
+
+    /// Defaults for checkpoint I/O: shard reads/writes are local-disk
+    /// operations, so backoffs are short and the budget is one attempt
+    /// deeper than the serving default (a transient read glitch at 70B
+    /// scale is far cheaper to retry than to redo hours of solves).
+    pub fn io_default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_millis(2),
+            factor: 2.0,
+            max: Duration::from_millis(50),
+            jitter: 0.5,
+        }
+    }
+}
+
+/// I/O error kinds worth retrying.  Everything else — missing files,
+/// permission errors, full disks, corrupt data — is permanent and must
+/// fail fast with its typed error instead of burning the backoff budget.
+pub fn is_transient(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::Interrupted | io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock
+    )
+}
+
+/// Run `op` under `policy`: transient failures back off and retry,
+/// permanent ones (and budget exhaustion) return the last error.  The
+/// second element is the number of retries taken (0 = first try worked).
+pub fn retry_io<T>(
+    policy: &RetryPolicy,
+    rng: &mut Rng,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> (io::Result<T>, u32) {
+    let mut attempt = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return (Ok(v), attempt),
+            Err(e) if is_transient(e.kind()) && attempt < policy.max_retries => {
+                std::thread::sleep(policy.backoff(attempt, rng));
+                attempt += 1;
+            }
+            Err(e) => return (Err(e), attempt),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The extraction from `serve/daemon.rs` must not change the backoff
+    /// sequence: recompute the pre-extraction formula inline against the
+    /// same RNG stream and demand exact equality, jittered and not.
+    #[test]
+    fn backoff_sequence_matches_daemon_formula_exactly() {
+        let p = RetryPolicy {
+            max_retries: 5,
+            base: Duration::from_millis(10),
+            factor: 2.0,
+            max: Duration::from_millis(50),
+            jitter: 0.5,
+        };
+        let mut actual = Rng::new(9);
+        let mut expected = Rng::new(9);
+        for attempt in 0..8u32 {
+            let got = p.backoff(attempt, &mut actual);
+            let exp = p.base.as_secs_f64() * p.factor.powi(attempt.min(30) as i32);
+            let capped = exp.min(p.max.as_secs_f64());
+            let scale = 1.0 + p.jitter * (2.0 * expected.f64() - 1.0);
+            let want = Duration::from_secs_f64((capped * scale).max(0.0));
+            assert_eq!(got, want, "attempt {attempt}");
+        }
+        // jitter 0 must not consume RNG state and gives the exact exponential
+        let p0 = RetryPolicy { jitter: 0.0, ..p };
+        let mut r = Rng::new(0);
+        assert_eq!(p0.backoff(0, &mut r), Duration::from_millis(10));
+        assert_eq!(p0.backoff(1, &mut r), Duration::from_millis(20));
+        assert_eq!(p0.backoff(4, &mut r), Duration::from_millis(50));
+        assert_eq!(r.next_u64(), Rng::new(0).next_u64(), "jitter 0 drew from the rng");
+    }
+
+    #[test]
+    fn transient_kinds_are_narrow() {
+        assert!(is_transient(io::ErrorKind::Interrupted));
+        assert!(is_transient(io::ErrorKind::TimedOut));
+        assert!(is_transient(io::ErrorKind::WouldBlock));
+        assert!(!is_transient(io::ErrorKind::NotFound));
+        assert!(!is_transient(io::ErrorKind::PermissionDenied));
+        assert!(!is_transient(io::ErrorKind::InvalidData));
+        assert!(!is_transient(io::ErrorKind::Other));
+    }
+
+    #[test]
+    fn retry_io_retries_transient_and_fails_fast_on_permanent() {
+        let policy = RetryPolicy { base: Duration::from_micros(10), ..RetryPolicy::io_default() };
+        let mut rng = Rng::new(1);
+
+        // two transient failures, then success
+        let mut calls = 0;
+        let (res, retries) = retry_io(&policy, &mut rng, || {
+            calls += 1;
+            if calls <= 2 {
+                Err(io::Error::new(io::ErrorKind::Interrupted, "transient"))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(res.unwrap(), 3);
+        assert_eq!(retries, 2);
+
+        // permanent: exactly one call, no retries
+        let mut calls = 0;
+        let (res, retries) = retry_io(&policy, &mut rng, || -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::NotFound, "gone"))
+        });
+        assert!(res.is_err());
+        assert_eq!((calls, retries), (1, 0));
+
+        // budget exhaustion: initial try + max_retries, then the error
+        let mut calls = 0;
+        let (res, retries) = retry_io(&policy, &mut rng, || -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::Interrupted, "still down"))
+        });
+        assert!(res.is_err());
+        assert_eq!(calls, 1 + policy.max_retries);
+        assert_eq!(retries, policy.max_retries);
+    }
+}

@@ -5,7 +5,10 @@
 //! the directory is absent so `cargo test` stays green on a fresh clone.
 
 use qera::budget::{allocate, profile, AllocStrategy, BudgetPlan, CandidateGrid};
-use qera::coordinator::{calibrate, quantize, quantize_streaming, CalibResult, PipelineConfig};
+use qera::coordinator::{
+    calibrate, quantize, quantize_streaming, quantize_streaming_with, CalibResult,
+    PipelineConfig, StreamOptions,
+};
 use qera::data::Corpus;
 use qera::linalg::Mat64;
 use qera::model::{init::init_params, Checkpoint, ModelSpec, QuantCheckpoint};
@@ -598,6 +601,162 @@ fn cli_shard_layers_streams_and_native_consumers_read_manifests() {
         "2",
     ])
     .unwrap();
+}
+
+// ----------------------------------------------------- crash recovery
+
+#[test]
+fn crash_resume_bit_identity_at_every_shard_boundary() {
+    // ISSUE acceptance: crash a streaming run at EVERY shard boundary of an
+    // 8-layer model (10 groups at --shard-layers 1, plus the manifest write
+    // itself), resume, and land a manifest bit-identical to the uncrashed
+    // baseline with `shards_skipped_resume` equal to the shards that had
+    // completed before the crash.  Bit-identity holds because per-site
+    // solver seeds derive from GLOBAL site indices recorded in the journal.
+    use qera::util::fault::{FaultKind, FaultOp, FaultSpec, FaultyIo};
+    use std::sync::Arc;
+
+    let dir = tmpdir().join("crash_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = deep_spec(8);
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(61)));
+    let src = dir.join("src.qkpt");
+    ckpt.save(&src).unwrap();
+    let cfg = PipelineConfig::new(Method::WOnly, QFormat::Mxint { bits: 4, block: 32 }, 0);
+
+    // uncrashed baseline; same output file name in every run directory so
+    // manifests and shard files compare byte-for-byte with no rewriting
+    let base_dir = dir.join("base");
+    std::fs::create_dir_all(&base_dir).unwrap();
+    let base_out = base_dir.join("q.manifest.json");
+    let base_sum = quantize_streaming(&src, &cfg, None, &base_out, 1).unwrap();
+    let n_shards = base_sum.n_shards;
+    assert_eq!(n_shards, 10, "embed group + 8 layers + tail");
+    let base_manifest = std::fs::read(&base_out).unwrap();
+    let shard_name = |i: usize| format!("q.shard-{i:03}.bin");
+    let base_shards: Vec<Vec<u8>> = (0..n_shards)
+        .map(|i| std::fs::read(base_dir.join(shard_name(i))).unwrap())
+        .collect();
+
+    // k < n_shards crashes shard k's write; k == n_shards crashes the
+    // final manifest write (its tmp file is the only path matching
+    // "json.tmp" — journal tmps end in ".journal.tmp")
+    for k in 0..=n_shards {
+        let run = dir.join(format!("k{k}"));
+        std::fs::create_dir_all(&run).unwrap();
+        let out = run.join("q.manifest.json");
+        let substr = if k < n_shards { format!("shard-{k:03}") } else { "json.tmp".to_string() };
+        let crash = StreamOptions {
+            io: Some(Arc::new(FaultyIo::std(
+                vec![FaultSpec::new(FaultKind::Enospc, FaultOp::Write, substr)],
+                7,
+            ))),
+            ..Default::default()
+        };
+        let err = quantize_streaming_with(&src, &cfg, None, &out, 1, &crash).unwrap_err();
+        assert!(format!("{err:#}").contains("no space"), "k={k}: {err:#}");
+        assert!(!out.exists(), "k={k}: a crashed run must not publish a manifest");
+
+        let resume = StreamOptions { resume: true, ..Default::default() };
+        let sum = quantize_streaming_with(&src, &cfg, None, &out, 1, &resume).unwrap();
+        assert_eq!(sum.shards_skipped_resume, k, "k={k}: journaled shards skipped");
+        assert_eq!(std::fs::read(&out).unwrap(), base_manifest, "k={k}: manifest differs");
+        for i in 0..n_shards {
+            assert_eq!(
+                std::fs::read(run.join(shard_name(i))).unwrap(),
+                base_shards[i],
+                "k={k}: shard {i} differs"
+            );
+        }
+    }
+}
+
+#[test]
+fn chaos_seeded_single_fault_converges_after_resume() {
+    // multi-seed chaos: a seeded RNG scripts one random fault (kind x op x
+    // target) into a streaming run with --resume semantics.  Whatever
+    // fires, the invariant holds: the run either completes bit-identical
+    // to the clean baseline (transient / silently-corrupting faults are
+    // ridden out by retry + read-back verification) or fails without
+    // publishing a manifest, after which a clean resume converges.
+    use qera::util::fault::{FaultKind, FaultOp, FaultSpec, FaultyIo};
+    use std::sync::Arc;
+
+    let dir = tmpdir().join("chaos");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = deep_spec(4);
+    let ckpt = Checkpoint::new(spec.clone(), init_params(&spec, &mut Rng::new(71)));
+    let src = dir.join("src.qkpt");
+    ckpt.save(&src).unwrap();
+    let cfg = PipelineConfig::new(Method::WOnly, QFormat::Mxint { bits: 3, block: 32 }, 0);
+
+    let base_dir = dir.join("base");
+    std::fs::create_dir_all(&base_dir).unwrap();
+    let base_out = base_dir.join("q.manifest.json");
+    let base_sum = quantize_streaming(&src, &cfg, None, &base_out, 1).unwrap();
+    let n_shards = base_sum.n_shards;
+    let base_manifest = std::fs::read(&base_out).unwrap();
+    let shard_name = |i: usize| format!("q.shard-{i:03}.bin");
+    let base_shards: Vec<Vec<u8>> = (0..n_shards)
+        .map(|i| std::fs::read(base_dir.join(shard_name(i))).unwrap())
+        .collect();
+
+    let kinds = [
+        FaultKind::Torn,
+        FaultKind::Flip,
+        FaultKind::Enospc,
+        FaultKind::Transient,
+        FaultKind::Perm,
+    ];
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(0xc4a05 ^ seed);
+        let kind = kinds[rng.below(kinds.len())];
+        let op = if kind == FaultKind::Enospc || rng.below(2) == 0 {
+            FaultOp::Write
+        } else {
+            FaultOp::Read
+        };
+        // flip reads only target shard files: the write path's sha256
+        // read-back must catch them there, but a monolithic .qkpt source
+        // carries no checksum, so a silently flipped source bit is
+        // legitimately undetectable
+        let substr = if op == FaultOp::Read && kind != FaultKind::Flip && rng.below(2) == 0 {
+            "src.qkpt".to_string()
+        } else {
+            format!("shard-{:03}", rng.below(n_shards))
+        };
+        let run = dir.join(format!("seed{seed}"));
+        std::fs::create_dir_all(&run).unwrap();
+        let out = run.join("q.manifest.json");
+        let opts = StreamOptions {
+            resume: true,
+            io: Some(Arc::new(FaultyIo::std(
+                vec![FaultSpec::new(kind, op, substr.clone())],
+                seed,
+            ))),
+            ..Default::default()
+        };
+        let tag = format!("seed {seed}: {}@{op:?}:{substr}", kind.name());
+        match quantize_streaming_with(&src, &cfg, None, &out, 1, &opts) {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(!out.exists(), "{tag}: failed run published a manifest ({e:#})");
+                let resume = StreamOptions { resume: true, ..Default::default() };
+                quantize_streaming_with(&src, &cfg, None, &out, 1, &resume)
+                    .unwrap_or_else(|e| panic!("{tag}: clean resume failed: {e:#}"));
+            }
+        }
+        assert_eq!(std::fs::read(&out).unwrap(), base_manifest, "{tag}: manifest differs");
+        for i in 0..n_shards {
+            assert_eq!(
+                std::fs::read(run.join(shard_name(i))).unwrap(),
+                base_shards[i],
+                "{tag}: shard {i} differs"
+            );
+        }
+    }
 }
 
 #[test]

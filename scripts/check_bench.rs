@@ -15,7 +15,10 @@
 //!   hotpath table orders baseline columns first);
 //! * EVERY `p95` column — the serving SLO tails (`serve` reports queue and
 //!   total p95 separately; a daemon change that leaves medians flat but
-//!   fattens the tails fails here).
+//!   fattens the tails fails here);
+//! * every `resume scan` column — the crash-recovery journal scan in the
+//!   `ckpt` group sits before the shipped load path, so the last-p50 rule
+//!   alone would not watch it.
 //!
 //! Metrics are matched between fresh and baseline by header name, so a
 //! baseline that predates a new column simply does not gate it yet (the
@@ -40,7 +43,8 @@
 //! profiling pass), `exec` (the fused-from-packed matmul behind the
 //! native serve/eval backend), `serve` (the supervised daemon end to end —
 //! p50 AND p95 queue/total tails), `ckpt` (sharded-manifest checkpoint
-//! I/O — the sha256-verified parallel reload is the gated column).
+//! I/O — the sha256-verified parallel reload AND the crash-recovery
+//! resume-journal scan are the gated columns).
 
 use qera::util::json::Json;
 
@@ -78,7 +82,9 @@ fn col_median(table: &Json, col: usize) -> Option<f64> {
 ///   last, so the gate watches the shipped kernel; pooling in the baseline
 ///   columns would let a regression hide behind the (slower, stable)
 ///   reference;
-/// * every `p95` column — tail-latency SLOs (the `serve` group).
+/// * every `p95` column — tail-latency SLOs (the `serve` group);
+/// * every `resume scan` column — the `ckpt` group's crash-recovery scan,
+///   a non-last p50 the rules above would otherwise miss.
 fn group_metrics(table: &Json) -> Vec<Metric> {
     let Some(headers) = table.get("headers").and_then(Json::as_arr) else {
         return Vec::new();
@@ -94,10 +100,16 @@ fn group_metrics(table: &Json) -> Vec<Metric> {
         cols.push(p50);
     }
     for (i, h) in headers.iter().enumerate() {
-        if h.as_str().map(|s| s.contains("p95")).unwrap_or(false) {
+        let gated = h
+            .as_str()
+            .map(|s| s.contains("p95") || s.contains("resume scan"))
+            .unwrap_or(false);
+        if gated {
             cols.push(i);
         }
     }
+    cols.sort_unstable();
+    cols.dedup();
     cols.into_iter()
         .filter_map(|c| {
             let label = headers[c].as_str()?.to_string();
@@ -346,6 +358,32 @@ mod tests {
         assert!(g.mode_mismatch);
         assert_eq!(g.failures, 0);
         assert_eq!(g.compared, 0);
+    }
+
+    #[test]
+    fn resume_scan_column_is_gated_alongside_last_p50() {
+        let ckpt_report = |scan: &str, load: &str| {
+            Json::parse(&format!(
+                r#"{{"ckpt": {{"headers": ["m", "shard write p50", "mono load p50",
+                    "resume scan p50", "sharded verified load p50"],
+                   "rows": [["256", "1.0", "2.0", "{scan}", "{load}"]]}},
+                   "_mode": {{"headers": ["mode"], "rows": [["smoke"]]}}}}"#
+            ))
+            .unwrap()
+        };
+        let base = ckpt_report("3.0", "4.0");
+        // a scan-only regression fires even though the last p50 is flat
+        let slow_scan = ckpt_report("30.0", "4.0");
+        let g = gate(&slow_scan, &base, 0.25).unwrap();
+        assert_eq!(g.failures, 1, "{:?}", g.lines);
+        assert_eq!(g.compared, 2, "resume scan + sharded load are gated");
+        assert!(g
+            .lines
+            .iter()
+            .any(|l| l.contains("[resume scan p50]") && l.contains("REGRESSION")));
+        // the write/mono baseline columns stay ungated
+        let g2 = gate(&ckpt_report("3.2", "4.3"), &base, 0.25).unwrap();
+        assert_eq!(g2.failures, 0, "{:?}", g2.lines);
     }
 
     #[test]
