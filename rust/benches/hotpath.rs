@@ -18,15 +18,18 @@
 //! supervised daemon end to end on the native backend: throughput + queue /
 //! total latency tails vs batching window), `ckpt` (checkpoint I/O:
 //! sharded-manifest write and sha256-verified parallel reload vs the
-//! monolithic path), `quant` (quantizer throughput), `stats` (calibration
-//! accumulation), and — when PJRT artifacts are built — `forward`.
+//! monolithic path), `obs` (observability per-site overhead: spans with
+//! tracing off/on and cached metric handles — the no-op fast-path gate),
+//! `quant` (quantizer throughput), `stats` (calibration accumulation), and
+//! — when PJRT artifacts are built — `forward`.
 //!
 //! The `svd` / `matmul` / `tensor_matmul` / `psd` / `solver` / `calib` /
-//! `qdq` / `budget` / `exec` / `serve` / `ckpt` groups additionally land in
-//! `BENCH_solver.json` (machine-readable, for the perf trajectory and the
-//! CI bench-regression gate; `serve` is gated on its p95 tail columns too —
-//! the SLO gate).  Set `QERA_BENCH_SMOKE=1` to shrink shapes/iterations —
-//! the mode CI uses when diffing against `BENCH_baseline.json`.
+//! `qdq` / `budget` / `exec` / `serve` / `ckpt` / `obs` groups additionally
+//! land in `BENCH_solver.json` (machine-readable, for the perf trajectory
+//! and the CI bench-regression gate; `serve` is gated on its p95 tail
+//! columns too — the SLO gate).  Set `QERA_BENCH_SMOKE=1` to shrink
+//! shapes/iterations — the mode CI uses when diffing against
+//! `BENCH_baseline.json`.
 
 use qera::bench_util::{emit_json_report, f2, f3, f4, time_stats, Table};
 use qera::coordinator::{quantize, CalibResult, PipelineConfig};
@@ -777,6 +780,69 @@ fn bench_serve() -> anyhow::Result<Table> {
     Ok(t)
 }
 
+/// Per-site overhead of the observability layer.  The tentpole invariant
+/// is the disabled fast path: with tracing off, a span call site must cost
+/// one relaxed atomic load (no allocation, no lock) — the `ns/op p50`
+/// column lands in the CI bench gate so the hot paths never silently grow
+/// instrumentation cost.  Metric rows measure the cached-handle hot path
+/// (the statics every instrumented module keeps), not registration.
+fn bench_obs() -> Table {
+    use qera::obs::{metrics, trace};
+    // a stray QERA_TRACE must not turn the disabled-path rows into live ones
+    trace::global().disable();
+    let n = if smoke() { 100_000u64 } else { 1_000_000 };
+    let per_ns = |ms: f64, ops: u64| format!("{:.2}", ms * 1e6 / ops as f64);
+    let mut t = Table::new(
+        "obs: per-site overhead, tracing disabled vs enabled (ns/op)",
+        &["op", "ns/op p50"],
+    );
+    let off = time_stats(1, 5, || {
+        for _ in 0..n {
+            std::hint::black_box(trace::span("obs.bench.span"));
+        }
+    });
+    t.row(vec!["span (tracing off)".into(), per_ns(off.p50_ms, n)]);
+    let off_s = time_stats(1, 5, || {
+        for _ in 0..n {
+            std::hint::black_box(trace::sample_span("obs.bench.sampled", 64));
+        }
+    });
+    t.row(vec!["sample_span (tracing off)".into(), per_ns(off_s.p50_ms, n)]);
+    trace::global().enable();
+    let m = n / 100;
+    let on = time_stats(1, 3, || {
+        for _ in 0..m {
+            std::hint::black_box(trace::span("obs.bench.span"));
+        }
+        trace::global().reset();
+    });
+    trace::global().disable();
+    t.row(vec!["span (tracing on, buffered)".into(), per_ns(on.p50_ms, m)]);
+    let c = metrics::counter("qera_obs_bench_total", &[]);
+    let ct = time_stats(1, 5, || {
+        for _ in 0..n {
+            c.inc();
+        }
+    });
+    t.row(vec!["counter inc (cached handle)".into(), per_ns(ct.p50_ms, n)]);
+    let g = metrics::gauge("qera_obs_bench_gauge", &[]);
+    let gt = time_stats(1, 5, || {
+        for i in 0..n {
+            g.set(i as i64);
+        }
+    });
+    t.row(vec!["gauge set (cached handle)".into(), per_ns(gt.p50_ms, n)]);
+    let h = metrics::histogram("qera_obs_bench_ms", &[], metrics::LATENCY_MS_BUCKETS);
+    let ht = time_stats(1, 5, || {
+        for i in 0..n {
+            h.observe((i % 7) as f64);
+        }
+    });
+    t.row(vec!["histogram observe (cached handle)".into(), per_ns(ht.p50_ms, n)]);
+    t.emit("hot_obs");
+    t
+}
+
 fn main() -> anyhow::Result<()> {
     // cargo bench passes harness flags like `--bench`; keep only filters
     let args: Vec<String> =
@@ -821,6 +887,9 @@ fn main() -> anyhow::Result<()> {
     }
     if want("ckpt") {
         report.push(("ckpt", bench_ckpt()));
+    }
+    if want("obs") {
+        report.push(("obs", bench_obs()));
     }
     if want("quant") {
         bench_quant();

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! qera info                               list artifacts + configs
+//! qera init      [--model nano --seed 42 --out ckpt.qkpt]  fresh dense ckpt
 //! qera pretrain  [--model nano --steps 300 --out ckpt.qkpt ...]
 //! qera quantize  [--ckpt x.qkpt --method qera-exact --format mxint4:32 ...]
 //! qera eval-ppl  [--ckpt x.qkpt | --qckpt q.qkpt --exec native ...]
@@ -96,6 +97,8 @@ impl Args {
                 || k == "drain-ms"
                 || k == "shard-layers"
                 || k == "resume"
+                || k == "metrics-out"
+                || k == "trace-out"
             {
                 continue;
             }
@@ -163,12 +166,19 @@ fn artifact_dir(args: &Args) -> std::path::PathBuf {
 /// CLI entry point; returns the process exit code.
 pub fn main_with_args(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
-    match args.cmd.as_str() {
+    // observability flags apply to every command: --trace-out enables the
+    // span tracer exactly like QERA_TRACE=<path>, and --metrics-out dumps
+    // the process-global registry after the command runs
+    if let Some(path) = args.get("trace-out") {
+        crate::obs::trace::enable_to(path);
+    }
+    let res = match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
         }
         "info" => cmd_info(&args),
+        "init" => cmd_init(&args),
         "pretrain" => cmd_pretrain(&args),
         "quantize" => cmd_quantize(&args),
         "eval-ppl" => cmd_eval_ppl(&args),
@@ -176,13 +186,24 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "assumption" => cmd_assumption(&args),
         "e2e" => cmd_e2e(&args),
         other => bail!("unknown command '{other}'; try `qera help`"),
-    }
+    };
+    // flush/dump even on failure: a failed run's partial telemetry is
+    // exactly what an operator wants to look at
+    let _ = crate::obs::trace::flush();
+    let dumped = match args.get("metrics-out") {
+        Some(path) => crate::obs::metrics::global()
+            .dump(path)
+            .with_context(|| format!("writing --metrics-out {path}")),
+        None => Ok(()),
+    };
+    res.and(dumped)
 }
 
 const HELP: &str = "qera — Quantization Error Reconstruction Analysis (ICLR 2025 reproduction)
 
 commands:
   info         list artifacts and model configs in the manifest
+  init         write a deterministically-initialized dense checkpoint
   pretrain     pretrain a subject model on the synthetic corpus
   quantize     calibrate + quantize a checkpoint with a chosen method
   eval-ppl     perplexity of a dense or quantized checkpoint
@@ -237,6 +258,18 @@ serving (serve): --prompts N --new-tokens N --temperature T  synthetic
                                 (default 5000); unfinished work is shed with
                                 a typed outcome
 
+observability: --metrics-out PATH  dump the process-global metrics registry
+              (counters, gauges, latency histograms from the quantize,
+              serve, calibrate, and retry layers) after the command —
+              Prometheus text, or the JSON encoding for .json paths
+              --trace-out PATH  record hierarchical timed spans (streaming
+              quantize stages, serve batches/restarts/swaps, calibration
+              phases, sampled fused matmuls) as a Chrome trace-event file;
+              open it in chrome://tracing or https://ui.perfetto.dev
+              QERA_TRACE env    same as --trace-out; instrumentation is
+              observe-only (bit-identical outputs) and costs one relaxed
+              atomic load per site when disabled
+
 budget planning (quantize): --budget-bits B  target avg bits/weight; profiles
               every layer x (format, rank) cell with the closed-form error
               and allocates per-layer precision under the budget
@@ -264,6 +297,24 @@ fn cmd_info(args: &Args) -> Result<()> {
     for n in reg.names() {
         println!("  {n}");
     }
+    Ok(())
+}
+
+/// Deterministically-initialized dense checkpoint — the artifact-free way
+/// to get a `--ckpt` for quantize/serve smoke runs (the CI obs-smoke job
+/// uses it; pretraining needs PJRT artifacts, init does not).
+fn cmd_init(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let spec = ModelSpec::builtin(&cfg.model)
+        .with_context(|| format!("unknown builtin model '{}'", cfg.model))?;
+    let mut rng = crate::util::rng::Rng::new(cfg.seed);
+    let params = crate::model::init::init_params(&spec, &mut rng);
+    let out = args.get_or("out", &format!("{}/{}.qkpt", cfg.out_dir, cfg.model));
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    Checkpoint::new(spec, params).save(&out)?;
+    println!("initialized {} (seed {}) -> {out}", cfg.model, cfg.seed);
     Ok(())
 }
 

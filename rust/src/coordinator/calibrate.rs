@@ -22,10 +22,17 @@ use crate::runtime::{
     exec::{lm_inputs, rc_params},
     NativeModel, Registry,
 };
+use crate::obs::lazy::Lazy;
+use crate::obs::metrics::{self, Counter};
 use crate::stats::{offdiag_element_ratio_of, offdiag_ratio_of, CalibStats};
 use crate::tensor::Tensor;
 use crate::util::pool;
 use anyhow::{ensure, Result};
+
+/// Calibration batches folded, across both backends
+/// (`qera_calib_batches_total`).
+static CALIB_BATCHES: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_calib_batches_total", &[]));
 
 /// Fold one batch of per-tap activations into the per-site accumulators.
 /// Sites are embarrassingly parallel (each owns its [`CalibStats`]), so
@@ -148,11 +155,16 @@ pub fn calibrate(
         if bi >= max_batches {
             break;
         }
+        let fwd_sp = crate::obs::trace::span("calib.forward").attr("batch", bi);
         let outputs = exec.run(&lm_inputs(&tokens, None, &[spec.batch, spec.seq], &params))?;
+        drop(fwd_sp);
         // outputs[0] = logits; outputs[1..] = taps in (block, tap) order,
         // folded in parallel (bit-identical to the serial fold)
         ensure!(outputs.len() == 1 + spec.n_taps(), "tap count mismatch");
+        let fold_sp = crate::obs::trace::span("calib.fold").attr("batch", bi);
         fold_taps(&mut stats, &outputs[1..], 0);
+        drop(fold_sp);
+        CALIB_BATCHES.inc();
         n_sequences += spec.batch;
     }
     ensure!(n_sequences > 0, "corpus too small for a single calibration batch");
@@ -191,9 +203,14 @@ pub fn calibrate_native(
         if bi >= max_batches {
             break;
         }
+        let fwd_sp = crate::obs::trace::span("calib.forward").attr("batch", bi);
         let taps = model.forward_taps(&tokens, spec.batch, spec.seq);
+        drop(fwd_sp);
         ensure!(taps.len() == spec.n_taps(), "tap count mismatch");
+        let fold_sp = crate::obs::trace::span("calib.fold").attr("batch", bi);
         fold_taps(&mut stats, &taps, 0);
+        drop(fold_sp);
+        CALIB_BATCHES.inc();
         n_sequences += spec.batch;
     }
     ensure!(n_sequences > 0, "corpus too small for a single calibration batch");

@@ -24,6 +24,9 @@ use super::calibrate::CalibResult;
 use super::pipeline::{self, LayerDiag, PipelineConfig};
 use crate::model::ckpt::{open_with, CkptReader, QWeight};
 use crate::model::shard::{param_groups, CkptKind, ShardParam, ShardWriter};
+use crate::obs::lazy::Lazy;
+use crate::obs::metrics::{self, Counter, Gauge};
+use crate::obs::trace;
 use crate::quant::PackedWeight;
 use crate::solver::{self, SolveOutput};
 use crate::tensor::Tensor;
@@ -36,6 +39,27 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+
+// Registry-backed stream counters.  They accumulate across runs in the
+// process (Prometheus counter semantics); each run adds exactly the values
+// it reports in its `StreamSummary`, so a single-run CLI invocation's
+// metrics dump reconciles exactly with the printed summary.  The per-run
+// sources stay authoritative for tests, which run many streams in parallel
+// in one process.
+static M_IO_RETRIES: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_stream_io_retries_total", &[]));
+static M_FAULTS: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_stream_faults_injected_total", &[]));
+static M_SKIPPED: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_stream_shards_skipped_resume_total", &[]));
+static M_SHARDS: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_stream_shards_written_total", &[]));
+static M_SITES: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_stream_sites_solved_total", &[]));
+static M_PAYLOAD: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_stream_payload_bytes_total", &[]));
+static M_LIVE: Lazy<Gauge> = Lazy::new(|| metrics::gauge("qera_stream_live_bytes", &[]));
+static M_PEAK: Lazy<Gauge> = Lazy::new(|| metrics::gauge("qera_stream_peak_live_bytes", &[]));
 
 /// Knobs for a streaming quantization run beyond the pipeline config.
 #[derive(Clone)]
@@ -102,6 +126,10 @@ impl LiveSet {
     fn add(self: &Arc<LiveSet>, bytes: usize) -> LiveGuard {
         let cur = self.current.fetch_add(bytes, Ordering::SeqCst) + bytes;
         self.peak.fetch_max(cur, Ordering::SeqCst);
+        // mirror into the process-global gauges (advisory: concurrent runs
+        // share them; the per-run peak below stays authoritative)
+        M_LIVE.add(bytes as i64);
+        M_PEAK.set_max(cur as i64);
         LiveGuard { set: Arc::clone(self), bytes }
     }
 
@@ -118,6 +146,7 @@ struct LiveGuard {
 impl Drop for LiveGuard {
     fn drop(&mut self) {
         self.set.current.fetch_sub(self.bytes, Ordering::SeqCst);
+        M_LIVE.sub(self.bytes as i64);
     }
 }
 
@@ -171,6 +200,7 @@ pub fn quantize_streaming_with(
     opts: &StreamOptions,
 ) -> Result<StreamSummary> {
     let t0 = std::time::Instant::now();
+    let _run_sp = trace::span("stream.quantize");
     let io = match &opts.io {
         Some(io) => Arc::clone(io),
         None => fault::io_from_env()?,
@@ -271,8 +301,10 @@ pub fn quantize_streaming_with(
     let (tx_in, rx_in) = mpsc::sync_channel::<InMsg>(1);
     let live_in = Arc::clone(&live);
     let prefetch = std::thread::spawn(move || -> CkptReader {
-        for names in &group_names[skip..] {
+        for (gi, names) in (skip..).zip(&group_names[skip..]) {
+            let sp = trace::span("stream.load").attr("shard", gi);
             let res = load_group(&reader, names, &live_in);
+            drop(sp);
             let failed = res.is_err();
             if tx_in.send(res).is_err() || failed {
                 return reader;
@@ -286,8 +318,11 @@ pub fn quantize_streaming_with(
     let (tx_out, rx_out) = mpsc::sync_channel::<OutMsg>(1);
     let writer_handle = std::thread::spawn(move || -> Result<ShardWriter> {
         let mut w = writer;
-        for (entries, range, guard) in rx_out {
+        for (si, (entries, range, guard)) in (skip..).zip(rx_out) {
+            let sp = trace::span("stream.write").attr("shard", si);
             w.write_shard_ranged(entries, range)?;
+            drop(sp);
+            M_SHARDS.inc();
             drop(guard);
         }
         Ok(w)
@@ -313,11 +348,14 @@ pub fn quantize_streaming_with(
             .enumerate()
             .filter_map(|(k, (name, _))| site_index.get(name.as_str()).map(|&si| (k, si)))
             .collect();
+        let solve_sp =
+            trace::span("stream.solve").attr("shard", gi).attr("sites", group_sites.len());
         let results: Vec<Result<SolveOutput>> =
             pool::parallel_map(group_sites.len(), workers, |j| {
                 let (k, si) = group_sites[j];
                 pipeline::solve_site(cfg, &rp, &sites[si], si, &tensors[k].1, calib)
             });
+        drop(solve_sp);
         let mut outs: BTreeMap<usize, SolveOutput> = BTreeMap::new();
         let mut group_err = None;
         for (&(k, si), res) in group_sites.iter().zip(results) {
@@ -341,6 +379,8 @@ pub fn quantize_streaming_with(
             err = Some(e);
             break;
         }
+        M_SITES.add(group_sites.len() as u64);
+        let pack_sp = trace::span("stream.pack").attr("shard", gi);
         let mut entries = Vec::with_capacity(tensors.len());
         let mut group_payload = 0usize;
         for (k, (name, w)) in tensors.into_iter().enumerate() {
@@ -361,6 +401,7 @@ pub fn quantize_streaming_with(
             group_payload += p.payload_bytes();
             entries.push((name, p));
         }
+        drop(pack_sp);
         payload_bytes += group_payload;
         let out_guard = live.add(group_payload);
         drop(in_guard); // source tensors are packed or moved into entries
@@ -384,6 +425,13 @@ pub fn quantize_streaming_with(
     // output, and the resume journal keeps every completed shard reusable
     let manifest = writer.finish()?;
     let faults_injected = io.faults_injected();
+
+    // push the run's recovery bookkeeping into the global registry so a
+    // `--metrics-out` dump reconciles exactly with this `StreamSummary`
+    M_IO_RETRIES.add(io_retries as u64);
+    M_FAULTS.add(faults_injected as u64);
+    M_SKIPPED.add(skip as u64);
+    M_PAYLOAD.add(payload_bytes as u64);
 
     crate::info!(
         "stream-quantized {} layers into {} shards ({:.1} KiB peak live) in {:.2}s wall / {:.2}s solver",
@@ -607,6 +655,60 @@ mod tests {
         // matching config resumes cleanly
         let sum = quantize_streaming_with(&src, &cfg4, None, &out, 1, &resume).unwrap();
         assert_eq!(sum.shards_skipped_resume, 2);
+    }
+
+    /// Tracing is observe-only: the same run with the global tracer
+    /// enabled must produce byte-identical outputs, while the trace
+    /// records load/solve/pack/write spans for every shard.
+    #[test]
+    fn instrumented_run_is_bit_identical_and_traces_all_stages() {
+        use crate::obs::trace;
+        use crate::util::json::Json;
+
+        let dir = tmpdir("instrumented");
+        let ckpt = nano_ckpt(28);
+        let src = dir.join("src.qkpt");
+        ckpt.save(&src).unwrap();
+        let cfg = PipelineConfig::new(Method::ZeroQuantV2, fmt(), 4);
+
+        // uninstrumented baseline (same manifest stem so bytes can match)
+        let base_dir = dir.join("base");
+        std::fs::create_dir_all(&base_dir).unwrap();
+        let base = base_dir.join("out.manifest.json");
+        let sum_a = quantize_streaming(&src, &cfg, None, &base, 1).unwrap();
+
+        // identical run with tracing on
+        let tr_dir = dir.join("traced");
+        std::fs::create_dir_all(&tr_dir).unwrap();
+        let out = tr_dir.join("out.manifest.json");
+        let trace_path = dir.join("trace.json");
+        trace::global().enable_to(&trace_path);
+        let sum_b = quantize_streaming(&src, &cfg, None, &out, 1).unwrap();
+        trace::global().flush_to(&trace_path).unwrap();
+        trace::global().disable();
+
+        assert_eq!(std::fs::read(&base).unwrap(), std::fs::read(&out).unwrap());
+        for i in 0..sum_b.n_shards {
+            assert_eq!(
+                std::fs::read(base_dir.join(format!("out.shard-{i:03}.bin"))).unwrap(),
+                std::fs::read(tr_dir.join(format!("out.shard-{i:03}.bin"))).unwrap(),
+                "shard {i}"
+            );
+        }
+        assert_eq!(sum_a.payload_bytes, sum_b.payload_bytes);
+
+        // the trace parses as Chrome trace-event JSON and covers every
+        // stage of every shard (other parallel tests may add more events)
+        let body = std::fs::read_to_string(&trace_path).unwrap();
+        let parsed = Json::parse(&body).unwrap();
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        for stage in ["stream.load", "stream.solve", "stream.pack", "stream.write"] {
+            let n = events
+                .iter()
+                .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some(stage))
+                .count();
+            assert!(n >= sum_b.n_shards, "{stage}: {n} spans for {} shards", sum_b.n_shards);
+        }
     }
 
     #[test]

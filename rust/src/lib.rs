@@ -27,6 +27,7 @@
 //!   (`xla` crate) and executes it from the hot path.
 
 pub mod util;
+pub mod obs;
 pub mod tensor;
 pub mod linalg;
 pub mod quant;

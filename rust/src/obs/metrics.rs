@@ -1,0 +1,497 @@
+//! Process-global metrics registry: counters, gauges, fixed-bucket
+//! histograms.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap clones of an
+//! `Arc` around atomics — registration takes the registry mutex once, after
+//! which every update is a relaxed atomic op.  Hot call sites keep a handle
+//! in a `static obs::lazy::Lazy` so the steady state never touches the
+//! registry lock.  Series are keyed by `(name, sorted labels)`; exporters
+//! walk the registry in key order so both encodings are deterministic:
+//!
+//! * [`Registry::render_prometheus`] — text exposition format
+//!   (`# TYPE` comments, `name{label="v"} value`, cumulative `le` buckets).
+//! * [`Registry::to_json`] — the same data as a [`Json`] tree for
+//!   machine-readable dumps (`--metrics-out metrics.json`).
+//!
+//! All update paths are observe-only: they never branch on metric values
+//! and never feed back into computation, preserving the repo-wide
+//! bit-identity invariants.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone event counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depth, live bytes).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+    /// Raise the gauge to `v` if it is below it (peak tracking).
+    pub fn set_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Default bucket bounds (milliseconds) for latency histograms.
+pub const LATENCY_MS_BUCKETS: &[f64] =
+    &[0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0];
+
+struct HistogramCore {
+    /// Ascending upper bounds; an implicit `+Inf` bucket follows the last.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts, `bounds.len() + 1` entries.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Running sum as f64 bits, accumulated with a CAS loop.
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram; a value lands in the first bucket whose upper
+/// bound is `>= v` (Prometheus `le` semantics — bounds are inclusive).
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let idx = c.bounds.iter().position(|&b| v <= b).unwrap_or(c.bounds.len());
+        c.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        let sb = &c.sum_bits;
+        let mut cur = sb.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match sb.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+    /// Cumulative `(upper_bound, count)` pairs; the final bound is
+    /// `f64::INFINITY` and its count equals [`Histogram::count`] (modulo
+    /// concurrent updates between the loads).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let c = &self.0;
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(c.buckets.len());
+        for (i, b) in c.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            let bound = c.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((bound, acc));
+        }
+        out
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+type Labels = Vec<(String, String)>;
+
+/// A registry of labeled metric series.  One process-global instance backs
+/// the CLI (`--metrics-out`) and `Server::metrics()`; tests construct their
+/// own to keep assertions isolated under the parallel test runner.
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, BTreeMap<Labels, Metric>>>,
+}
+
+fn label_key(labels: &[(&str, &str)]) -> Labels {
+    let mut v: Labels = labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    v.sort();
+    v
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn register(&self, name: &str, labels: &[(&str, &str)], fresh: fn() -> Metric) -> Metric {
+        let mut map = self.inner.lock().unwrap();
+        let fam = map.entry(name.to_string()).or_default();
+        let slot = fam.entry(label_key(labels)).or_insert_with(fresh);
+        slot.clone()
+    }
+
+    /// Get-or-create a counter series.  Registering the same name as a
+    /// different metric type is a programmer error and panics.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        fn fresh() -> Metric {
+            Metric::Counter(Counter(Arc::new(AtomicU64::new(0))))
+        }
+        match self.register(name, labels, fresh) {
+            Metric::Counter(c) => c,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        fn fresh() -> Metric {
+            Metric::Gauge(Gauge(Arc::new(AtomicI64::new(0))))
+        }
+        match self.register(name, labels, fresh) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get-or-create a histogram series.  `bounds` must be ascending; if
+    /// the series already exists its original bounds win.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)], bounds: &[f64]) -> Histogram {
+        let mut map = self.inner.lock().unwrap();
+        let fam = map.entry(name.to_string()).or_default();
+        let slot = fam.entry(label_key(labels)).or_insert_with(|| {
+            debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "histogram bounds not ascending");
+            Metric::Histogram(Histogram(Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+            })))
+        });
+        match slot {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Snapshot of every series, deterministically ordered.
+    fn snapshot(&self) -> Vec<(String, Labels, Metric)> {
+        let map = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (name, fam) in map.iter() {
+            for (labels, m) in fam.iter() {
+                out.push((name.clone(), labels.clone(), m.clone()));
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name = String::new();
+        for (name, labels, m) in self.snapshot() {
+            if name != last_name {
+                out.push_str(&format!("# TYPE {name} {}\n", m.kind()));
+                last_name = name.clone();
+            }
+            match m {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{name}{} {}\n", prom_labels(&labels, None), c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("{name}{} {}\n", prom_labels(&labels, None), g.get()));
+                }
+                Metric::Histogram(h) => {
+                    for (le, n) in h.cumulative() {
+                        let le = if le.is_finite() { fmt_f64(le) } else { "+Inf".to_string() };
+                        out.push_str(&format!(
+                            "{name}_bucket{} {n}\n",
+                            prom_labels(&labels, Some(&le))
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{name}_sum{} {}\n",
+                        prom_labels(&labels, None),
+                        fmt_f64(h.sum())
+                    ));
+                    out.push_str(&format!(
+                        "{name}_count{} {}\n",
+                        prom_labels(&labels, None),
+                        h.count()
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// The same snapshot as a JSON tree:
+    /// `{"counters": [...], "gauges": [...], "histograms": [...]}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut histograms = Vec::new();
+        for (name, labels, m) in self.snapshot() {
+            let pairs = labels.iter().map(|(k, v)| (k.clone(), Json::str(v.clone())));
+            let lbl = Json::Obj(pairs.collect());
+            match m {
+                Metric::Counter(c) => counters.push(Json::obj(vec![
+                    ("labels", lbl),
+                    ("name", Json::str(name)),
+                    ("value", Json::Num(c.get() as f64)),
+                ])),
+                Metric::Gauge(g) => gauges.push(Json::obj(vec![
+                    ("labels", lbl),
+                    ("name", Json::str(name)),
+                    ("value", Json::Num(g.get() as f64)),
+                ])),
+                Metric::Histogram(h) => {
+                    let buckets = h
+                        .cumulative()
+                        .into_iter()
+                        .map(|(le, n)| {
+                            let le = if le.is_finite() { Json::Num(le) } else { Json::str("+Inf") };
+                            Json::obj(vec![("count", Json::Num(n as f64)), ("le", le)])
+                        })
+                        .collect();
+                    histograms.push(Json::obj(vec![
+                        ("buckets", Json::Arr(buckets)),
+                        ("count", Json::Num(h.count() as f64)),
+                        ("labels", lbl),
+                        ("name", Json::str(name)),
+                        ("sum", Json::Num(h.sum())),
+                    ]));
+                }
+            }
+        }
+        Json::obj(vec![
+            ("counters", Json::Arr(counters)),
+            ("gauges", Json::Arr(gauges)),
+            ("histograms", Json::Arr(histograms)),
+        ])
+    }
+
+    /// Dump the registry to `path`: JSON when the extension is `.json`,
+    /// Prometheus text otherwise.
+    pub fn dump(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        let body = if path.extension().is_some_and(|e| e == "json") {
+            self.to_json().dump_pretty()
+        } else {
+            self.render_prometheus()
+        };
+        std::fs::write(path, body)
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+fn prom_labels(labels: &Labels, le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Integral floats print without a decimal point (matches `util::json`).
+fn fmt_f64(n: f64) -> String {
+    if n == n.trunc() && n.abs() < 1e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+static GLOBAL: Registry = Registry::new();
+
+/// The process-global registry backing `--metrics-out` and
+/// `Server::metrics()`.
+pub fn global() -> &'static Registry {
+    &GLOBAL
+}
+
+/// Get-or-create a counter in the global registry.
+pub fn counter(name: &str, labels: &[(&str, &str)]) -> Counter {
+    GLOBAL.counter(name, labels)
+}
+
+/// Get-or-create a gauge in the global registry.
+pub fn gauge(name: &str, labels: &[(&str, &str)]) -> Gauge {
+    GLOBAL.gauge(name, labels)
+}
+
+/// Get-or-create a histogram in the global registry.
+pub fn histogram(name: &str, labels: &[(&str, &str)], bounds: &[f64]) -> Histogram {
+    GLOBAL.histogram(name, labels, bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool;
+
+    #[test]
+    fn counter_exact_under_concurrent_increments() {
+        let r = Registry::new();
+        let c = r.counter("hits", &[]);
+        let c2 = c.clone();
+        pool::parallel_map(64, 8, |i| c2.add(i as u64 + 1));
+        assert_eq!(c.get(), (1..=64).sum::<u64>());
+    }
+
+    #[test]
+    fn gauge_add_sub_balance_under_concurrency() {
+        let r = Registry::new();
+        let g = r.gauge("live", &[]);
+        pool::parallel_map(32, 8, |i| {
+            g.add(i as i64 + 1);
+            g.sub(i as i64 + 1);
+        });
+        assert_eq!(g.get(), 0);
+        g.set_max(40);
+        g.set_max(10);
+        assert_eq!(g.get(), 40);
+    }
+
+    #[test]
+    fn histogram_exact_under_concurrent_observes() {
+        let r = Registry::new();
+        let h = r.histogram("lat", &[], &[8.0, 32.0]);
+        // integer-valued observations sum exactly in f64 regardless of order
+        pool::parallel_map(64, 8, |i| h.observe(i as f64));
+        assert_eq!(h.count(), 64);
+        assert_eq!(h.sum(), (0..64).sum::<i64>() as f64);
+        let cum = h.cumulative();
+        assert_eq!(cum, vec![(8.0, 9), (32.0, 33), (f64::INFINITY, 64)]);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_inclusive() {
+        let r = Registry::new();
+        let h = r.histogram("b", &[], &[1.0, 2.5]);
+        h.observe(1.0); // lands in le=1 (inclusive upper bound)
+        h.observe(1.0000001); // just over -> le=2.5
+        h.observe(2.5); // le=2.5
+        h.observe(2.6); // +Inf
+        h.observe(-1.0); // below first bound -> le=1
+        assert_eq!(h.cumulative(), vec![(1.0, 2), (2.5, 4), (f64::INFINITY, 5)]);
+    }
+
+    #[test]
+    fn same_series_returns_same_handle_and_labels_are_canonicalized() {
+        let r = Registry::new();
+        let a = r.counter("x", &[("b", "2"), ("a", "1")]);
+        let b = r.counter("x", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn type_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("m", &[]);
+        r.gauge("m", &[]);
+    }
+
+    #[test]
+    fn golden_prometheus_text() {
+        let r = Registry::new();
+        r.counter("qera_test_total", &[("kind", "a")]).add(3);
+        r.gauge("qera_live", &[]).set(7);
+        let h = r.histogram("qera_lat_ms", &[], &[1.0, 2.5]);
+        for v in [0.5, 1.0, 2.0, 9.0] {
+            h.observe(v);
+        }
+        let want = "\
+# TYPE qera_lat_ms histogram
+qera_lat_ms_bucket{le=\"1\"} 2
+qera_lat_ms_bucket{le=\"2.5\"} 3
+qera_lat_ms_bucket{le=\"+Inf\"} 4
+qera_lat_ms_sum 12.5
+qera_lat_ms_count 4
+# TYPE qera_live gauge
+qera_live 7
+# TYPE qera_test_total counter
+qera_test_total{kind=\"a\"} 3
+";
+        assert_eq!(r.render_prometheus(), want);
+    }
+
+    #[test]
+    fn golden_json() {
+        let r = Registry::new();
+        r.counter("qera_test_total", &[("kind", "a")]).add(3);
+        let h = r.histogram("qera_lat_ms", &[], &[1.0]);
+        h.observe(0.5);
+        h.observe(4.0);
+        let want = concat!(
+            "{\"counters\":[{\"labels\":{\"kind\":\"a\"},\"name\":\"qera_test_total\",",
+            "\"value\":3}],\"gauges\":[],\"histograms\":[{\"buckets\":[{\"count\":1,",
+            "\"le\":1},{\"count\":2,\"le\":\"+Inf\"}],\"count\":2,\"labels\":{},",
+            "\"name\":\"qera_lat_ms\",\"sum\":4.5}]}",
+        );
+        assert_eq!(r.to_json().dump(), want);
+    }
+
+    #[test]
+    fn dump_picks_format_by_extension() {
+        let dir = std::env::temp_dir().join("qera_obs_dump_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = Registry::new();
+        r.counter("c_total", &[]).inc();
+        let jp = dir.join("m.json");
+        let tp = dir.join("m.prom");
+        r.dump(&jp).unwrap();
+        r.dump(&tp).unwrap();
+        let js = std::fs::read_to_string(&jp).unwrap();
+        assert!(Json::parse(&js).is_ok());
+        let txt = std::fs::read_to_string(&tp).unwrap();
+        assert!(txt.contains("# TYPE c_total counter"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

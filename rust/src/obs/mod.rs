@@ -1,0 +1,51 @@
+//! Observability: process-global metrics registry + hierarchical span
+//! tracing, zero external dependencies.
+//!
+//! Two halves, both observe-only (nothing in here may perturb numeric
+//! results — the streaming quantizer's bit-identity tests run with and
+//! without instrumentation enabled and demand identical manifests):
+//!
+//! * [`metrics`] — atomic counters, gauges, and fixed-bucket histograms
+//!   with labeled series, registered in a process-global [`metrics::Registry`]
+//!   and exported as Prometheus-style text or JSON (`--metrics-out`,
+//!   [`crate::serve::Server::metrics`]).
+//! * [`trace`] — timed spans with parent/child nesting and per-span
+//!   attributes, buffered in memory and flushed as Chrome trace-event JSON
+//!   (loadable in `chrome://tracing` / Perfetto) when `QERA_TRACE=<path>`
+//!   or `--trace-out <path>` is set.  When tracing is off the span
+//!   constructor is a single relaxed atomic load — cheap enough for the
+//!   fused-matmul hot path — and the `obs` bench group in
+//!   `benches/hotpath.rs` gates that disabled-path cost in CI.
+
+pub mod metrics;
+pub mod trace;
+
+/// Minimal `Lazy` for statics holding metric handles (same shape as the
+/// private one in `util/logging.rs`; duplicated to keep `obs` standalone).
+pub mod lazy {
+    use std::sync::Once;
+
+    pub struct Lazy<T> {
+        once: Once,
+        init: fn() -> T,
+        value: std::cell::UnsafeCell<Option<T>>,
+    }
+    unsafe impl<T: Sync> Sync for Lazy<T> {}
+    impl<T> Lazy<T> {
+        pub const fn new(init: fn() -> T) -> Self {
+            Lazy { once: Once::new(), init, value: std::cell::UnsafeCell::new(None) }
+        }
+        pub fn get(&self) -> &T {
+            self.once.call_once(|| unsafe {
+                *self.value.get() = Some((self.init)());
+            });
+            unsafe { (*self.value.get()).as_ref().unwrap() }
+        }
+    }
+    impl<T> std::ops::Deref for Lazy<T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.get()
+        }
+    }
+}

@@ -1,0 +1,427 @@
+//! Hierarchical span tracing with Chrome trace-event JSON export.
+//!
+//! A [`Span`] is an RAII timer: it records start time at construction and
+//! pushes one complete (`"ph": "X"`) trace event at drop.  Nesting is
+//! tracked per thread — each span records its depth, and because children
+//! start after and drop before their parent, their time ranges nest inside
+//! the parent's on the same `tid`, which is exactly how `chrome://tracing`
+//! and Perfetto reconstruct the hierarchy.
+//!
+//! The global tracer is off by default.  It turns on when `QERA_TRACE=<path>`
+//! is set (resolved lazily, once) or when the CLI calls
+//! [`enable_to`] for `--trace-out <path>`.  While off, [`span`] is a single
+//! relaxed atomic load followed by constructing an inert guard — no
+//! allocation, no lock — so it is safe to leave in hot paths; the `obs`
+//! bench group gates that cost.  Timestamps are microseconds from a
+//! process-local epoch; tests inject a mock clock via
+//! [`Tracer::with_clock`] so durations are asserted exactly.
+
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Hard cap on buffered events; past it new events are counted as dropped
+/// so a long traced run degrades instead of exhausting memory.
+const MAX_EVENTS: usize = 1 << 18;
+
+const STATE_OFF: u8 = 0;
+const STATE_ON: u8 = 1;
+const STATE_UNRESOLVED: u8 = 255;
+
+struct Event {
+    name: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    tid: u64,
+    depth: usize,
+    args: Vec<(&'static str, String)>,
+}
+
+struct Inner {
+    events: Vec<Event>,
+    out: Option<PathBuf>,
+    /// Thread ids in first-record order; a thread's `tid` is its index here,
+    /// so single-threaded traces are deterministic.
+    tids: Vec<std::thread::ThreadId>,
+    dropped: u64,
+}
+
+pub struct Tracer {
+    state: AtomicU8,
+    /// Whether an unresolved state consults `QERA_TRACE` (global tracer
+    /// only; test tracers resolve to off).
+    env_backed: bool,
+    /// Microseconds since this tracer's epoch.
+    clock: fn() -> u64,
+    inner: Mutex<Inner>,
+}
+
+thread_local! {
+    static DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+impl Tracer {
+    const fn new_const(env_backed: bool, clock: fn() -> u64) -> Tracer {
+        Tracer {
+            state: AtomicU8::new(STATE_UNRESOLVED),
+            env_backed,
+            clock,
+            inner: Mutex::new(Inner {
+                events: Vec::new(),
+                out: None,
+                tids: Vec::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// A disabled tracer with an injected clock (tests).
+    pub fn with_clock(clock: fn() -> u64) -> Tracer {
+        Tracer::new_const(false, clock)
+    }
+
+    /// One relaxed load in the steady state; the first call on an
+    /// env-backed tracer resolves `QERA_TRACE` and caches the answer.
+    pub fn enabled(&self) -> bool {
+        match self.state.load(Ordering::Relaxed) {
+            STATE_ON => true,
+            STATE_OFF => false,
+            _ => self.resolve_env(),
+        }
+    }
+
+    fn resolve_env(&self) -> bool {
+        let path = if self.env_backed {
+            match std::env::var("QERA_TRACE") {
+                Ok(p) if !p.trim().is_empty() => Some(PathBuf::from(p)),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let on = path.is_some();
+        if let Some(p) = path {
+            self.inner.lock().unwrap().out = Some(p);
+        }
+        self.state.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+        on
+    }
+
+    /// Enable and write the trace to `path` on [`Tracer::flush`].
+    pub fn enable_to(&self, path: impl Into<PathBuf>) {
+        self.inner.lock().unwrap().out = Some(path.into());
+        self.state.store(STATE_ON, Ordering::Relaxed);
+    }
+
+    /// Enable buffering without an output path (render manually).
+    pub fn enable(&self) {
+        self.state.store(STATE_ON, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.state.store(STATE_OFF, Ordering::Relaxed);
+    }
+
+    /// Disable and discard all buffered events (tests/benches).
+    pub fn reset(&self) {
+        self.disable();
+        let mut inner = self.inner.lock().unwrap();
+        inner.events.clear();
+        inner.tids.clear();
+        inner.dropped = 0;
+        inner.out = None;
+    }
+
+    /// Start a span.  Disabled tracers return an inert guard without
+    /// touching any shared state.
+    pub fn span(&self, name: &'static str) -> Span<'_> {
+        if !self.enabled() {
+            return Span { tracer: None, name, t0: 0, depth: 0, args: Vec::new() };
+        }
+        let depth = DEPTH.with(|d| {
+            let v = d.get();
+            d.set(v + 1);
+            v
+        });
+        Span { tracer: Some(self), name, t0: (self.clock)(), depth, args: Vec::new() }
+    }
+
+    fn record(
+        &self,
+        name: &'static str,
+        ts_us: u64,
+        dur_us: u64,
+        depth: usize,
+        args: Vec<(&'static str, String)>,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.events.len() >= MAX_EVENTS {
+            inner.dropped += 1;
+            return;
+        }
+        let id = std::thread::current().id();
+        let tid = match inner.tids.iter().position(|t| *t == id) {
+            Some(i) => i as u64,
+            None => {
+                inner.tids.push(id);
+                (inner.tids.len() - 1) as u64
+            }
+        };
+        inner.events.push(Event { name, ts_us, dur_us, tid, depth, args });
+    }
+
+    pub fn event_count(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Render all buffered events as Chrome trace-event JSON.
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let events = inner
+            .events
+            .iter()
+            .map(|e| {
+                let mut args: Vec<(&str, Json)> = vec![("depth", Json::Num(e.depth as f64))];
+                for (k, v) in &e.args {
+                    args.push((k, Json::str(v.clone())));
+                }
+                Json::obj(vec![
+                    ("args", Json::obj(args)),
+                    ("cat", Json::str("qera")),
+                    ("dur", Json::Num(e.dur_us as f64)),
+                    ("name", Json::str(e.name)),
+                    ("ph", Json::str("X")),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(e.tid as f64)),
+                    ("ts", Json::Num(e.ts_us as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", Json::Arr(events)),
+        ])
+        .dump()
+    }
+
+    /// Write the trace to the configured output path (no-op when unset).
+    /// Buffered events are kept, so flushing twice rewrites a superset.
+    pub fn flush(&self) -> std::io::Result<()> {
+        let out = self.inner.lock().unwrap().out.clone();
+        match out {
+            Some(p) => self.flush_to(&p),
+            None => Ok(()),
+        }
+    }
+
+    pub fn flush_to(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
+/// RAII span guard; records one trace event when dropped.
+pub struct Span<'a> {
+    tracer: Option<&'a Tracer>,
+    name: &'static str,
+    t0: u64,
+    depth: usize,
+    args: Vec<(&'static str, String)>,
+}
+
+impl<'a> Span<'a> {
+    /// Attach an attribute (only materialized when the span is live).
+    pub fn attr(mut self, key: &'static str, value: impl std::fmt::Display) -> Span<'a> {
+        if self.tracer.is_some() {
+            self.args.push((key, value.to_string()));
+        }
+        self
+    }
+
+    pub fn active(&self) -> bool {
+        self.tracer.is_some()
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(t) = self.tracer else { return };
+        let end = (t.clock)();
+        DEPTH.with(|d| d.set(self.depth));
+        let args = std::mem::take(&mut self.args);
+        t.record(self.name, self.t0, end.saturating_sub(self.t0), self.depth, args);
+    }
+}
+
+static EPOCH: crate::obs::lazy::Lazy<Instant> = crate::obs::lazy::Lazy::new(Instant::now);
+
+fn global_clock() -> u64 {
+    EPOCH.elapsed().as_micros() as u64
+}
+
+static GLOBAL: Tracer = Tracer::new_const(true, global_clock);
+
+/// The process-global tracer behind `QERA_TRACE` / `--trace-out`.
+pub fn global() -> &'static Tracer {
+    &GLOBAL
+}
+
+/// Whether global tracing is on (one relaxed load once resolved).
+pub fn enabled() -> bool {
+    GLOBAL.enabled()
+}
+
+/// Start a span on the global tracer.
+pub fn span(name: &'static str) -> Span<'static> {
+    GLOBAL.span(name)
+}
+
+/// Start a span on every `every`-th call (per call site cadence is shared
+/// process-wide).  Used on per-token hot paths so steady-state decode does
+/// not allocate: disabled tracing costs one relaxed load, enabled tracing
+/// materializes only the sampled fraction of spans.
+pub fn sample_span(name: &'static str, every: u64) -> Span<'static> {
+    if !GLOBAL.enabled() {
+        return Span { tracer: None, name, t0: 0, depth: 0, args: Vec::new() };
+    }
+    static N: AtomicU64 = AtomicU64::new(0);
+    if N.fetch_add(1, Ordering::Relaxed) % every.max(1) == 0 {
+        GLOBAL.span(name)
+    } else {
+        Span { tracer: None, name, t0: 0, depth: 0, args: Vec::new() }
+    }
+}
+
+/// Enable the global tracer, writing to `path` at [`flush`] (CLI
+/// `--trace-out`).
+pub fn enable_to(path: impl Into<PathBuf>) {
+    GLOBAL.enable_to(path)
+}
+
+/// Flush the global tracer to its configured path (no-op when disabled or
+/// pathless).
+pub fn flush() -> std::io::Result<()> {
+    GLOBAL.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test that needs a deterministic clock gets its own mock backed
+    // by a static it advances by hand; tests run in parallel, so the
+    // statics are per-test (declared inside the test fn).
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let t = Tracer::with_clock(|| 0);
+        {
+            let s = t.span("noop");
+            assert!(!s.active());
+        }
+        assert_eq!(t.event_count(), 0);
+    }
+
+    #[test]
+    fn mock_clock_parent_child_nesting_and_durations() {
+        static NOW: AtomicU64 = AtomicU64::new(0);
+        fn clock() -> u64 {
+            NOW.load(Ordering::Relaxed)
+        }
+        let t = Tracer::with_clock(clock);
+        t.enable();
+        NOW.store(100, Ordering::Relaxed);
+        {
+            let _parent = t.span("parent");
+            NOW.store(110, Ordering::Relaxed);
+            {
+                let _child = t.span("child").attr("k", "v");
+                NOW.store(125, Ordering::Relaxed);
+            }
+            NOW.store(150, Ordering::Relaxed);
+        }
+        let inner = t.inner.lock().unwrap();
+        // children drop first, so the child event is recorded first
+        assert_eq!(inner.events.len(), 2);
+        let child = &inner.events[0];
+        let parent = &inner.events[1];
+        assert_eq!((child.name, child.ts_us, child.dur_us, child.depth), ("child", 110, 15, 1));
+        assert_eq!(child.args, vec![("k", "v".to_string())]);
+        assert_eq!(
+            (parent.name, parent.ts_us, parent.dur_us, parent.depth),
+            ("parent", 100, 50, 0)
+        );
+        assert_eq!(child.tid, parent.tid);
+    }
+
+    #[test]
+    fn golden_trace_json() {
+        static NOW: AtomicU64 = AtomicU64::new(0);
+        fn clock() -> u64 {
+            NOW.load(Ordering::Relaxed)
+        }
+        let t = Tracer::with_clock(clock);
+        t.enable();
+        NOW.store(5, Ordering::Relaxed);
+        {
+            let _s = t.span("load").attr("shard", 0);
+            NOW.store(12, Ordering::Relaxed);
+        }
+        let want = concat!(
+            "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{\"args\":{\"depth\":0,",
+            "\"shard\":\"0\"},\"cat\":\"qera\",\"dur\":7,\"name\":\"load\",\"ph\":\"X\",",
+            "\"pid\":1,\"tid\":0,\"ts\":5}]}",
+        );
+        assert_eq!(t.render(), want);
+        // and the rendered form parses back as JSON with a traceEvents array
+        let parsed = Json::parse(&t.render()).unwrap();
+        assert!(matches!(parsed.get("traceEvents"), Some(Json::Arr(a)) if a.len() == 1));
+    }
+
+    #[test]
+    fn event_cap_counts_drops() {
+        let t = Tracer::with_clock(|| 0);
+        t.enable();
+        {
+            let mut inner = t.inner.lock().unwrap();
+            for _ in 0..MAX_EVENTS {
+                inner.events.push(Event {
+                    name: "pad",
+                    ts_us: 0,
+                    dur_us: 0,
+                    tid: 0,
+                    depth: 0,
+                    args: Vec::new(),
+                });
+            }
+        }
+        {
+            let _s = t.span("over");
+        }
+        assert_eq!(t.dropped(), 1);
+        assert_eq!(t.event_count(), MAX_EVENTS);
+    }
+
+    #[test]
+    fn flush_writes_parseable_trace_file() {
+        let dir = std::env::temp_dir().join("qera_obs_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let t = Tracer::with_clock(|| 3);
+        t.enable_to(&path);
+        {
+            let _s = t.span("solve");
+        }
+        t.flush().unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&body).unwrap();
+        assert!(parsed.get("traceEvents").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -212,7 +212,14 @@ impl NativeModel {
         match &self.params[idx] {
             NativeParam::Plain(w) => x.matmul(w),
             NativeParam::Linear { k, n, pw, lr } => {
-                exec::fused_matmul(x, pw, *k, *n, lr.as_ref().map(|l| (&l.a, &l.b)))
+                // sampled span: with tracing off this is one relaxed load;
+                // with tracing on, only every 64th fused matmul allocates a
+                // span, so steady-state decode stays allocation-free
+                let sp =
+                    crate::obs::trace::sample_span("native.fused_matmul", 64).attr("param", idx);
+                let out = exec::fused_matmul(x, pw, *k, *n, lr.as_ref().map(|l| (&l.a, &l.b)));
+                drop(sp);
+                out
             }
         }
     }

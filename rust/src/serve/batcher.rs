@@ -18,11 +18,26 @@ use super::daemon::{
 };
 use super::engine::Engine;
 use crate::model::{CkptKind, ModelSpec, QuantCheckpoint};
+use crate::obs::lazy::Lazy;
+use crate::obs::metrics::{self, Counter};
 use crate::runtime::ExecBackend;
+use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
+use std::cell::OnceCell;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+// Admission-gate metrics: submissions the daemon never sees (gate
+// rejections) are counted here, on the client side of the gate.
+static M_ADMITTED: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_admitted_total", &[]));
+static M_REJECTED_FULL: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_gate_rejected_total", &[("reason", "queue_full")]));
+static M_REJECTED_DRAINING: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_gate_rejected_total", &[("reason", "draining")]));
+static M_REJECTED_DEAD: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_gate_rejected_total", &[("reason", "engine_dead")]));
 
 /// Weights handed to the serving thread.
 pub enum ServeModel {
@@ -175,6 +190,115 @@ impl Default for ServerConfig {
     }
 }
 
+/// Bounded deterministic latency-sample reservoir (Vitter's Algorithm R).
+///
+/// `ServerStats` used to keep every per-request latency sample in an
+/// unbounded `Vec`, and every percentile accessor cloned and re-sorted it.
+/// The reservoir caps memory at `cap` samples — an exact record below the
+/// cap, a uniform subsample above it (seeded from the server seed, so runs
+/// are reproducible) — and builds the sorted view at most once per
+/// snapshot, invalidated on push.  The mean tracks every observation, not
+/// just the kept ones.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    /// Total observations, including ones no longer kept.
+    seen: u64,
+    /// Running sum of every observation — the mean stays exact past the cap.
+    sum: f64,
+    samples: Vec<f64>,
+    rng: Rng,
+    /// Sorted view of `samples`, built lazily per snapshot.
+    sorted: OnceCell<Vec<f64>>,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new(Reservoir::DEFAULT_CAP, 0)
+    }
+}
+
+impl Reservoir {
+    /// Default sample cap: enough for stable tails, bounded forever.
+    pub const DEFAULT_CAP: usize = 4096;
+
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            seen: 0,
+            sum: 0.0,
+            samples: Vec::new(),
+            rng: Rng::new(seed),
+            sorted: OnceCell::new(),
+        }
+    }
+
+    /// Test/bench helper: a default reservoir preloaded with `samples`.
+    pub fn from_samples(samples: impl IntoIterator<Item = f64>) -> Reservoir {
+        let mut r = Reservoir::default();
+        for s in samples {
+            r.push(s);
+        }
+        r
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        self.sum += v;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Algorithm R: each of the `seen` observations survives with
+            // probability cap/seen
+            let j = self.rng.below(self.seen as usize);
+            if j < self.cap {
+                self.samples[j] = v;
+            }
+        }
+        self.sorted = OnceCell::new();
+    }
+
+    /// Samples currently kept (equal to [`Reservoir::seen`] below the cap).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Total observations pushed, including ones no longer kept.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    fn sorted(&self) -> &[f64] {
+        self.sorted.get_or_init(|| {
+            let mut v = self.samples.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        })
+    }
+
+    /// Nearest-rank percentile over the kept samples (the `bench_util`
+    /// convention); 0.0 when empty.
+    pub fn pct(&self, p: f64) -> f64 {
+        let v = self.sorted();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v[((v.len() - 1) as f64 * p) as usize]
+    }
+
+    /// Exact mean over every observation ever pushed; 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            return 0.0;
+        }
+        self.sum / self.seen as f64
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     /// Requests completed successfully.
@@ -183,11 +307,11 @@ pub struct ServerStats {
     pub batches: usize,
     pub tokens_generated: usize,
     pub wall_s: f64,
-    /// Per-request queue latency samples (ms), in completion order — the
-    /// serving bench gates on the tails, not just the means.
-    pub queue_ms: Vec<f64>,
-    /// Per-request total latency samples (ms), in completion order.
-    pub total_ms: Vec<f64>,
+    /// Per-request queue latency samples (ms) in a bounded [`Reservoir`] —
+    /// the serving bench gates on the tails, not just the means.
+    pub queue_ms: Reservoir,
+    /// Per-request total latency samples (ms), reservoir-bounded.
+    pub total_ms: Reservoir,
     /// Requests accepted past the admission gate.
     pub admitted: usize,
     /// Submissions rejected at the gate (queue full / draining / dead).
@@ -234,41 +358,23 @@ impl ServerStats {
         self.requests + self.shed + self.timed_out + self.cancelled + self.errored
     }
 
-    /// Percentile over a sample set (same convention as `bench_util`:
-    /// nearest-rank on the sorted samples); 0.0 when empty.
-    fn pct(samples: &[f64], p: f64) -> f64 {
-        if samples.is_empty() {
-            return 0.0;
-        }
-        let mut v = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[((v.len() - 1) as f64 * p) as usize]
-    }
-
-    fn mean(samples: &[f64]) -> f64 {
-        if samples.is_empty() {
-            return 0.0;
-        }
-        samples.iter().sum::<f64>() / samples.len() as f64
-    }
-
     pub fn queue_mean_ms(&self) -> f64 {
-        Self::mean(&self.queue_ms)
+        self.queue_ms.mean()
     }
     pub fn queue_p50_ms(&self) -> f64 {
-        Self::pct(&self.queue_ms, 0.5)
+        self.queue_ms.pct(0.5)
     }
     pub fn queue_p95_ms(&self) -> f64 {
-        Self::pct(&self.queue_ms, 0.95)
+        self.queue_ms.pct(0.95)
     }
     pub fn total_mean_ms(&self) -> f64 {
-        Self::mean(&self.total_ms)
+        self.total_ms.mean()
     }
     pub fn total_p50_ms(&self) -> f64 {
-        Self::pct(&self.total_ms, 0.5)
+        self.total_ms.pct(0.5)
     }
     pub fn total_p95_ms(&self) -> f64 {
-        Self::pct(&self.total_ms, 0.95)
+        self.total_ms.pct(0.95)
     }
 }
 
@@ -403,16 +509,19 @@ impl Server {
     ) -> Result<RequestHandle, SubmitError> {
         if self.shared.engine_dead.load(Ordering::Acquire) {
             self.shared.gate_rejections.fetch_add(1, Ordering::AcqRel);
+            M_REJECTED_DEAD.inc();
             return Err(SubmitError::Rejected(ShedReason::EngineDead));
         }
         if self.shared.draining.load(Ordering::Acquire) {
             self.shared.gate_rejections.fetch_add(1, Ordering::AcqRel);
+            M_REJECTED_DRAINING.inc();
             return Err(SubmitError::Rejected(ShedReason::Draining));
         }
-        let n = self.shared.waiting.fetch_add(1, Ordering::AcqRel);
+        let n = self.shared.inc_waiting();
         if n >= self.queue_cap {
-            self.shared.waiting.fetch_sub(1, Ordering::AcqRel);
+            self.shared.dec_waiting();
             self.shared.gate_rejections.fetch_add(1, Ordering::AcqRel);
+            M_REJECTED_FULL.inc();
             return Err(SubmitError::Rejected(ShedReason::QueueFull));
         }
         let now = Instant::now();
@@ -429,10 +538,18 @@ impl Server {
             reply,
         };
         if self.tx.send(Msg::Req(req)).is_err() {
-            self.shared.waiting.fetch_sub(1, Ordering::AcqRel);
+            self.shared.dec_waiting();
             return Err(SubmitError::Dead);
         }
+        M_ADMITTED.inc();
         Ok(RequestHandle { rx, cancel })
+    }
+
+    /// The process-global metrics registry ([`crate::obs::metrics`]):
+    /// carries the `qera_serve_*` series this server feeds alongside every
+    /// other subsystem's — what `--metrics-out` dumps after a run.
+    pub fn metrics(&self) -> &'static crate::obs::metrics::Registry {
+        crate::obs::metrics::global()
     }
 
     /// Hot-swap the serving model: the daemon builds the new engine and
@@ -539,14 +656,40 @@ mod tests {
         let mut st = ServerStats::default();
         assert_eq!(st.queue_p50_ms(), 0.0);
         assert_eq!(st.total_p95_ms(), 0.0);
-        st.queue_ms = vec![5.0, 1.0, 3.0, 2.0, 4.0];
-        st.total_ms = (1..=100).map(|i| i as f64).collect();
+        st.queue_ms = Reservoir::from_samples([5.0, 1.0, 3.0, 2.0, 4.0]);
+        st.total_ms = Reservoir::from_samples((1..=100).map(|i| i as f64));
         assert_eq!(st.queue_p50_ms(), 3.0);
         assert_eq!(st.queue_p95_ms(), 4.0); // idx (5-1)*0.95 = 3
         assert_eq!(st.queue_mean_ms(), 3.0);
         assert_eq!(st.total_p50_ms(), 50.0); // idx 49
         assert_eq!(st.total_p95_ms(), 95.0); // idx (99*0.95)=94
         assert!((st.total_mean_ms() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_is_deterministic() {
+        // below the cap: an exact record
+        let r = Reservoir::from_samples((0..10).map(|i| i as f64));
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.seen(), 10);
+        assert!(!r.is_empty());
+        assert_eq!(r.pct(0.0), 0.0);
+        assert_eq!(r.pct(1.0), 9.0);
+        assert!((r.mean() - 4.5).abs() < 1e-12);
+        // above the cap: bounded memory, exact all-time mean, and the same
+        // seed keeps the same subsample (identical tails)
+        let mut a = Reservoir::new(64, 7);
+        let mut b = Reservoir::new(64, 7);
+        for i in 0..10_000 {
+            a.push(i as f64);
+            b.push(i as f64);
+        }
+        assert_eq!(a.len(), 64);
+        assert_eq!(a.seen(), 10_000);
+        assert!((a.mean() - 4999.5).abs() < 1e-9);
+        assert_eq!(a.pct(0.5), b.pct(0.5));
+        assert_eq!(a.pct(0.95), b.pct(0.95));
+        assert!(a.pct(0.5) <= a.pct(0.95));
     }
 
     #[test]
@@ -577,6 +720,8 @@ mod tests {
             assert_eq!(resp.tokens.len(), 4);
             assert_eq!(resp.model_version, 0);
         }
+        // the process-global registry carries the serve series this fed
+        assert!(server.metrics().render_prometheus().contains("qera_serve_admitted_total"));
         let stats = server.stop().unwrap();
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.admitted, 3);

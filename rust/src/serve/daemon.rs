@@ -23,9 +23,12 @@
 //!   between batches; in-flight batches finish on the old model, and the
 //!   new model's plan telemetry lands in `ServerStats`.
 
-use super::batcher::{Request, Response, ServerConfig, ServerStats};
+use super::batcher::{Request, Reservoir, Response, ServerConfig, ServerStats};
 use super::engine::Engine;
 use crate::model::ModelSpec;
+use crate::obs::lazy::Lazy;
+use crate::obs::metrics::{self, Counter, Gauge, Histogram};
+use crate::obs::trace;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
@@ -33,6 +36,30 @@ use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+// Process-global serve metrics (see `crate::obs`).  `ServerStats` stays the
+// authoritative per-run record returned by `Server::stop`; these series are
+// the registry-side roll-up a `--metrics-out` dump exposes.
+static M_QUEUE_DEPTH: Lazy<Gauge> = Lazy::new(|| metrics::gauge("qera_serve_queue_depth", &[]));
+static M_BATCHES: Lazy<Counter> = Lazy::new(|| metrics::counter("qera_serve_batches_total", &[]));
+static M_RETRIES: Lazy<Counter> = Lazy::new(|| metrics::counter("qera_serve_retries_total", &[]));
+static M_RESTARTS: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_engine_restarts_total", &[]));
+static M_SWAPS: Lazy<Counter> = Lazy::new(|| metrics::counter("qera_serve_swaps_total", &[]));
+static M_OUT_DONE: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_outcomes_total", &[("outcome", "done")]));
+static M_OUT_SHED: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_outcomes_total", &[("outcome", "shed")]));
+static M_OUT_TIMEOUT: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_outcomes_total", &[("outcome", "timed_out")]));
+static M_OUT_CANCELLED: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_outcomes_total", &[("outcome", "cancelled")]));
+static M_OUT_FAILED: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_serve_outcomes_total", &[("outcome", "failed")]));
+static M_QUEUE_MS: Lazy<Histogram> =
+    Lazy::new(|| metrics::histogram("qera_serve_queue_ms", &[], metrics::LATENCY_MS_BUCKETS));
+static M_TOTAL_MS: Lazy<Histogram> =
+    Lazy::new(|| metrics::histogram("qera_serve_total_ms", &[], metrics::LATENCY_MS_BUCKETS));
 
 /// Why the daemon refused (at the gate) or shed (after admission) a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -210,6 +237,20 @@ pub(crate) struct Shared {
     pub(crate) gate_rejections: AtomicUsize,
 }
 
+impl Shared {
+    /// `waiting` increment mirrored into the `qera_serve_queue_depth`
+    /// gauge; returns the pre-increment count (the admission-cap check).
+    pub(crate) fn inc_waiting(&self) -> usize {
+        M_QUEUE_DEPTH.add(1);
+        self.waiting.fetch_add(1, Ordering::AcqRel)
+    }
+
+    pub(crate) fn dec_waiting(&self) {
+        M_QUEUE_DEPTH.sub(1);
+        self.waiting.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 /// Control-plane messages from the `Server` handle to the daemon thread.
 pub(crate) enum Msg {
     Req(Request),
@@ -294,10 +335,22 @@ impl Supervisor {
 fn finish(req: Request, outcome: Outcome, stats: &mut ServerStats) {
     match &outcome {
         Outcome::Done(_) => {}
-        Outcome::Shed(_) => stats.shed += 1,
-        Outcome::TimedOut { .. } => stats.timed_out += 1,
-        Outcome::Cancelled => stats.cancelled += 1,
-        Outcome::Failed { .. } => stats.errored += 1,
+        Outcome::Shed(_) => {
+            stats.shed += 1;
+            M_OUT_SHED.inc();
+        }
+        Outcome::TimedOut { .. } => {
+            stats.timed_out += 1;
+            M_OUT_TIMEOUT.inc();
+        }
+        Outcome::Cancelled => {
+            stats.cancelled += 1;
+            M_OUT_CANCELLED.inc();
+        }
+        Outcome::Failed { .. } => {
+            stats.errored += 1;
+            M_OUT_FAILED.inc();
+        }
     }
     let _ = req.reply.send(outcome);
 }
@@ -321,6 +374,9 @@ fn complete_done(s: Slot, started: Instant, bsize: usize, version: usize, stats:
     stats.total_ms.push(resp.total_ms);
     stats.requests += 1;
     stats.tokens_generated += resp.tokens.len();
+    M_OUT_DONE.inc();
+    M_QUEUE_MS.observe(resp.queue_ms);
+    M_TOTAL_MS.observe(resp.total_ms);
     let _ = s.req.reply.send(Outcome::Done(resp));
 }
 
@@ -369,6 +425,8 @@ fn run_batch(
     }
     let bsize = slots.len();
     stats.batches += 1;
+    M_BATCHES.inc();
+    let _batch_sp = trace::span("serve.batch").attr("size", bsize);
     let max_new = slots.iter().map(|s| s.req.max_new_tokens).max().unwrap_or(0);
     for _ in 0..max_new {
         // prune rows that expired or were cancelled since the last step
@@ -443,7 +501,12 @@ fn execute(
     let mut attempts: u32 = 0;
     loop {
         let restarting = sup.pending_restart();
-        if let Err(e) = sup.ensure_built() {
+        let built = {
+            // a post-failure rebuild is its own traced span
+            let _sp = restarting.then(|| trace::span("serve.restart"));
+            sup.ensure_built()
+        };
+        if let Err(e) = built {
             if sup.dead() {
                 shared.engine_dead.store(true, Ordering::Release);
                 for r in requests {
@@ -460,11 +523,13 @@ fn execute(
                 return;
             }
             stats.retries += 1;
+            M_RETRIES.inc();
             std::thread::sleep(cfg.retry.backoff(attempts - 1, backoff_rng));
             continue;
         }
         if restarting {
             stats.engine_restarts += 1;
+            M_RESTARTS.inc();
         }
         let engine = sup.engine.as_deref().expect("ensure_built succeeded");
         match run_batch(engine, requests, rng, stats, version) {
@@ -480,6 +545,7 @@ fn execute(
                     return;
                 }
                 stats.retries += 1;
+                M_RETRIES.inc();
                 std::thread::sleep(cfg.retry.backoff(attempts - 1, backoff_rng));
                 requests = back;
             }
@@ -508,10 +574,14 @@ fn handle_msg(
             Flow::Cont
         }
         Msg::Swap { factory, telemetry, ack } => {
-            match sup.swap(factory) {
+            let swap_sp = trace::span("serve.swap");
+            let res = sup.swap(factory);
+            drop(swap_sp);
+            match res {
                 Ok(()) => {
                     *version += 1;
                     stats.swaps += 1;
+                    M_SWAPS.inc();
                     stats.plan_bits = telemetry.plan_bits;
                     stats.plan_strategy = telemetry.plan_strategy;
                     // a working swap revives a daemon whose engine died
@@ -537,7 +607,7 @@ fn pop_batch(
     let mut batch = Vec::with_capacity(take);
     for _ in 0..take {
         let r = queue.pop_front().expect("len checked");
-        shared.waiting.fetch_sub(1, Ordering::AcqRel);
+        shared.dec_waiting();
         batch.push(r);
     }
     batch
@@ -589,7 +659,7 @@ fn drain(
         execute(sup, batch, cfg, rng, backoff_rng, stats, shared, version);
     }
     while let Some(r) = queue.pop_front() {
-        shared.waiting.fetch_sub(1, Ordering::AcqRel);
+        shared.dec_waiting();
         finish(r, Outcome::Shed(ShedReason::Draining), stats);
     }
     // a submit may have raced past the gate after the backlog sweep
@@ -597,7 +667,7 @@ fn drain(
         match msg {
             Msg::Req(r) => {
                 stats.admitted += 1;
-                shared.waiting.fetch_sub(1, Ordering::AcqRel);
+                shared.dec_waiting();
                 finish(r, Outcome::Shed(ShedReason::Draining), stats);
             }
             Msg::Swap { ack, .. } => {
@@ -628,6 +698,9 @@ pub(crate) fn daemon_loop(
     let mut stats = ServerStats {
         plan_bits: telemetry.plan_bits,
         plan_strategy: telemetry.plan_strategy,
+        // deterministic reservoirs: same seed, same kept tail samples
+        queue_ms: Reservoir::new(Reservoir::DEFAULT_CAP, cfg.seed ^ 0x51e5_e1fe),
+        total_ms: Reservoir::new(Reservoir::DEFAULT_CAP, cfg.seed ^ 0x7074_a15e),
         ..ServerStats::default()
     };
     let t0 = Instant::now();
@@ -654,7 +727,7 @@ pub(crate) fn daemon_loop(
                     // is queued so no reply channel dangles, then exit
                     shared.draining.store(true, Ordering::Release);
                     while let Some(r) = queue.pop_front() {
-                        shared.waiting.fetch_sub(1, Ordering::AcqRel);
+                        shared.dec_waiting();
                         finish(r, Outcome::Shed(ShedReason::Draining), &mut stats);
                     }
                     return;

@@ -26,7 +26,7 @@ pub mod daemon;
 pub mod engine;
 
 pub use batcher::{
-    RequestHandle, RequestOpts, ServeModel, Server, ServerConfig, ServerStats,
+    RequestHandle, RequestOpts, Reservoir, ServeModel, Server, ServerConfig, ServerStats,
 };
 pub use daemon::{
     BatchEngine, FaultyEngine, Outcome, PlanTelemetry, RetryPolicy, ShedReason, SubmitError,

@@ -27,12 +27,20 @@
 //!   retry layer is allowed to ride out.
 //! * `perm`  — the operation fails permanently (`NotFound` on read).
 
+use crate::obs::lazy::Lazy;
+use crate::obs::metrics::{self, Counter};
 use crate::util::fsio::{CkptIo, StdIo};
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
 use std::io;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
+
+/// Process-wide injected-fault tally (`qera_faults_injected_total`); the
+/// per-run view stays on each [`FaultyIo`] (`faults_injected`), which
+/// `StreamSummary` reports.
+static FAULTS_INJECTED: Lazy<Counter> =
+    Lazy::new(|| metrics::counter("qera_faults_injected_total", &[]));
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultKind {
@@ -174,6 +182,7 @@ impl FaultyIo {
         st.arms[idx].1 -= 1;
         let kind = st.arms[idx].0.kind;
         st.injected += 1;
+        FAULTS_INJECTED.inc();
         let draw = st.rng.next_u64();
         Some((kind, draw))
     }

@@ -1,4 +1,5 @@
-//! Tiny leveled logger (log crate not vendored): `QERA_LOG=debug|info|warn`.
+//! Tiny leveled logger (log crate not vendored):
+//! `QERA_LOG=debug|info|warn|error|quiet` (`error` aliases `quiet`).
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -43,18 +44,35 @@ pub enum Level {
     Warn = 2,
 }
 
+/// Parse a `QERA_LOG` value into `(level, unrecognized)`; unrecognized
+/// values fall back to info and surface the offending string for a
+/// one-time warning.  `error` aliases `quiet`: the logger has no separate
+/// error level, so both suppress everything the daemon would not treat as
+/// fatal anyway.
+fn parse_level(raw: Option<&str>) -> (u8, Option<String>) {
+    match raw {
+        Some("debug") => (0, None),
+        Some("warn") => (2, None),
+        Some("quiet") | Some("error") => (3, None),
+        None | Some("info") | Some("") => (1, None),
+        Some(other) => (1, Some(other.to_string())),
+    }
+}
+
 fn level() -> u8 {
     let v = LEVEL.load(Ordering::Relaxed);
     if v != 255 {
         return v;
     }
-    let lv = match std::env::var("QERA_LOG").as_deref() {
-        Ok("debug") => 0,
-        Ok("warn") => 2,
-        Ok("quiet") => 3,
-        _ => 1,
-    };
-    LEVEL.store(lv, Ordering::Relaxed);
+    let var = std::env::var("QERA_LOG");
+    let (lv, unknown) = parse_level(var.as_deref().ok());
+    // Store before warning: the warn below re-enters level() and must see
+    // the resolved value instead of recursing into the env parse.  The CAS
+    // also makes the warning fire at most once under racing first calls.
+    let won = LEVEL.compare_exchange(255, lv, Ordering::Relaxed, Ordering::Relaxed).is_ok();
+    if let Some(bad) = unknown.filter(|_| won) {
+        crate::warn_!("ignoring QERA_LOG={bad:?}: expected debug|info|warn|error|quiet");
+    }
     lv
 }
 
@@ -92,6 +110,18 @@ macro_rules! warn_ {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn qera_log_parse_accepts_error_alias_and_flags_unknown() {
+        assert_eq!(parse_level(Some("debug")), (0, None));
+        assert_eq!(parse_level(Some("info")), (1, None));
+        assert_eq!(parse_level(Some("warn")), (2, None));
+        assert_eq!(parse_level(Some("quiet")), (3, None));
+        assert_eq!(parse_level(Some("error")), (3, None));
+        assert_eq!(parse_level(None), (1, None));
+        assert_eq!(parse_level(Some("")), (1, None));
+        assert_eq!(parse_level(Some("verbose")), (1, Some("verbose".to_string())));
+    }
 
     #[test]
     fn levels_ordered() {

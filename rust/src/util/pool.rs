@@ -119,6 +119,9 @@ where
     if workers <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
+    // one span per fan-out, not per job: observe-only and cold relative to
+    // the work the pool runs (a relaxed load when tracing is off)
+    let _sp = crate::obs::trace::span("pool.parallel_map").attr("n", n).attr("workers", workers);
     let next = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {

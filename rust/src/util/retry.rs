@@ -9,9 +9,16 @@
 //! is behavior-neutral and its backoff sequence is pinned by unit tests on
 //! both sides.
 
+use crate::obs::lazy::Lazy;
+use crate::obs::metrics::{self, Counter};
 use crate::util::rng::Rng;
 use std::io;
 use std::time::Duration;
+
+/// Process-wide retry tally (`qera_io_retries_total`), the low-level view
+/// behind the per-run `StreamSummary::io_retries`.  The handle is cached so
+/// the steady state never touches the registry lock.
+static IO_RETRIES: Lazy<Counter> = Lazy::new(|| metrics::counter("qera_io_retries_total", &[]));
 
 /// Exponential backoff with jitter drawn from the caller's seeded RNG
 /// discipline, so retry timing is reproducible for a fixed seed.
@@ -88,16 +95,20 @@ pub fn retry_io<T>(
     mut op: impl FnMut() -> io::Result<T>,
 ) -> (io::Result<T>, u32) {
     let mut attempt = 0u32;
-    loop {
+    let res = loop {
         match op() {
-            Ok(v) => return (Ok(v), attempt),
+            Ok(v) => break Ok(v),
             Err(e) if is_transient(e.kind()) && attempt < policy.max_retries => {
                 std::thread::sleep(policy.backoff(attempt, rng));
                 attempt += 1;
             }
-            Err(e) => return (Err(e), attempt),
+            Err(e) => break Err(e),
         }
+    };
+    if attempt > 0 {
+        IO_RETRIES.add(attempt as u64);
     }
+    (res, attempt)
 }
 
 #[cfg(test)]
@@ -150,6 +161,8 @@ mod tests {
     fn retry_io_retries_transient_and_fails_fast_on_permanent() {
         let policy = RetryPolicy { base: Duration::from_micros(10), ..RetryPolicy::io_default() };
         let mut rng = Rng::new(1);
+        // other tests share the process-global counter, so assert a delta
+        let retries_before = IO_RETRIES.get();
 
         // two transient failures, then success
         let mut calls = 0;
@@ -182,5 +195,8 @@ mod tests {
         assert!(res.is_err());
         assert_eq!(calls, 1 + policy.max_retries);
         assert_eq!(retries, policy.max_retries);
+        // 2 (ride-out) + 0 (fail-fast) + max_retries (exhaustion) landed in
+        // the registry counter on top of whatever parallel tests added
+        assert!(IO_RETRIES.get() - retries_before >= 2 + policy.max_retries as u64);
     }
 }

@@ -2,7 +2,7 @@
 //! committed `BENCH_baseline.json` and fail on median or tail regressions.
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve ckpt
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve ckpt obs
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json
 //! cargo run --release --bin check_bench -- BENCH_solver.json BENCH_baseline.json 0.25
 //! ```
@@ -33,7 +33,7 @@
 //! Refreshing the baseline (run on the machine class CI uses, smoke mode):
 //!
 //! ```bash
-//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve ckpt
+//! QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul svd matmul solver calib qdq budget exec serve ckpt obs
 //! cp BENCH_solver.json BENCH_baseline.json   # then commit it
 //! ```
 //!
@@ -44,7 +44,9 @@
 //! native serve/eval backend), `serve` (the supervised daemon end to end —
 //! p50 AND p95 queue/total tails), `ckpt` (sharded-manifest checkpoint
 //! I/O — the sha256-verified parallel reload AND the crash-recovery
-//! resume-journal scan are the gated columns).
+//! resume-journal scan are the gated columns), `obs` (the observability
+//! layer's disabled-path overhead — a span call site with tracing off must
+//! stay one relaxed atomic load, so its `ns/op p50` column is gated).
 
 use qera::util::json::Json;
 
@@ -245,7 +247,7 @@ fn main() {
         );
         println!(
             "refresh: QERA_BENCH_SMOKE=1 cargo bench --bench hotpath -- psd tensor_matmul \
-             svd matmul solver calib qdq budget exec serve ckpt && cp {} {}",
+             svd matmul solver calib qdq budget exec serve ckpt obs && cp {} {}",
             args[0], args[1]
         );
         return;
